@@ -1,0 +1,94 @@
+//! Fig 2 + Table I regeneration: (a) the single-All-Reduce cost model
+//! `T = a + bM` fit over message sizes; (b) k-way contention times at
+//! M = 100 MB vs the ideal round-robin share `a + k·b·M`; plus the
+//! Table I algorithm coefficients under the α-β-γ model.
+//!
+//! The "measurement" substrate is the two-task/k-task continuous-time
+//! contention dynamics (the same code path the simulator uses), seeded
+//! with the paper's fitted constants — see DESIGN.md §Substitutions.
+
+use ddl_sched::model::{fit_eta, AllReduceAlgo, AlphaBetaGamma, CommModel, ALL_ALGOS};
+use ddl_sched::util::bench::{write_csv, Table};
+use ddl_sched::util::stats::linear_fit;
+
+fn main() {
+    let cm = CommModel::paper_10gbe();
+
+    // ---- Fig 2(a): single all-reduce, fit a + bM ------------------------
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut rows = Vec::new();
+    let mut m = 1.0e6; // 1 MB .. 512 MB
+    while m <= 512.0e6 {
+        let t = cm.time_free(m);
+        xs.push(m);
+        ys.push(t);
+        rows.push(vec![m, t]);
+        m *= 2.0;
+    }
+    let (a_fit, b_fit, r2) = linear_fit(&xs, &ys);
+    let mut t = Table::new(
+        "Fig 2(a) — single All-Reduce cost model",
+        &["quantity", "paper", "re-fit"],
+    );
+    t.row(&["a (s)".into(), format!("{:.3e}", 6.69e-4), format!("{a_fit:.3e}")]);
+    t.row(&["b (s/B)".into(), format!("{:.3e}", 8.53e-10), format!("{b_fit:.3e}")]);
+    t.row(&["r^2".into(), "-".into(), format!("{r2:.6}")]);
+    t.print();
+    let _ = write_csv("fig2a_single_allreduce", &["bytes", "seconds"], &rows);
+
+    // ---- Fig 2(b): k-way contention at 100 MB ---------------------------
+    let m100 = 100.0e6;
+    let mut t = Table::new(
+        "Fig 2(b) — k concurrent All-Reduces of 100 MB",
+        &["k", "ideal a+kbM (s)", "measured (s)", "efficiency"],
+    );
+    let mut rows = Vec::new();
+    let mut samples = Vec::new();
+    for k in 1..=8usize {
+        let ideal = cm.a + k as f64 * cm.b * m100;
+        let measured = cm.time_contended(m100, k);
+        samples.push((k, measured));
+        t.row(&[
+            format!("{k}"),
+            format!("{ideal:.3}"),
+            format!("{measured:.3}"),
+            format!("{:.3}", cm.efficiency(m100, k)),
+        ]);
+        rows.push(vec![k as f64, ideal, measured]);
+    }
+    t.print();
+    let _ = write_csv("fig2b_contention", &["k", "ideal_s", "measured_s"], &rows);
+
+    // The calibration step: recover eta from the sweep (must match input).
+    let eta = fit_eta(cm.a, cm.b, m100, &samples);
+    println!(
+        "eta re-fit from the k-sweep: {:.3e} s/B (configured {:.3e}) — {}",
+        eta,
+        cm.eta,
+        if (eta - cm.eta).abs() / cm.eta < 1e-6 { "exact" } else { "MISMATCH" }
+    );
+
+    // ---- Table I: all-reduce algorithm coefficients ----------------------
+    let p = AlphaBetaGamma::ethernet_10g();
+    let mut t = Table::new(
+        "Table I — All-Reduce algorithm costs (alpha-beta-gamma, N=16)",
+        &["algorithm", "a (s)", "b (s/B)", "T(100MB) (s)"],
+    );
+    for algo in ALL_ALGOS {
+        let (a, b) = algo.cost_coeffs(16, p);
+        t.row(&[
+            algo.name().to_string(),
+            format!("{a:.3e}"),
+            format!("{b:.3e}"),
+            format!("{:.3}", algo.time(16, m100, p)),
+        ]);
+    }
+    t.print();
+    println!(
+        "shape check: ring is bandwidth-optimal for large M; recursive doubling wins on latency"
+    );
+    let ring = AllReduceAlgo::Ring.time(16, 512e6, p);
+    let rd = AllReduceAlgo::RecursiveDoubling.time(16, 512e6, p);
+    assert!(ring < rd, "ring should win at 512MB: {ring} vs {rd}");
+}

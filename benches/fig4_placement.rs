@@ -1,0 +1,90 @@
+//! Fig 4 regeneration: JCT CDF (a), GPU-utilisation distribution (b) and
+//! average JCT (c) for the four placement algorithms (RAND / FF / LS /
+//! LWF-1) under Ada-SRSF on the 160-job paper workload, with wall-clock
+//! timing of each full simulation.
+
+use ddl_sched::metrics::Evaluation;
+use ddl_sched::prelude::*;
+use ddl_sched::util::bench::bench;
+
+fn main() {
+    let jobs = trace::generate(&TraceConfig::paper_160());
+    let cfg = SimConfig::paper();
+
+    let mut fig4c = Table::new(
+        "Fig 4(c) — average JCT per placement algorithm (Ada-SRSF)",
+        &["method", "avg JCT(s)", "avg util", "sim wall (ms)"],
+    );
+    let mut cdf_table = Table::new(
+        "Fig 4(a) — JCT CDF checkpoints P(JCT <= x)",
+        &["method", "x=500s", "x=1000s", "x=2500s", "x=5000s"],
+    );
+    let mut util_table = Table::new(
+        "Fig 4(b) — GPU utilisation histogram (10 bins over [0,1])",
+        &["method", "histogram"],
+    );
+
+    let mut avg_jcts = Vec::new();
+    for name in ["rand", "ff", "ls", "lwf"] {
+        let policy = AdaDual { model: cfg.comm };
+        // Time the simulation itself (the sim_hotpath bench dives deeper).
+        let timing = bench(&format!("sim/{name}"), 1, 3, || {
+            let mut placer = placement::by_name(name, 1, 7).unwrap();
+            std::hint::black_box(sim::simulate(&cfg, &jobs, placer.as_mut(), &policy));
+        });
+        let mut placer = placement::by_name(name, 1, 7).unwrap();
+        let res = sim::simulate(&cfg, &jobs, placer.as_mut(), &policy);
+        let label = if name == "lwf" { "LWF-1" } else { name };
+        let eval = Evaluation::from_sim(label, &res);
+
+        fig4c.row(&[
+            label.to_string(),
+            format!("{:.1}", eval.jct.mean),
+            format!("{:.2}%", eval.avg_gpu_util * 100.0),
+            format!("{:.1}", timing.mean_s * 1e3),
+        ]);
+        let cdf_at = |x: f64| {
+            eval.jct_cdf
+                .iter()
+                .take_while(|&&(v, _)| v <= x)
+                .last()
+                .map(|&(_, p)| p)
+                .unwrap_or(0.0)
+        };
+        cdf_table.row(&[
+            label.to_string(),
+            format!("{:.2}", cdf_at(500.0)),
+            format!("{:.2}", cdf_at(1000.0)),
+            format!("{:.2}", cdf_at(2500.0)),
+            format!("{:.2}", cdf_at(5000.0)),
+        ]);
+        util_table.row(&[label.to_string(), format!("{:?}", eval.util_histogram(10))]);
+        let _ = write_csv(&format!("fig4a_cdf_{name}"), &["jct_s", "cdf"], &eval.cdf_rows());
+        avg_jcts.push((label.to_string(), eval.jct.mean, eval.avg_gpu_util));
+    }
+    cdf_table.print();
+    util_table.print();
+    fig4c.print();
+
+    // Shape assertions (the paper's qualitative findings).
+    let get = |n: &str| avg_jcts.iter().find(|(l, _, _)| l == n).unwrap();
+    let (_, jct_lwf, util_lwf) = get("LWF-1");
+    let (_, jct_rand, util_rand) = get("rand");
+    let (_, jct_ff, _) = get("ff");
+    let (_, jct_ls, _) = get("ls");
+    println!("\nshape checks vs paper:");
+    println!(
+        "  LWF-1 best avg JCT: {}",
+        ok(jct_lwf <= jct_ff && jct_lwf <= jct_ls && jct_lwf <= jct_rand)
+    );
+    println!("  RAND worst or near-worst: {}", ok(*jct_rand >= *jct_ff));
+    println!(
+        "  LWF-1 util gain vs RAND {:.2}x (paper 2.19x): {}",
+        util_lwf / util_rand,
+        ok(util_lwf / util_rand > 1.2)
+    );
+}
+
+fn ok(b: bool) -> &'static str {
+    if b { "OK" } else { "DIVERGES" }
+}

@@ -1,0 +1,75 @@
+//! L3 performance benchmark: simulator throughput (events/second) on the
+//! paper workload and scaled variants, plus micro-benchmarks of the hot
+//! helpers (placement, admission, two-task oracle). This is the §Perf
+//! harness for EXPERIMENTS.md — run before/after each optimisation.
+
+use ddl_sched::prelude::*;
+use ddl_sched::util::bench::bench;
+
+fn main() {
+    let cfg = SimConfig::paper();
+
+    let mut t = Table::new(
+        "L3 hot path — full simulations",
+        &["workload", "events", "wall (ms)", "events/s (M)"],
+    );
+    for (label, n_jobs) in [("40 jobs", 40), ("160 jobs (paper)", 160), ("320 jobs", 320)] {
+        let jobs = if n_jobs == 160 {
+            trace::generate(&TraceConfig::paper_160())
+        } else {
+            trace::generate(&TraceConfig::scaled(n_jobs, 11))
+        };
+        let mut events = 0u64;
+        let timing = bench(label, 1, 3, || {
+            let mut placer = LwfPlacer::new(1);
+            let policy = AdaDual { model: cfg.comm };
+            let res = sim::simulate(&cfg, &jobs, &mut placer, &policy);
+            events = res.n_events;
+        });
+        t.row(&[
+            label.to_string(),
+            format!("{events}"),
+            format!("{:.1}", timing.mean_s * 1e3),
+            format!("{:.2}", events as f64 / timing.mean_s / 1e6),
+        ]);
+    }
+    t.print();
+
+    // ---- micro benches -----------------------------------------------------
+    let jobs = trace::generate(&TraceConfig::paper_160());
+    let mut t = Table::new("micro benches", &["op", "mean"]);
+
+    let state = ddl_sched::cluster::ClusterState::new(cfg.cluster);
+    let job = &jobs[10];
+    let timing = bench("LWF-1 placement decision", 10, 1000, || {
+        let mut p = LwfPlacer::new(1);
+        std::hint::black_box(p.place(job, &state));
+    });
+    t.row(&[timing.name.clone(), format!("{:.2} us", timing.mean_s * 1e6)]);
+
+    let cm = cfg.comm;
+    let timing = bench("two-task oracle (simulate_pair)", 10, 1000, || {
+        std::hint::black_box(ddl_sched::sched::two_tasks::simulate_pair(
+            &cm, 1.0e8, 5.3e8, 0.02,
+        ));
+    });
+    t.row(&[timing.name.clone(), format!("{:.2} us", timing.mean_s * 1e6)]);
+
+    let per_server: Vec<Vec<(usize, f64)>> = vec![vec![(1, 2.0e8)]; 16];
+    let policy = AdaDual { model: cm };
+    let timing = bench("AdaDUAL admission decision", 10, 10000, || {
+        use ddl_sched::sched::{CommPolicy, NetView};
+        std::hint::black_box(policy.admit(
+            1.0e8,
+            &[0, 3, 7, 12],
+            &NetView { per_server: &per_server },
+        ));
+    });
+    t.row(&[timing.name.clone(), format!("{:.3} us", timing.mean_s * 1e6)]);
+
+    let timing = bench("trace generation (160 jobs)", 2, 100, || {
+        std::hint::black_box(trace::generate(&TraceConfig::paper_160()));
+    });
+    t.row(&[timing.name.clone(), format!("{:.2} us", timing.mean_s * 1e6)]);
+    t.print();
+}

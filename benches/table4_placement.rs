@@ -1,0 +1,70 @@
+//! Table IV regeneration: placement solutions with Ada-SRSF — average GPU
+//! utilisation, average/median/95th-percentile JCT — plus the paper's
+//! derived improvement factors (LWF-1 vs RAND/FF/LS).
+
+use ddl_sched::metrics::{improvement, saving, Evaluation};
+use ddl_sched::prelude::*;
+
+fn main() {
+    let jobs = trace::generate(&TraceConfig::paper_160());
+    let cfg = SimConfig::paper();
+
+    let mut table = Table::new(
+        "Table IV — placement solutions with Ada-SRSF",
+        &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+    );
+    let mut evals = Vec::new();
+    for name in ["rand", "ff", "ls", "lwf"] {
+        let mut placer = placement::by_name(name, 1, 7).unwrap();
+        let policy = AdaDual { model: cfg.comm };
+        let res = sim::simulate(&cfg, &jobs, placer.as_mut(), &policy);
+        let label = match name {
+            "rand" => "RAND",
+            "ff" => "FF",
+            "ls" => "LS",
+            _ => "LWF-1",
+        };
+        let eval = Evaluation::from_sim(label, &res);
+        table.row(&eval.table_row());
+        evals.push(eval);
+    }
+    table.print();
+
+    let by = |n: &str| evals.iter().find(|e| e.method == n).unwrap();
+    let (rand, ff, ls, lwf) = (by("RAND"), by("FF"), by("LS"), by("LWF-1"));
+    let mut t = Table::new(
+        "derived comparisons (paper values in parentheses)",
+        &["comparison", "ours", "paper"],
+    );
+    t.row(&[
+        "LWF-1 util vs RAND".into(),
+        format!("{:.2}x", improvement(rand.avg_gpu_util, lwf.avg_gpu_util)),
+        "2.19x".into(),
+    ]);
+    t.row(&[
+        "LWF-1 util vs FF".into(),
+        format!("{:.2}x", improvement(ff.avg_gpu_util, lwf.avg_gpu_util)),
+        "1.59x".into(),
+    ]);
+    t.row(&[
+        "LWF-1 util vs LS".into(),
+        format!("{:.2}x", improvement(ls.avg_gpu_util, lwf.avg_gpu_util)),
+        "1.70x".into(),
+    ]);
+    t.row(&[
+        "JCT saving vs RAND".into(),
+        format!("{:.1}%", saving(rand.jct.mean, lwf.jct.mean) * 100.0),
+        "61.9%".into(),
+    ]);
+    t.row(&[
+        "JCT saving vs FF".into(),
+        format!("{:.1}%", saving(ff.jct.mean, lwf.jct.mean) * 100.0),
+        "42.8%".into(),
+    ]);
+    t.row(&[
+        "JCT saving vs LS".into(),
+        format!("{:.1}%", saving(ls.jct.mean, lwf.jct.mean) * 100.0),
+        "51.9%".into(),
+    ]);
+    t.print();
+}

@@ -1,0 +1,58 @@
+//! Table V regeneration: communication scheduling solutions with LWF-1 —
+//! average GPU utilisation, average/median/95th-percentile JCT — plus the
+//! paper's headline derived numbers (Ada-SRSF vs SRSF(1)/(2)).
+
+use ddl_sched::metrics::{improvement, saving, Evaluation};
+use ddl_sched::prelude::*;
+
+fn main() {
+    let jobs = trace::generate(&TraceConfig::paper_160());
+    let cfg = SimConfig::paper();
+
+    let mut table = Table::new(
+        "Table V — communication scheduling with LWF-1",
+        &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+    );
+    let mut evals = Vec::new();
+    for name in ["srsf1", "srsf2", "srsf3", "ada"] {
+        let mut placer = LwfPlacer::new(1);
+        let policy = sched::by_name(name, cfg.comm).unwrap();
+        let res = sim::simulate(&cfg, &jobs, &mut placer, policy.as_ref());
+        let label = match name {
+            "ada" => "Ada-SRSF".to_string(),
+            other => format!("SRSF({})", &other[4..]),
+        };
+        let eval = Evaluation::from_sim(&label, &res);
+        table.row(&eval.table_row());
+        evals.push(eval);
+    }
+    table.print();
+
+    let by = |n: &str| evals.iter().find(|e| e.method == n).unwrap();
+    let (s1, s2, ada) = (by("SRSF(1)"), by("SRSF(2)"), by("Ada-SRSF"));
+    let mut t = Table::new(
+        "derived comparisons (paper values in parentheses)",
+        &["comparison", "ours", "paper"],
+    );
+    t.row(&[
+        "Ada-SRSF JCT saving vs SRSF(1)".into(),
+        format!("{:.1}%", saving(s1.jct.mean, ada.jct.mean) * 100.0),
+        "20.1%".into(),
+    ]);
+    t.row(&[
+        "Ada-SRSF JCT saving vs SRSF(2)".into(),
+        format!("{:.1}%", saving(s2.jct.mean, ada.jct.mean) * 100.0),
+        "36.7%".into(),
+    ]);
+    t.row(&[
+        "Ada-SRSF util gain vs SRSF(1)".into(),
+        format!("{:.1}%", (improvement(s1.avg_gpu_util, ada.avg_gpu_util) - 1.0) * 100.0),
+        "39.6%".into(),
+    ]);
+    t.row(&[
+        "Ada-SRSF p95 JCT vs SRSF(1)".into(),
+        format!("{:.2}x", s1.jct.p95 / ada.jct.p95),
+        "1.56x".into(),
+    ]);
+    t.print();
+}

@@ -1,0 +1,104 @@
+//! The paper's §I motivation experiment: one 4-GPU cross-server DDL job
+//! finishes in T seconds; four identical jobs run concurrently (each
+//! spanning servers) take far longer than T because their All-Reduces
+//! contend for the 10 GbE links — the effect Eq (5) models and the whole
+//! paper addresses.
+//!
+//! The paper measured 295 s -> 675 s (2.3x) on real hardware. This demo
+//! reproduces the *shape* of that blow-up in the simulator, then shows how
+//! much of it each scheduling policy claws back.
+//!
+//! Run: `cargo run --release --example contention_demo`
+
+use ddl_sched::metrics::Evaluation;
+use ddl_sched::prelude::*;
+
+fn vgg_job(id: usize, n_gpus: usize, iters: u64) -> JobSpec {
+    JobSpec { id, arrival: 0.0, model: DnnModel::Vgg16, n_gpus, iterations: iters }
+}
+
+/// The paper's exact §I layout: job k takes GPU slot k of *every* server,
+/// so every job spans all four nodes and all four NICs are shared.
+struct ScatterPlacer;
+
+impl Placer for ScatterPlacer {
+    fn name(&self) -> &'static str {
+        "scatter"
+    }
+
+    fn place(
+        &mut self,
+        job: &JobSpec,
+        state: &ddl_sched::cluster::ClusterState,
+    ) -> Option<Vec<usize>> {
+        let slot = job.id % state.spec.gpus_per_server;
+        Some(
+            (0..state.spec.n_servers)
+                .map(|s| s * state.spec.gpus_per_server + slot)
+                .take(job.n_gpus)
+                .collect(),
+        )
+    }
+}
+
+fn main() {
+    // 4 servers x 4 GPUs. Each job takes one GPU from each server — the
+    // worst-case scatter the paper's experiment used.
+    let cfg = SimConfig {
+        cluster: ClusterSpec::tiny(4, 4),
+        comm: CommModel::paper_10gbe(),
+        repricing: sim::Repricing::Dynamic,
+        priority: sim::JobPriority::Srsf,
+        log_events: false,
+    };
+    let iters = 2000;
+
+    // --- one job alone (one GPU per server, like the paper) --------------
+    let solo = sim::simulate(
+        &cfg,
+        &[vgg_job(0, 4, iters)],
+        &mut ScatterPlacer,
+        &SrsfCap { cap: 1 },
+    );
+    let t_solo = solo.jct[0];
+    println!("1 VGG-16 job on 4 GPUs (1 per server): {t_solo:.0}s");
+
+    // --- four concurrent jobs, scattered like the paper -----------------
+    let jobs: Vec<JobSpec> = (0..4).map(|i| vgg_job(i, 4, iters)).collect();
+    let mut table = Table::new(
+        "4 concurrent scattered jobs",
+        &["policy", "avg JCT(s)", "blow-up vs solo", "overlapped", "max k"],
+    );
+    for name in ["srsf1", "srsf2", "srsf3", "ada"] {
+        let policy = sched::by_name(name, cfg.comm).unwrap();
+        let res = sim::simulate(&cfg, &jobs, &mut ScatterPlacer, policy.as_ref());
+        let eval = Evaluation::from_sim(name, &res);
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", eval.jct.mean),
+            format!("{:.2}x", eval.jct.mean / t_solo),
+            format!("{}", res.contended_admissions),
+            format!("{}", res.max_contention),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper's real-hardware reference: 295s solo -> 675s with 4 concurrent jobs (2.29x)\n\
+         the simulated blow-up shape should fall in the same 1.5-3x band for the\n\
+         contention-accepting policies and be smallest for Ada-SRSF/SRSF(1)."
+    );
+
+    // --- Fig 1 in miniature: two jobs, same link ------------------------
+    // (b) start both transfers together vs (c) serialise the smaller first.
+    let cm = cfg.comm;
+    let m1 = DnnModel::ResNet50.spec().model_bytes;
+    let m2 = DnnModel::Vgg16.spec().model_bytes;
+    let together = ddl_sched::sched::two_tasks::mean_completion(&cm, m2, m1, 0.0);
+    let serial = ddl_sched::sched::two_tasks::mean_completion(&cm, m2, m1, cm.b * m2);
+    println!(
+        "\nFig 1 micro-case (ResNet-50 vs VGG-16 messages): overlap {:.3}s vs serial {:.3}s -> {}",
+        together,
+        serial,
+        if together < serial { "overlap wins (AdaDUAL admits)" } else { "serial wins (AdaDUAL waits)" }
+    );
+}

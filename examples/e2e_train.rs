@@ -1,0 +1,97 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Four transformer-LM training jobs (L2 JAX model whose MLP/attention
+//! hot-spots are L1 Pallas kernels, AOT-compiled to HLO artifacts) run
+//! concurrently under the L3 rust coordinator: LWF-1 places them on the
+//! modelled cluster, and every inter-node gradient all-reduce passes the
+//! live AdaDUAL admission gate with Eq (5) pacing. Loss curves are real
+//! (PJRT CPU execution); Python is never on this path.
+//!
+//! Prereq: `make artifacts`. Run: `cargo run --release --example e2e_train`
+//! Env: E2E_STEPS (default 120), E2E_JOBS (default 4), E2E_WORKERS (2).
+
+use ddl_sched::coordinator::{self, CoordinatorConfig, JobRequest, RtServer};
+use ddl_sched::prelude::*;
+use ddl_sched::runtime::default_artifacts_dir;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = env_usize("E2E_STEPS", 120);
+    let n_jobs = env_usize("E2E_JOBS", 4);
+    let workers = env_usize("E2E_WORKERS", 2);
+
+    let server = RtServer::start(default_artifacts_dir())?;
+    println!(
+        "model: preset={} n_params={} tokens={:?} (L1 pallas kernels inside)",
+        server.meta.preset, server.meta.n_params, server.meta.tokens_shape
+    );
+
+    // 3 servers x 2 GPUs with 4 two-worker jobs: LWF-1 consolidates the
+    // first three onto whole servers; the fourth must span two servers —
+    // so one run exercises both the free intra-node path and the gated
+    // inter-node (AdaDUAL + Eq 5 pacing) path.
+    let cluster = ClusterSpec::tiny(3, 2);
+    let cfg = CoordinatorConfig {
+        cluster,
+        time_scale: 1.0,
+        ..CoordinatorConfig::default_ada(cluster)
+    };
+    let jobs: Vec<JobRequest> = (0..n_jobs)
+        .map(|id| JobRequest { id, n_workers: workers, steps, seed: 1000 + id as u64 })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let reports = coordinator::run_jobs(&cfg, &server, &jobs)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "e2e multi-job training (real PJRT compute, AdaDUAL-gated comm)",
+        &["job", "gpus", "multi-srv", "steps", "loss[0]", "loss[last]", "jct(s)", "comm", "contended"],
+    );
+    for r in &reports {
+        t.row(&[
+            format!("{}", r.id),
+            format!("{:?}", r.gpus),
+            format!("{}", r.multi_server),
+            format!("{}", r.losses.len()),
+            format!("{:.3}", r.losses.first().copied().unwrap_or(f32::NAN)),
+            format!("{:.3}", r.losses.last().copied().unwrap_or(f32::NAN)),
+            format!("{:.1}", r.jct),
+            format!("{}", r.comm_rounds),
+            format!("{}", r.contended_rounds),
+        ]);
+    }
+    t.print();
+    println!("wall time {wall:.1}s for {n_jobs} jobs x {steps} steps");
+
+    // Dump loss curves for EXPERIMENTS.md.
+    let rows: Vec<Vec<f64>> = reports
+        .iter()
+        .flat_map(|r| {
+            r.losses
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| vec![r.id as f64, i as f64, l as f64])
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    if let Ok(path) = write_csv("e2e_loss_curves", &["job", "step", "loss"], &rows) {
+        println!("wrote {path}");
+    }
+
+    // Sanity: learning must actually happen on the predictable stream.
+    for r in &reports {
+        let first = r.losses.first().copied().unwrap_or(f32::NAN);
+        let last = r.losses.last().copied().unwrap_or(f32::NAN);
+        assert!(
+            last < first,
+            "job {} did not learn: {first} -> {last}",
+            r.id
+        );
+    }
+    println!("all jobs reduced their loss — three-layer stack verified");
+    Ok(())
+}

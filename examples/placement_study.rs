@@ -1,0 +1,64 @@
+//! Placement study (Figs 4–5, Table IV): compare RAND / FF / LS / LWF-1
+//! under Ada-SRSF, then sweep κ. Writes the CDF/histogram series to
+//! `results/*.csv` and prints the summary tables.
+//!
+//! Run: `cargo run --release --example placement_study`
+
+use ddl_sched::metrics::Evaluation;
+use ddl_sched::prelude::*;
+
+fn main() {
+    let jobs = trace::generate(&TraceConfig::paper_160());
+    let cfg = SimConfig::paper();
+
+    // --- Fig 4 / Table IV: placement algorithms under Ada-SRSF ----------
+    let mut table = Table::new(
+        "Table IV — placement solutions with Ada-SRSF",
+        &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+    );
+    let mut lwf_eval = None;
+    for name in ["rand", "ff", "ls", "lwf"] {
+        let mut placer = placement::by_name(name, 1, 7).unwrap();
+        let policy = AdaDual { model: cfg.comm };
+        let res = sim::simulate(&cfg, &jobs, placer.as_mut(), &policy);
+        let label = if name == "lwf" { "LWF-1" } else { name };
+        let eval = Evaluation::from_sim(label, &res);
+        table.row(&eval.table_row());
+        let cdf = eval.cdf_rows();
+        bench_csv(&format!("fig4a_cdf_{name}"), &["jct_s", "cdf"], &cdf);
+        let utils: Vec<Vec<f64>> = eval.gpu_utils.iter().map(|&u| vec![u]).collect();
+        bench_csv(&format!("fig4b_util_{name}"), &["gpu_util"], &utils);
+        if name == "lwf" {
+            lwf_eval = Some(eval);
+        }
+    }
+    table.print();
+    let lwf = lwf_eval.unwrap();
+    println!(
+        "LWF-1 avg JCT {:.1}s — paper reports LWF-1 best on every metric\n",
+        lwf.jct.mean
+    );
+
+    // --- Fig 5: the κ sweep ---------------------------------------------
+    let mut table = Table::new(
+        "Fig 5 — LWF-kappa sweep (with Ada-SRSF)",
+        &["kappa", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+    );
+    for kappa in [1usize, 2, 4, 8, 16, 32] {
+        let mut placer = LwfPlacer::new(kappa);
+        let policy = AdaDual { model: cfg.comm };
+        let res = sim::simulate(&cfg, &jobs, &mut placer, &policy);
+        let eval = Evaluation::from_sim(&format!("LWF-{kappa}"), &res);
+        table.row(&eval.table_row());
+        bench_csv(&format!("fig5a_cdf_k{kappa}"), &["jct_s", "cdf"], &eval.cdf_rows());
+    }
+    table.print();
+    println!("paper finding: kappa = 1 gives the best results overall");
+}
+
+fn bench_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) {
+    match write_csv(name, header, rows) {
+        Ok(path) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  csv write failed: {e}"),
+    }
+}

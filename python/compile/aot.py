@@ -1,0 +1,114 @@
+"""AOT compile path: lower the L2 entry points to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); the rust runtime loads the text
+via `HloModuleProto::from_text_file` and compiles it on the PJRT CPU
+client. Python is never on the request path.
+
+HLO TEXT, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts written to --out-dir (default ../artifacts):
+  train_step.hlo.txt       (params, tokens)        -> (params', loss)  [pallas fwd]
+  train_step_ref.hlo.txt   same, pure-jnp kernels (L1 ablation baseline)
+  grad_step.hlo.txt        (params, tokens)        -> (grads, loss)
+  allreduce_sum.hlo.txt    (x, y)                  -> x + y
+  apply_grads.hlo.txt      (params, grads, scale)  -> params'
+  init_params.bin          raw little-endian f32 parameter vector
+  meta.json                config, shapes, artifact index
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(preset: str, batch: int, lr: float, seed: int, out_dir: str) -> dict:
+    cfg = M.Config.preset(preset, use_pallas=True)
+    cfg_ref = M.Config.preset(preset, use_pallas=False)
+    n_params = M.param_count(cfg)
+
+    p_spec = jax.ShapeDtypeStruct((n_params,), jnp.float32)
+    # tokens carry T+1 positions: model consumes [:, :-1], targets [:, 1:]
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len + 1), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+
+    def emit(name: str, fn, *specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name}: {len(text)} chars")
+
+    emit("train_step", M.make_train_step(cfg, lr=lr), p_spec, tok_spec)
+    emit("train_step_ref", M.make_train_step(cfg_ref, lr=lr), p_spec, tok_spec)
+    emit("grad_step", M.make_grad_step(cfg), p_spec, tok_spec)
+    emit("allreduce_sum", M.allreduce_sum, p_spec, p_spec)
+    emit("apply_grads", M.apply_grads, p_spec, p_spec, scalar)
+
+    params = M.init_params(cfg, seed=seed)
+    with open(os.path.join(out_dir, "init_params.bin"), "wb") as f:
+        f.write(params.tobytes())
+
+    meta = {
+        "preset": preset,
+        "config": cfg.as_dict(),
+        "batch": batch,
+        "lr": lr,
+        "seed": seed,
+        "n_params": n_params,
+        "tokens_shape": [batch, cfg.seq_len + 1],
+        "artifacts": artifacts,
+        "param_layout": [
+            {"name": n, "shape": list(s)} for n, s in M.param_shapes(cfg)
+        ],
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(f"lowering preset={args.preset} batch={args.batch} -> {args.out_dir}")
+    meta = lower_artifacts(args.preset, args.batch, args.lr, args.seed, args.out_dir)
+    print(f"n_params={meta['n_params']}  artifacts={len(meta['artifacts'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the DDL training workload (interpret=True on CPU).
+
+- fused_linear: tiled matmul + bias + GELU (transformer MLP hot-spot)
+- flash_attention: blockwise-softmax fused attention
+- ref: pure-jnp oracles used by pytest and the no-pallas ablation
+"""
+
+from .attention import flash_attention
+from .fused_linear import fused_linear
+
+__all__ = ["flash_attention", "fused_linear"]

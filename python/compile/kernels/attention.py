@@ -1,0 +1,122 @@
+"""Layer-1 Pallas kernel: fused scaled-dot-product attention.
+
+Blockwise (flash-style) attention adapted for the TPU memory hierarchy:
+instead of CUDA warps cooperating through shared memory, each grid step
+holds one (bq, d) query panel in VMEM and streams (bkv, d) key/value panels
+from HBM, maintaining the running row-max / row-sum online-softmax state in
+two small VMEM scratch columns. The MXU consumes the (bq, d) x (d, bkv)
+score tile and the (bq, bkv) x (bkv, d) value tile.
+
+Masking: padded key columns (cols >= kv_len) are always poisoned to -1e30;
+the causal triangle is applied on top when requested. Fully masked rows
+(can only be padded query rows) fall back to zero output.
+
+VMEM at defaults (bq=128, bkv=128, d<=128, f32): q 64 KiB + k 64 KiB +
+v 64 KiB + out 64 KiB + 2 state columns 1 KiB ~= 0.26 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ, BKV = 128, 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, nkv, scale, causal, kv_len, bq, bkv
+):
+    """Grid = (batch*heads, q blocks, kv blocks); kv innermost."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bkv, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+
+    cols = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cols < kv_len
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = mask & (rows >= cols)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq,)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])  # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)  # rescale factor for the old state
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+    o_ref[0] = alpha[:, None] * o_ref[0] + jnp.dot(
+        p, v_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == nkv - 1)
+    def _final():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o_ref[0] = o_ref[0] / denom[:, None]
+
+
+def _vmem_scratch(shape):
+    """VMEM scratch shape; pltpu.VMEM also works under interpret mode."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=BQ, bkv=BKV, scale=None):
+    """softmax(mask(q k^T * scale)) v with a blockwise-softmax Pallas kernel.
+
+    q, k, v: (B, S, D) f32, where B folds batch*heads. S is zero-padded to
+    the block size; padded key columns are masked inside the kernel and
+    padded query rows are sliced away.
+    """
+    b, s, d = q.shape
+    assert k.shape == v.shape == (b, s, d), (q.shape, k.shape, v.shape)
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    bq_, bkv_ = min(bq, s), min(bkv, s)
+
+    def rnd(v_, t):
+        return (v_ + t - 1) // t * t
+
+    sp = max(rnd(s, bq_), rnd(s, bkv_))
+    if sp != s:
+        pad = ((0, 0), (0, sp - s), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    grid = (b, sp // bq_, sp // bkv_)
+    kernel = functools.partial(
+        _attn_kernel,
+        nkv=grid[2],
+        scale=scale,
+        causal=causal,
+        kv_len=s,
+        bq=bq_,
+        bkv=bkv_,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv_, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bkv_, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sp, d), jnp.float32),
+        scratch_shapes=[_vmem_scratch((bq_,)), _vmem_scratch((bq_,))],
+        interpret=True,
+    )(q, k, v)
+    return out[:, :s, :]

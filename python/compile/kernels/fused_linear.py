@@ -1,0 +1,99 @@
+"""Layer-1 Pallas kernel: tiled fused linear layer (matmul + bias + GELU).
+
+This is the transformer MLP hot-spot. On a real TPU the kernel tiles the
+operands into VMEM-resident blocks and drives the MXU with 128-aligned
+matmul tiles; here we express exactly that schedule with ``BlockSpec`` and
+run under ``interpret=True`` so the lowered HLO executes on any PJRT
+backend (the rust CPU client included).
+
+Hardware adaptation (the paper's workloads are CUDA models on V100s; see
+DESIGN.md §Hardware-Adaptation): a CUDA kernel would assign one threadblock
+per output tile and stage A/B panels through shared memory; the TPU-style
+equivalent is the (i, j, k) grid below where each BlockSpec index_map
+expresses the HBM->VMEM panel schedule and the MXU consumes
+(bm, bk) x (bk, bn) tiles. The f32 accumulator is the output block itself,
+which stays VMEM-resident across the innermost k loop.
+
+VMEM budget at the default tiles (f32): A panel 128x512 (256 KiB) +
+B panel 512x128 (256 KiB) + out 128x128 (64 KiB) + bias 128 (0.5 KiB)
+= 0.57 MiB, far under the ~16 MiB/core budget — enough headroom for the
+compiler to double-buffer both input streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly multiples of 128 in the matmul dims.
+BM, BK, BN = 128, 512, 128
+
+
+def gelu_tanh(x):
+    """tanh-approximation GELU (matches jax.nn.gelu(approximate=True))."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps, activation):
+    """Grid = (m/bm, n/bn, k/bk); k innermost so the output block stays hot."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU tile: (bm, bk) @ (bk, bn) accumulated in f32.
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nsteps - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...][None, :]
+        if activation == "gelu":
+            acc = gelu_tanh(acc)
+        o_ref[...] = acc
+
+
+def fused_linear(x, w, b, *, bm=BM, bk=BK, bn=BN, activation="gelu"):
+    """y = activation(x @ w + b) with a Pallas tiled kernel.
+
+    x: (M, K), w: (K, N), b: (N,), all f32. Dims need not be tile
+    multiples: operands are zero-padded up to tile multiples (out-of-bounds
+    block reads are *undefined* on TPU and NaN-poisoned in interpret mode,
+    so explicit padding is required for ragged edges) and the result is
+    sliced back. Zero padding is exact for matmul + bias.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+
+    def rnd(v, t):
+        return (v + t - 1) // t * t
+
+    mp, kp, np_ = rnd(m, bm_), rnd(k, bk_), rnd(n, bn_)
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    if np_ != n:
+        b = jnp.pad(b, (0, np_ - n))
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    kernel = functools.partial(
+        _fused_linear_kernel, nsteps=grid[2], activation=activation
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((bn_,), lambda i, j, ki: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, w, b)[:m, :n]

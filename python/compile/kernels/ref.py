@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every kernel in this package has a reference here; pytest + hypothesis sweep
+shapes and compare with assert_allclose. These are also the "unfused"
+baselines used by the L2 ablation (model.py use_pallas=False).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gelu_tanh(x):
+    """tanh-approximation GELU, the same polynomial as the kernel epilogue."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def fused_linear_ref(x, w, b, activation="gelu"):
+    """y = activation(x @ w + b)."""
+    y = x @ w + b
+    if activation == "gelu":
+        y = gelu_tanh(y)
+    return y
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """Naive materialised-scores attention. q,k,v: (B, S, D)."""
+    b, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

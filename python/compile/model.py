@@ -1,0 +1,261 @@
+"""Layer-2: decoder-only transformer LM in JAX, calling the L1 Pallas kernels.
+
+This is the DDL training workload executed by the rust coordinator in the
+end-to-end prototype (`examples/e2e_train.rs`). The whole parameter set is
+flattened into ONE f32 vector so the rust side only ever handles a single
+parameter literal per job; (un)flattening happens inside the jitted
+functions and costs nothing after XLA fusion.
+
+Exported entry points (AOT-lowered to HLO text by aot.py):
+  train_step(params, tokens)        -> (params', loss)      single-worker
+  grad_step(params, tokens)         -> (grads, loss)        data-parallel worker
+  apply_grads(params, grads, scale) -> params'               leader update
+  allreduce_sum(x, y)               -> x + y                 reduction stage
+
+The Pallas kernels sit on the forward path through jax.custom_vjp wrappers:
+interpret-mode pallas_call is not differentiable, so the backward pass uses
+the pure-jnp reference math (a rematerialising backward, the common choice
+for flash attention anyway).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import flash_attention, fused_linear
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Config
+
+PRESETS: Dict[str, Dict[str, int]] = {
+    # ~0.46 M params; < 1 s/step on 1 CPU core. Default e2e workload.
+    "small": dict(vocab=256, d_model=128, n_layers=2, n_heads=4, d_ff=512, seq_len=64),
+    # ~3.7 M params; the "medium" ablation workload.
+    "medium": dict(vocab=1024, d_model=256, n_layers=4, n_heads=8, d_ff=1024, seq_len=128),
+    # ~33 M params; compile-only scale check (too slow to train on 1 CPU core).
+    "base": dict(vocab=8192, d_model=512, n_layers=8, n_heads=8, d_ff=2048, seq_len=256),
+}
+
+
+class Config:
+    """Transformer hyper-parameters plus kernel block sizes."""
+
+    def __init__(
+        self,
+        vocab: int,
+        d_model: int,
+        n_layers: int,
+        n_heads: int,
+        d_ff: int,
+        seq_len: int,
+        use_pallas: bool = True,
+    ) -> None:
+        assert d_model % n_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+        self.seq_len = seq_len
+        self.d_head = d_model // n_heads
+        self.use_pallas = use_pallas
+
+    @classmethod
+    def preset(cls, name: str, use_pallas: bool = True) -> "Config":
+        return cls(**PRESETS[name], use_pallas=use_pallas)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {k: getattr(self, k) for k in
+             ("vocab", "d_model", "n_layers", "n_heads", "d_ff", "seq_len")}
+        d["use_pallas"] = self.use_pallas
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Parameter pytree <-> flat f32 vector
+
+def param_shapes(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list defining the flat layout."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (v, d)),
+        ("pos_embed", (cfg.seq_len, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes += [
+            (p + "ln1.scale", (d,)), (p + "ln1.bias", (d,)),
+            (p + "attn.wqkv", (d, 3 * d)), (p + "attn.bqkv", (3 * d,)),
+            (p + "attn.wo", (d, d)), (p + "attn.bo", (d,)),
+            (p + "ln2.scale", (d,)), (p + "ln2.bias", (d,)),
+            (p + "mlp.w1", (d, f)), (p + "mlp.b1", (f,)),
+            (p + "mlp.w2", (f, d)), (p + "mlp.b2", (d,)),
+        ]
+    shapes += [("ln_f.scale", (d,)), ("ln_f.bias", (d,)), ("unembed", (d, v))]
+    return shapes
+
+
+def param_count(cfg: Config) -> int:
+    return sum(int(np.prod(s)) for _, s in param_shapes(cfg))
+
+
+def unflatten(cfg: Config, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    params, off = {}, 0
+    for name, shape in param_shapes(cfg):
+        n = int(np.prod(shape))
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten(cfg: Config, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate([params[n].reshape(-1) for n, _ in param_shapes(cfg)])
+
+
+def init_params(cfg: Config, seed: int = 0) -> np.ndarray:
+    """GPT-2-style init, returned as the flat f32 numpy vector."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        if name.endswith((".bias", ".bo", ".b1", ".b2", ".bqkv")):
+            a = np.zeros(shape, np.float32)
+        elif name.endswith(".scale"):
+            a = np.ones(shape, np.float32)
+        elif name in ("embed", "pos_embed", "unembed"):
+            a = rng.normal(0.0, 0.02, shape).astype(np.float32)
+        else:  # projection matrices
+            a = rng.normal(0.0, 0.02, shape).astype(np.float32)
+            if name.endswith((".wo", ".w2")):  # residual-branch scaling
+                a /= np.sqrt(2.0 * cfg.n_layers)
+        chunks.append(a.reshape(-1))
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers: Pallas forward, reference backward
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _linear_gelu(x, w, b, use_pallas):
+    if use_pallas:
+        return fused_linear(x, w, b, activation="gelu")
+    return kref.fused_linear_ref(x, w, b, activation="gelu")
+
+
+def _linear_gelu_fwd(x, w, b, use_pallas):
+    return _linear_gelu(x, w, b, use_pallas), (x, w, b)
+
+
+def _linear_gelu_bwd(use_pallas, res, g):
+    x, w, b = res
+    _, vjp = jax.vjp(lambda x_, w_, b_: kref.fused_linear_ref(x_, w_, b_, "gelu"), x, w, b)
+    return vjp(g)
+
+
+_linear_gelu.defvjp(_linear_gelu_fwd, _linear_gelu_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _attention(q, k, v, causal, use_pallas):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal)
+    return kref.attention_ref(q, k, v, causal=causal)
+
+
+def _attention_fwd(q, k, v, causal, use_pallas):
+    return _attention(q, k, v, causal, use_pallas), (q, k, v)
+
+
+def _attention_bwd(causal, use_pallas, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: kref.attention_ref(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+_attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Model
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def forward(cfg: Config, flat_params: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, T) int32 -> logits (B, T, vocab). T <= cfg.seq_len."""
+    p = unflatten(cfg, flat_params)
+    bsz, t = tokens.shape
+    x = p["embed"][tokens] + p["pos_embed"][:t][None]
+    for i in range(cfg.n_layers):
+        l = f"layer{i}."
+        h = _layer_norm(x, p[l + "ln1.scale"], p[l + "ln1.bias"])
+        qkv = h @ p[l + "attn.wqkv"] + p[l + "attn.bqkv"]  # (B,T,3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(a):  # (B,T,D) -> (B*H, T, Dh)
+            return (a.reshape(bsz, t, cfg.n_heads, cfg.d_head)
+                     .transpose(0, 2, 1, 3)
+                     .reshape(bsz * cfg.n_heads, t, cfg.d_head))
+
+        att = _attention(heads(q), heads(k), heads(v), True, cfg.use_pallas)
+        att = (att.reshape(bsz, cfg.n_heads, t, cfg.d_head)
+                  .transpose(0, 2, 1, 3)
+                  .reshape(bsz, t, cfg.d_model))
+        x = x + att @ p[l + "attn.wo"] + p[l + "attn.bo"]
+
+        h = _layer_norm(x, p[l + "ln2.scale"], p[l + "ln2.bias"])
+        h2 = _linear_gelu(h.reshape(bsz * t, cfg.d_model), p[l + "mlp.w1"],
+                          p[l + "mlp.b1"], cfg.use_pallas)
+        x = x + (h2 @ p[l + "mlp.w2"] + p[l + "mlp.b2"]).reshape(bsz, t, cfg.d_model)
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    return x @ p["unembed"]
+
+
+def loss_fn(cfg: Config, flat_params: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy over tokens (B, T+1 truncated internally)."""
+    logits = forward(cfg, flat_params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (logz - tgt_logit).mean()
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (each is jitted and lowered by aot.py)
+
+def make_train_step(cfg: Config, lr: float = 0.05):
+    """(params, tokens) -> (params', loss). Single-worker SGD step."""
+
+    def train_step(flat_params, tokens):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(flat_params)
+        return flat_params - lr * grads, loss
+
+    return train_step
+
+
+def make_grad_step(cfg: Config):
+    """(params, tokens) -> (grads, loss). One data-parallel worker's step."""
+
+    def grad_step(flat_params, tokens):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(flat_params)
+        return grads, loss
+
+    return grad_step
+
+
+def apply_grads(flat_params, summed_grads, scale):
+    """params - scale * grads; scale = lr / n_workers as f32 scalar array."""
+    return flat_params - scale * summed_grads
+
+
+def allreduce_sum(x, y):
+    """One reduction stage of the coordinator-driven all-reduce tree."""
+    return x + y

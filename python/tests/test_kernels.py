@@ -1,0 +1,154 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept with hypothesis."""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, fused_linear
+from compile.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bk,bn",
+    [
+        (128, 512, 128, 128, 512, 128),  # exact default tiles
+        (64, 64, 64, 32, 32, 32),        # multiple blocks each dim
+        (1, 1, 1, 8, 8, 8),              # degenerate
+        (100, 200, 72, 32, 64, 32),      # ragged everywhere
+        (257, 129, 65, 128, 128, 64),    # prime-ish ragged
+    ],
+)
+def test_fused_linear_shapes(m, k, n, bm, bk, bn):
+    key = jax.random.key(m * 7 + k * 3 + n)
+    x = _rand(jax.random.fold_in(key, 0), (m, k), 0.5)
+    w = _rand(jax.random.fold_in(key, 1), (k, n), 0.1)
+    b = _rand(jax.random.fold_in(key, 2), (n,))
+    y = fused_linear(x, w, b, bm=bm, bk=bk, bn=bn)
+    r = kref.fused_linear_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=RTOL, atol=ATOL)
+
+
+def test_fused_linear_no_activation():
+    key = jax.random.key(0)
+    x = _rand(jax.random.fold_in(key, 0), (48, 80))
+    w = _rand(jax.random.fold_in(key, 1), (80, 24), 0.2)
+    b = _rand(jax.random.fold_in(key, 2), (24,))
+    y = fused_linear(x, w, b, bm=16, bk=32, bn=16, activation="none")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ w + b), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_fused_linear_zero_inputs():
+    y = fused_linear(jnp.zeros((16, 16)), jnp.zeros((16, 16)), jnp.zeros((16,)))
+    assert not np.isnan(np.asarray(y)).any()
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([8, 16, 32, 64]),
+    bk=st.sampled_from([8, 16, 32, 64]),
+    bn=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_hypothesis(m, k, n, bm, bk, bn, seed):
+    key = jax.random.key(seed)
+    x = _rand(jax.random.fold_in(key, 0), (m, k), 0.5)
+    w = _rand(jax.random.fold_in(key, 1), (k, n), 0.2)
+    b = _rand(jax.random.fold_in(key, 2), (n,))
+    y = fused_linear(x, w, b, bm=bm, bk=bk, bn=bn)
+    r = kref.fused_linear_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+
+
+@pytest.mark.parametrize(
+    "b,s,d,causal,bq,bkv",
+    [
+        (1, 128, 64, True, 128, 128),   # exact default-ish tiles
+        (2, 100, 32, True, 32, 32),     # ragged seq
+        (1, 64, 16, False, 32, 16),     # non-causal
+        (3, 33, 8, True, 16, 16),       # small ragged
+        (4, 16, 4, False, 16, 16),      # single block
+    ],
+)
+def test_attention_shapes(b, s, d, causal, bq, bkv):
+    key = jax.random.key(b * 31 + s)
+    q = _rand(jax.random.fold_in(key, 0), (b, s, d))
+    k = _rand(jax.random.fold_in(key, 1), (b, s, d))
+    v = _rand(jax.random.fold_in(key, 2), (b, s, d))
+    y = flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    r = kref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=RTOL, atol=ATOL)
+
+
+def test_attention_causality():
+    """Perturbing a future key must not change earlier outputs."""
+    key = jax.random.key(7)
+    q = _rand(jax.random.fold_in(key, 0), (1, 32, 8))
+    k = _rand(jax.random.fold_in(key, 1), (1, 32, 8))
+    v = _rand(jax.random.fold_in(key, 2), (1, 32, 8))
+    y0 = flash_attention(q, k, v, causal=True, bq=16, bkv=16)
+    k2 = k.at[0, 20].add(100.0)
+    v2 = v.at[0, 20].add(-50.0)
+    y1 = flash_attention(q, k2, v2, causal=True, bq=16, bkv=16)
+    np.testing.assert_allclose(
+        np.asarray(y0[0, :20]), np.asarray(y1[0, :20]), rtol=1e-6, atol=1e-6
+    )
+    assert np.abs(np.asarray(y0[0, 20:]) - np.asarray(y1[0, 20:])).max() > 1e-3
+
+
+def test_attention_scale_override():
+    key = jax.random.key(9)
+    q = _rand(jax.random.fold_in(key, 0), (1, 24, 8))
+    k = _rand(jax.random.fold_in(key, 1), (1, 24, 8))
+    v = _rand(jax.random.fold_in(key, 2), (1, 24, 8))
+    y = flash_attention(q, k, v, causal=False, scale=0.1, bq=8, bkv=8)
+    r = kref.attention_ref(q, k, v, causal=False, scale=0.1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(2, 80),
+    d=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    bq=st.sampled_from([8, 16, 32]),
+    bkv=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_hypothesis(b, s, d, causal, bq, bkv, seed):
+    key = jax.random.key(seed)
+    q = _rand(jax.random.fold_in(key, 0), (b, s, d))
+    k = _rand(jax.random.fold_in(key, 1), (b, s, d))
+    v = _rand(jax.random.fold_in(key, 2), (b, s, d))
+    y = flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    r = kref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=5e-5, atol=5e-5)

@@ -1,0 +1,184 @@
+//! Cluster topology and allocation bookkeeping: `N_s` servers × `N_g` GPUs
+//! behind one non-blocking switch (§III-A). GPUs have a memory capacity and
+//! a remaining-workload counter `L_g` (Algorithm 1's bookkeeping); servers
+//! aggregate `L_S = Σ_j L_g` and expose the NIC contention count `|C_S|`.
+
+use crate::model::V100_PEAK_GFLOPS;
+
+/// Flat GPU identifier; `server = id / n_gpus_per_server`.
+pub type GpuId = usize;
+pub type ServerId = usize;
+
+/// Static cluster shape + GPU grade.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub n_servers: usize,
+    pub gpus_per_server: usize,
+    /// Device memory per GPU in bytes.
+    pub gpu_mem_bytes: f64,
+    /// Peak throughput per GPU (GFLOPS) for Eqs (3)–(4).
+    pub gpu_peak_gflops: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's evaluation testbed: 16 servers × 4 V100-16GB, 10 GbE.
+    pub fn paper_64gpu() -> ClusterSpec {
+        ClusterSpec {
+            n_servers: 16,
+            gpus_per_server: 4,
+            gpu_mem_bytes: 16.0 * 1024.0 * 1024.0 * 1024.0,
+            gpu_peak_gflops: V100_PEAK_GFLOPS,
+        }
+    }
+
+    /// A small cluster for unit tests.
+    pub fn tiny(n_servers: usize, gpus_per_server: usize) -> ClusterSpec {
+        ClusterSpec {
+            n_servers,
+            gpus_per_server,
+            ..ClusterSpec::paper_64gpu()
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.n_servers * self.gpus_per_server
+    }
+
+    pub fn server_of(&self, gpu: GpuId) -> ServerId {
+        gpu / self.gpus_per_server
+    }
+
+    pub fn gpus_of(&self, server: ServerId) -> std::ops::Range<GpuId> {
+        let start = server * self.gpus_per_server;
+        start..start + self.gpus_per_server
+    }
+
+    /// Distinct servers touched by a GPU set.
+    pub fn servers_of(&self, gpus: &[GpuId]) -> Vec<ServerId> {
+        let mut servers: Vec<ServerId> = gpus.iter().map(|&g| self.server_of(g)).collect();
+        servers.sort_unstable();
+        servers.dedup();
+        servers
+    }
+}
+
+/// Mutable per-GPU allocation state (the placement algorithms' view).
+#[derive(Clone, Debug)]
+pub struct GpuState {
+    /// Remaining workload L_g (seconds·GPUs, Algorithm 1 bookkeeping).
+    pub load: f64,
+    /// Memory currently committed to resident jobs (bytes).
+    pub mem_used: f64,
+    /// Number of resident jobs (for metrics/debug).
+    pub residents: usize,
+}
+
+/// Cluster allocation state: what placement reads and writes.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    pub spec: ClusterSpec,
+    pub gpus: Vec<GpuState>,
+}
+
+impl ClusterState {
+    pub fn new(spec: ClusterSpec) -> ClusterState {
+        ClusterState {
+            spec,
+            gpus: (0..spec.n_gpus())
+                .map(|_| GpuState { load: 0.0, mem_used: 0.0, residents: 0 })
+                .collect(),
+        }
+    }
+
+    pub fn free_mem(&self, gpu: GpuId) -> f64 {
+        self.spec.gpu_mem_bytes - self.gpus[gpu].mem_used
+    }
+
+    /// GPUs able to host a job needing `mem_bytes` per GPU.
+    pub fn fits(&self, gpu: GpuId, mem_bytes: f64) -> bool {
+        self.free_mem(gpu) >= mem_bytes
+    }
+
+    /// Server total remaining workload L_S.
+    pub fn server_load(&self, server: ServerId) -> f64 {
+        self.spec.gpus_of(server).map(|g| self.gpus[g].load).sum()
+    }
+
+    /// Commit a job: reserve memory, add workload to each chosen GPU.
+    pub fn allocate(&mut self, gpus: &[GpuId], mem_bytes: f64, job_load: f64) {
+        for &g in gpus {
+            debug_assert!(self.fits(g, mem_bytes), "allocation without memory check");
+            self.gpus[g].mem_used += mem_bytes;
+            self.gpus[g].load += job_load;
+            self.gpus[g].residents += 1;
+        }
+    }
+
+    /// Release a finished job's memory (and any leftover bookkeeping load).
+    pub fn release(&mut self, gpus: &[GpuId], mem_bytes: f64, leftover_load: f64) {
+        for &g in gpus {
+            self.gpus[g].mem_used = (self.gpus[g].mem_used - mem_bytes).max(0.0);
+            self.gpus[g].load = (self.gpus[g].load - leftover_load).max(0.0);
+            self.gpus[g].residents = self.gpus[g].residents.saturating_sub(1);
+        }
+    }
+
+    /// Decay workload bookkeeping as jobs make progress.
+    pub fn drain_load(&mut self, gpus: &[GpuId], amount: f64) {
+        for &g in gpus {
+            self.gpus[g].load = (self.gpus[g].load - amount).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_indexing() {
+        let spec = ClusterSpec::tiny(4, 4);
+        assert_eq!(spec.n_gpus(), 16);
+        assert_eq!(spec.server_of(0), 0);
+        assert_eq!(spec.server_of(5), 1);
+        assert_eq!(spec.server_of(15), 3);
+        assert_eq!(spec.gpus_of(2).collect::<Vec<_>>(), vec![8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn servers_of_dedups() {
+        let spec = ClusterSpec::tiny(4, 4);
+        assert_eq!(spec.servers_of(&[0, 1, 2, 3]), vec![0]);
+        assert_eq!(spec.servers_of(&[3, 4, 12, 5]), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut st = ClusterState::new(ClusterSpec::tiny(2, 2));
+        let mem = 4e9;
+        st.allocate(&[0, 2], mem, 100.0);
+        assert_eq!(st.gpus[0].residents, 1);
+        assert!(st.fits(0, 4e9));
+        assert!(!st.fits(0, 14e9));
+        assert_eq!(st.server_load(0), 100.0);
+        assert_eq!(st.server_load(1), 100.0);
+        st.release(&[0, 2], mem, 100.0);
+        assert_eq!(st.gpus[0].mem_used, 0.0);
+        assert_eq!(st.server_load(0), 0.0);
+    }
+
+    #[test]
+    fn drain_saturates_at_zero() {
+        let mut st = ClusterState::new(ClusterSpec::tiny(1, 1));
+        st.allocate(&[0], 1e9, 10.0);
+        st.drain_load(&[0], 25.0);
+        assert_eq!(st.gpus[0].load, 0.0);
+    }
+
+    #[test]
+    fn paper_testbed_shape() {
+        let spec = ClusterSpec::paper_64gpu();
+        assert_eq!(spec.n_gpus(), 64);
+        assert_eq!(spec.n_servers, 16);
+    }
+}

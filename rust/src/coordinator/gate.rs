@@ -1,0 +1,234 @@
+//! The live admission gate: the same `CommPolicy` decisions the simulator
+//! makes, applied to real in-flight gradient reductions, with Eq (5)
+//! pacing of the transfer duration.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::CommModel;
+use crate::sched::{self, Admission, CommPolicy, NetView};
+
+/// An admitted transfer: hold it for the duration of the reduction, then
+/// `release` it.
+pub struct GateToken {
+    pub seq: usize,
+    pub contended: bool,
+    servers: Vec<usize>,
+}
+
+struct Flight {
+    seq: usize,
+    msg_bytes: f64,
+    started: Instant,
+    k_at_admit: usize,
+}
+
+struct GateState {
+    /// Active flight seqs per server.
+    per_server: Vec<Vec<usize>>,
+    flights: Vec<Flight>,
+    admitted_total: usize,
+    contended_total: usize,
+    max_k: usize,
+}
+
+/// Cumulative gate statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GateStats {
+    pub admitted: usize,
+    pub contended: usize,
+    pub max_contention: usize,
+}
+
+/// Contention-aware network admission gate shared by all job threads.
+pub struct NetGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+    policy: Box<dyn CommPolicy + Send + Sync>,
+    comm: CommModel,
+    time_scale: f64,
+}
+
+impl NetGate {
+    pub fn new(n_servers: usize, comm: CommModel, policy: &str, time_scale: f64) -> Result<NetGate> {
+        let policy: Box<dyn CommPolicy + Send + Sync> = match policy {
+            "ada" => Box::new(sched::AdaDual { model: comm }),
+            "srsf1" => Box::new(sched::SrsfCap { cap: 1 }),
+            "srsf2" => Box::new(sched::SrsfCap { cap: 2 }),
+            "srsf3" => Box::new(sched::SrsfCap { cap: 3 }),
+            other => anyhow::bail!("unknown gate policy '{other}'"),
+        };
+        Ok(NetGate {
+            state: Mutex::new(GateState {
+                per_server: vec![Vec::new(); n_servers],
+                flights: Vec::new(),
+                admitted_total: 0,
+                contended_total: 0,
+                max_k: 0,
+            }),
+            cv: Condvar::new(),
+            policy,
+            comm,
+            time_scale,
+        })
+    }
+
+    /// Remaining-bytes estimate for a flight (drains at the rate fixed at
+    /// admission; a conservative approximation of the simulator's exact
+    /// repricing, documented in DESIGN.md).
+    fn remaining(&self, f: &Flight) -> f64 {
+        let scale = if self.time_scale > 0.0 { self.time_scale } else { 1.0 };
+        let elapsed = f.started.elapsed().as_secs_f64() / scale;
+        (f.msg_bytes - elapsed * self.comm.rate(f.k_at_admit)).max(0.0)
+    }
+
+    /// Block until the policy admits a transfer of `msg_bytes` over
+    /// `servers`, then register it and sleep the Eq (5) transfer time.
+    pub fn acquire(&self, seq: usize, _job: usize, servers: &[usize], msg_bytes: f64) -> GateToken {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let view: Vec<Vec<(usize, f64)>> = st
+                .per_server
+                .iter()
+                .map(|ids| {
+                    ids.iter()
+                        .map(|&s| {
+                            let f = st.flights.iter().find(|f| f.seq == s).unwrap();
+                            (s, self.remaining(f))
+                        })
+                        .collect()
+                })
+                .collect();
+            let net = NetView { per_server: &view };
+            if self.policy.admit(msg_bytes, servers, &net) == Admission::Start {
+                let k = servers
+                    .iter()
+                    .map(|&s| st.per_server[s].len())
+                    .max()
+                    .unwrap_or(0)
+                    + 1;
+                st.flights.push(Flight {
+                    seq,
+                    msg_bytes,
+                    started: Instant::now(),
+                    k_at_admit: k,
+                });
+                for &s in servers {
+                    st.per_server[s].push(seq);
+                }
+                st.admitted_total += 1;
+                if k > 1 {
+                    st.contended_total += 1;
+                }
+                st.max_k = st.max_k.max(k);
+                let contended = k > 1;
+                drop(st);
+                // Pace the transfer per Eq (5) at the admission-time k.
+                if self.time_scale > 0.0 {
+                    let dur = self.comm.time_contended(msg_bytes, k) * self.time_scale;
+                    std::thread::sleep(Duration::from_secs_f64(dur));
+                }
+                return GateToken { seq, contended, servers: servers.to_vec() };
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Unregister a finished transfer and wake waiters.
+    pub fn release(&self, token: GateToken) {
+        let mut st = self.state.lock().unwrap();
+        for &s in &token.servers {
+            st.per_server[s].retain(|&x| x != token.seq);
+        }
+        st.flights.retain(|f| f.seq != token.seq);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub fn stats(&self) -> GateStats {
+        let st = self.state.lock().unwrap();
+        GateStats {
+            admitted: st.admitted_total,
+            contended: st.contended_total,
+            max_contention: st.max_k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn gate(policy: &str) -> Arc<NetGate> {
+        Arc::new(NetGate::new(2, CommModel::paper_10gbe(), policy, 0.0).unwrap())
+    }
+
+    #[test]
+    fn sequential_acquire_release() {
+        let g = gate("ada");
+        let t1 = g.acquire(1, 0, &[0, 1], 1e6);
+        assert!(!t1.contended);
+        g.release(t1);
+        let t2 = g.acquire(2, 1, &[0, 1], 1e6);
+        assert!(!t2.contended);
+        g.release(t2);
+        let s = g.stats();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.contended, 0);
+    }
+
+    #[test]
+    fn srsf1_serialises_overlap() {
+        let g = gate("srsf1");
+        let t1 = g.acquire(1, 0, &[0], 1e8);
+        // Second acquire on the same server must block until release.
+        let g2 = Arc::clone(&g);
+        let handle = std::thread::spawn(move || {
+            let t = g2.acquire(2, 1, &[0], 1e8);
+            let contended = t.contended;
+            g2.release(t);
+            contended
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        g.release(t1);
+        let contended = handle.join().unwrap();
+        assert!(!contended, "SRSF(1) admission must wait for an idle link");
+        assert_eq!(g.stats().max_contention, 1);
+    }
+
+    #[test]
+    fn ada_admits_small_against_large() {
+        let g = gate("ada");
+        let big = g.acquire(1, 0, &[0], 1e9);
+        // A much smaller transfer passes the ratio test immediately.
+        let small = g.acquire(2, 1, &[0], 1e6);
+        assert!(small.contended);
+        g.release(small);
+        g.release(big);
+        assert_eq!(g.stats().max_contention, 2);
+    }
+
+    #[test]
+    fn ada_blocks_similar_sizes() {
+        let g = gate("ada");
+        let first = g.acquire(1, 0, &[0], 1e8);
+        let g2 = Arc::clone(&g);
+        let handle = std::thread::spawn(move || {
+            let t = g2.acquire(2, 1, &[0], 1e8); // ratio 1.0 > threshold
+            g2.release(t);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(g.stats().admitted, 1, "equal-size overlap must wait");
+        g.release(first);
+        handle.join().unwrap();
+        assert_eq!(g.stats().admitted, 2);
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        assert!(NetGate::new(1, CommModel::paper_10gbe(), "nope", 0.0).is_err());
+    }
+}

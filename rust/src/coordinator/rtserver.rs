@@ -1,0 +1,133 @@
+//! Runtime server: the `xla` crate's PJRT client is `Rc`-based and thus
+//! pinned to one thread, while coordinator jobs run on many. The server
+//! owns the [`Runtime`] on a dedicated thread and job threads talk to it
+//! through an mpsc request/reply protocol — the same "one executor
+//! process, many logical workers" shape a real single-node deployment has.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Meta, Runtime};
+
+type Reply<T> = Sender<Result<T>>;
+
+enum Req {
+    TrainStep { params: Vec<f32>, tokens: Vec<i32>, pallas: bool, reply: Reply<(Vec<f32>, f32)> },
+    GradStep { params: Vec<f32>, tokens: Vec<i32>, reply: Reply<(Vec<f32>, f32)> },
+    AllReduceSum { x: Vec<f32>, y: Vec<f32>, reply: Reply<Vec<f32>> },
+    ApplyGrads { params: Vec<f32>, grads: Vec<f32>, scale: f32, reply: Reply<Vec<f32>> },
+    InitParams { reply: Reply<Vec<f32>> },
+    Shutdown,
+}
+
+/// Clonable, `Send` handle to the runtime server.
+#[derive(Clone)]
+pub struct RtHandle {
+    tx: Sender<Req>,
+}
+
+macro_rules! call {
+    ($self:ident, $variant:ident { $($field:ident : $value:expr),* }) => {{
+        let (reply, rx) = channel();
+        $self
+            .tx
+            .send(Req::$variant { $($field: $value,)* reply })
+            .map_err(|_| anyhow!("runtime server is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime server dropped the reply"))?
+    }};
+}
+
+impl RtHandle {
+    pub fn train_step(&self, params: Vec<f32>, tokens: Vec<i32>, pallas: bool) -> Result<(Vec<f32>, f32)> {
+        call!(self, TrainStep { params: params, tokens: tokens, pallas: pallas })
+    }
+
+    pub fn grad_step(&self, params: Vec<f32>, tokens: Vec<i32>) -> Result<(Vec<f32>, f32)> {
+        call!(self, GradStep { params: params, tokens: tokens })
+    }
+
+    pub fn allreduce_sum(&self, x: Vec<f32>, y: Vec<f32>) -> Result<Vec<f32>> {
+        call!(self, AllReduceSum { x: x, y: y })
+    }
+
+    pub fn apply_grads(&self, params: Vec<f32>, grads: Vec<f32>, scale: f32) -> Result<Vec<f32>> {
+        call!(self, ApplyGrads { params: params, grads: grads, scale: scale })
+    }
+
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        call!(self, InitParams {})
+    }
+}
+
+/// The running server: keeps the join handle + parsed meta.
+pub struct RtServer {
+    tx: Sender<Req>,
+    join: Option<JoinHandle<()>>,
+    pub meta: Meta,
+}
+
+impl RtServer {
+    /// Load artifacts from `dir` on a fresh thread and start serving.
+    pub fn start(dir: impl Into<PathBuf>) -> Result<RtServer> {
+        let dir = dir.into();
+        let (tx, rx) = channel::<Req>();
+        let (meta_tx, meta_rx) = channel::<Result<Meta>>();
+        let join = std::thread::Builder::new()
+            .name("rt-server".into())
+            .spawn(move || serve(dir, rx, meta_tx))
+            .expect("spawn rt-server");
+        let meta = meta_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime server died during load"))??;
+        Ok(RtServer { tx, join: Some(join), meta })
+    }
+
+    pub fn handle(&self) -> RtHandle {
+        RtHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for RtServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve(dir: PathBuf, rx: Receiver<Req>, meta_tx: Sender<Result<Meta>>) {
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => {
+            let _ = meta_tx.send(Ok(rt.meta.clone()));
+            rt
+        }
+        Err(e) => {
+            let _ = meta_tx.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::TrainStep { params, tokens, pallas, reply } => {
+                let _ = reply.send(rt.train_step(&params, &tokens, pallas));
+            }
+            Req::GradStep { params, tokens, reply } => {
+                let _ = reply.send(rt.grad_step(&params, &tokens));
+            }
+            Req::AllReduceSum { x, y, reply } => {
+                let _ = reply.send(rt.allreduce_sum(&x, &y));
+            }
+            Req::ApplyGrads { params, grads, scale, reply } => {
+                let _ = reply.send(rt.apply_grads(&params, &grads, scale));
+            }
+            Req::InitParams { reply } => {
+                let _ = reply.send(rt.init_params());
+            }
+            Req::Shutdown => break,
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! The DAG formulation of a DDL job (Fig 3): per iteration, one feed-forward
+//! and one backpropagation task per worker plus one All-Reduce task with a
+//! synchronisation barrier; the All-Reduce of iteration i precedes the
+//! feed-forwards of iteration i+1. A virtual global entry/exit stitches
+//! multiple jobs into one global DAG.
+//!
+//! The event-driven simulator (sim/) walks an equivalent per-job state
+//! machine rather than materialising R_k child DAGs; this module is the
+//! explicit graph used for structural tests, critical-path lower bounds and
+//! the coordinator's task bookkeeping.
+
+use crate::model::CommModel;
+use crate::trace::JobSpec;
+
+/// Task kinds of the child DAG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Virtual source/sink (zero cost).
+    Virtual,
+    /// Feed-forward on one worker.
+    Forward { worker: usize },
+    /// Backpropagation on one worker.
+    Backward { worker: usize },
+    /// Gradient All-Reduce (one per iteration, spans all workers).
+    AllReduce,
+}
+
+/// One node of the job DAG.
+#[derive(Clone, Debug)]
+pub struct TaskNode {
+    pub kind: TaskKind,
+    pub iteration: u64,
+    /// Contention-free duration (seconds).
+    pub cost: f64,
+    /// Indices of successor tasks.
+    pub succ: Vec<usize>,
+    /// Number of predecessors (for topological/readiness accounting).
+    pub n_pred: usize,
+}
+
+/// The DAG of one job, unrolled for `iterations` (use a small count for
+/// structural tests; the simulator never materialises this).
+#[derive(Clone, Debug)]
+pub struct JobDag {
+    pub job_id: usize,
+    pub tasks: Vec<TaskNode>,
+    pub entry: usize,
+    pub exit: usize,
+}
+
+impl JobDag {
+    /// Build the DAG per Fig 3(a): entry -> F_w -> B_w -> AllReduce ->
+    /// (next iteration F_w ...) -> exit. `multi_server` decides whether the
+    /// All-Reduce carries a real cost or is free (single-server jobs).
+    pub fn build(
+        job: &JobSpec,
+        iterations: u64,
+        peak_gflops: f64,
+        multi_server: bool,
+        cm: &CommModel,
+    ) -> JobDag {
+        let spec = job.model.spec();
+        let perf = crate::model::PerfModel::for_model(job.model);
+        let t_f = perf.t_fwd(spec.batch_size, peak_gflops);
+        let t_b = perf.t_bwd(spec.batch_size, peak_gflops);
+        let t_c = if multi_server { cm.time_free(spec.model_bytes) } else { 0.0 };
+        let w = job.n_gpus;
+
+        let mut tasks: Vec<TaskNode> = Vec::with_capacity(2 + iterations as usize * (2 * w + 1));
+        let entry = 0;
+        tasks.push(TaskNode { kind: TaskKind::Virtual, iteration: 0, cost: 0.0, succ: vec![], n_pred: 0 });
+
+        let mut prev_barrier = entry; // entry, then each iteration's AllReduce
+        for it in 0..iterations {
+            let fwd_base = tasks.len();
+            for worker in 0..w {
+                tasks.push(TaskNode {
+                    kind: TaskKind::Forward { worker },
+                    iteration: it,
+                    cost: t_f,
+                    succ: vec![],
+                    n_pred: 0,
+                });
+            }
+            let bwd_base = tasks.len();
+            for worker in 0..w {
+                tasks.push(TaskNode {
+                    kind: TaskKind::Backward { worker },
+                    iteration: it,
+                    cost: t_b,
+                    succ: vec![],
+                    n_pred: 0,
+                });
+            }
+            let ar = tasks.len();
+            tasks.push(TaskNode { kind: TaskKind::AllReduce, iteration: it, cost: t_c, succ: vec![], n_pred: 0 });
+            // edges: barrier -> each F; F_w -> B_w; each B -> AllReduce
+            for worker in 0..w {
+                link(&mut tasks, prev_barrier, fwd_base + worker);
+                link(&mut tasks, fwd_base + worker, bwd_base + worker);
+                link(&mut tasks, bwd_base + worker, ar);
+            }
+            prev_barrier = ar;
+        }
+        let exit = tasks.len();
+        tasks.push(TaskNode { kind: TaskKind::Virtual, iteration: iterations, cost: 0.0, succ: vec![], n_pred: 0 });
+        link(&mut tasks, prev_barrier, exit);
+        JobDag { job_id: job.id, tasks, entry, exit }
+    }
+
+    /// Longest path through the DAG by task cost — the contention-free
+    /// lower bound on the job's runtime (used as a simulator invariant).
+    pub fn critical_path(&self) -> f64 {
+        // Tasks are pushed in topological order by construction.
+        let mut dist = vec![0.0f64; self.tasks.len()];
+        for (i, t) in self.tasks.iter().enumerate() {
+            let reach = dist[i] + t.cost;
+            for &s in &t.succ {
+                if reach > dist[s] {
+                    dist[s] = reach;
+                }
+            }
+        }
+        dist[self.exit]
+    }
+
+    /// Verify DAG structural invariants; returns an error description.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        for t in &self.tasks {
+            for &s in &t.succ {
+                if s >= n {
+                    return Err(format!("edge to out-of-range task {s}"));
+                }
+                indeg[s] += 1;
+            }
+        }
+        for (i, t) in self.tasks.iter().enumerate() {
+            if indeg[i] != t.n_pred {
+                return Err(format!("task {i} n_pred {} != indegree {}", t.n_pred, indeg[i]));
+            }
+        }
+        if indeg[self.entry] != 0 {
+            return Err("entry has predecessors".into());
+        }
+        if !self.tasks[self.exit].succ.is_empty() {
+            return Err("exit has successors".into());
+        }
+        // Kahn's algorithm: all tasks reachable & acyclic.
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = ready.pop() {
+            seen += 1;
+            for &s in &self.tasks[i].succ {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        if seen != n {
+            return Err(format!("cycle detected: visited {seen} of {n}"));
+        }
+        Ok(())
+    }
+
+    /// Number of non-virtual tasks.
+    pub fn n_real_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| t.kind != TaskKind::Virtual).count()
+    }
+}
+
+fn link(tasks: &mut [TaskNode], from: usize, to: usize) {
+    tasks[from].succ.push(to);
+    tasks[to].n_pred += 1;
+}
+
+/// Analytic critical path without materialising the DAG — must agree with
+/// `JobDag::critical_path` (cross-checked in tests). Iterations chain
+/// serially: I · (t_f + t_b + t_c).
+pub fn critical_path_analytic(
+    job: &JobSpec,
+    peak_gflops: f64,
+    multi_server: bool,
+    cm: &CommModel,
+) -> f64 {
+    let t_c = if multi_server { cm.time_free(job.message_bytes()) } else { 0.0 };
+    (job.t_iter(peak_gflops) + t_c) * job.iterations as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DnnModel;
+    use crate::model::V100_PEAK_GFLOPS as P;
+
+    fn job(n_gpus: usize, iters: u64) -> JobSpec {
+        JobSpec { id: 3, arrival: 0.0, model: DnnModel::ResNet50, n_gpus, iterations: iters }
+    }
+
+    #[test]
+    fn shape_matches_fig3() {
+        let cm = CommModel::paper_10gbe();
+        let dag = JobDag::build(&job(4, 3), 3, P, true, &cm);
+        // 2 virtual + 3 iterations × (4 F + 4 B + 1 AR)
+        assert_eq!(dag.tasks.len(), 2 + 3 * 9);
+        assert_eq!(dag.n_real_tasks(), 27);
+        dag.validate().unwrap();
+    }
+
+    #[test]
+    fn allreduce_is_barrier() {
+        let cm = CommModel::paper_10gbe();
+        let dag = JobDag::build(&job(4, 2), 2, P, true, &cm);
+        for (i, t) in dag.tasks.iter().enumerate() {
+            if t.kind == TaskKind::AllReduce {
+                assert_eq!(t.n_pred, 4, "AR task {i} must wait for all 4 backward tasks");
+            }
+        }
+    }
+
+    #[test]
+    fn critical_path_matches_analytic() {
+        let cm = CommModel::paper_10gbe();
+        for (gpus, multi) in [(1, false), (4, false), (8, true)] {
+            let j = job(gpus, 5);
+            let dag = JobDag::build(&j, 5, P, multi, &cm);
+            let want = critical_path_analytic(&j, P, multi, &cm);
+            let got = dag.critical_path();
+            assert!((got - want).abs() < 1e-9, "gpus={gpus} multi={multi}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn single_server_allreduce_free() {
+        let cm = CommModel::paper_10gbe();
+        let dag = JobDag::build(&job(4, 1), 1, P, false, &cm);
+        let ar_cost: f64 = dag
+            .tasks
+            .iter()
+            .filter(|t| t.kind == TaskKind::AllReduce)
+            .map(|t| t.cost)
+            .sum();
+        assert_eq!(ar_cost, 0.0);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let cm = CommModel::paper_10gbe();
+        let mut dag = JobDag::build(&job(2, 1), 1, P, true, &cm);
+        dag.tasks[1].n_pred += 1; // corrupt
+        assert!(dag.validate().is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! # ddl-sched — communication-contention-aware DDL job scheduling
+//!
+//! Full reproduction of *"Communication Contention Aware Scheduling of
+//! Multiple Deep Learning Training Jobs"* (Wang, Shi, Wang, Chu — CS.DC
+//! 2020) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the DAG job
+//!   model ([`dag`]), the Eq (5) contention network model ([`model`]),
+//!   LWF-κ placement ([`placement`]), AdaDUAL/Ada-SRSF communication
+//!   scheduling ([`sched`]), the event-driven cluster simulator ([`sim`])
+//!   and the evaluation metrics ([`metrics`]). A live multi-job training
+//!   coordinator ([`coordinator`]) drives real AOT-compiled training jobs
+//!   through the same placement + admission logic.
+//! * **Layer 2/1 (python/, build-time only)** — a transformer training
+//!   workload in JAX whose hot-spots are Pallas kernels, AOT-lowered to
+//!   HLO text artifacts executed by [`runtime`] via the PJRT CPU client.
+//!
+//! Quickstart:
+//! ```no_run
+//! use ddl_sched::prelude::*;
+//!
+//! let jobs = trace::generate(&trace::TraceConfig::paper_160());
+//! let cfg = sim::SimConfig::paper();
+//! let mut placer = placement::LwfPlacer::new(1);
+//! let policy = sched::AdaDual { model: cfg.comm };
+//! let result = sim::simulate(&cfg, &jobs, &mut placer, &policy);
+//! println!("avg JCT: {:.1}s", metrics::Evaluation::from_sim("Ada-SRSF", &result).jct.mean);
+//! ```
+
+pub mod cluster;
+pub mod coordinator;
+pub mod dag;
+pub mod metrics;
+pub mod model;
+pub mod placement;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Convenient glob imports for examples and benches.
+pub mod prelude {
+    pub use crate::cluster::{ClusterSpec, ClusterState};
+    pub use crate::metrics::{self, Evaluation};
+    pub use crate::model::{self, AllReduceAlgo, CommModel, DnnModel, PerfModel};
+    pub use crate::placement::{
+        self, FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RandomPlacer,
+    };
+    pub use crate::sched::{self, AdaDual, Admission, CommPolicy, SrsfCap};
+    pub use crate::sim::{self, SimConfig, SimResult};
+    pub use crate::trace::{self, JobSpec, TraceConfig};
+    pub use crate::util::bench::{bench, write_csv, Table};
+}

@@ -1,0 +1,247 @@
+//! `ddl-sched` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   trace-gen   --jobs N --seed S --out FILE          generate a workload trace
+//!   simulate    --placer lwf --policy ada [--trace F] run one simulation
+//!   sweep       --what placer|policy|kappa            compare algorithms
+//!   e2e         --jobs N --steps N [--no-pallas]      live coordinator run
+//!   fit         [--m-max BYTES]                       Fig 2 model fit demo
+//!   info                                              print zoo + models
+
+use std::process::ExitCode;
+
+use ddl_sched::coordinator::{self, CoordinatorConfig, JobRequest};
+use ddl_sched::metrics::Evaluation;
+use ddl_sched::prelude::*;
+use ddl_sched::runtime::default_artifacts_dir;
+use ddl_sched::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("trace-gen") => cmd_trace_gen(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("fit") => cmd_fit(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "ddl-sched — communication-contention-aware DDL job scheduling\n\
+         \n\
+         USAGE: ddl-sched <subcommand> [--options]\n\
+         \n\
+         SUBCOMMANDS\n\
+         \x20 trace-gen  --jobs N --seed S [--out trace.json]   generate a workload\n\
+         \x20 simulate   [--trace F] [--placer lwf|ff|ls|rand] [--kappa K]\n\
+         \x20            [--policy ada|srsf1|srsf2|srsf3] [--seed S] [--jobs N]\n\
+         \x20 sweep      --what placer|policy|kappa [--jobs N] [--seed S]\n\
+         \x20 e2e        [--jobs N] [--steps N] [--workers W] [--no-pallas]\n\
+         \x20            [--policy ada|srsf1|...] [--time-scale X]\n\
+         \x20 fit        [--mb-max MB]                          Fig 2 cost-model fit\n\
+         \x20 info       print the model zoo and comm model constants"
+    );
+}
+
+fn load_or_generate(args: &Args) -> anyhow::Result<Vec<JobSpec>> {
+    if let Some(path) = args.get("trace") {
+        let text = std::fs::read_to_string(path)?;
+        return trace::from_json(&text).map_err(|e| anyhow::anyhow!(e));
+    }
+    let n = args.usize_or("jobs", 160)?;
+    let seed = args.u64_or("seed", 42)?;
+    let cfg = if n == 160 {
+        TraceConfig { seed, ..TraceConfig::paper_160() }
+    } else {
+        TraceConfig::scaled(n, seed)
+    };
+    Ok(trace::generate(&cfg))
+}
+
+fn cmd_trace_gen(args: &Args) -> anyhow::Result<()> {
+    let jobs = load_or_generate(args)?;
+    let out = args.str_or("out", "trace.json");
+    std::fs::write(out, trace::to_json(&jobs))?;
+    println!("wrote {} jobs to {out}", jobs.len());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let jobs = load_or_generate(args)?;
+    let cfg = SimConfig::paper();
+    let kappa = args.usize_or("kappa", 1)?;
+    let seed = args.u64_or("seed", 42)?;
+    let placer_name = args.str_or("placer", "lwf");
+    let policy_name = args.str_or("policy", "ada");
+    let mut placer = placement::by_name(placer_name, kappa, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown placer '{placer_name}'"))?;
+    let policy = sched::by_name(policy_name, cfg.comm)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_name}'"))?;
+    let res = sim::simulate(&cfg, &jobs, placer.as_mut(), policy.as_ref());
+    let eval = Evaluation::from_sim(&format!("{placer_name}/{policy_name}"), &res);
+    let mut t = Table::new(
+        "simulation result",
+        &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+    );
+    t.row(&eval.table_row());
+    t.print();
+    println!(
+        "jobs={} events={} makespan={:.1}s comm: clean={} contended={} max_k={}",
+        jobs.len(),
+        res.n_events,
+        res.makespan,
+        res.clean_admissions,
+        res.contended_admissions,
+        res.max_contention
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let jobs = load_or_generate(args)?;
+    let cfg = SimConfig::paper();
+    let seed = args.u64_or("seed", 42)?;
+    let what = args.str_or("what", "policy");
+    let mut table = Table::new(
+        &format!("{what} sweep ({} jobs)", jobs.len()),
+        &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+    );
+    match what {
+        "placer" => {
+            for name in ["rand", "ff", "ls", "lwf"] {
+                let mut p = placement::by_name(name, 1, seed).unwrap();
+                let policy = AdaDual { model: cfg.comm };
+                let res = sim::simulate(&cfg, &jobs, p.as_mut(), &policy);
+                table.row(&Evaluation::from_sim(name, &res).table_row());
+            }
+        }
+        "policy" => {
+            for name in ["srsf1", "srsf2", "srsf3", "ada"] {
+                let mut p = LwfPlacer::new(1);
+                let policy = sched::by_name(name, cfg.comm).unwrap();
+                let res = sim::simulate(&cfg, &jobs, &mut p, policy.as_ref());
+                table.row(&Evaluation::from_sim(name, &res).table_row());
+            }
+        }
+        "kappa" => {
+            for kappa in [1usize, 2, 4, 8, 16] {
+                let mut p = LwfPlacer::new(kappa);
+                let policy = AdaDual { model: cfg.comm };
+                let res = sim::simulate(&cfg, &jobs, &mut p, &policy);
+                table.row(&Evaluation::from_sim(&format!("LWF-{kappa}"), &res).table_row());
+            }
+        }
+        other => anyhow::bail!("unknown sweep '{other}' (placer|policy|kappa)"),
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+    let n_jobs = args.usize_or("jobs", 4)?;
+    let steps = args.usize_or("steps", 30)?;
+    let workers = args.usize_or("workers", 2)?;
+    let policy = args.str_or("policy", "ada").to_string();
+    let time_scale = args.f64_or("time-scale", 1.0)?;
+    let server = coordinator::RtServer::start(default_artifacts_dir())?;
+    println!(
+        "runtime: preset={} params={}",
+        server.meta.preset, server.meta.n_params
+    );
+    let cfg = CoordinatorConfig {
+        cluster: ClusterSpec::tiny(4, 2),
+        use_pallas: !args.flag("no-pallas"),
+        policy,
+        time_scale,
+        ..CoordinatorConfig::default_ada(ClusterSpec::tiny(4, 2))
+    };
+    let jobs: Vec<JobRequest> = (0..n_jobs)
+        .map(|id| JobRequest { id, n_workers: workers, steps, seed: 100 + id as u64 })
+        .collect();
+    let reports = coordinator::run_jobs(&cfg, &server, &jobs)?;
+    let mut t = Table::new(
+        "e2e training",
+        &["job", "gpus", "multi-server", "steps", "first loss", "last loss", "jct(s)", "comm", "contended"],
+    );
+    for r in &reports {
+        t.row(&[
+            format!("{}", r.id),
+            format!("{:?}", r.gpus),
+            format!("{}", r.multi_server),
+            format!("{}", r.losses.len()),
+            format!("{:.3}", r.losses.first().copied().unwrap_or(f32::NAN)),
+            format!("{:.3}", r.losses.last().copied().unwrap_or(f32::NAN)),
+            format!("{:.2}", r.jct),
+            format!("{}", r.comm_rounds),
+            format!("{}", r.contended_rounds),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> anyhow::Result<()> {
+    let cm = CommModel::paper_10gbe();
+    let mb_max = args.f64_or("mb-max", 512.0)?;
+    println!("paper constants: a={:.3e}s b={:.3e}s/B eta={:.3e}s/B", cm.a, cm.b, cm.eta);
+    println!("AdaDUAL threshold b/(2(b+eta)) = {:.4}", cm.adadual_threshold());
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut m = 1.0e6;
+    while m <= mb_max * 1e6 {
+        xs.push(m);
+        ys.push(cm.time_free(m));
+        m *= 2.0;
+    }
+    let (a, b, r2) = ddl_sched::util::stats::linear_fit(&xs, &ys);
+    println!("re-fit on generated points: a={a:.3e} b={b:.3e} r2={r2:.6}");
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Table III — DNN zoo (V100)",
+        &["model", "size(MB)", "mem(MB)", "batch", "t_f(ms)", "t_b(ms)"],
+    );
+    for m in model::ALL_MODELS {
+        let s = m.spec();
+        t.row(&[
+            s.name.to_string(),
+            format!("{:.1}", s.model_bytes / 1048576.0),
+            format!("{:.0}", s.mem_bytes / 1048576.0),
+            format!("{}", s.batch_size),
+            format!("{:.1}", s.t_fwd * 1e3),
+            format!("{:.1}", s.t_bwd * 1e3),
+        ]);
+    }
+    t.print();
+    let cm = CommModel::paper_10gbe();
+    println!(
+        "\ncomm model: a={:.3e}s b={:.3e}s/B eta={:.3e}s/B threshold={:.4}",
+        cm.a,
+        cm.b,
+        cm.eta,
+        cm.adadual_threshold()
+    );
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Evaluation metrics (§V-A "Metrics"): JCT statistics (average / median /
+//! 95th-percentile), JCT CDFs, and GPU utilisation distributions — the
+//! exact quantities behind Tables IV–V and Figs 4–6 — plus CSV emission.
+
+use crate::sim::SimResult;
+use crate::util::json::Json;
+use crate::util::stats::{self, Summary};
+
+/// One algorithm's evaluation row (a row of Table IV or V).
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub method: String,
+    pub avg_gpu_util: f64,
+    /// Utilisation over each GPU's allocated window (secondary metric).
+    pub avg_alloc_util: f64,
+    pub jct: Summary,
+    pub jct_cdf: Vec<(f64, f64)>,
+    pub gpu_utils: Vec<f64>,
+    pub makespan: f64,
+    pub contended_admissions: u64,
+    pub clean_admissions: u64,
+}
+
+impl Evaluation {
+    pub fn from_sim(method: &str, res: &SimResult) -> Evaluation {
+        let jcts: Vec<f64> = res.jct.iter().copied().filter(|t| t.is_finite()).collect();
+        assert!(!jcts.is_empty(), "no finished jobs");
+        Evaluation {
+            method: method.to_string(),
+            avg_gpu_util: res.avg_gpu_util(),
+            avg_alloc_util: res.avg_alloc_util(),
+            jct: Summary::of(&jcts),
+            jct_cdf: stats::ecdf(&jcts),
+            gpu_utils: res.gpu_utils(),
+            makespan: res.makespan,
+            contended_admissions: res.contended_admissions,
+            clean_admissions: res.clean_admissions,
+        }
+    }
+
+    /// Table IV/V row: method, avg util %, avg/median/95th JCT seconds.
+    pub fn table_row(&self) -> Vec<String> {
+        vec![
+            self.method.clone(),
+            format!("{:.2}%", self.avg_gpu_util * 100.0),
+            format!("{:.1}", self.jct.mean),
+            format!("{:.1}", self.jct.median),
+            format!("{:.1}", self.jct.p95),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("method", self.method.as_str())
+            .set("avg_gpu_util", self.avg_gpu_util)
+            .set("avg_alloc_util", self.avg_alloc_util)
+            .set("avg_jct", self.jct.mean)
+            .set("median_jct", self.jct.median)
+            .set("p95_jct", self.jct.p95)
+            .set("makespan", self.makespan)
+            .set("contended_admissions", self.contended_admissions)
+            .set("clean_admissions", self.clean_admissions)
+    }
+
+    /// CSV rows of the JCT CDF (Figs 4a/5a/6a series).
+    pub fn cdf_rows(&self) -> Vec<Vec<f64>> {
+        self.jct_cdf.iter().map(|&(x, p)| vec![x, p]).collect()
+    }
+
+    /// GPU-utilisation histogram over [0,1] (Figs 4b/5b/6b series).
+    pub fn util_histogram(&self, bins: usize) -> Vec<usize> {
+        stats::histogram(&self.gpu_utils, 0.0, 1.0 + 1e-12, bins)
+    }
+}
+
+/// Relative improvement `(base - ours) / base` (the paper's "saves X%").
+pub fn saving(base: f64, ours: f64) -> f64 {
+    (base - ours) / base
+}
+
+/// Ratio `ours / base` expressed as the paper's "N.NNx improvement".
+pub fn improvement(base: f64, ours: f64) -> f64 {
+    ours / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimResult;
+
+    fn fake_result() -> SimResult {
+        SimResult {
+            jct: vec![10.0, 20.0, 30.0, f64::NAN],
+            finish: vec![10.0, 20.0, 30.0, f64::NAN],
+            queue_wait: vec![0.0; 4],
+            gpu_busy: vec![15.0, 30.0],
+            gpu_alloc_window: vec![20.0, 30.0],
+            makespan: 30.0,
+            n_events: 100,
+            contended_admissions: 3,
+            clean_admissions: 7,
+            max_contention: 2,
+            events: vec![],
+        }
+    }
+
+    #[test]
+    fn evaluation_filters_unfinished() {
+        let e = Evaluation::from_sim("X", &fake_result());
+        assert_eq!(e.jct.n, 3);
+        assert!((e.jct.mean - 20.0).abs() < 1e-9);
+        assert!((e.avg_gpu_util - 0.75).abs() < 1e-9); // (0.5 + 1.0)/2
+    }
+
+    #[test]
+    fn cdf_rows_match_count() {
+        let e = Evaluation::from_sim("X", &fake_result());
+        assert_eq!(e.cdf_rows().len(), 3);
+        assert!((e.cdf_rows().last().unwrap()[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_histogram_sums_to_gpus() {
+        let e = Evaluation::from_sim("X", &fake_result());
+        let h = e.util_histogram(10);
+        assert_eq!(h.iter().sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn table_row_shape() {
+        let e = Evaluation::from_sim("LWF-1", &fake_result());
+        let row = e.table_row();
+        assert_eq!(row.len(), 5);
+        assert_eq!(row[0], "LWF-1");
+        assert!(row[1].ends_with('%'));
+    }
+
+    #[test]
+    fn saving_and_improvement() {
+        assert!((saving(100.0, 80.0) - 0.2).abs() < 1e-12);
+        assert!((improvement(20.0, 43.0) - 2.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_emission_parses() {
+        let e = Evaluation::from_sim("X", &fake_result());
+        let text = e.to_json().to_string();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(v.req_str("method").unwrap(), "X");
+    }
+}

@@ -1,0 +1,134 @@
+//! All-reduce algorithm cost models — Table I of the paper.
+//!
+//! Each algorithm's cost is `a + b·M` (Eq 2) with algorithm-specific
+//! coefficients in terms of the α-β-γ model: α per-message latency,
+//! β per-byte transfer time, γ per-byte reduction compute time.
+
+/// The four algorithms of Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AllReduceAlgo {
+    BinaryTree,
+    RecursiveDoubling,
+    RecursiveHalvingDoubling,
+    Ring,
+}
+
+pub const ALL_ALGOS: [AllReduceAlgo; 4] = [
+    AllReduceAlgo::BinaryTree,
+    AllReduceAlgo::RecursiveDoubling,
+    AllReduceAlgo::RecursiveHalvingDoubling,
+    AllReduceAlgo::Ring,
+];
+
+/// α-β-γ network/compute primitive costs.
+#[derive(Clone, Copy, Debug)]
+pub struct AlphaBetaGamma {
+    /// Per-message latency (s).
+    pub alpha: f64,
+    /// Per-byte transfer time (s/B).
+    pub beta: f64,
+    /// Per-byte reduction compute time (s/B).
+    pub gamma: f64,
+}
+
+impl AlphaBetaGamma {
+    /// 10 GbE-ish defaults: ~25 µs latency, 10 Gbps line rate, γ = β/10.
+    pub fn ethernet_10g() -> AlphaBetaGamma {
+        let beta = 8.0 / 10.0e9; // s per byte at 10 Gbps
+        AlphaBetaGamma { alpha: 25e-6, beta, gamma: beta / 10.0 }
+    }
+}
+
+impl AllReduceAlgo {
+    pub fn name(self) -> &'static str {
+        match self {
+            AllReduceAlgo::BinaryTree => "binary tree",
+            AllReduceAlgo::RecursiveDoubling => "recursive doubling",
+            AllReduceAlgo::RecursiveHalvingDoubling => "recursive halving and doubling",
+            AllReduceAlgo::Ring => "ring",
+        }
+    }
+
+    /// Table I: the (a, b) pair for `n` participating nodes.
+    /// `n` must be >= 2 (a power of two per the paper's assumption; the
+    /// formulas extend to any n >= 2 and we accept that generalisation).
+    pub fn cost_coeffs(self, n: usize, p: AlphaBetaGamma) -> (f64, f64) {
+        assert!(n >= 2, "all-reduce needs at least two nodes");
+        let nf = n as f64;
+        let log_n = (n as f64).log2();
+        match self {
+            AllReduceAlgo::BinaryTree => {
+                (2.0 * p.alpha * log_n, (2.0 * p.beta + p.gamma) * log_n)
+            }
+            AllReduceAlgo::RecursiveDoubling => {
+                (p.alpha * log_n, (p.beta + p.gamma) * log_n)
+            }
+            AllReduceAlgo::RecursiveHalvingDoubling => (
+                2.0 * p.alpha * log_n,
+                2.0 * p.beta - (2.0 * p.beta + p.gamma) / nf + p.gamma,
+            ),
+            AllReduceAlgo::Ring => (
+                2.0 * (nf - 1.0) * p.alpha,
+                2.0 * (nf - 1.0) / nf * p.beta + (nf - 1.0) / nf * p.gamma,
+            ),
+        }
+    }
+
+    /// Eq (2): contention-free all-reduce time for message of `m` bytes.
+    pub fn time(self, n: usize, m: f64, p: AlphaBetaGamma) -> f64 {
+        let (a, b) = self.cost_coeffs(n, p);
+        a + b * m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> AlphaBetaGamma {
+        AlphaBetaGamma::ethernet_10g()
+    }
+
+    #[test]
+    fn coeffs_positive_and_monotone_in_n() {
+        for algo in ALL_ALGOS {
+            let (a2, b2) = algo.cost_coeffs(2, p());
+            let (a8, _b8) = algo.cost_coeffs(8, p());
+            assert!(a2 > 0.0 && b2 > 0.0, "{:?}", algo);
+            assert!(a8 > a2, "{:?} latency should grow with n", algo);
+        }
+    }
+
+    #[test]
+    fn ring_bandwidth_term_approaches_2beta() {
+        // b_ring -> 2β + γ as n -> ∞ (bandwidth-optimal family).
+        let (_a, b) = AllReduceAlgo::Ring.cost_coeffs(1024, p());
+        let limit = 2.0 * p().beta + p().gamma;
+        assert!((b - limit).abs() / limit < 0.01);
+    }
+
+    #[test]
+    fn halving_doubling_beats_doubling_for_large_messages() {
+        let m = 500e6;
+        let rd = AllReduceAlgo::RecursiveDoubling.time(16, m, p());
+        let rhd = AllReduceAlgo::RecursiveHalvingDoubling.time(16, m, p());
+        assert!(rhd < rd);
+    }
+
+    #[test]
+    fn doubling_beats_ring_for_small_messages() {
+        let m = 1e3;
+        let rd = AllReduceAlgo::RecursiveDoubling.time(16, m, p());
+        let ring = AllReduceAlgo::Ring.time(16, m, p());
+        assert!(rd < ring);
+    }
+
+    #[test]
+    fn time_is_affine_in_message() {
+        let algo = AllReduceAlgo::Ring;
+        let t0 = algo.time(4, 0.0, p());
+        let t1 = algo.time(4, 1e6, p());
+        let t2 = algo.time(4, 2e6, p());
+        assert!(((t2 - t1) - (t1 - t0)).abs() < 1e-12);
+    }
+}

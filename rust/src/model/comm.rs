@@ -1,0 +1,176 @@
+//! The communication-contention model — Eqs (2) and (5) of the paper, plus
+//! the AdaDUAL admission threshold derived from Theorem 2.
+//!
+//! Contention-free all-reduce: `T = a + b·M` with the paper's measured
+//! constants on 2 nodes / 10 GbE: a = 6.69e-4 s, b = 8.53e-10 s/B.
+//!
+//! Under k-way contention: `T̄ = a + k·b·M + (k−1)·η·M` — bandwidth is
+//! shared k ways (k·b·M) and an extra per-byte penalty η accrues per
+//! additional contender. Equivalently the instantaneous per-byte transfer
+//! time is `k·b + (k−1)·η`, which is how the event-driven simulator applies
+//! the model to partially transferred messages when k changes mid-flight.
+
+/// Contention-model parameters (a, b, η).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommModel {
+    /// Latency component of Eq (2) (seconds).
+    pub a: f64,
+    /// Per-byte time of Eq (2) (seconds/byte).
+    pub b: f64,
+    /// Per-byte contention penalty of Eq (5) (seconds/byte per extra task).
+    pub eta: f64,
+}
+
+impl CommModel {
+    /// The paper's fitted constants (Fig 2a) with η fitted from the Fig 2b
+    /// k-way sweep (see `fit_eta` + EXPERIMENTS.md §Fig2): η ≈ 0.3·b.
+    pub fn paper_10gbe() -> CommModel {
+        let b = 8.53e-10;
+        CommModel { a: 6.69e-4, b, eta: 0.3 * b }
+    }
+
+    /// Eq (2): contention-free all-reduce of `m` bytes.
+    pub fn time_free(&self, m: f64) -> f64 {
+        self.a + self.b * m
+    }
+
+    /// Eq (5): all-reduce of `m` bytes entirely under k-way contention.
+    pub fn time_contended(&self, m: f64, k: usize) -> f64 {
+        assert!(k >= 1);
+        let kf = k as f64;
+        self.a + kf * self.b * m + (kf - 1.0) * self.eta * m
+    }
+
+    /// Instantaneous per-byte transfer time under k-way contention — the
+    /// differential form of Eq (5) used when k changes mid-transfer.
+    pub fn per_byte(&self, k: usize) -> f64 {
+        assert!(k >= 1);
+        let kf = k as f64;
+        kf * self.b + (kf - 1.0) * self.eta
+    }
+
+    /// Effective bandwidth (bytes/s) seen by one task under k-way contention.
+    pub fn rate(&self, k: usize) -> f64 {
+        1.0 / self.per_byte(k)
+    }
+
+    /// Theorem 2's admission threshold: starting a new task of size
+    /// `m_new` against an existing task with `m_old` bytes remaining
+    /// lowers mean completion time iff `m_new / m_old < b / (2(b+η))`.
+    pub fn adadual_threshold(&self) -> f64 {
+        self.b / (2.0 * (self.b + self.eta))
+    }
+
+    /// The Theorem 2 test itself.
+    pub fn overlap_beneficial(&self, m_new: f64, m_old_remaining: f64) -> bool {
+        if m_old_remaining <= 0.0 {
+            return true;
+        }
+        m_new / m_old_remaining < self.adadual_threshold()
+    }
+
+    /// Network-efficiency loss at k-way contention relative to round-robin
+    /// ideal sharing (a + k·b·M): the paper's Fig 2b gap.
+    pub fn efficiency(&self, m: f64, k: usize) -> f64 {
+        let ideal = self.a + (k as f64) * self.b * m;
+        ideal / self.time_contended(m, k)
+    }
+}
+
+/// Fit η from (k, measured mean time) samples at fixed message size `m`,
+/// least-squares on Eq (5) residuals against the already-known a and b.
+/// This regenerates the paper's Fig 2(b) calibration step.
+pub fn fit_eta(a: f64, b: f64, m: f64, samples: &[(usize, f64)]) -> f64 {
+    // T - a - k b M = (k-1) η M  =>  η = Σ x·y / Σ x²  with x = (k-1)·M.
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for &(k, t) in samples {
+        let x = (k as f64 - 1.0) * m;
+        let y = t - a - (k as f64) * b * m;
+        sxy += x * y;
+        sxx += x * x;
+    }
+    if sxx == 0.0 {
+        0.0
+    } else {
+        (sxy / sxx).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CommModel {
+        CommModel::paper_10gbe()
+    }
+
+    #[test]
+    fn eq5_reduces_to_eq2_at_k1() {
+        let m = 100e6;
+        assert!((cm().time_contended(m, 1) - cm().time_free(m)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contended_time_superlinear_in_k() {
+        let m = 100e6;
+        let t1 = cm().time_contended(m, 1);
+        let t2 = cm().time_contended(m, 2);
+        let t4 = cm().time_contended(m, 4);
+        assert!(t2 > 2.0 * t1 - cm().a); // worse than perfect sharing
+        assert!(t4 > 2.0 * t2 - cm().a);
+    }
+
+    #[test]
+    fn per_byte_matches_total_time() {
+        let m = 50e6;
+        for k in 1..=8 {
+            let from_rate = cm().a + m * cm().per_byte(k);
+            assert!((from_rate - cm().time_contended(m, k)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn threshold_in_unit_interval() {
+        let th = cm().adadual_threshold();
+        assert!(th > 0.0 && th < 0.5, "{th}"); // < 1/2 always since η >= 0
+    }
+
+    #[test]
+    fn overlap_decision_matches_threshold() {
+        let c = cm();
+        let m_old = 100e6;
+        let th = c.adadual_threshold();
+        assert!(c.overlap_beneficial(m_old * (th - 1e-6), m_old));
+        assert!(!c.overlap_beneficial(m_old * (th + 1e-6), m_old));
+    }
+
+    #[test]
+    fn efficiency_degrades_with_k() {
+        let m = 100e6;
+        let e2 = cm().efficiency(m, 2);
+        let e4 = cm().efficiency(m, 4);
+        let e8 = cm().efficiency(m, 8);
+        assert!(e2 > e4 && e4 > e8);
+        assert!(e8 > 0.5, "penalty should not be catastrophic: {e8}");
+    }
+
+    #[test]
+    fn fit_eta_recovers_truth() {
+        let c = cm();
+        let m = 100e6;
+        let samples: Vec<(usize, f64)> =
+            (1..=8).map(|k| (k, c.time_contended(m, k))).collect();
+        let eta = fit_eta(c.a, c.b, m, &samples);
+        assert!((eta - c.eta).abs() / c.eta < 1e-9);
+    }
+
+    #[test]
+    fn fit_eta_zero_for_ideal_sharing() {
+        let c = CommModel { eta: 0.0, ..cm() };
+        let m = 10e6;
+        let samples: Vec<(usize, f64)> =
+            (1..=4).map(|k| (k, c.time_contended(m, k))).collect();
+        assert_eq!(fit_eta(c.a, c.b, m, &samples), 0.0);
+    }
+}

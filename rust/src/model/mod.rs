@@ -1,0 +1,13 @@
+//! Performance models: the DNN zoo (Table III), GPU compute model
+//! (Eqs 3–4), all-reduce algorithm costs (Table I) and the communication
+//! contention model (Eqs 2 and 5).
+
+pub mod allreduce;
+pub mod comm;
+pub mod perf;
+pub mod zoo;
+
+pub use allreduce::{AllReduceAlgo, AlphaBetaGamma, ALL_ALGOS};
+pub use comm::{fit_eta, CommModel};
+pub use perf::{PerfModel, V100_PEAK_GFLOPS};
+pub use zoo::{DnnModel, ModelSpec, ALL_MODELS};

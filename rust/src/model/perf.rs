@@ -1,0 +1,81 @@
+//! GPU compute performance model — Eqs (3)–(4) of the paper.
+//!
+//! `t_f = λ_f · B / P` and `t_b = λ_b · B / P`, where λ are per-model
+//! workload coefficients, B is the mini-batch size and P the GPU's peak
+//! throughput. Table III provides measured (t_f, t_b) at a reference batch
+//! on a V100, from which λ is recovered; the model then scales to other
+//! batch sizes and GPU grades.
+
+use super::zoo::DnnModel;
+
+/// Theoretical f32 peak of a Tesla V100 (GFLOPS) — the reference GPU.
+pub const V100_PEAK_GFLOPS: f64 = 15_700.0;
+
+/// Per-(model, GPU) compute-time calculator.
+#[derive(Clone, Copy, Debug)]
+pub struct PerfModel {
+    /// λ_f · 1e-9 · (flop-ish unit): stored directly as s·GFLOPS/sample.
+    lambda_f: f64,
+    lambda_b: f64,
+}
+
+impl PerfModel {
+    /// Recover λ from the Table III measurement of `model`.
+    pub fn for_model(model: DnnModel) -> PerfModel {
+        let s = model.spec();
+        let b = s.batch_size as f64;
+        PerfModel {
+            lambda_f: s.t_fwd * V100_PEAK_GFLOPS / b,
+            lambda_b: s.t_bwd * V100_PEAK_GFLOPS / b,
+        }
+    }
+
+    /// Eq (3): feed-forward seconds for `batch` samples on a `peak_gflops` GPU.
+    pub fn t_fwd(&self, batch: u32, peak_gflops: f64) -> f64 {
+        self.lambda_f * batch as f64 / peak_gflops
+    }
+
+    /// Eq (4): backpropagation seconds.
+    pub fn t_bwd(&self, batch: u32, peak_gflops: f64) -> f64 {
+        self.lambda_b * batch as f64 / peak_gflops
+    }
+
+    /// Whole-iteration compute time (fwd + bwd), Eq (7) per-iteration part.
+    pub fn t_iter(&self, batch: u32, peak_gflops: f64) -> f64 {
+        self.t_fwd(batch, peak_gflops) + self.t_bwd(batch, peak_gflops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::ALL_MODELS;
+
+    #[test]
+    fn recovers_table3_at_reference_point() {
+        for m in ALL_MODELS {
+            let s = m.spec();
+            let p = PerfModel::for_model(m);
+            let tf = p.t_fwd(s.batch_size, V100_PEAK_GFLOPS);
+            let tb = p.t_bwd(s.batch_size, V100_PEAK_GFLOPS);
+            assert!((tf - s.t_fwd).abs() < 1e-12, "{}", s.name);
+            assert!((tb - s.t_bwd).abs() < 1e-12, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn linear_in_batch() {
+        let p = PerfModel::for_model(DnnModel::ResNet50);
+        let t16 = p.t_fwd(16, V100_PEAK_GFLOPS);
+        let t32 = p.t_fwd(32, V100_PEAK_GFLOPS);
+        assert!((t32 / t16 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_in_peak() {
+        let p = PerfModel::for_model(DnnModel::Vgg16);
+        let fast = p.t_iter(16, 2.0 * V100_PEAK_GFLOPS);
+        let slow = p.t_iter(16, V100_PEAK_GFLOPS);
+        assert!((slow / fast - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,121 @@
+//! The DNN model zoo — Table III of the paper: per-model parameter size,
+//! GPU memory footprint, batch size and measured fwd/bwd times on a Tesla
+//! V100-16GB. These constants parameterise the simulator's compute tasks;
+//! they are the paper's own measurements.
+
+/// Identifies one of the four benchmark DNNs from Table III.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DnnModel {
+    Vgg16,
+    ResNet50,
+    InceptionV3,
+    LstmPtb,
+}
+
+pub const ALL_MODELS: [DnnModel; 4] = [
+    DnnModel::Vgg16,
+    DnnModel::ResNet50,
+    DnnModel::InceptionV3,
+    DnnModel::LstmPtb,
+];
+
+/// Table III row: training parameters + measured per-iteration times.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Model (gradient message) size in bytes.
+    pub model_bytes: f64,
+    /// Device memory footprint in bytes while training at `batch_size`.
+    pub mem_bytes: f64,
+    pub batch_size: u32,
+    /// Measured feed-forward time per iteration (seconds, V100).
+    pub t_fwd: f64,
+    /// Measured backpropagation time per iteration (seconds, V100).
+    pub t_bwd: f64,
+}
+
+const MB: f64 = 1024.0 * 1024.0;
+
+impl DnnModel {
+    /// Table III constants (sizes MB -> bytes, times ms -> s).
+    pub fn spec(self) -> ModelSpec {
+        match self {
+            DnnModel::Vgg16 => ModelSpec {
+                name: "VGG-16",
+                model_bytes: 526.4 * MB,
+                mem_bytes: 4527.0 * MB,
+                batch_size: 16,
+                t_fwd: 35.8e-3,
+                t_bwd: 53.7e-3,
+            },
+            DnnModel::ResNet50 => ModelSpec {
+                name: "ResNet-50",
+                model_bytes: 99.2 * MB,
+                mem_bytes: 3213.0 * MB,
+                batch_size: 16,
+                t_fwd: 25.0e-3,
+                t_bwd: 37.4e-3,
+            },
+            DnnModel::InceptionV3 => ModelSpec {
+                name: "Inception-V3",
+                model_bytes: 103.0 * MB,
+                mem_bytes: 3291.0 * MB,
+                batch_size: 16,
+                t_fwd: 34.9e-3,
+                t_bwd: 52.4e-3,
+            },
+            DnnModel::LstmPtb => ModelSpec {
+                name: "LSTM-PTB",
+                model_bytes: 251.8 * MB,
+                mem_bytes: 2751.0 * MB,
+                batch_size: 64,
+                t_fwd: 31.5e-3,
+                t_bwd: 47.3e-3,
+            },
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<DnnModel> {
+        ALL_MODELS.iter().copied().find(|m| m.spec().name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_specs_sane() {
+        for m in ALL_MODELS {
+            let s = m.spec();
+            assert!(s.model_bytes > 0.0 && s.mem_bytes > s.model_bytes, "{}", s.name);
+            assert!(s.t_fwd > 0.0 && s.t_bwd > s.t_fwd, "{}", s.name);
+            assert!(s.batch_size >= 16);
+        }
+    }
+
+    #[test]
+    fn vgg_is_largest_message() {
+        let vgg = DnnModel::Vgg16.spec().model_bytes;
+        for m in [DnnModel::ResNet50, DnnModel::InceptionV3, DnnModel::LstmPtb] {
+            assert!(vgg > m.spec().model_bytes);
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for m in ALL_MODELS {
+            assert_eq!(DnnModel::from_name(m.spec().name), Some(m));
+        }
+        assert_eq!(DnnModel::from_name("nope"), None);
+    }
+
+    #[test]
+    fn memory_fits_v100_16gb() {
+        // Every model must fit at least 3x on one V100-16GB (the workload
+        // packs multiple jobs per GPU).
+        for m in ALL_MODELS {
+            assert!(m.spec().mem_bytes * 3.0 < 16.0 * 1024.0 * MB);
+        }
+    }
+}

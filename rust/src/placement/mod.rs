@@ -1,0 +1,296 @@
+//! Job placement (§IV-A): pick the GPU set `G(J)` for a newly arrived job.
+//!
+//! * RAND — uniformly random feasible GPUs (the paper's worst baseline)
+//! * FF   — First-Fit: the first n feasible GPUs in fixed order
+//! * LS   — List-Scheduling: the n globally least-loaded feasible GPUs
+//! * LWF-κ — Algorithm 1: LS for jobs needing ≤ κ GPUs; for bigger jobs,
+//!   sort servers by total load and fill server-by-server (consolidation)
+//!
+//! All placers see the same `ClusterState` (per-GPU load `L_g`, free
+//! memory) and must return exactly `n_gpus` distinct feasible GPUs or None.
+
+use crate::cluster::{ClusterState, GpuId};
+use crate::trace::JobSpec;
+use crate::util::rng::Pcg;
+
+/// A placement algorithm. `place` must NOT mutate the cluster state; the
+/// caller commits the returned set via `ClusterState::allocate`.
+pub trait Placer {
+    fn name(&self) -> &'static str;
+    fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>>;
+}
+
+/// Feasible = enough free device memory for this job's model.
+fn feasible(state: &ClusterState, job: &JobSpec) -> Vec<GpuId> {
+    (0..state.spec.n_gpus())
+        .filter(|&g| state.fits(g, job.mem_bytes()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+
+/// Uniformly random feasible GPUs.
+pub struct RandomPlacer {
+    rng: Pcg,
+}
+
+impl RandomPlacer {
+    pub fn new(seed: u64) -> RandomPlacer {
+        RandomPlacer { rng: Pcg::new(seed, 0x91ac) }
+    }
+}
+
+impl Placer for RandomPlacer {
+    fn name(&self) -> &'static str {
+        "RAND"
+    }
+
+    fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>> {
+        let mut avail = feasible(state, job);
+        if avail.len() < job.n_gpus {
+            return None;
+        }
+        self.rng.shuffle(&mut avail);
+        avail.truncate(job.n_gpus);
+        Some(avail)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// First-Fit: fixed scan order (server 0 gpu 0, 1, ... then server 1 ...).
+pub struct FirstFitPlacer;
+
+impl Placer for FirstFitPlacer {
+    fn name(&self) -> &'static str {
+        "FF"
+    }
+
+    fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>> {
+        let avail = feasible(state, job);
+        if avail.len() < job.n_gpus {
+            return None;
+        }
+        Some(avail[..job.n_gpus].to_vec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// List-Scheduling: globally least-loaded feasible GPUs.
+pub struct ListSchedulingPlacer;
+
+impl Placer for ListSchedulingPlacer {
+    fn name(&self) -> &'static str {
+        "LS"
+    }
+
+    fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>> {
+        let mut avail = feasible(state, job);
+        if avail.len() < job.n_gpus {
+            return None;
+        }
+        // Stable tie-break on GPU id keeps the algorithm deterministic.
+        avail.sort_by(|&a, &b| {
+            state.gpus[a]
+                .load
+                .partial_cmp(&state.gpus[b].load)
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        avail.truncate(job.n_gpus);
+        Some(avail)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// LWF-κ (Algorithm 1): least-workload-first with a consolidation threshold.
+pub struct LwfPlacer {
+    pub kappa: usize,
+}
+
+impl LwfPlacer {
+    pub fn new(kappa: usize) -> LwfPlacer {
+        LwfPlacer { kappa }
+    }
+}
+
+impl Placer for LwfPlacer {
+    fn name(&self) -> &'static str {
+        "LWF-k"
+    }
+
+    fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>> {
+        let n = job.n_gpus;
+        if n <= self.kappa {
+            // Lines 2–9: same as LS — top-n least-loaded feasible GPUs.
+            return ListSchedulingPlacer.place(job, state);
+        }
+        // Lines 10–21: sort servers by total remaining workload L_S, then
+        // take feasible GPUs server by server (least-loaded first within a
+        // server), consolidating the job onto as few servers as possible.
+        let mut servers: Vec<usize> = (0..state.spec.n_servers).collect();
+        servers.sort_by(|&a, &b| {
+            state
+                .server_load(a)
+                .partial_cmp(&state.server_load(b))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut chosen: Vec<GpuId> = Vec::with_capacity(n);
+        for s in servers {
+            let mut gpus: Vec<GpuId> = state
+                .spec
+                .gpus_of(s)
+                .filter(|&g| state.fits(g, job.mem_bytes()))
+                .collect();
+            gpus.sort_by(|&a, &b| {
+                state.gpus[a]
+                    .load
+                    .partial_cmp(&state.gpus[b].load)
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            for g in gpus {
+                chosen.push(g);
+                if chosen.len() == n {
+                    return Some(chosen);
+                }
+            }
+        }
+        None // line 22: not enough feasible GPUs
+    }
+}
+
+/// Construct a placer by name (CLI/bench convenience).
+pub fn by_name(name: &str, kappa: usize, seed: u64) -> Option<Box<dyn Placer>> {
+    match name {
+        "rand" | "RAND" => Some(Box::new(RandomPlacer::new(seed))),
+        "ff" | "FF" => Some(Box::new(FirstFitPlacer)),
+        "ls" | "LS" => Some(Box::new(ListSchedulingPlacer)),
+        "lwf" | "LWF" => Some(Box::new(LwfPlacer::new(kappa))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::model::DnnModel;
+
+    fn job(n_gpus: usize) -> JobSpec {
+        JobSpec { id: 0, arrival: 0.0, model: DnnModel::ResNet50, n_gpus, iterations: 100 }
+    }
+
+    fn state() -> ClusterState {
+        ClusterState::new(ClusterSpec::tiny(4, 4))
+    }
+
+    fn assert_valid(got: &[GpuId], st: &ClusterState, j: &JobSpec) {
+        assert_eq!(got.len(), j.n_gpus);
+        let mut sorted = got.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), j.n_gpus, "duplicate GPUs");
+        for &g in got {
+            assert!(st.fits(g, j.mem_bytes()));
+        }
+    }
+
+    #[test]
+    fn all_placers_return_valid_sets() {
+        let st = state();
+        let j = job(6);
+        for placer in &mut [
+            Box::new(RandomPlacer::new(1)) as Box<dyn Placer>,
+            Box::new(FirstFitPlacer),
+            Box::new(ListSchedulingPlacer),
+            Box::new(LwfPlacer::new(1)),
+        ] {
+            let got = placer.place(&j, &st).expect(placer.name());
+            assert_valid(&got, &st, &j);
+        }
+    }
+
+    #[test]
+    fn ff_takes_prefix() {
+        let st = state();
+        assert_eq!(FirstFitPlacer.place(&job(3), &st).unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ls_prefers_least_loaded() {
+        let mut st = state();
+        st.allocate(&[0, 1, 2, 3, 4, 5], 1e9, 50.0); // load first 6 GPUs
+        let got = ListSchedulingPlacer.place(&job(2), &st).unwrap();
+        assert_eq!(got, vec![6, 7]);
+    }
+
+    #[test]
+    fn lwf_small_job_acts_like_ls() {
+        let mut st = state();
+        st.allocate(&[0], 1e9, 10.0);
+        let lwf = LwfPlacer::new(2).place(&job(2), &st).unwrap();
+        let ls = ListSchedulingPlacer.place(&job(2), &st).unwrap();
+        assert_eq!(lwf, ls);
+    }
+
+    #[test]
+    fn lwf_large_job_consolidates() {
+        let mut st = state();
+        // Unbalance individual GPUs so LS would scatter: load gpu0 of each server lightly.
+        st.allocate(&[0, 4, 8, 12], 1e9, 5.0);
+        let got = LwfPlacer::new(1).place(&job(4), &st).unwrap();
+        let servers = st.spec.servers_of(&got);
+        assert_eq!(servers.len(), 1, "4-GPU job must fit one 4-GPU server, got {:?}", got);
+    }
+
+    #[test]
+    fn lwf_prefers_lightest_servers() {
+        let mut st = state();
+        st.allocate(&[0, 1, 2, 3], 1e9, 100.0); // server 0 heavy
+        st.allocate(&[4, 5], 1e9, 10.0); // server 1 light-ish
+        let got = LwfPlacer::new(1).place(&job(8), &st).unwrap();
+        let servers = st.spec.servers_of(&got);
+        // The two empty servers (2, 3) must be used.
+        assert!(servers.contains(&2) && servers.contains(&3), "{:?}", servers);
+        assert!(!servers.contains(&0), "heaviest server chosen: {:?}", servers);
+    }
+
+    #[test]
+    fn placement_fails_when_memory_exhausted() {
+        let mut st = state();
+        let j = job(1);
+        // Fill every GPU to the brim.
+        let all: Vec<GpuId> = (0..st.spec.n_gpus()).collect();
+        for _ in 0..4 {
+            st.allocate(&all, 3.5e9, 1.0);
+        }
+        for placer in &mut [
+            Box::new(RandomPlacer::new(1)) as Box<dyn Placer>,
+            Box::new(FirstFitPlacer),
+            Box::new(ListSchedulingPlacer),
+            Box::new(LwfPlacer::new(1)),
+        ] {
+            assert!(placer.place(&j, &st).is_none(), "{}", placer.name());
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["rand", "ff", "ls", "lwf"] {
+            assert!(by_name(n, 1, 0).is_some());
+        }
+        assert!(by_name("nope", 1, 0).is_none());
+    }
+
+    #[test]
+    fn rand_is_seed_deterministic() {
+        let st = state();
+        let a = RandomPlacer::new(9).place(&job(5), &st).unwrap();
+        let b = RandomPlacer::new(9).place(&job(5), &st).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,234 @@
+//! Communication-task scheduling (§IV-B): admission policies deciding
+//! whether a ready All-Reduce may start *now* on its servers.
+//!
+//! * `SrsfCap(n)` — the paper's SRSF(n) family: admit iff every server the
+//!   task touches currently carries fewer than n active communication
+//!   tasks. SRSF(1) forbids all contention; SRSF(2)/(3) blindly accept
+//!   2-/3-way contention.
+//! * `AdaDual` — Algorithm 2: admit immediately when the servers are idle;
+//!   against exactly one existing task apply Theorem 2's ratio test
+//!   `M_new/M_old < b/(2(b+η))`; never join ≥2 existing tasks.
+//!
+//! `two_tasks` contains a continuous-time micro-simulator of Problem 1
+//! used by the property tests to verify Theorems 1–2 against brute force.
+
+pub mod two_tasks;
+
+use crate::cluster::ServerId;
+use crate::model::CommModel;
+
+/// A snapshot of network state for admission decisions:
+/// per server, the list of (comm task id, remaining message bytes).
+pub struct NetView<'a> {
+    pub per_server: &'a [Vec<(usize, f64)>],
+}
+
+impl<'a> NetView<'a> {
+    /// Maximum count of active communication tasks over `servers`
+    /// (Algorithm 2 lines 2–7), plus the union of those tasks.
+    pub fn max_tasks(&self, servers: &[ServerId]) -> (usize, Vec<(usize, f64)>) {
+        let mut max = 0;
+        let mut old: Vec<(usize, f64)> = Vec::new();
+        for &s in servers {
+            let tasks = &self.per_server[s];
+            if tasks.len() > max {
+                max = tasks.len();
+            }
+            for &t in tasks {
+                if !old.iter().any(|&(id, _)| id == t.0) {
+                    old.push(t);
+                }
+            }
+        }
+        (max, old)
+    }
+}
+
+/// Decision returned by a policy; `Reject` keeps the task in the pending
+/// queue to be reconsidered at the next scheduling point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Start,
+    Wait,
+}
+
+/// A communication-task admission policy.
+pub trait CommPolicy {
+    fn name(&self) -> String;
+    /// May a new task of `msg_bytes` spanning `servers` start now?
+    fn admit(&self, msg_bytes: f64, servers: &[ServerId], net: &NetView) -> Admission;
+}
+
+/// SRSF(n): per-server active-communication cap of `n`.
+#[derive(Clone, Copy, Debug)]
+pub struct SrsfCap {
+    pub cap: usize,
+}
+
+impl CommPolicy for SrsfCap {
+    fn name(&self) -> String {
+        format!("SRSF({})", self.cap)
+    }
+
+    fn admit(&self, _msg: f64, servers: &[ServerId], net: &NetView) -> Admission {
+        let (max, _) = net.max_tasks(servers);
+        if max < self.cap {
+            Admission::Start
+        } else {
+            Admission::Wait
+        }
+    }
+}
+
+/// AdaDUAL (Algorithm 2).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaDual {
+    pub model: CommModel,
+}
+
+impl CommPolicy for AdaDual {
+    fn name(&self) -> String {
+        "AdaDUAL".to_string()
+    }
+
+    fn admit(&self, msg_bytes: f64, servers: &[ServerId], net: &NetView) -> Admission {
+        let (max, old) = net.max_tasks(servers);
+        match max {
+            // Lines 8–10: idle servers — start immediately.
+            0 => Admission::Start,
+            // Lines 11–18: one existing task — Theorem 2 ratio test against
+            // its remaining message size. With several distinct single
+            // tasks across our servers, test against the *largest*
+            // remaining one (the most conservative pairing).
+            1 => {
+                let m_old = old.iter().map(|&(_, m)| m).fold(0.0f64, f64::max);
+                if self.model.overlap_beneficial(msg_bytes, m_old) {
+                    Admission::Start
+                } else {
+                    Admission::Wait
+                }
+            }
+            // Lines 19–21: two or more — never join.
+            _ => Admission::Wait,
+        }
+    }
+}
+
+/// Job priority: shortest-remaining-service-first (Tiresias' SRSF). The
+/// service of a job is remaining time × occupied GPUs; smaller is served
+/// first. Ties break on job id for determinism.
+pub fn srsf_cmp(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+}
+
+/// Construct a policy by name (CLI/bench convenience).
+pub fn by_name(name: &str, cm: CommModel) -> Option<Box<dyn CommPolicy>> {
+    match name {
+        "srsf1" | "SRSF(1)" => Some(Box::new(SrsfCap { cap: 1 })),
+        "srsf2" | "SRSF(2)" => Some(Box::new(SrsfCap { cap: 2 })),
+        "srsf3" | "SRSF(3)" => Some(Box::new(SrsfCap { cap: 3 })),
+        "ada" | "adadual" | "Ada-SRSF" => Some(Box::new(AdaDual { model: cm })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(per_server: Vec<Vec<(usize, f64)>>) -> Vec<Vec<(usize, f64)>> {
+        per_server
+    }
+
+    #[test]
+    fn srsf1_blocks_any_contention() {
+        let p = SrsfCap { cap: 1 };
+        let empty = net(vec![vec![], vec![]]);
+        let busy = net(vec![vec![(7, 1e8)], vec![]]);
+        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_server: &empty }), Admission::Start);
+        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_server: &busy }), Admission::Wait);
+        // ...but a task on an unrelated server does not block.
+        assert_eq!(p.admit(1e6, &[1], &NetView { per_server: &busy }), Admission::Start);
+    }
+
+    #[test]
+    fn srsf2_allows_one_contender() {
+        let p = SrsfCap { cap: 2 };
+        let one = net(vec![vec![(1, 5e8)]]);
+        let two = net(vec![vec![(1, 5e8), (2, 2e8)]]);
+        assert_eq!(p.admit(1e6, &[0], &NetView { per_server: &one }), Admission::Start);
+        assert_eq!(p.admit(1e6, &[0], &NetView { per_server: &two }), Admission::Wait);
+    }
+
+    #[test]
+    fn adadual_idle_starts() {
+        let p = AdaDual { model: CommModel::paper_10gbe() };
+        let empty = net(vec![vec![], vec![], vec![]]);
+        assert_eq!(p.admit(5e8, &[0, 2], &NetView { per_server: &empty }), Admission::Start);
+    }
+
+    #[test]
+    fn adadual_ratio_test() {
+        let cm = CommModel::paper_10gbe();
+        let p = AdaDual { model: cm };
+        let th = cm.adadual_threshold();
+        let m_old = 4e8;
+        let small = net(vec![vec![(9, m_old)]]);
+        // Well under the threshold: overlap pays off.
+        assert_eq!(
+            p.admit(m_old * th * 0.9, &[0], &NetView { per_server: &small }),
+            Admission::Start
+        );
+        // Over the threshold: wait for the big one to finish.
+        assert_eq!(
+            p.admit(m_old * th * 1.1, &[0], &NetView { per_server: &small }),
+            Admission::Wait
+        );
+    }
+
+    #[test]
+    fn adadual_never_joins_two() {
+        let cm = CommModel::paper_10gbe();
+        let p = AdaDual { model: cm };
+        let two = net(vec![vec![(1, 9e9), (2, 9e9)]]);
+        assert_eq!(p.admit(1.0, &[0], &NetView { per_server: &two }), Admission::Wait);
+    }
+
+    #[test]
+    fn adadual_uses_largest_old_task_across_servers() {
+        let cm = CommModel::paper_10gbe();
+        let p = AdaDual { model: cm };
+        let th = cm.adadual_threshold();
+        // Server 0 has a small old task, server 1 a big one; test pairs
+        // against the big one.
+        let mixed = net(vec![vec![(1, 1e6)], vec![(2, 1e9)]]);
+        let msg = 1e9 * th * 0.9; // fine vs 1e9, terrible vs 1e6
+        assert_eq!(p.admit(msg, &[0, 1], &NetView { per_server: &mixed }), Admission::Start);
+    }
+
+    #[test]
+    fn max_tasks_dedups_union() {
+        let shared = net(vec![vec![(5, 1e8)], vec![(5, 1e8), (6, 2e8)]]);
+        let view = NetView { per_server: &shared };
+        let (max, old) = view.max_tasks(&[0, 1]);
+        assert_eq!(max, 2);
+        assert_eq!(old.len(), 2);
+    }
+
+    #[test]
+    fn by_name_resolves_policies() {
+        let cm = CommModel::paper_10gbe();
+        for n in ["srsf1", "srsf2", "srsf3", "ada"] {
+            assert!(by_name(n, cm).is_some(), "{n}");
+        }
+        assert!(by_name("bogus", cm).is_none());
+    }
+
+    #[test]
+    fn srsf_cmp_orders_by_service_then_id() {
+        use std::cmp::Ordering::*;
+        assert_eq!(srsf_cmp((1.0, 5), (2.0, 1)), Less);
+        assert_eq!(srsf_cmp((2.0, 1), (2.0, 5)), Less);
+        assert_eq!(srsf_cmp((3.0, 7), (3.0, 7)), Equal);
+    }
+}

@@ -1,0 +1,213 @@
+//! Continuous-time micro-simulator of Problem 1 (§IV-B): two communication
+//! tasks with message sizes M₁ ≤ M₂ sharing one link under the Eq (5)
+//! contention model (latency term neglected, as in the paper's analysis).
+//!
+//! This is the brute-force oracle the property tests use to verify
+//! Theorems 1 and 2 and therefore AdaDUAL's decision rule: the closed-form
+//! optima of the paper must match the empirical optimum of this simulator
+//! over a dense sweep of start offsets.
+
+use crate::model::CommModel;
+
+/// Completion times (T_a, T_b) when task a (m_a bytes) starts at time 0 and
+/// task b (m_b bytes) starts at `start_b >= 0`. Pure Eq (5) dynamics: each
+/// task transfers at per-byte time `k·b + (k−1)·η` where k is the number of
+/// concurrently active tasks; the latency constant `a` is ignored (P1).
+pub fn simulate_pair(cm: &CommModel, m_a: f64, m_b: f64, start_b: f64) -> (f64, f64) {
+    assert!(m_a > 0.0 && m_b > 0.0 && start_b >= 0.0);
+    let mut t = 0.0f64;
+    let mut rem_a = m_a;
+    let mut rem_b = m_b;
+    let mut b_active = start_b <= 0.0;
+    let mut done_a: Option<f64> = None;
+    let mut done_b: Option<f64> = None;
+
+    while done_a.is_none() || done_b.is_none() {
+        let a_active = done_a.is_none();
+        let b_on = b_active && done_b.is_none();
+        let k = a_active as usize + b_on as usize;
+        if k == 0 {
+            // Only b remains but hasn't arrived yet: jump to its start.
+            t = start_b;
+            b_active = true;
+            continue;
+        }
+        let rate = cm.rate(k); // bytes/s per task
+        let drain_a = if a_active { rem_a / rate } else { f64::INFINITY };
+        let drain_b = if b_on { rem_b / rate } else { f64::INFINITY };
+        let arrive_b = if !b_active { (start_b - t).max(0.0) } else { f64::INFINITY };
+        let dt = drain_a.min(drain_b).min(arrive_b);
+        if a_active {
+            rem_a -= dt * rate;
+        }
+        if b_on {
+            rem_b -= dt * rate;
+        }
+        t += dt;
+        if a_active && rem_a <= 1e-9 {
+            done_a = Some(t);
+        }
+        if b_on && rem_b <= 1e-9 {
+            done_b = Some(t);
+        }
+        if !b_active && (t - start_b).abs() < 1e-12 {
+            b_active = true;
+        }
+    }
+    (done_a.unwrap(), done_b.unwrap())
+}
+
+/// Mean completion time of the pair for a given start offset of the second
+/// task — Eq (9)'s objective.
+pub fn mean_completion(cm: &CommModel, m_first: f64, m_second: f64, start_second: f64) -> f64 {
+    let (t1, t2) = simulate_pair(cm, m_first, m_second, start_second);
+    0.5 * (t1 + t2)
+}
+
+/// Closed-form optima from the paper (Eqs 14a–14c), for cross-checking:
+/// t̂_C1 = (2bM₁ + bM₂)/2 ; t̂_C2a = ((3b+2η)M₁ + bM₂)/2 ; t̂_C2b = (bM₁ + 2bM₂)/2.
+pub fn theorem_optima(cm: &CommModel, m1: f64, m2: f64) -> (f64, f64, f64) {
+    let b = cm.b;
+    let eta = cm.eta;
+    (
+        (2.0 * b * m1 + b * m2) / 2.0,
+        ((3.0 * b + 2.0 * eta) * m1 + b * m2) / 2.0,
+        (b * m1 + 2.0 * b * m2) / 2.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CommModel;
+    use crate::util::prop::prop_check;
+
+    fn cm() -> CommModel {
+        CommModel::paper_10gbe()
+    }
+
+    fn feq(a: f64, b: f64, tol: f64) -> Result<(), String> {
+        if (a - b).abs() <= tol * a.abs().max(b.abs()).max(1e-30) {
+            Ok(())
+        } else {
+            Err(format!("{a} != {b}"))
+        }
+    }
+
+    #[test]
+    fn serial_matches_closed_form() {
+        // Second task starts exactly when the first finishes: no overlap.
+        let c = cm();
+        let m1 = 1e8;
+        let m2 = 3e8;
+        let t1_free = c.b * m1;
+        let (ta, tb) = simulate_pair(&c, m1, m2, t1_free);
+        assert!((ta - t1_free).abs() < 1e-9);
+        assert!((tb - (t1_free + c.b * m2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simultaneous_matches_eq5() {
+        // Both start at 0 with equal sizes: both finish at contended time
+        // (minus the latency constant which P1 neglects).
+        let c = cm();
+        let m = 2e8;
+        let (ta, tb) = simulate_pair(&c, m, m, 0.0);
+        let want = m * c.per_byte(2);
+        assert!((ta - want).abs() < 1e-6, "{ta} vs {want}");
+        assert!((tb - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn theorem1_c1_optimum_at_t1() {
+        // C1: small first. Mean completion is minimised by starting the
+        // second at t = t1 (no overlap), per Theorem 1.
+        let c = cm();
+        prop_check(200, |g| {
+            let m1 = g.f64(1e6, 5e8);
+            let m2 = g.f64(m1, 1e9);
+            let t1 = c.b * m1;
+            let best = mean_completion(&c, m1, m2, t1);
+            // Any earlier start of the big task must be no better.
+            let t = g.f64(0.0, t1);
+            let other = mean_completion(&c, m1, m2, t);
+            if other + 1e-9 < best {
+                return Err(format!("overlap at t={t} beat serial: {other} < {best}"));
+            }
+            // And the simulated optimum must match Eq (14a).
+            let (c1, _, _) = theorem_optima(&c, m1, m2);
+            feq(best, c1, 1e-6)
+        });
+    }
+
+    #[test]
+    fn theorem2_decision_rule() {
+        // C2: big first (it is already flying), a small newcomer arrives.
+        // Starting it immediately beats waiting iff M1/M2 < b/(2(b+η)).
+        let c = cm();
+        let th = c.adadual_threshold();
+        prop_check(300, |g| {
+            let m2 = g.f64(1e7, 1e9); // existing (big) task
+            let ratio = g.f64(0.01, 0.99);
+            let m1 = ratio * m2; // newcomer
+            let immediate = mean_completion(&c, m2, m1, 0.0);
+            let wait = mean_completion(&c, m2, m1, c.b * m2);
+            let overlap_better = immediate < wait - 1e-9;
+            let rule_says = ratio < th;
+            if overlap_better != rule_says && (ratio - th).abs() > 1e-3 {
+                return Err(format!(
+                    "ratio={ratio:.4} th={th:.4} immediate={immediate} wait={wait}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn theorem2_interior_never_optimal() {
+        // Within C2 the optimum is at t=0 or t=t2, never strictly inside.
+        let c = cm();
+        prop_check(200, |g| {
+            let m2 = g.f64(1e7, 1e9);
+            let m1 = g.f64(1e6, m2);
+            let t2 = c.b * m2;
+            let ends = mean_completion(&c, m2, m1, 0.0).min(mean_completion(&c, m2, m1, t2));
+            let t = g.f64(1e-12, t2 * 0.999);
+            let mid = mean_completion(&c, m2, m1, t);
+            if mid + 1e-9 < ends {
+                return Err(format!("interior t={t} beat endpoints: {mid} < {ends}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn closed_forms_match_simulator() {
+        let c = cm();
+        let m1 = 1.2e8;
+        let m2 = 6.1e8;
+        let (c1, c2a, c2b) = theorem_optima(&c, m1, m2);
+        // C1 at t=t1 (small first, serial):
+        assert!((mean_completion(&c, m1, m2, c.b * m1) - c1).abs() / c1 < 1e-9);
+        // C2a at t=0 (big first, newcomer joins immediately):
+        assert!((mean_completion(&c, m2, m1, 0.0) - c2a).abs() / c2a < 1e-9);
+        // C2b at t=t2 (big first, newcomer waits):
+        assert!((mean_completion(&c, m2, m1, c.b * m2) - c2b).abs() / c2b < 1e-9);
+    }
+
+    #[test]
+    fn c1_dominates_both_c2_variants() {
+        // Eq (14): serial-smallest-first is the global optimum.
+        let c = cm();
+        prop_check(200, |g| {
+            let m1 = g.f64(1e6, 5e8);
+            let m2 = g.f64(m1, 1e9);
+            let (c1, c2a, c2b) = theorem_optima(&c, m1, m2);
+            if c1 <= c2a + 1e-9 && c1 <= c2b + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("c1={c1} c2a={c2a} c2b={c2b}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,765 @@
+//! The simulation engine. See module docs in `sim/mod.rs`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::cluster::{ClusterSpec, ClusterState, GpuId, ServerId};
+use crate::model::CommModel;
+use crate::placement::Placer;
+use crate::sched::{srsf_cmp, Admission, CommPolicy, NetView};
+use crate::trace::JobSpec;
+
+const EPS: f64 = 1e-9;
+/// Transfers are "done" below this many bytes remaining. Sub-byte residue
+/// is floating-point noise; waiting for it to drain can deadlock once the
+/// residual drain time falls below one ulp of the simulation clock.
+const EPS_BYTES: f64 = 1e-3;
+
+/// How a transfer's rate reacts to contention changes mid-flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Repricing {
+    /// Every affected transfer is repriced whenever a task starts or
+    /// finishes on a shared server — the physically exact differential
+    /// form of Eq (5). Under this model a newcomer slows already-running
+    /// elephants down, which *erodes* AdaDUAL's pairwise win (see
+    /// EXPERIMENTS.md §TableV-discussion).
+    Dynamic,
+    /// A transfer's k (and thus duration) is fixed once, at admission —
+    /// the behaviour of the paper's slot-based simulator: each task's cost
+    /// is `a + k·b·M + (k−1)·η·M` with k evaluated when it starts. The
+    /// newcomer pays the contention price; existing transfers keep theirs.
+    AtAdmission,
+}
+
+/// Job priority rule used for queueing, per-GPU task selection and
+/// pending-communication ordering. The paper uses SRSF (Tiresias); FIFO
+/// and LAS are the classical baselines its related-work section contrasts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPriority {
+    /// Shortest remaining service (remaining time × GPUs) first — paper.
+    Srsf,
+    /// Earliest arrival first.
+    Fifo,
+    /// Least attained service (elapsed work × GPUs) first — Tiresias' 2D-LAS.
+    Las,
+}
+
+/// Simulator configuration.
+pub struct SimConfig {
+    pub cluster: ClusterSpec,
+    pub comm: CommModel,
+    /// Contention repricing mode (paper: `AtAdmission`).
+    pub repricing: Repricing,
+    /// Job priority rule (paper: SRSF).
+    pub priority: JobPriority,
+    /// Record a per-event log (for debugging / the contention demo).
+    pub log_events: bool,
+}
+
+impl SimConfig {
+    /// The paper's evaluation setup (Tables IV–V, Figs 4–6).
+    pub fn paper() -> SimConfig {
+        SimConfig {
+            cluster: ClusterSpec::paper_64gpu(),
+            comm: CommModel::paper_10gbe(),
+            repricing: Repricing::AtAdmission,
+            priority: JobPriority::Srsf,
+            log_events: false,
+        }
+    }
+
+    /// Physically exact contention dynamics (our extension/ablation).
+    pub fn exact() -> SimConfig {
+        SimConfig { repricing: Repricing::Dynamic, ..SimConfig::paper() }
+    }
+}
+
+/// One entry of the optional event log.
+#[derive(Clone, Debug)]
+pub struct EventLog {
+    pub t: f64,
+    pub what: String,
+}
+
+/// Simulation outputs: everything the paper's metrics need.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Per-job completion time F_k − A_k, indexed by job id.
+    pub jct: Vec<f64>,
+    /// Per-job finish timestamps F_k.
+    pub finish: Vec<f64>,
+    /// Per-job time spent waiting for placement.
+    pub queue_wait: Vec<f64>,
+    /// Busy seconds per GPU.
+    pub gpu_busy: Vec<f64>,
+    /// Allocated-window seconds per GPU (first placement to last release).
+    pub gpu_alloc_window: Vec<f64>,
+    /// Simulated span (max finish time).
+    pub makespan: f64,
+    pub n_events: u64,
+    /// Comm tasks admitted into contention (k >= 2 at admission).
+    pub contended_admissions: u64,
+    /// Comm tasks admitted onto idle links.
+    pub clean_admissions: u64,
+    /// Highest contention level any task experienced.
+    pub max_contention: usize,
+    pub events: Vec<EventLog>,
+}
+
+impl SimResult {
+    /// Average GPU utilisation = busy / makespan, averaged over GPUs.
+    pub fn avg_gpu_util(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        let per: f64 = self.gpu_busy.iter().map(|b| b / self.makespan).sum();
+        per / self.gpu_busy.len() as f64
+    }
+
+    /// Per-GPU utilisations (for the Fig 4b/5b/6b distributions).
+    pub fn gpu_utils(&self) -> Vec<f64> {
+        self.gpu_busy.iter().map(|b| b / self.makespan.max(EPS)).collect()
+    }
+
+    /// Utilisation over each GPU's *allocated window* (first placement to
+    /// last release) instead of the global makespan — closer to how a
+    /// cluster operator reads per-GPU utilisation, and less sensitive to
+    /// long idle tails. Reported alongside the headline number.
+    pub fn avg_alloc_util(&self) -> f64 {
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for (b, w) in self.gpu_busy.iter().zip(&self.gpu_alloc_window) {
+            if *w > EPS {
+                acc += (b / w).min(1.0);
+                n += 1;
+            }
+        }
+        if n == 0 { 0.0 } else { acc / n as f64 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Fwd,
+    Bwd,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ev {
+    Arrive { job: usize },
+    ComputeDone { gpu: GpuId, job: usize, phase: Phase },
+    CommDone { comm: usize, version: u64 },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+struct Timed {
+    t: f64,
+    seq: u64, // FIFO tie-break for equal times, keeps runs deterministic
+    ev: Ev,
+}
+
+impl Eq for Timed {}
+
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-job runtime state.
+struct JobRt {
+    spec: JobSpec,
+    gpus: Vec<GpuId>,
+    servers: Vec<ServerId>,
+    multi_server: bool,
+    t_fwd: f64,
+    t_bwd: f64,
+    iters_done: u64,
+    bwd_remaining: usize,
+    comm_pending: bool,
+    placed_at: Option<f64>,
+    finished_at: Option<f64>,
+    /// Bookkeeping load drained from its GPUs per finished iteration.
+    load_per_iter: f64,
+    /// Total bookkeeping load committed at placement (for final release).
+    load_total: f64,
+}
+
+impl JobRt {
+    fn remaining_service(&self, cm: &CommModel) -> f64 {
+        let iters_left = (self.spec.iterations - self.iters_done) as f64;
+        let t_comm = if self.multi_server {
+            cm.time_free(self.spec.message_bytes())
+        } else {
+            0.0
+        };
+        iters_left * (self.t_fwd + self.t_bwd + t_comm) * self.spec.n_gpus as f64
+    }
+
+    /// SRSF key before placement (E_J = 0, §IV-A Job Priority).
+    fn queued_service(&self, peak_gflops: f64) -> f64 {
+        self.spec.compute_total(peak_gflops) * self.spec.n_gpus as f64
+    }
+}
+
+/// One active All-Reduce transfer.
+struct CommTask {
+    job: usize,
+    servers: Vec<ServerId>,
+    latency_left: f64,
+    remaining: f64,
+    k: usize,
+    last_update: f64,
+    version: u64,
+    done: bool,
+}
+
+/// Per-GPU runtime state.
+struct GpuRt {
+    busy: bool,
+    ready: Vec<(usize, Phase)>, // compute-ready (job, phase) on this GPU
+    busy_accum: f64,
+    /// First time a job was placed on this GPU (for allocated-window util).
+    first_alloc: Option<f64>,
+    /// Last time a job released this GPU.
+    last_release: f64,
+}
+
+/// Run one simulation: `jobs` through `placer` + `policy` on `cfg.cluster`.
+pub fn simulate(
+    cfg: &SimConfig,
+    jobs: &[JobSpec],
+    placer: &mut dyn Placer,
+    policy: &dyn CommPolicy,
+) -> SimResult {
+    Engine::new(cfg, jobs).run(placer, policy)
+}
+
+struct Engine<'a> {
+    cfg: &'a SimConfig,
+    cluster: ClusterState,
+    jobs: Vec<JobRt>,
+    gpus: Vec<GpuRt>,
+    heap: BinaryHeap<Timed>,
+    seq: u64,
+    /// Job ids waiting for placement.
+    queue: Vec<usize>,
+    /// Job ids with a ready-but-unadmitted All-Reduce.
+    pending_comm: Vec<usize>,
+    comms: Vec<CommTask>,
+    /// Ids of in-flight comm tasks (the only ones advance_network visits;
+    /// scanning the whole historical `comms` vec would be quadratic).
+    active_comms: Vec<usize>,
+    /// Active comm-task ids per server.
+    per_server: Vec<Vec<usize>>,
+    n_events: u64,
+    contended_admissions: u64,
+    clean_admissions: u64,
+    max_contention: usize,
+    events: Vec<EventLog>,
+    unfinished: usize,
+    /// Set when a job finished (memory freed) so the event loop re-attempts
+    /// placement of queued jobs.
+    need_place: bool,
+}
+
+impl<'a> Engine<'a> {
+    fn new(cfg: &'a SimConfig, jobs: &[JobSpec]) -> Engine<'a> {
+        let peak = cfg.cluster.gpu_peak_gflops;
+        let rt: Vec<JobRt> = jobs
+            .iter()
+            .map(|spec| {
+                let m = crate::model::PerfModel::for_model(spec.model);
+                let b = spec.model.spec().batch_size;
+                JobRt {
+                    spec: spec.clone(),
+                    gpus: Vec::new(),
+                    servers: Vec::new(),
+                    multi_server: false,
+                    t_fwd: m.t_fwd(b, peak),
+                    t_bwd: m.t_bwd(b, peak),
+                    iters_done: 0,
+                    bwd_remaining: 0,
+                    comm_pending: false,
+                    placed_at: None,
+                    finished_at: None,
+                    load_per_iter: 0.0,
+                    load_total: 0.0,
+                }
+            })
+            .collect();
+        let mut heap = BinaryHeap::with_capacity(jobs.len() * 4);
+        for (i, j) in jobs.iter().enumerate() {
+            heap.push(Timed { t: j.arrival, seq: i as u64, ev: Ev::Arrive { job: i } });
+        }
+        Engine {
+            cfg,
+            cluster: ClusterState::new(cfg.cluster),
+            gpus: (0..cfg.cluster.n_gpus())
+                .map(|_| GpuRt {
+                    busy: false,
+                    ready: Vec::new(),
+                    busy_accum: 0.0,
+                    first_alloc: None,
+                    last_release: 0.0,
+                })
+                .collect(),
+            jobs: rt,
+            heap,
+            seq: jobs.len() as u64,
+            queue: Vec::new(),
+            pending_comm: Vec::new(),
+            comms: Vec::new(),
+            active_comms: Vec::new(),
+            per_server: vec![Vec::new(); cfg.cluster.n_servers],
+            n_events: 0,
+            contended_admissions: 0,
+            clean_admissions: 0,
+            max_contention: 0,
+            events: Vec::new(),
+            unfinished: jobs.len(),
+            need_place: false,
+        }
+    }
+
+    fn push(&mut self, t: f64, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Timed { t, seq: self.seq, ev });
+    }
+
+    fn log(&mut self, t: f64, what: impl FnOnce() -> String) {
+        if self.cfg.log_events {
+            self.events.push(EventLog { t, what: what() });
+        }
+    }
+
+    fn run(mut self, placer: &mut dyn Placer, policy: &dyn CommPolicy) -> SimResult {
+        while let Some(Timed { t, ev, .. }) = self.heap.pop() {
+            if self.unfinished == 0 {
+                break;
+            }
+            self.n_events += 1;
+            if self.n_events % 1_000_000 == 0 && std::env::var_os("DDL_SIM_DEBUG").is_some() {
+                eprintln!(
+                    "[sim] ev={}M t={:.1} heap={} active={} pending={} queue={} unfinished={}",
+                    self.n_events / 1_000_000,
+                    t,
+                    self.heap.len(),
+                    self.active_comms.len(),
+                    self.pending_comm.len(),
+                    self.queue.len(),
+                    self.unfinished
+                );
+            }
+            match ev {
+                Ev::Arrive { job } => {
+                    self.log(t, || format!("arrive job{job}"));
+                    self.queue.push(job);
+                    self.try_place(t, placer);
+                }
+                Ev::ComputeDone { gpu, job, phase } => {
+                    self.on_compute_done(t, gpu, job, phase, policy);
+                    // Placement feasibility only changes when memory frees
+                    // (a job finished); re-attempting on every compute event
+                    // would dominate the run time.
+                    if self.need_place {
+                        self.need_place = false;
+                        self.try_place(t, placer);
+                    }
+                }
+                Ev::CommDone { comm, version } => {
+                    if self.comms[comm].done || self.comms[comm].version != version {
+                        continue; // stale prediction
+                    }
+                    self.advance_network(t);
+                    // Completion test in the *time* domain: once the
+                    // residual drain time falls below one ulp of the clock,
+                    // a repredicted event can land exactly at `t` forever
+                    // (observed livelock); treat sub-ulp residue as done.
+                    let c = &self.comms[comm];
+                    let residual = c.latency_left + c.remaining * self.cfg.comm.per_byte(c.k);
+                    let eps_t = EPS + t.abs() * 1e-12;
+                    if residual > eps_t {
+                        self.repredict(t, comm);
+                        continue;
+                    }
+                    self.complete_comm(t, comm, placer, policy);
+                }
+            }
+        }
+        self.finish()
+    }
+
+    // -- priorities -----------------------------------------------------------
+
+    /// Priority key for a *running* job (smaller = served first).
+    fn run_key(&self, job: usize) -> f64 {
+        let j = &self.jobs[job];
+        match self.cfg.priority {
+            JobPriority::Srsf => j.remaining_service(&self.cfg.comm),
+            JobPriority::Fifo => j.spec.arrival,
+            JobPriority::Las => {
+                let t_comm = if j.multi_server {
+                    self.cfg.comm.time_free(j.spec.message_bytes())
+                } else {
+                    0.0
+                };
+                j.iters_done as f64 * (j.t_fwd + j.t_bwd + t_comm) * j.spec.n_gpus as f64
+            }
+        }
+    }
+
+    /// Priority key for a *queued* job (E_J = 0: communication unknown
+    /// before placement, §IV-A "Job Priority").
+    fn queue_key(&self, job: usize) -> f64 {
+        let j = &self.jobs[job];
+        match self.cfg.priority {
+            JobPriority::Srsf => j.queued_service(self.cfg.cluster.gpu_peak_gflops),
+            JobPriority::Fifo => j.spec.arrival,
+            JobPriority::Las => 0.0, // no service attained yet: FIFO by id
+        }
+    }
+
+    // -- placement ----------------------------------------------------------
+
+    fn try_place(&mut self, t: f64, placer: &mut dyn Placer) {
+        if self.queue.is_empty() {
+            return;
+        }
+        let mut order: Vec<usize> = self.queue.clone();
+        order.sort_by(|&a, &b| srsf_cmp((self.queue_key(a), a), (self.queue_key(b), b)));
+        let mut placed: Vec<usize> = Vec::new();
+        for job in order {
+            let spec = self.jobs[job].spec.clone();
+            if let Some(gpus) = placer.place(&spec, &self.cluster) {
+                self.commit_placement(t, job, gpus);
+                placed.push(job);
+            }
+        }
+        self.queue.retain(|j| !placed.contains(j));
+    }
+
+    fn commit_placement(&mut self, t: f64, job: usize, gpus: Vec<GpuId>) {
+        let servers = self.cfg.cluster.servers_of(&gpus);
+        let multi = servers.len() > 1;
+        // Algorithm 1 bookkeeping: L_J = (C_J + E_J) · |G(J)| added to each
+        // chosen GPU, drained as iterations complete.
+        let c_j = self.jobs[job].spec.compute_total(self.cfg.cluster.gpu_peak_gflops);
+        let e_j = self.jobs[job]
+            .spec
+            .comm_total(servers.len(), &self.cfg.comm);
+        let load = (c_j + e_j) * gpus.len() as f64;
+        self.cluster
+            .allocate(&gpus, self.jobs[job].spec.mem_bytes(), load);
+        for &g in &gpus {
+            self.gpus[g].first_alloc.get_or_insert(t);
+        }
+        {
+            let j = &mut self.jobs[job];
+            j.load_total = load;
+            j.load_per_iter = load / j.spec.iterations as f64;
+            j.gpus = gpus;
+            j.servers = servers;
+            j.multi_server = multi;
+            j.placed_at = Some(t);
+        }
+        if self.cfg.log_events {
+            let gpus = self.jobs[job].gpus.clone();
+            self.log(t, || format!("place job{job} gpus={gpus:?}"));
+        }
+        self.start_iteration(t, job);
+    }
+
+    // -- compute ------------------------------------------------------------
+
+    fn start_iteration(&mut self, t: f64, job: usize) {
+        let gpus = self.jobs[job].gpus.clone();
+        self.jobs[job].bwd_remaining = gpus.len();
+        for g in gpus {
+            self.gpus[g].ready.push((job, Phase::Fwd));
+            self.schedule_gpu(t, g);
+        }
+    }
+
+    fn schedule_gpu(&mut self, t: f64, gpu: GpuId) {
+        if self.gpus[gpu].busy || self.gpus[gpu].ready.is_empty() {
+            return;
+        }
+        // Priority rule among the compute-ready tasks resident on this GPU.
+        let best = self.gpus[gpu]
+            .ready
+            .iter()
+            .enumerate()
+            .min_by(|(_, &(ja, _)), (_, &(jb, _))| {
+                srsf_cmp((self.run_key(ja), ja), (self.run_key(jb), jb))
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        let (job, phase) = self.gpus[gpu].ready.swap_remove(best);
+        let dur = match phase {
+            Phase::Fwd => self.jobs[job].t_fwd,
+            Phase::Bwd => self.jobs[job].t_bwd,
+        };
+        self.gpus[gpu].busy = true;
+        self.gpus[gpu].busy_accum += dur;
+        self.push(t + dur, Ev::ComputeDone { gpu, job, phase });
+    }
+
+    fn on_compute_done(
+        &mut self,
+        t: f64,
+        gpu: GpuId,
+        job: usize,
+        phase: Phase,
+        policy: &dyn CommPolicy,
+    ) {
+        self.gpus[gpu].busy = false;
+        match phase {
+            Phase::Fwd => {
+                // Backward on the same worker immediately becomes ready.
+                self.gpus[gpu].ready.push((job, Phase::Bwd));
+            }
+            Phase::Bwd => {
+                self.jobs[job].bwd_remaining -= 1;
+                if self.jobs[job].bwd_remaining == 0 {
+                    if self.jobs[job].multi_server {
+                        self.jobs[job].comm_pending = true;
+                        self.pending_comm.push(job);
+                        self.try_admit(t, policy);
+                    } else {
+                        self.iteration_complete(t, job);
+                    }
+                }
+            }
+        }
+        self.schedule_gpu(t, gpu);
+    }
+
+    fn iteration_complete(&mut self, t: f64, job: usize) {
+        self.jobs[job].iters_done += 1;
+        let gpus = self.jobs[job].gpus.clone();
+        self.cluster.drain_load(&gpus, self.jobs[job].load_per_iter);
+        if self.jobs[job].iters_done >= self.jobs[job].spec.iterations {
+            self.jobs[job].finished_at = Some(t);
+            self.unfinished -= 1;
+            let mem = self.jobs[job].spec.mem_bytes();
+            self.cluster.release(&gpus, mem, 0.0);
+            for &g in &gpus {
+                self.gpus[g].last_release = self.gpus[g].last_release.max(t);
+            }
+            self.need_place = true;
+            self.log(t, || format!("finish job{job}"));
+        } else {
+            self.start_iteration(t, job);
+        }
+    }
+
+    // -- network ------------------------------------------------------------
+
+    /// Bring every active transfer's byte counter up to `t`.
+    fn advance_network(&mut self, t: f64) {
+        for &id in &self.active_comms {
+            let c = &mut self.comms[id];
+            let mut dt = t - c.last_update;
+            if dt <= 0.0 {
+                continue;
+            }
+            if c.latency_left > 0.0 {
+                let use_lat = c.latency_left.min(dt);
+                c.latency_left -= use_lat;
+                dt -= use_lat;
+            }
+            if dt > 0.0 {
+                c.remaining -= dt * self.cfg.comm.rate(c.k);
+                if c.remaining < 0.0 {
+                    c.remaining = 0.0;
+                }
+            }
+            c.last_update = t;
+        }
+    }
+
+    /// Contention level for a task spanning `servers`: max |C_s| (Eq 5).
+    fn contention_of(&self, servers: &[ServerId]) -> usize {
+        servers
+            .iter()
+            .map(|&s| self.per_server[s].len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Re-derive k and the predicted completion of comm task `id` at time t.
+    /// Under AtAdmission pricing, k is recomputed only while the task has
+    /// not started draining (i.e. at admission); afterwards it stays locked.
+    fn repredict(&mut self, t: f64, id: usize) {
+        let locked = self.cfg.repricing == Repricing::AtAdmission && self.comms[id].version > 0;
+        let k = if locked {
+            self.comms[id].k
+        } else {
+            // Inline max over this task's servers (no allocation; this is
+            // on the Dynamic-repricing hot path).
+            let mut k = 1;
+            for i in 0..self.comms[id].servers.len() {
+                k = k.max(self.per_server[self.comms[id].servers[i]].len());
+            }
+            k
+        };
+        let c = &mut self.comms[id];
+        c.k = k;
+        c.version += 1;
+        let eta = t + c.latency_left + c.remaining * self.cfg.comm.per_byte(k);
+        let v = c.version;
+        self.max_contention = self.max_contention.max(k);
+        self.push(eta, Ev::CommDone { comm: id, version: v });
+    }
+
+    /// After membership on `servers` changed, refresh every task touching
+    /// them (Dynamic repricing). Under AtAdmission pricing, rates are
+    /// locked at start and this is a no-op for existing tasks.
+    fn refresh_servers(&mut self, t: f64, servers: &[ServerId]) {
+        if self.cfg.repricing == Repricing::AtAdmission {
+            return;
+        }
+        let mut affected: Vec<usize> = servers
+            .iter()
+            .flat_map(|&s| self.per_server[s].iter().copied())
+            .collect();
+        affected.sort_unstable();
+        affected.dedup();
+        for id in affected {
+            self.repredict(t, id);
+        }
+    }
+
+    fn try_admit(&mut self, t: f64, policy: &dyn CommPolicy) {
+        if self.pending_comm.is_empty() {
+            return;
+        }
+        self.advance_network(t);
+        let mut order = self.pending_comm.clone();
+        order.sort_by(|&a, &b| srsf_cmp((self.run_key(a), a), (self.run_key(b), b)));
+        let mut admitted: Vec<usize> = Vec::new();
+        // Build the admission view once per pass and refresh it only after
+        // an admission actually changes the network state — rebuilding per
+        // pending job was the #1 hot spot at paper scale (§Perf).
+        let mut view: Vec<Vec<(usize, f64)>> = self
+            .per_server
+            .iter()
+            .map(|ids| ids.iter().map(|&c| (c, self.comms[c].remaining)).collect())
+            .collect();
+        for job in order {
+            let msg = self.jobs[job].spec.message_bytes();
+            let servers = self.jobs[job].servers.clone();
+            let net = NetView { per_server: &view };
+            if policy.admit(msg, &servers, &net) == Admission::Start {
+                let pre = self.contention_of(&servers);
+                if pre == 0 {
+                    self.clean_admissions += 1;
+                } else {
+                    self.contended_admissions += 1;
+                }
+                let id = self.comms.len();
+                self.comms.push(CommTask {
+                    job,
+                    servers: servers.clone(),
+                    latency_left: self.cfg.comm.a,
+                    remaining: msg,
+                    k: 1,
+                    last_update: t,
+                    version: 0,
+                    done: false,
+                });
+                for &s in &servers {
+                    self.per_server[s].push(id);
+                }
+                self.active_comms.push(id);
+                self.jobs[job].comm_pending = false;
+                self.log(t, || format!("comm-start job{job} k={}", pre + 1));
+                // Price the new task; under Dynamic repricing also refresh
+                // everyone sharing its servers.
+                self.repredict(t, id);
+                self.refresh_servers(t, &servers);
+                admitted.push(job);
+                // Network state changed: refresh the shared view in place
+                // (only the admitted task's servers gained an entry).
+                for &s in &servers {
+                    view[s].push((id, self.comms[id].remaining));
+                }
+            }
+        }
+        self.pending_comm.retain(|j| !admitted.contains(j));
+    }
+
+    fn complete_comm(
+        &mut self,
+        t: f64,
+        id: usize,
+        placer: &mut dyn Placer,
+        policy: &dyn CommPolicy,
+    ) {
+        let job = self.comms[id].job;
+        let servers = self.comms[id].servers.clone();
+        self.comms[id].done = true;
+        self.active_comms.retain(|&c| c != id);
+        for &s in &servers {
+            self.per_server[s].retain(|&c| c != id);
+        }
+        self.log(t, || format!("comm-done job{job}"));
+        self.refresh_servers(t, &servers);
+        self.iteration_complete(t, job);
+        self.try_admit(t, policy);
+        if self.need_place {
+            self.need_place = false;
+            self.try_place(t, placer);
+        }
+    }
+
+    // -- results --------------------------------------------------------------
+
+    fn finish(self) -> SimResult {
+        let mut jct = vec![f64::NAN; self.jobs.len()];
+        let mut finish = vec![f64::NAN; self.jobs.len()];
+        let mut queue_wait = vec![f64::NAN; self.jobs.len()];
+        let mut makespan: f64 = 0.0;
+        for (i, j) in self.jobs.iter().enumerate() {
+            if let Some(f) = j.finished_at {
+                jct[i] = f - j.spec.arrival;
+                finish[i] = f;
+                makespan = makespan.max(f);
+            }
+            if let Some(p) = j.placed_at {
+                queue_wait[i] = p - j.spec.arrival;
+            }
+        }
+        SimResult {
+            jct,
+            finish,
+            queue_wait,
+            gpu_busy: self.gpus.iter().map(|g| g.busy_accum).collect(),
+            gpu_alloc_window: self
+                .gpus
+                .iter()
+                .map(|g| (g.last_release - g.first_alloc.unwrap_or(0.0)).max(0.0))
+                .collect(),
+            makespan,
+            n_events: self.n_events,
+            contended_admissions: self.contended_admissions,
+            clean_admissions: self.clean_admissions,
+            max_contention: self.max_contention,
+            events: self.events,
+        }
+    }
+}

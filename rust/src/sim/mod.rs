@@ -1,0 +1,24 @@
+//! Event-driven discrete-event simulator of the cluster (§V): jobs arrive,
+//! are placed by a `Placer`, and execute their DAG of forward / backward /
+//! All-Reduce tasks under a `CommPolicy` admission rule and the Eq (5)
+//! contention network model.
+//!
+//! The engine is event-driven rather than 1-second-slotted (the paper's
+//! "time-discrete procedure"): task durations are tens of milliseconds, so
+//! slotting would either quantise them away or cost 10^6 idle ticks.
+//! Semantics are identical — scheduling decisions happen exactly at task
+//! boundaries, which is when Algorithm 3's per-slot loop would act.
+//!
+//! Network dynamics: an active All-Reduce on servers S(J) first pays the
+//! latency `a`, then drains its M bytes at per-byte time `k·b + (k−1)·η`
+//! where `k = max_{s∈S} |C_s|` (Eq 5's differential form). Whenever a task
+//! starts or finishes, the contention level — and hence the predicted
+//! completion — of every task sharing a server is recomputed; stale
+//! completion events are skipped via per-task version counters.
+
+mod engine;
+
+pub use engine::{simulate, EventLog, JobPriority, Repricing, SimConfig, SimResult};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,262 @@
+//! DDL job specifications and the Microsoft-trace-like workload generator
+//! (§V-A): 160 jobs over a 20-minute arrival window with the paper's
+//! GPU-count histogram, iteration range 1000–6000, models drawn from the
+//! Table III zoo. Traces serialize to JSON (util::json) for reuse.
+
+use crate::model::{CommModel, DnnModel, PerfModel};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// One DDL training job as released by the trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub id: usize,
+    /// Arrival timestamp A_k (seconds).
+    pub arrival: f64,
+    pub model: DnnModel,
+    /// Number of GPUs |G(J_k)|.
+    pub n_gpus: usize,
+    /// Training iterations I_k.
+    pub iterations: u64,
+}
+
+impl JobSpec {
+    /// Per-iteration compute time (t_f + t_b) on a `peak_gflops` GPU.
+    pub fn t_iter(&self, peak_gflops: f64) -> f64 {
+        let spec = self.model.spec();
+        PerfModel::for_model(self.model).t_iter(spec.batch_size, peak_gflops)
+    }
+
+    /// C_J of Eq (7): total compute time over all iterations.
+    pub fn compute_total(&self, peak_gflops: f64) -> f64 {
+        self.t_iter(peak_gflops) * self.iterations as f64
+    }
+
+    /// E_J of Eq (8) given the number of servers the placement spans.
+    pub fn comm_total(&self, n_servers_spanned: usize, cm: &CommModel) -> f64 {
+        if n_servers_spanned <= 1 {
+            0.0
+        } else {
+            cm.time_free(self.model.spec().model_bytes) * self.iterations as f64
+        }
+    }
+
+    /// Gradient message size M (bytes).
+    pub fn message_bytes(&self) -> f64 {
+        self.model.spec().model_bytes
+    }
+
+    /// Per-GPU memory requirement (bytes).
+    pub fn mem_bytes(&self) -> f64 {
+        self.model.spec().mem_bytes
+    }
+
+    /// Paper §V-A job taxonomy: large if > 4 GPUs.
+    pub fn is_large(&self) -> bool {
+        self.n_gpus > 4
+    }
+
+    /// Paper §V-A job taxonomy: long if > 1600 iterations.
+    pub fn is_long(&self) -> bool {
+        self.iterations > 1600
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", self.id)
+            .set("arrival", self.arrival)
+            .set("model", self.model.spec().name)
+            .set("n_gpus", self.n_gpus)
+            .set("iterations", self.iterations)
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobSpec, String> {
+        Ok(JobSpec {
+            id: v.req_usize("id")?,
+            arrival: v.req_f64("arrival")?,
+            model: DnnModel::from_name(v.req_str("model")?)
+                .ok_or_else(|| format!("unknown model '{}'", v.req_str("model").unwrap()))?,
+            n_gpus: v.req_usize("n_gpus")?,
+            iterations: v.req_f64("iterations")? as u64,
+        })
+    }
+}
+
+/// Trace generation parameters. The defaults are §V-A's published
+/// marginals; everything is overridable for sweeps/ablations.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// Arrival window [0, horizon) seconds (paper: 1200 s).
+    pub horizon: f64,
+    /// (n_gpus, count) histogram; paper: 80×1, 14×2, 26×4, 30×8, 8×16, 2×32.
+    pub gpu_histogram: Vec<(usize, usize)>,
+    /// Iteration range (inclusive), paper: 1000–6000.
+    pub iter_range: (u64, u64),
+}
+
+impl TraceConfig {
+    pub fn paper_160() -> TraceConfig {
+        TraceConfig {
+            seed: 42,
+            horizon: 1200.0,
+            gpu_histogram: vec![(1, 80), (2, 14), (4, 26), (8, 30), (16, 8), (32, 2)],
+            iter_range: (1000, 6000),
+        }
+    }
+
+    /// A scaled-down trace for fast tests: same shape, `n` jobs.
+    pub fn scaled(n: usize, seed: u64) -> TraceConfig {
+        let paper = TraceConfig::paper_160();
+        let total: usize = paper.gpu_histogram.iter().map(|&(_, c)| c).sum();
+        let mut hist: Vec<(usize, usize)> = paper
+            .gpu_histogram
+            .iter()
+            .map(|&(g, c)| (g, (c * n + total / 2) / total))
+            .collect();
+        // Make counts sum to n exactly, adjusting the 1-GPU bucket.
+        let sum: usize = hist.iter().map(|&(_, c)| c).sum();
+        if sum < n {
+            hist[0].1 += n - sum;
+        } else {
+            let mut excess = sum - n;
+            for entry in hist.iter_mut() {
+                let take = excess.min(entry.1.saturating_sub(1));
+                entry.1 -= take;
+                excess -= take;
+                if excess == 0 {
+                    break;
+                }
+            }
+        }
+        TraceConfig {
+            seed,
+            horizon: paper.horizon * n as f64 / total as f64,
+            gpu_histogram: hist,
+            iter_range: paper.iter_range,
+        }
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.gpu_histogram.iter().map(|&(_, c)| c).sum()
+    }
+}
+
+/// Generate a trace: jobs sorted by arrival time, ids in arrival order.
+pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
+    let mut rng = Pcg::new(cfg.seed, 0x7ace);
+    // Expand the histogram into a gpu-count list and shuffle it so arrival
+    // order decorrelates from size.
+    let mut sizes: Vec<usize> = cfg
+        .gpu_histogram
+        .iter()
+        .flat_map(|&(g, c)| std::iter::repeat(g).take(c))
+        .collect();
+    rng.shuffle(&mut sizes);
+
+    let mut jobs: Vec<JobSpec> = sizes
+        .into_iter()
+        .map(|n_gpus| {
+            let arrival = rng.range_f64(0.0, cfg.horizon);
+            let iterations = rng.range_u64(cfg.iter_range.0, cfg.iter_range.1);
+            let model = *rng.choose(&crate::model::ALL_MODELS);
+            JobSpec { id: 0, arrival, model, n_gpus, iterations }
+        })
+        .collect();
+    jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i;
+    }
+    jobs
+}
+
+/// Serialize a trace to JSON text.
+pub fn to_json(jobs: &[JobSpec]) -> String {
+    Json::Arr(jobs.iter().map(JobSpec::to_json).collect()).to_string_pretty()
+}
+
+/// Parse a trace from JSON text.
+pub fn from_json(text: &str) -> Result<Vec<JobSpec>, String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    v.as_arr()
+        .ok_or_else(|| "trace must be a JSON array".to_string())?
+        .iter()
+        .map(JobSpec::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_histogram_sums_to_160() {
+        let cfg = TraceConfig::paper_160();
+        assert_eq!(cfg.n_jobs(), 160);
+        let one_gpu = cfg.gpu_histogram.iter().find(|&&(g, _)| g == 1).unwrap().1;
+        assert_eq!(one_gpu * 2, 160, "half of jobs are single-GPU");
+    }
+
+    #[test]
+    fn generate_respects_histogram_and_ranges() {
+        let cfg = TraceConfig::paper_160();
+        let jobs = generate(&cfg);
+        assert_eq!(jobs.len(), 160);
+        for &(g, want) in &cfg.gpu_histogram {
+            let got = jobs.iter().filter(|j| j.n_gpus == g).count();
+            assert_eq!(got, want, "gpu bucket {g}");
+        }
+        for j in &jobs {
+            assert!((cfg.iter_range.0..=cfg.iter_range.1).contains(&j.iterations));
+            assert!((0.0..cfg.horizon).contains(&j.arrival));
+        }
+    }
+
+    #[test]
+    fn generate_sorted_and_deterministic() {
+        let cfg = TraceConfig::paper_160();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+            assert!(w[0].id < w[1].id);
+        }
+        let c = generate(&TraceConfig { seed: 1, ..cfg });
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let jobs = generate(&TraceConfig::scaled(20, 7));
+        let text = to_json(&jobs);
+        let parsed = from_json(&text).unwrap();
+        assert_eq!(jobs, parsed);
+    }
+
+    #[test]
+    fn scaled_trace_sums_exactly() {
+        for n in [1, 5, 10, 16, 40, 99] {
+            let cfg = TraceConfig::scaled(n, 0);
+            assert_eq!(cfg.n_jobs(), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn taxonomy_thresholds() {
+        let j = JobSpec { id: 0, arrival: 0.0, model: DnnModel::Vgg16, n_gpus: 8, iterations: 1600 };
+        assert!(j.is_large());
+        assert!(!j.is_long());
+        let j2 = JobSpec { n_gpus: 4, iterations: 1601, ..j.clone() };
+        assert!(!j2.is_large());
+        assert!(j2.is_long());
+    }
+
+    #[test]
+    fn comm_total_zero_single_server() {
+        let cm = CommModel::paper_10gbe();
+        let j = JobSpec { id: 0, arrival: 0.0, model: DnnModel::ResNet50, n_gpus: 4, iterations: 100 };
+        assert_eq!(j.comm_total(1, &cm), 0.0);
+        assert!(j.comm_total(2, &cm) > 0.0);
+    }
+}

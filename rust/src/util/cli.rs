@@ -1,0 +1,161 @@
+//! Flag-style argument parsing — in-repo substitute for `clap` (offline
+//! registry; DESIGN.md §Substitutions).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]...`
+//! Every option is named; values parse on demand with typed getters.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("cannot parse --{key} value '{value}' as {ty}")]
+    BadValue { key: String, value: String, ty: &'static str },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, CliError> {
+        let mut it = raw.into_iter().peekable();
+        let mut args = Args {
+            subcommand: None,
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        };
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = it.next().unwrap();
+                    args.opts.insert(key.to_string(), val);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.into(),
+                value: v.into(),
+                ty: "usize",
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.into(),
+                value: v.into(),
+                ty: "u64",
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.into(),
+                value: v.into(),
+                ty: "f64",
+            }),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::MissingRequired(name.into()))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["simulate", "--jobs", "160", "--seed=7", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.usize_or("jobs", 0).unwrap(), 160);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_typed_errors() {
+        let a = parse(&["x", "--rate", "abc"]);
+        assert_eq!(a.f64_or("missing", 1.5).unwrap(), 1.5);
+        assert!(a.f64_or("rate", 0.0).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_flag() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = parse(&["run", "file1", "--k", "v", "file2"]);
+        assert_eq!(a.positional(), &["file1".to_string(), "file2".to_string()]);
+    }
+
+    #[test]
+    fn require_errors_when_absent() {
+        let a = parse(&["run"]);
+        assert!(a.require("out").is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Summary statistics, percentiles, CDFs and least-squares fitting — the
+//! numeric toolbox behind the metrics module and the Fig 2 model fit.
+
+/// Mean of a slice; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) with linear interpolation, matching numpy's
+/// default "linear" method. Panics on empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Empirical CDF sampled at each data point: returns (x, P(X <= x)) pairs
+/// sorted by x — the exact series used for the paper's JCT CDF figures.
+pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    v.into_iter()
+        .enumerate()
+        .map(|(i, x)| (x, (i + 1) as f64 / n))
+        .collect()
+}
+
+/// Ordinary least squares fit y = a + b x; returns (a, b, r_squared).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; values outside
+/// are clamped into the edge buckets. Returns per-bucket counts.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let idx = ((x - lo) / w).floor();
+        let idx = (idx.max(0.0) as usize).min(bins - 1);
+        counts[idx] += 1;
+    }
+    counts
+}
+
+/// Summary bundle used throughout metrics reporting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty slice");
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            median: median(xs),
+            p95: percentile(xs, 95.0),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feq(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-9, "{a} != {b}");
+    }
+
+    #[test]
+    fn mean_median() {
+        feq(mean(&[1.0, 2.0, 3.0, 4.0]), 2.5);
+        feq(median(&[3.0, 1.0, 2.0]), 2.0);
+        feq(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        feq(percentile(&xs, 0.0), 10.0);
+        feq(percentile(&xs, 100.0), 50.0);
+        feq(percentile(&xs, 50.0), 30.0);
+        feq(percentile(&xs, 25.0), 20.0);
+        feq(percentile(&xs, 95.0), 48.0);
+    }
+
+    #[test]
+    fn ecdf_monotone_and_complete() {
+        let cdf = ecdf(&[3.0, 1.0, 2.0, 2.0]);
+        assert_eq!(cdf.len(), 4);
+        feq(cdf.last().unwrap().1, 1.0);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.5 + 0.75 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        feq(a, 2.5);
+        feq(b, 0.75);
+        feq(r2, 1.0);
+    }
+
+    #[test]
+    fn fit_noisy_r2_below_one() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().enumerate()
+            .map(|(i, x)| 1.0 + 2.0 * x + if i % 2 == 0 { 5.0 } else { -5.0 })
+            .collect();
+        let (_, b, r2) = linear_fit(&xs, &ys);
+        assert!((b - 2.0).abs() < 0.05);
+        assert!(r2 < 1.0 && r2 > 0.9);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let h = histogram(&[-1.0, 0.0, 0.5, 0.99, 5.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 3]); // -1 clamps into [0,.5); 5 clamps into [.5,1)
+        assert_eq!(h.iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        feq(s.min, 1.0);
+        feq(s.max, 100.0);
+        feq(s.median, 3.0);
+        assert!(s.p95 > 4.0);
+    }
+}

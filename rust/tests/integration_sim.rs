@@ -1,0 +1,167 @@
+//! Cross-module integration: full paper-scale simulations, comparative
+//! shape checks (the paper's qualitative findings), trace round-trips.
+
+use ddl_sched::metrics::Evaluation;
+use ddl_sched::prelude::*;
+
+fn eval(placer_name: &str, policy_name: &str, jobs: &[JobSpec]) -> Evaluation {
+    let cfg = SimConfig::paper();
+    let mut placer = placement::by_name(placer_name, 1, 7).unwrap();
+    let policy = sched::by_name(policy_name, cfg.comm).unwrap();
+    let res = sim::simulate(&cfg, &jobs.to_vec(), placer.as_mut(), policy.as_ref());
+    Evaluation::from_sim(&format!("{placer_name}/{policy_name}"), &res)
+}
+
+#[test]
+fn paper_trace_all_combinations_finish() {
+    let jobs = trace::generate(&TraceConfig::scaled(60, 2));
+    for placer in ["rand", "ff", "ls", "lwf"] {
+        for policy in ["srsf1", "srsf2", "srsf3", "ada"] {
+            let e = eval(placer, policy, &jobs);
+            assert_eq!(e.jct.n, jobs.len(), "{placer}/{policy} lost jobs");
+            assert!(e.jct.mean > 0.0 && e.jct.mean.is_finite());
+            assert!(e.avg_gpu_util > 0.0 && e.avg_gpu_util <= 1.0);
+        }
+    }
+}
+
+#[test]
+fn finding_lwf_beats_baselines_on_paper_trace() {
+    // Table IV's qualitative shape: LWF-1 has the lowest average JCT and
+    // the highest utilisation of the four placement algorithms.
+    let jobs = trace::generate(&TraceConfig::paper_160());
+    let lwf = eval("lwf", "ada", &jobs);
+    for baseline in ["rand", "ff", "ls"] {
+        let b = eval(baseline, "ada", &jobs);
+        assert!(
+            lwf.jct.mean < b.jct.mean,
+            "LWF-1 ({:.1}) not better than {baseline} ({:.1})",
+            lwf.jct.mean,
+            b.jct.mean
+        );
+        assert!(
+            lwf.avg_gpu_util > b.avg_gpu_util,
+            "LWF-1 util {:.3} not above {baseline} {:.3}",
+            lwf.avg_gpu_util,
+            b.avg_gpu_util
+        );
+    }
+}
+
+#[test]
+fn finding_ada_beats_srsf_variants_on_paper_trace() {
+    // Table V's robust qualitative shape: SRSF(1) beats blind acceptance
+    // (SRSF(2)/(3)), and Ada-SRSF beats blind acceptance and tracks
+    // SRSF(1) closely. The paper's strict Ada-SRSF > SRSF(1) win does NOT
+    // reproduce under exact Eq (5) repricing — an analysed divergence, see
+    // EXPERIMENTS.md §TableV: the pairwise-optimal AdaDUAL admission is
+    // myopic w.r.t. repeated elephant slowdowns at high contention, so at
+    // the macro scale it lands within a few percent of SRSF(1) instead of
+    // 20% ahead. The pairwise win itself is verified in
+    // sim::tests::adadual_admits_small_against_large and the Theorem 1–2
+    // property tests.
+    let jobs = trace::generate(&TraceConfig::paper_160());
+    let ada = eval("lwf", "ada", &jobs);
+    let s1 = eval("lwf", "srsf1", &jobs);
+    let s2 = eval("lwf", "srsf2", &jobs);
+    let s3 = eval("lwf", "srsf3", &jobs);
+    assert!(
+        s1.jct.mean < s2.jct.mean,
+        "SRSF(1) {:.1} vs SRSF(2) {:.1}",
+        s1.jct.mean,
+        s2.jct.mean
+    );
+    assert!(
+        s1.jct.mean < s3.jct.mean,
+        "SRSF(1) {:.1} vs SRSF(3) {:.1}",
+        s1.jct.mean,
+        s3.jct.mean
+    );
+    assert!(
+        ada.jct.mean < s2.jct.mean && ada.jct.mean < s3.jct.mean,
+        "Ada-SRSF {:.1} must beat blind acceptance ({:.1}, {:.1})",
+        ada.jct.mean,
+        s2.jct.mean,
+        s3.jct.mean
+    );
+    assert!(
+        ada.jct.mean < s1.jct.mean * 1.05,
+        "Ada-SRSF {:.1} should track SRSF(1) {:.1} within 5%",
+        ada.jct.mean,
+        s1.jct.mean
+    );
+}
+
+#[test]
+fn trace_roundtrip_preserves_simulation() {
+    // Serialising and re-parsing a trace must not change results.
+    let jobs = trace::generate(&TraceConfig::scaled(30, 9));
+    let reparsed = trace::from_json(&trace::to_json(&jobs)).unwrap();
+    let a = eval("lwf", "ada", &jobs);
+    let b = eval("lwf", "ada", &reparsed);
+    assert_eq!(a.jct.mean, b.jct.mean);
+    assert_eq!(a.avg_gpu_util, b.avg_gpu_util);
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let jobs = trace::generate(&TraceConfig::scaled(50, 4));
+    let a = eval("lwf", "ada", &jobs);
+    let b = eval("lwf", "ada", &jobs);
+    assert_eq!(a.jct.mean, b.jct.mean);
+    assert_eq!(a.jct.p95, b.jct.p95);
+}
+
+#[test]
+fn lighter_load_means_lower_jct() {
+    // Halving the workload (same arrival horizon shape) must not raise
+    // average JCT under the same scheduler.
+    let heavy = trace::generate(&TraceConfig::scaled(120, 5));
+    let light = trace::generate(&TraceConfig::scaled(30, 5));
+    let h = eval("lwf", "ada", &heavy);
+    let l = eval("lwf", "ada", &light);
+    assert!(
+        l.jct.mean <= h.jct.mean * 1.1,
+        "light {:.1} vs heavy {:.1}",
+        l.jct.mean,
+        h.jct.mean
+    );
+}
+
+#[test]
+fn motivation_contention_blowup() {
+    // §I: four scattered jobs under blind 4-way-ish contention take much
+    // longer than one job alone; the blow-up shrinks under Ada-SRSF.
+    let cfg = SimConfig {
+        cluster: ClusterSpec::tiny(4, 4),
+        comm: CommModel::paper_10gbe(),
+        repricing: sim::Repricing::Dynamic,
+        priority: sim::JobPriority::Srsf,
+        log_events: false,
+    };
+    let job = |id| JobSpec {
+        id,
+        arrival: 0.0,
+        model: DnnModel::Vgg16,
+        n_gpus: 4,
+        iterations: 500,
+    };
+    let mut ff = FirstFitPlacer;
+    let solo = sim::simulate(&cfg, &[job(0)], &mut ff, &SrsfCap { cap: 1 });
+    let four: Vec<JobSpec> = (0..4).map(job).collect();
+    let mut rand = RandomPlacer::new(3);
+    let blind = sim::simulate(&cfg, &four, &mut rand, &SrsfCap { cap: 3 });
+    let blind_avg = blind.jct.iter().sum::<f64>() / 4.0;
+    let blowup = blind_avg / solo.jct[0];
+    assert!(
+        blowup > 1.3,
+        "contention blow-up should be material: {blowup:.2}x"
+    );
+    let mut rand = RandomPlacer::new(3);
+    let ada = sim::simulate(&cfg, &four, &mut rand, &AdaDual { model: cfg.comm });
+    let ada_avg = ada.jct.iter().sum::<f64>() / 4.0;
+    assert!(
+        ada_avg <= blind_avg * 1.02,
+        "Ada-SRSF should not be worse than blind acceptance: {ada_avg:.0} vs {blind_avg:.0}"
+    );
+}
