@@ -2,38 +2,45 @@
 //!
 //! 1. Job-priority rule (SRSF vs FIFO vs LAS) — the paper adopts SRSF from
 //!    Tiresias "since it performs well most of time"; this quantifies that
-//!    choice on our workload.
+//!    choice on our workload. Driven by the Experiment priority axis.
 //! 2. Contention repricing (AtAdmission vs Dynamic) — the Eq (5)
 //!    mid-flight ambiguity analysed in DESIGN.md §5b.
 //! 3. All-reduce algorithm (Table I) as the per-job message cost —
 //!    replacing the fitted 2-node constants with α-β-γ ring/RHD costs
 //!    scaled to each job's server span.
 
-use ddl_sched::metrics::Evaluation;
 use ddl_sched::model::{AllReduceAlgo, AlphaBetaGamma};
 use ddl_sched::prelude::*;
 use ddl_sched::sim::{JobPriority, Repricing};
 
 fn main() {
-    let jobs = trace::generate(&TraceConfig::paper_160());
+    let threads = Experiment::default_threads();
 
-    // ---- 1. priority rules -------------------------------------------------
+    // ---- 1. priority rules (the sweep --what priority axis) ---------------
+    let exp = Experiment {
+        priorities: JobPriority::all().to_vec(),
+        ..Experiment::single(Scenario::paper())
+    };
+    let records = exp.run(threads).unwrap();
     let mut t = Table::new(
         "ablation: job priority rule (LWF-1 + Ada-SRSF)",
         &["priority", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
     let mut means = Vec::new();
-    for (name, p) in [
-        ("SRSF (paper)", JobPriority::Srsf),
-        ("FIFO", JobPriority::Fifo),
-        ("LAS", JobPriority::Las),
-    ] {
-        let cfg = SimConfig { priority: p, ..SimConfig::paper() };
-        let mut placer = LwfPlacer::new(1);
-        let policy = AdaDual { model: cfg.comm };
-        let res = sim::simulate(&cfg, &jobs, &mut placer, &policy);
-        let e = Evaluation::from_sim(name, &res);
-        t.row(&e.table_row());
+    for r in &records {
+        let name = match r.scenario.priority {
+            JobPriority::Srsf => "SRSF (paper)",
+            JobPriority::Fifo => "FIFO",
+            JobPriority::Las => "LAS",
+        };
+        let e = &r.eval;
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}%", e.avg_gpu_util * 100.0),
+            format!("{:.1}", e.jct.mean),
+            format!("{:.1}", e.jct.median),
+            format!("{:.1}", e.jct.p95),
+        ]);
         means.push((name, e.jct.mean));
     }
     t.print();
@@ -45,7 +52,7 @@ fn main() {
         if srsf <= fifo { "confirmed" } else { "DIVERGES" }
     );
 
-    // ---- 2. repricing modes --------------------------------------------------
+    // ---- 2. repricing modes ------------------------------------------------
     let mut t = Table::new(
         "ablation: Eq(5) repricing mode (LWF-1)",
         &["mode", "policy", "avg JCT(s)", "avg util"],
@@ -55,11 +62,12 @@ fn main() {
         ("Dynamic (exact)", Repricing::Dynamic),
     ] {
         for pol in ["srsf1", "ada"] {
-            let cfg = SimConfig { repricing, ..SimConfig::paper() };
-            let mut placer = LwfPlacer::new(1);
-            let policy = sched::by_name(pol, cfg.comm).unwrap();
-            let res = sim::simulate(&cfg, &jobs, &mut placer, policy.as_ref());
-            let e = Evaluation::from_sim(pol, &res);
+            let scenario = Scenario {
+                policy: pol.to_string(),
+                repricing,
+                ..Scenario::paper()
+            };
+            let e = scenario.run().unwrap().eval;
             t.row(&[
                 mode_name.to_string(),
                 pol.to_string(),
@@ -76,6 +84,7 @@ fn main() {
     // says the coefficients grow with the span N. Here: what each job's
     // *contention-free* communication total would be under each algorithm,
     // aggregated over the trace (comm-cost perspective only).
+    let jobs = Scenario::paper().jobs().unwrap();
     let p = AlphaBetaGamma::ethernet_10g();
     let mut t = Table::new(
         "ablation: per-algorithm total contention-free comm cost of the trace",
@@ -86,12 +95,17 @@ fn main() {
         .filter(|j| j.n_gpus > 4)
         .map(|j| CommModel::paper_10gbe().time_free(j.message_bytes()) * j.iterations as f64)
         .sum();
-    for algo in [AllReduceAlgo::Ring, AllReduceAlgo::RecursiveDoubling, AllReduceAlgo::RecursiveHalvingDoubling, AllReduceAlgo::BinaryTree] {
+    for algo in [
+        AllReduceAlgo::Ring,
+        AllReduceAlgo::RecursiveDoubling,
+        AllReduceAlgo::RecursiveHalvingDoubling,
+        AllReduceAlgo::BinaryTree,
+    ] {
         let total: f64 = jobs
             .iter()
             .filter(|j| j.n_gpus > 4)
             .map(|j| {
-                let span = (j.n_gpus + 3) / 4; // servers at 4 GPUs each
+                let span = j.n_gpus.div_ceil(4); // servers at 4 GPUs each
                 algo.time(span.max(2), j.message_bytes(), p) * j.iterations as f64
             })
             .sum();

@@ -1,25 +1,37 @@
 //! Fig 5 regeneration: the LWF-κ sweep under Ada-SRSF — JCT CDF (a),
 //! GPU-utilisation distribution (b) and average JCT (c) for κ ∈
 //! {1, 2, 4, 8, 16, 32}. Paper finding: κ = 1 is best overall.
+//!
+//! Driven by the Experiment API: one base scenario, κ axis, parallel
+//! execution across worker threads.
 
-use ddl_sched::metrics::Evaluation;
 use ddl_sched::prelude::*;
 
 fn main() {
-    let jobs = trace::generate(&TraceConfig::paper_160());
-    let cfg = SimConfig::paper();
+    let exp = Experiment {
+        kappas: vec![1, 2, 4, 8, 16, 32],
+        ..Experiment::single(Scenario::paper())
+    };
+    let threads = Experiment::default_threads();
+    let t0 = std::time::Instant::now();
+    let records = exp.run(threads).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
 
     let mut table = Table::new(
         "Fig 5 — LWF-kappa sweep (Ada-SRSF)",
         &["kappa", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
     let mut results = Vec::new();
-    for kappa in [1usize, 2, 4, 8, 16, 32] {
-        let mut placer = LwfPlacer::new(kappa);
-        let policy = AdaDual { model: cfg.comm };
-        let res = sim::simulate(&cfg, &jobs, &mut placer, &policy);
-        let eval = Evaluation::from_sim(&format!("{kappa}"), &res);
-        table.row(&eval.table_row());
+    for r in &records {
+        let kappa = r.scenario.kappa;
+        let eval = &r.eval;
+        table.row(&[
+            format!("{kappa}"),
+            format!("{:.2}%", eval.avg_gpu_util * 100.0),
+            format!("{:.1}", eval.jct.mean),
+            format!("{:.1}", eval.jct.median),
+            format!("{:.1}", eval.jct.p95),
+        ]);
         let _ = write_csv(
             &format!("fig5a_cdf_k{kappa}"),
             &["jct_s", "cdf"],
@@ -30,6 +42,7 @@ fn main() {
         results.push((kappa, eval.jct.mean));
     }
     table.print();
+    println!("{} runs in {wall:.2}s on {threads} thread(s)", records.len());
 
     let best = results
         .iter()

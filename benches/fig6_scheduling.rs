@@ -2,13 +2,18 @@
 //! for the communication scheduling policies SRSF(1)/(2)/(3) vs Ada-SRSF
 //! under LWF-1. Paper findings: avoiding all contention (SRSF(1)) beats
 //! blindly accepting it (SRSF(2)/(3)); Ada-SRSF beats both.
+//!
+//! Driven by the Experiment API: one base scenario, policy axis.
 
-use ddl_sched::metrics::Evaluation;
 use ddl_sched::prelude::*;
 
 fn main() {
-    let jobs = trace::generate(&TraceConfig::paper_160());
-    let cfg = SimConfig::paper();
+    let exp = Experiment {
+        policies: registry::POLICIES.iter().map(|s| s.to_string()).collect(),
+        ..Experiment::single(Scenario::paper())
+    };
+    let threads = Experiment::default_threads();
+    let records = exp.run(threads).unwrap();
 
     let mut cdf_table = Table::new(
         "Fig 6(a) — JCT CDF checkpoints P(JCT <= x)",
@@ -19,15 +24,9 @@ fn main() {
         &["method", "histogram", "avg util"],
     );
     let mut means = Vec::new();
-    for name in ["srsf1", "srsf2", "srsf3", "ada"] {
-        let mut placer = LwfPlacer::new(1);
-        let policy = sched::by_name(name, cfg.comm).unwrap();
-        let res = sim::simulate(&cfg, &jobs, &mut placer, policy.as_ref());
-        let label = match name {
-            "ada" => "Ada-SRSF".to_string(),
-            other => format!("SRSF({})", &other[4..]),
-        };
-        let eval = Evaluation::from_sim(&label, &res);
+    for r in &records {
+        let label = registry::policy_label(&r.scenario.policy);
+        let eval = &r.eval;
         let cdf_at = |x: f64| {
             eval.jct_cdf
                 .iter()
@@ -48,7 +47,11 @@ fn main() {
             format!("{:?}", eval.util_histogram(10)),
             format!("{:.2}%", eval.avg_gpu_util * 100.0),
         ]);
-        let _ = write_csv(&format!("fig6a_cdf_{name}"), &["jct_s", "cdf"], &eval.cdf_rows());
+        let _ = write_csv(
+            &format!("fig6a_cdf_{}", r.scenario.policy),
+            &["jct_s", "cdf"],
+            &eval.cdf_rows(),
+        );
         means.push((label, eval.jct.mean, eval.avg_gpu_util));
     }
     cdf_table.print();

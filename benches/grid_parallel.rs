@@ -1,0 +1,74 @@
+//! The paper-grid experiment end-to-end from one JSON artifact: placers
+//! {rand, ff, ls, lwf} × policies {srsf1, srsf2, srsf3, ada} — Tables IV
+//! and V as a single 16-run grid — executed twice:
+//!
+//! * serially (`--threads 1` equivalent), and
+//! * on all available cores,
+//!
+//! asserting the two produce **byte-identical** RunRecord JSON/CSV output
+//! (the Experiment determinism contract) and reporting the wall-clock
+//! speedup the worker pool buys. The same artifact drives the CLI:
+//! `ddl-sched scenario-gen --grid --out grid.json &&
+//!  ddl-sched sweep --scenario grid.json --threads 8`.
+
+use std::time::Instant;
+
+use ddl_sched::prelude::*;
+
+fn main() {
+    // Round-trip the grid through its JSON artifact form first: what runs
+    // below is exactly what a shared scenario file would run.
+    let artifact = Experiment::paper_grid(Scenario::paper()).to_json_text();
+    let exp = Experiment::from_text(&artifact).unwrap();
+    let n_runs = exp.grid().unwrap().len();
+    println!(
+        "paper grid: {n_runs} runs ({} placers x {} policies), {} bytes of scenario JSON\n",
+        registry::PLACERS.len(),
+        registry::POLICIES.len(),
+        artifact.len()
+    );
+
+    let t0 = Instant::now();
+    let serial = exp.run(1).unwrap();
+    let t_serial = t0.elapsed().as_secs_f64();
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).max(2);
+    let t0 = Instant::now();
+    let parallel = exp.run(threads).unwrap();
+    let t_parallel = t0.elapsed().as_secs_f64();
+
+    let json_serial = records_to_json(&serial);
+    let json_parallel = records_to_json(&parallel);
+    assert_eq!(
+        json_serial, json_parallel,
+        "parallel run is not byte-identical to serial"
+    );
+    assert_eq!(
+        records_to_csv(&serial),
+        records_to_csv(&parallel),
+        "parallel CSV is not byte-identical to serial"
+    );
+
+    let mut t = Table::new(
+        "paper grid (Tables IV-V in one experiment)",
+        &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+    );
+    for r in &serial {
+        t.row(&r.eval.table_row());
+    }
+    t.print();
+
+    println!(
+        "\nserial: {t_serial:.2}s | {threads} threads: {t_parallel:.2}s | speedup {:.2}x {}",
+        t_serial / t_parallel,
+        if t_parallel < t_serial { "(OK)" } else { "(NO SPEEDUP — single-core machine?)" }
+    );
+    println!("records byte-identical across serial and parallel runs: OK");
+
+    if std::fs::create_dir_all("results").is_ok() {
+        let path = "results/grid_parallel_records.csv";
+        if std::fs::write(path, records_to_csv(&serial)).is_ok() {
+            println!("wrote {path}");
+        }
+    }
+}

@@ -1,37 +1,38 @@
 //! Table IV regeneration: placement solutions with Ada-SRSF — average GPU
 //! utilisation, average/median/95th-percentile JCT — plus the paper's
 //! derived improvement factors (LWF-1 vs RAND/FF/LS).
+//!
+//! Driven by the Experiment API: placer axis on the paper scenario.
 
-use ddl_sched::metrics::{improvement, saving, Evaluation};
+use ddl_sched::metrics::{improvement, saving};
 use ddl_sched::prelude::*;
 
 fn main() {
-    let jobs = trace::generate(&TraceConfig::paper_160());
-    let cfg = SimConfig::paper();
+    let base = Scenario {
+        seed: 7,
+        trace: TraceSource::Generated { jobs: 160, seed: Some(42) },
+        ..Scenario::paper()
+    };
+    let exp = Experiment {
+        placers: registry::PLACERS.iter().map(|s| s.to_string()).collect(),
+        ..Experiment::single(base)
+    };
+    let threads = Experiment::default_threads();
+    let records = exp.run(threads).unwrap();
 
     let mut table = Table::new(
         "Table IV — placement solutions with Ada-SRSF",
         &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    let mut evals = Vec::new();
-    for name in ["rand", "ff", "ls", "lwf"] {
-        let mut placer = placement::by_name(name, 1, 7).unwrap();
-        let policy = AdaDual { model: cfg.comm };
-        let res = sim::simulate(&cfg, &jobs, placer.as_mut(), &policy);
-        let label = match name {
-            "rand" => "RAND",
-            "ff" => "FF",
-            "ls" => "LS",
-            _ => "LWF-1",
-        };
-        let eval = Evaluation::from_sim(label, &res);
-        table.row(&eval.table_row());
-        evals.push(eval);
+    for r in &records {
+        table.row(&r.eval.table_row());
     }
     table.print();
 
-    let by = |n: &str| evals.iter().find(|e| e.method == n).unwrap();
-    let (rand, ff, ls, lwf) = (by("RAND"), by("FF"), by("LS"), by("LWF-1"));
+    let by = |placer: &str| {
+        &records.iter().find(|r| r.scenario.placer == placer).unwrap().eval
+    };
+    let (rand, ff, ls, lwf) = (by("rand"), by("ff"), by("ls"), by("lwf"));
     let mut t = Table::new(
         "derived comparisons (paper values in parentheses)",
         &["comparison", "ours", "paper"],

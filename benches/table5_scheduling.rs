@@ -1,35 +1,33 @@
 //! Table V regeneration: communication scheduling solutions with LWF-1 —
 //! average GPU utilisation, average/median/95th-percentile JCT — plus the
 //! paper's headline derived numbers (Ada-SRSF vs SRSF(1)/(2)).
+//!
+//! Driven by the Experiment API: policy axis on the paper scenario.
 
-use ddl_sched::metrics::{improvement, saving, Evaluation};
+use ddl_sched::metrics::{improvement, saving};
 use ddl_sched::prelude::*;
 
 fn main() {
-    let jobs = trace::generate(&TraceConfig::paper_160());
-    let cfg = SimConfig::paper();
+    let exp = Experiment {
+        policies: registry::POLICIES.iter().map(|s| s.to_string()).collect(),
+        ..Experiment::single(Scenario::paper())
+    };
+    let threads = Experiment::default_threads();
+    let records = exp.run(threads).unwrap();
 
     let mut table = Table::new(
         "Table V — communication scheduling with LWF-1",
         &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    let mut evals = Vec::new();
-    for name in ["srsf1", "srsf2", "srsf3", "ada"] {
-        let mut placer = LwfPlacer::new(1);
-        let policy = sched::by_name(name, cfg.comm).unwrap();
-        let res = sim::simulate(&cfg, &jobs, &mut placer, policy.as_ref());
-        let label = match name {
-            "ada" => "Ada-SRSF".to_string(),
-            other => format!("SRSF({})", &other[4..]),
-        };
-        let eval = Evaluation::from_sim(&label, &res);
-        table.row(&eval.table_row());
-        evals.push(eval);
+    for r in &records {
+        table.row(&r.eval.table_row());
     }
     table.print();
 
-    let by = |n: &str| evals.iter().find(|e| e.method == n).unwrap();
-    let (s1, s2, ada) = (by("SRSF(1)"), by("SRSF(2)"), by("Ada-SRSF"));
+    let by = |policy: &str| {
+        &records.iter().find(|r| r.scenario.policy == policy).unwrap().eval
+    };
+    let (s1, s2, ada) = (by("srsf1"), by("srsf2"), by("ada"));
     let mut t = Table::new(
         "derived comparisons (paper values in parentheses)",
         &["comparison", "ours", "paper"],

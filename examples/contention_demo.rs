@@ -69,8 +69,8 @@ fn main() {
         "4 concurrent scattered jobs",
         &["policy", "avg JCT(s)", "blow-up vs solo", "overlapped", "max k"],
     );
-    for name in ["srsf1", "srsf2", "srsf3", "ada"] {
-        let policy = sched::by_name(name, cfg.comm).unwrap();
+    for name in registry::POLICIES {
+        let policy = registry::make_policy(name, cfg.comm).unwrap();
         let res = sim::simulate(&cfg, &jobs, &mut ScatterPlacer, policy.as_ref());
         let eval = Evaluation::from_sim(name, &res);
         table.row(&[

@@ -18,7 +18,7 @@ fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ddl_sched::util::error::Result<()> {
     let steps = env_usize("E2E_STEPS", 120);
     let n_jobs = env_usize("E2E_JOBS", 4);
     let workers = env_usize("E2E_WORKERS", 2);

@@ -1,56 +1,64 @@
 //! Placement study (Figs 4–5, Table IV): compare RAND / FF / LS / LWF-1
-//! under Ada-SRSF, then sweep κ. Writes the CDF/histogram series to
-//! `results/*.csv` and prints the summary tables.
+//! under Ada-SRSF, then sweep κ — two [`Experiment`]s over the paper
+//! scenario, executed on worker threads. Writes the CDF/histogram series
+//! to `results/*.csv` and prints the summary tables.
 //!
 //! Run: `cargo run --release --example placement_study`
 
-use ddl_sched::metrics::Evaluation;
 use ddl_sched::prelude::*;
 
 fn main() {
-    let jobs = trace::generate(&TraceConfig::paper_160());
-    let cfg = SimConfig::paper();
+    let threads = Experiment::default_threads();
 
     // --- Fig 4 / Table IV: placement algorithms under Ada-SRSF ----------
+    // Placer seed 7 on the pinned seed-42 paper trace, matching the
+    // fig4_placement/table4_placement benches so regenerated Fig 4 CSVs
+    // agree regardless of which binary wrote them.
+    let base = Scenario {
+        seed: 7,
+        trace: TraceSource::Generated { jobs: 160, seed: Some(42) },
+        ..Scenario::paper()
+    };
+    let exp = Experiment {
+        placers: registry::PLACERS.iter().map(|s| s.to_string()).collect(),
+        ..Experiment::single(base)
+    };
+    let records = exp.run(threads).unwrap();
     let mut table = Table::new(
         "Table IV — placement solutions with Ada-SRSF",
         &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    let mut lwf_eval = None;
-    for name in ["rand", "ff", "ls", "lwf"] {
-        let mut placer = placement::by_name(name, 1, 7).unwrap();
-        let policy = AdaDual { model: cfg.comm };
-        let res = sim::simulate(&cfg, &jobs, placer.as_mut(), &policy);
-        let label = if name == "lwf" { "LWF-1" } else { name };
-        let eval = Evaluation::from_sim(label, &res);
-        table.row(&eval.table_row());
-        let cdf = eval.cdf_rows();
-        bench_csv(&format!("fig4a_cdf_{name}"), &["jct_s", "cdf"], &cdf);
-        let utils: Vec<Vec<f64>> = eval.gpu_utils.iter().map(|&u| vec![u]).collect();
+    for r in &records {
+        table.row(&r.eval.table_row());
+        let name = &r.scenario.placer;
+        bench_csv(&format!("fig4a_cdf_{name}"), &["jct_s", "cdf"], &r.eval.cdf_rows());
+        let utils: Vec<Vec<f64>> = r.eval.gpu_utils.iter().map(|&u| vec![u]).collect();
         bench_csv(&format!("fig4b_util_{name}"), &["gpu_util"], &utils);
-        if name == "lwf" {
-            lwf_eval = Some(eval);
-        }
     }
     table.print();
-    let lwf = lwf_eval.unwrap();
+    let lwf = &records.iter().find(|r| r.scenario.placer == "lwf").unwrap().eval;
     println!(
         "LWF-1 avg JCT {:.1}s — paper reports LWF-1 best on every metric\n",
         lwf.jct.mean
     );
 
     // --- Fig 5: the κ sweep ---------------------------------------------
+    let exp = Experiment {
+        kappas: vec![1, 2, 4, 8, 16, 32],
+        ..Experiment::single(Scenario::paper())
+    };
+    let records = exp.run(threads).unwrap();
     let mut table = Table::new(
         "Fig 5 — LWF-kappa sweep (with Ada-SRSF)",
-        &["kappa", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
+        &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    for kappa in [1usize, 2, 4, 8, 16, 32] {
-        let mut placer = LwfPlacer::new(kappa);
-        let policy = AdaDual { model: cfg.comm };
-        let res = sim::simulate(&cfg, &jobs, &mut placer, &policy);
-        let eval = Evaluation::from_sim(&format!("LWF-{kappa}"), &res);
-        table.row(&eval.table_row());
-        bench_csv(&format!("fig5a_cdf_k{kappa}"), &["jct_s", "cdf"], &eval.cdf_rows());
+    for r in &records {
+        table.row(&r.eval.table_row());
+        bench_csv(
+            &format!("fig5a_cdf_k{}", r.scenario.kappa),
+            &["jct_s", "cdf"],
+            &r.eval.cdf_rows(),
+        );
     }
     table.print();
     println!("paper finding: kappa = 1 gives the best results overall");

@@ -1,60 +1,64 @@
-//! Quickstart: generate the paper's 160-job workload, schedule it with
-//! LWF-1 placement + Ada-SRSF communication scheduling on the 64-GPU
-//! cluster, and print the headline metrics.
+//! Quickstart: the paper's 160-job workload scheduled with LWF-1 placement
+//! + Ada-SRSF communication scheduling on the 64-GPU cluster — expressed
+//! as one declarative [`Scenario`] that also serializes to a shareable
+//! JSON file (docs/SCENARIOS.md).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use ddl_sched::metrics::Evaluation;
 use ddl_sched::prelude::*;
 
 fn main() {
-    // 1. The workload: 160 DDL jobs shaped like the Microsoft trace (§V-A).
-    let trace_cfg = TraceConfig::paper_160();
-    let jobs = trace::generate(&trace_cfg);
+    // 1. The whole run is one declarative spec: workload shape (§V-A),
+    //    cluster (16 servers x 4 V100, 10 GbE), Eq (5) contention model,
+    //    LWF-1 + Ada-SRSF, SRSF job priority, paper repricing, seed.
+    let scenario = Scenario::paper();
     println!(
-        "workload: {} jobs over {:.0}s ({} single-GPU, {} multi-GPU)",
+        "cluster: {} servers x {} GPUs, comm a={:.2e}s b={:.2e}s/B eta={:.2e}s/B",
+        scenario.cluster.n_servers,
+        scenario.cluster.gpus_per_server,
+        scenario.comm.a,
+        scenario.comm.b,
+        scenario.comm.eta
+    );
+    let jobs = scenario.jobs().unwrap();
+    println!(
+        "workload: {} jobs ({} single-GPU, {} multi-GPU)",
         jobs.len(),
-        trace_cfg.horizon,
         jobs.iter().filter(|j| j.n_gpus == 1).count(),
         jobs.iter().filter(|j| j.n_gpus > 1).count(),
     );
 
-    // 2. The cluster: 16 servers x 4 V100, 10 GbE with the Eq (5)
-    //    contention model fitted on real hardware.
-    let cfg = SimConfig::paper();
-    println!(
-        "cluster: {} servers x {} GPUs, comm a={:.2e}s b={:.2e}s/B eta={:.2e}s/B",
-        cfg.cluster.n_servers, cfg.cluster.gpus_per_server, cfg.comm.a, cfg.comm.b, cfg.comm.eta
-    );
-
-    // 3. Schedule with the paper's full solution: LWF-1 + Ada-SRSF.
-    let mut placer = LwfPlacer::new(1);
-    let policy = AdaDual { model: cfg.comm };
-    let res = sim::simulate(&cfg, &jobs, &mut placer, &policy);
-    let eval = Evaluation::from_sim("LWF-1 + Ada-SRSF", &res);
-
+    // 2. Run it. The record bundles the scenario, the Table IV/V metrics
+    //    and the engine counters.
+    let record = scenario.run().unwrap();
     let mut t = Table::new(
         "Ada-SRSF on the paper workload",
         &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    t.row(&eval.table_row());
+    t.row(&record.eval.table_row());
     t.print();
     println!(
         "\nsimulated {} events; makespan {:.0}s; comm admissions: {} clean, {} overlapped (max {}-way)",
-        res.n_events, res.makespan, res.clean_admissions, res.contended_admissions, res.max_contention
+        record.n_events,
+        record.eval.makespan,
+        record.eval.clean_admissions,
+        record.eval.contended_admissions,
+        record.max_contention
     );
 
-    // 4. Contrast with the contention-blind baselines in one line each.
+    // 3. Contrast with the contention-blind baselines: same scenario, only
+    //    the policy name changes.
     for name in ["srsf1", "srsf2"] {
-        let mut p = LwfPlacer::new(1);
-        let policy = sched::by_name(name, cfg.comm).unwrap();
-        let r = sim::simulate(&cfg, &jobs, &mut p, policy.as_ref());
-        let e = Evaluation::from_sim(name, &r);
+        let r = Scenario { policy: name.to_string(), ..scenario.clone() }.run().unwrap();
         println!(
             "{:>8}: avg JCT {:.1}s (Ada-SRSF saves {:.1}%)",
-            name,
-            e.jct.mean,
-            ddl_sched::metrics::saving(e.jct.mean, eval.jct.mean) * 100.0
+            registry::policy_label(name),
+            r.eval.jct.mean,
+            ddl_sched::metrics::saving(r.eval.jct.mean, record.eval.jct.mean) * 100.0
         );
     }
+
+    // 4. The scenario is a data file: share it, re-run it anywhere.
+    //    (`ddl-sched simulate --scenario quickstart.json` reproduces this.)
+    println!("\nscenario as a shareable JSON artifact:\n{}", scenario.to_json_text());
 }

@@ -1,45 +1,44 @@
 //! Scheduling study (Fig 6, Table V): SRSF(1)/(2)/(3) vs Ada-SRSF under
-//! LWF-1 placement. Prints Table V and writes the Fig 6 series to
-//! `results/*.csv`.
+//! LWF-1 placement — one [`Experiment`] with a policy axis. Prints Table V
+//! and writes the Fig 6 series to `results/*.csv`.
 //!
 //! Run: `cargo run --release --example sched_study`
 
-use ddl_sched::metrics::{saving, Evaluation};
+use ddl_sched::metrics::saving;
 use ddl_sched::prelude::*;
 
 fn main() {
-    let jobs = trace::generate(&TraceConfig::paper_160());
-    let cfg = SimConfig::paper();
+    let threads = Experiment::default_threads();
+    let exp = Experiment {
+        policies: registry::POLICIES.iter().map(|s| s.to_string()).collect(),
+        ..Experiment::single(Scenario::paper())
+    };
+    let records = exp.run(threads).unwrap();
 
     let mut table = Table::new(
         "Table V — communication scheduling with LWF-1",
         &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    let mut evals = Vec::new();
-    for name in ["srsf1", "srsf2", "srsf3", "ada"] {
-        let mut placer = LwfPlacer::new(1);
-        let policy = sched::by_name(name, cfg.comm).unwrap();
-        let res = sim::simulate(&cfg, &jobs, &mut placer, policy.as_ref());
-        let label = match name {
-            "ada" => "Ada-SRSF".to_string(),
-            other => format!("SRSF({})", &other[4..]),
-        };
-        let eval = Evaluation::from_sim(&label, &res);
-        table.row(&eval.table_row());
-        let _ = write_csv(&format!("fig6a_cdf_{name}"), &["jct_s", "cdf"], &eval.cdf_rows());
-        let utils: Vec<Vec<f64>> = eval.gpu_utils.iter().map(|&u| vec![u]).collect();
+    for r in &records {
+        table.row(&r.eval.table_row());
+        let name = &r.scenario.policy;
+        let _ = write_csv(&format!("fig6a_cdf_{name}"), &["jct_s", "cdf"], &r.eval.cdf_rows());
+        let utils: Vec<Vec<f64>> = r.eval.gpu_utils.iter().map(|&u| vec![u]).collect();
         let _ = write_csv(&format!("fig6b_util_{name}"), &["gpu_util"], &utils);
         println!(
-            "{label}: admissions clean={} overlapped={} max_k={}",
-            res.clean_admissions, res.contended_admissions, res.max_contention
+            "{}: admissions clean={} overlapped={} max_k={}",
+            r.scenario.label(),
+            r.eval.clean_admissions,
+            r.eval.contended_admissions,
+            r.max_contention
         );
-        evals.push(eval);
     }
     table.print();
 
-    let srsf1 = &evals[0];
-    let srsf2 = &evals[1];
-    let ada = &evals[3];
+    let by = |policy: &str| {
+        &records.iter().find(|r| r.scenario.policy == policy).unwrap().eval
+    };
+    let (srsf1, srsf2, ada) = (by("srsf1"), by("srsf2"), by("ada"));
     println!(
         "\nAda-SRSF saves {:.1}% avg JCT vs SRSF(1)  (paper: 20.1%)",
         saving(srsf1.jct.mean, ada.jct.mean) * 100.0

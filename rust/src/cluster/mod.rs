@@ -4,6 +4,7 @@
 //! aggregate `L_S = Σ_j L_g` and expose the NIC contention count `|C_S|`.
 
 use crate::model::V100_PEAK_GFLOPS;
+use crate::util::json::Json;
 
 /// Flat GPU identifier; `server = id / n_gpus_per_server`.
 pub type GpuId = usize;
@@ -59,6 +60,28 @@ impl ClusterSpec {
         servers.sort_unstable();
         servers.dedup();
         servers
+    }
+
+    /// Scenario-file serialization (see docs/SCENARIOS.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n_servers", self.n_servers)
+            .set("gpus_per_server", self.gpus_per_server)
+            .set("gpu_mem_bytes", self.gpu_mem_bytes)
+            .set("gpu_peak_gflops", self.gpu_peak_gflops)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ClusterSpec, String> {
+        let spec = ClusterSpec {
+            n_servers: v.req_usize("n_servers")?,
+            gpus_per_server: v.req_usize("gpus_per_server")?,
+            gpu_mem_bytes: v.req_f64("gpu_mem_bytes")?,
+            gpu_peak_gflops: v.req_f64("gpu_peak_gflops")?,
+        };
+        if spec.n_servers == 0 || spec.gpus_per_server == 0 {
+            return Err("cluster must have at least one server and one GPU".into());
+        }
+        Ok(spec)
     }
 }
 

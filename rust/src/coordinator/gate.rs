@@ -5,10 +5,10 @@
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use crate::model::CommModel;
-use crate::sched::{self, Admission, CommPolicy, NetView};
+use crate::scenario::registry;
+use crate::sched::{Admission, CommPolicy, NetView};
+use crate::util::error::Result;
 
 /// An admitted transfer: hold it for the duration of the reduction, then
 /// `release` it.
@@ -53,13 +53,9 @@ pub struct NetGate {
 
 impl NetGate {
     pub fn new(n_servers: usize, comm: CommModel, policy: &str, time_scale: f64) -> Result<NetGate> {
-        let policy: Box<dyn CommPolicy + Send + Sync> = match policy {
-            "ada" => Box::new(sched::AdaDual { model: comm }),
-            "srsf1" => Box::new(sched::SrsfCap { cap: 1 }),
-            "srsf2" => Box::new(sched::SrsfCap { cap: 2 }),
-            "srsf3" => Box::new(sched::SrsfCap { cap: 3 }),
-            other => anyhow::bail!("unknown gate policy '{other}'"),
-        };
+        // Same registry as the simulator/scenario API: the live gate and
+        // the simulated admission logic can never drift apart on naming.
+        let policy = registry::make_policy(policy, comm)?;
         Ok(NetGate {
             state: Mutex::new(GateState {
                 per_server: vec![Vec::new(); n_servers],

@@ -23,7 +23,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::err;
+use crate::util::error::Result;
 
 use crate::cluster::{ClusterSpec, ClusterState};
 use crate::model::CommModel;
@@ -108,7 +109,7 @@ pub fn run_jobs(
         };
         let gpus = placer
             .place(&spec, &cluster)
-            .ok_or_else(|| anyhow::anyhow!("placement failed for job {}", job.id))?;
+            .ok_or_else(|| err!("placement failed for job {}", job.id))?;
         let load = spec.compute_total(cfg.cluster.gpu_peak_gflops) * gpus.len() as f64;
         cluster.allocate(&gpus, spec.mem_bytes(), load);
         let multi = cfg.cluster.servers_of(&gpus).len() > 1;

@@ -8,9 +8,9 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
-
+use crate::err;
 use crate::runtime::{Meta, Runtime};
+use crate::util::error::Result;
 
 type Reply<T> = Sender<Result<T>>;
 
@@ -35,8 +35,8 @@ macro_rules! call {
         $self
             .tx
             .send(Req::$variant { $($field: $value,)* reply })
-            .map_err(|_| anyhow!("runtime server is gone"))?;
-        rx.recv().map_err(|_| anyhow!("runtime server dropped the reply"))?
+            .map_err(|_| err!("runtime server is gone"))?;
+        rx.recv().map_err(|_| err!("runtime server dropped the reply"))?
     }};
 }
 
@@ -81,7 +81,7 @@ impl RtServer {
             .expect("spawn rt-server");
         let meta = meta_rx
             .recv()
-            .map_err(|_| anyhow!("runtime server died during load"))??;
+            .map_err(|_| err!("runtime server died during load"))??;
         Ok(RtServer { tx, join: Some(join), meta })
     }
 

@@ -7,25 +7,33 @@
 //! * **Layer 3 (this crate)** — the paper's contribution: the DAG job
 //!   model ([`dag`]), the Eq (5) contention network model ([`model`]),
 //!   LWF-κ placement ([`placement`]), AdaDUAL/Ada-SRSF communication
-//!   scheduling ([`sched`]), the event-driven cluster simulator ([`sim`])
-//!   and the evaluation metrics ([`metrics`]). A live multi-job training
+//!   scheduling ([`sched`]), the event-driven cluster simulator ([`sim`]),
+//!   the evaluation metrics ([`metrics`]) and the declarative
+//!   scenario/experiment API ([`scenario`]). A live multi-job training
 //!   coordinator ([`coordinator`]) drives real AOT-compiled training jobs
 //!   through the same placement + admission logic.
 //! * **Layer 2/1 (python/, build-time only)** — a transformer training
 //!   workload in JAX whose hot-spots are Pallas kernels, AOT-lowered to
-//!   HLO text artifacts executed by [`runtime`] via the PJRT CPU client.
+//!   HLO text artifacts executed by [`runtime`] via the PJRT CPU client
+//!   (gated behind the `pjrt` cargo feature).
 //!
-//! Quickstart:
+//! Quickstart — a [`scenario::Scenario`] names everything one run needs
+//! and serializes to JSON, so evaluation setups are shareable data files:
 //! ```no_run
 //! use ddl_sched::prelude::*;
 //!
-//! let jobs = trace::generate(&trace::TraceConfig::paper_160());
-//! let cfg = sim::SimConfig::paper();
-//! let mut placer = placement::LwfPlacer::new(1);
-//! let policy = sched::AdaDual { model: cfg.comm };
-//! let result = sim::simulate(&cfg, &jobs, &mut placer, &policy);
-//! println!("avg JCT: {:.1}s", metrics::Evaluation::from_sim("Ada-SRSF", &result).jct.mean);
+//! // One run: the paper's LWF-1 + Ada-SRSF setup on the 160-job workload.
+//! let record = Scenario::paper().run().unwrap();
+//! println!("avg JCT: {:.1}s", record.eval.jct.mean);
+//!
+//! // A grid: placers x policies (Tables IV-V), executed on 8 threads.
+//! let records = Experiment::paper_grid(Scenario::paper()).run(8).unwrap();
+//! println!("{}", scenario::records_to_csv(&records));
 //! ```
+//! The same artifacts drive the CLI: `ddl-sched scenario-gen --grid --out
+//! grid.json && ddl-sched sweep --scenario grid.json --threads 8`. See
+//! docs/SCENARIOS.md for the JSON schema, and [`sim::simulate`] for the
+//! low-level engine entry point that scenarios compile down to.
 
 pub mod cluster;
 pub mod coordinator;
@@ -34,6 +42,7 @@ pub mod metrics;
 pub mod model;
 pub mod placement;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod trace;
@@ -47,8 +56,12 @@ pub mod prelude {
     pub use crate::placement::{
         self, FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RandomPlacer,
     };
+    pub use crate::scenario::{
+        self, records_to_csv, records_to_json, registry, Experiment, RunRecord, Scenario,
+        TraceSource,
+    };
     pub use crate::sched::{self, AdaDual, Admission, CommPolicy, SrsfCap};
-    pub use crate::sim::{self, SimConfig, SimResult};
+    pub use crate::sim::{self, JobPriority, Repricing, SimConfig, SimResult};
     pub use crate::trace::{self, JobSpec, TraceConfig};
     pub use crate::util::bench::{bench, write_csv, Table};
 }

@@ -1,20 +1,24 @@
-//! `ddl-sched` CLI — the leader entrypoint.
+//! `ddl-sched` CLI — the leader entrypoint, built around the declarative
+//! Scenario/Experiment API (rust/src/scenario/, docs/SCENARIOS.md).
 //!
 //! Subcommands:
-//!   trace-gen   --jobs N --seed S --out FILE          generate a workload trace
-//!   simulate    --placer lwf --policy ada [--trace F] run one simulation
-//!   sweep       --what placer|policy|kappa            compare algorithms
-//!   e2e         --jobs N --steps N [--no-pallas]      live coordinator run
-//!   fit         [--m-max BYTES]                       Fig 2 model fit demo
-//!   info                                              print zoo + models
+//!   scenario-gen  [--grid] [--out FILE]                emit a scenario/grid JSON
+//!   trace-gen     --jobs N --seed S --out FILE         generate a workload trace
+//!   simulate      [--scenario FILE | flags]            run one scenario
+//!   sweep         [--what AXIS | --grid] [--threads N] run a scenario grid
+//!   e2e           --jobs N --steps N [--no-pallas]     live coordinator run
+//!   fit           [--mb-max MB]                        Fig 2 model fit demo
+//!   info                                               print zoo + models
 
 use std::process::ExitCode;
+use std::time::Instant;
 
 use ddl_sched::coordinator::{self, CoordinatorConfig, JobRequest};
-use ddl_sched::metrics::Evaluation;
 use ddl_sched::prelude::*;
 use ddl_sched::runtime::default_artifacts_dir;
 use ddl_sched::util::cli::Args;
+use ddl_sched::util::error::Result;
+use ddl_sched::{bail, err};
 
 fn main() -> ExitCode {
     let args = match Args::from_env() {
@@ -25,6 +29,7 @@ fn main() -> ExitCode {
         }
     };
     let result = match args.subcommand.as_deref() {
+        Some("scenario-gen") => cmd_scenario_gen(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -39,7 +44,7 @@ fn main() -> ExitCode {
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             ExitCode::FAILURE
         }
     }
@@ -51,113 +56,176 @@ fn print_help() {
          \n\
          USAGE: ddl-sched <subcommand> [--options]\n\
          \n\
+         A run is described by a *scenario*: a JSON file naming the cluster,\n\
+         comm model, trace source, placer, kappa, policy, priority, repricing\n\
+         and seed (schema: docs/SCENARIOS.md). A *sweep* expands a scenario\n\
+         across grid axes and runs it on worker threads.\n\
+         \n\
          SUBCOMMANDS\n\
+         \x20 scenario-gen [--grid] [--out scenario.json]\n\
+         \x20            emit the paper scenario (or the full placer x policy\n\
+         \x20            grid with --grid) as a starting-point JSON file\n\
          \x20 trace-gen  --jobs N --seed S [--out trace.json]   generate a workload\n\
-         \x20 simulate   [--trace F] [--placer lwf|ff|ls|rand] [--kappa K]\n\
-         \x20            [--policy ada|srsf1|srsf2|srsf3] [--seed S] [--jobs N]\n\
-         \x20 sweep      --what placer|policy|kappa [--jobs N] [--seed S]\n\
+         \x20 simulate   [--scenario F] [--trace F] [--placer lwf|ff|ls|rand]\n\
+         \x20            [--kappa K] [--policy ada|srsf1|srsf2|srsf3]\n\
+         \x20            [--priority srsf|fifo|las] [--repricing at-admission|dynamic]\n\
+         \x20            [--seed S] [--jobs N]                  run one scenario\n\
+         \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority]\n\
+         \x20            [--grid] [--threads N] [--out-json F] [--out-csv F]\n\
+         \x20            [--jobs N] [--seed S]                  run a scenario grid\n\
          \x20 e2e        [--jobs N] [--steps N] [--workers W] [--no-pallas]\n\
          \x20            [--policy ada|srsf1|...] [--time-scale X]\n\
          \x20 fit        [--mb-max MB]                          Fig 2 cost-model fit\n\
-         \x20 info       print the model zoo and comm model constants"
+         \x20 info       print the model zoo and comm model constants\n\
+         \n\
+         EXAMPLES\n\
+         \x20 ddl-sched scenario-gen --grid --out grid.json\n\
+         \x20 ddl-sched sweep --scenario grid.json --threads 8 --out-csv grid.csv\n\
+         \x20 ddl-sched simulate --placer lwf --policy ada --jobs 160"
     );
 }
 
-fn load_or_generate(args: &Args) -> anyhow::Result<Vec<JobSpec>> {
-    if let Some(path) = args.get("trace") {
-        let text = std::fs::read_to_string(path)?;
-        return trace::from_json(&text).map_err(|e| anyhow::anyhow!(e));
+/// Build a scenario from CLI flags (the non-file path). Flags override the
+/// paper defaults; `--trace F` reads a trace file, `--jobs N` generates.
+fn scenario_from_flags(args: &Args) -> Result<Scenario> {
+    let mut s = Scenario::paper();
+    s.seed = args.u64_or("seed", s.seed)?;
+    // Scenario JSON stores numbers as f64; seeds past 2^53 would be
+    // silently rounded on write and rejected on read. Refuse up front.
+    if s.seed > (1 << 53) {
+        bail!("--seed {} exceeds 2^53; scenario files cannot represent it exactly", s.seed);
     }
-    let n = args.usize_or("jobs", 160)?;
-    let seed = args.u64_or("seed", 42)?;
-    let cfg = if n == 160 {
-        TraceConfig { seed, ..TraceConfig::paper_160() }
+    s.kappa = args.usize_or("kappa", s.kappa)?;
+    if let Some(p) = args.get("placer") {
+        s.placer = p.to_string();
+    }
+    if let Some(p) = args.get("policy") {
+        s.policy = p.to_string();
+    }
+    if let Some(p) = args.get("priority") {
+        s.priority = sim::JobPriority::parse(p)
+            .ok_or_else(|| err!("unknown priority '{p}' (srsf|fifo|las)"))?;
+    }
+    if let Some(r) = args.get("repricing") {
+        s.repricing = sim::Repricing::parse(r)
+            .ok_or_else(|| err!("unknown repricing '{r}' (at-admission|dynamic)"))?;
+    }
+    s.trace = if let Some(path) = args.get("trace") {
+        TraceSource::File(path.to_string())
     } else {
-        TraceConfig::scaled(n, seed)
+        TraceSource::Generated { jobs: args.usize_or("jobs", 160)?, seed: None }
     };
-    Ok(trace::generate(&cfg))
+    Ok(s)
 }
 
-fn cmd_trace_gen(args: &Args) -> anyhow::Result<()> {
-    let jobs = load_or_generate(args)?;
+fn cmd_scenario_gen(args: &Args) -> Result<()> {
+    let base = scenario_from_flags(args)?;
+    let text = if args.flag("grid") {
+        Experiment::paper_grid(base).to_json_text()
+    } else {
+        base.to_json_text()
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<()> {
+    let jobs = scenario_from_flags(args)?.jobs()?;
     let out = args.str_or("out", "trace.json");
     std::fs::write(out, trace::to_json(&jobs))?;
     println!("wrote {} jobs to {out}", jobs.len());
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let jobs = load_or_generate(args)?;
-    let cfg = SimConfig::paper();
-    let kappa = args.usize_or("kappa", 1)?;
-    let seed = args.u64_or("seed", 42)?;
-    let placer_name = args.str_or("placer", "lwf");
-    let policy_name = args.str_or("policy", "ada");
-    let mut placer = placement::by_name(placer_name, kappa, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown placer '{placer_name}'"))?;
-    let policy = sched::by_name(policy_name, cfg.comm)
-        .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_name}'"))?;
-    let res = sim::simulate(&cfg, &jobs, placer.as_mut(), policy.as_ref());
-    let eval = Evaluation::from_sim(&format!("{placer_name}/{policy_name}"), &res);
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let scenario = match args.get("scenario") {
+        Some(path) => Scenario::from_file(path)?,
+        None => scenario_from_flags(args)?,
+    };
+    let record = scenario.run()?;
     let mut t = Table::new(
-        "simulation result",
+        &format!("scenario '{}'", record.scenario.name),
         &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    t.row(&eval.table_row());
+    t.row(&record.eval.table_row());
     t.print();
     println!(
-        "jobs={} events={} makespan={:.1}s comm: clean={} contended={} max_k={}",
-        jobs.len(),
-        res.n_events,
-        res.makespan,
-        res.clean_admissions,
-        res.contended_admissions,
-        res.max_contention
+        "finished={} events={} makespan={:.1}s comm: clean={} contended={} max_k={}",
+        record.eval.jct.n,
+        record.n_events,
+        record.eval.makespan,
+        record.eval.clean_admissions,
+        record.eval.contended_admissions,
+        record.max_contention
     );
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    let jobs = load_or_generate(args)?;
-    let cfg = SimConfig::paper();
-    let seed = args.u64_or("seed", 42)?;
-    let what = args.str_or("what", "policy");
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut exp = match args.get("scenario") {
+        Some(path) => Experiment::from_file(path)?,
+        None => Experiment::single(scenario_from_flags(args)?),
+    };
+    // Axes from flags: --grid is the paper placer x policy product; --what
+    // sweeps a single axis. A scenario file with its own axes wins, and a
+    // bare (axis-less) scenario file stays a single run unless the user
+    // explicitly asks for an axis — the default --what only applies to the
+    // flags-built path, where `sweep` without arguments means a policy sweep.
+    let has_axes = exp != Experiment::single(exp.base.clone());
+    if !has_axes {
+        let what = match args.get("what") {
+            Some(w) => Some(w),
+            None if args.get("scenario").is_none() && !args.flag("grid") => Some("policy"),
+            None => None,
+        };
+        if args.flag("grid") {
+            exp = Experiment::paper_grid(exp.base);
+        } else if let Some(what) = what {
+            match what {
+                "placer" => exp.placers = registry::PLACERS.iter().map(|s| s.to_string()).collect(),
+                "policy" => {
+                    exp.policies = registry::POLICIES.iter().map(|s| s.to_string()).collect()
+                }
+                "kappa" => exp.kappas = vec![1, 2, 4, 8, 16],
+                "priority" => exp.priorities = sim::JobPriority::all().to_vec(),
+                other => bail!("unknown sweep '{other}' (placer|policy|kappa|priority)"),
+            }
+        }
+    }
+    let threads = args.usize_or("threads", 1)?;
+    let t0 = Instant::now();
+    let records = exp.run(threads)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let title =
+        format!("sweep '{}' — {} runs, {} thread(s)", exp.base.name, records.len(), threads.max(1));
     let mut table = Table::new(
-        &format!("{what} sweep ({} jobs)", jobs.len()),
+        &title,
         &["method", "avg util", "avg JCT(s)", "median JCT(s)", "95th JCT(s)"],
     );
-    match what {
-        "placer" => {
-            for name in ["rand", "ff", "ls", "lwf"] {
-                let mut p = placement::by_name(name, 1, seed).unwrap();
-                let policy = AdaDual { model: cfg.comm };
-                let res = sim::simulate(&cfg, &jobs, p.as_mut(), &policy);
-                table.row(&Evaluation::from_sim(name, &res).table_row());
-            }
-        }
-        "policy" => {
-            for name in ["srsf1", "srsf2", "srsf3", "ada"] {
-                let mut p = LwfPlacer::new(1);
-                let policy = sched::by_name(name, cfg.comm).unwrap();
-                let res = sim::simulate(&cfg, &jobs, &mut p, policy.as_ref());
-                table.row(&Evaluation::from_sim(name, &res).table_row());
-            }
-        }
-        "kappa" => {
-            for kappa in [1usize, 2, 4, 8, 16] {
-                let mut p = LwfPlacer::new(kappa);
-                let policy = AdaDual { model: cfg.comm };
-                let res = sim::simulate(&cfg, &jobs, &mut p, &policy);
-                table.row(&Evaluation::from_sim(&format!("LWF-{kappa}"), &res).table_row());
-            }
-        }
-        other => anyhow::bail!("unknown sweep '{other}' (placer|policy|kappa)"),
+    for r in &records {
+        table.row(&r.eval.table_row());
     }
     table.print();
+    println!("wall {wall:.2}s");
+    if let Some(path) = args.get("out-json") {
+        std::fs::write(path, records_to_json(&records))?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("out-csv") {
+        std::fs::write(path, records_to_csv(&records))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
-fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+fn cmd_e2e(args: &Args) -> Result<()> {
     let n_jobs = args.usize_or("jobs", 4)?;
     let steps = args.usize_or("steps", 30)?;
     let workers = args.usize_or("workers", 2)?;
@@ -200,7 +268,7 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fit(args: &Args) -> anyhow::Result<()> {
+fn cmd_fit(args: &Args) -> Result<()> {
     let cm = CommModel::paper_10gbe();
     let mb_max = args.f64_or("mb-max", 512.0)?;
     println!("paper constants: a={:.3e}s b={:.3e}s/B eta={:.3e}s/B", cm.a, cm.b, cm.eta);
@@ -218,7 +286,7 @@ fn cmd_fit(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> Result<()> {
     let mut t = Table::new(
         "Table III — DNN zoo (V100)",
         &["model", "size(MB)", "mem(MB)", "batch", "t_f(ms)", "t_b(ms)"],
@@ -243,5 +311,6 @@ fn cmd_info() -> anyhow::Result<()> {
         cm.eta,
         cm.adadual_threshold()
     );
+    println!("\nregistry: placers {:?}, policies {:?}", registry::PLACERS, registry::POLICIES);
     Ok(())
 }

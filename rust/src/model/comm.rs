@@ -10,6 +10,8 @@
 //! time is `k·b + (k−1)·η`, which is how the event-driven simulator applies
 //! the model to partially transferred messages when k changes mid-flight.
 
+use crate::util::json::Json;
+
 /// Contention-model parameters (a, b, η).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CommModel {
@@ -74,6 +76,19 @@ impl CommModel {
     pub fn efficiency(&self, m: f64, k: usize) -> f64 {
         let ideal = self.a + (k as f64) * self.b * m;
         ideal / self.time_contended(m, k)
+    }
+
+    /// Scenario-file serialization (see docs/SCENARIOS.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("a", self.a).set("b", self.b).set("eta", self.eta)
+    }
+
+    pub fn from_json(v: &Json) -> Result<CommModel, String> {
+        Ok(CommModel {
+            a: v.req_f64("a")?,
+            b: v.req_f64("b")?,
+            eta: v.req_f64("eta")?,
+        })
     }
 }
 

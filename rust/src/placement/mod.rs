@@ -163,16 +163,8 @@ impl Placer for LwfPlacer {
     }
 }
 
-/// Construct a placer by name (CLI/bench convenience).
-pub fn by_name(name: &str, kappa: usize, seed: u64) -> Option<Box<dyn Placer>> {
-    match name {
-        "rand" | "RAND" => Some(Box::new(RandomPlacer::new(seed))),
-        "ff" | "FF" => Some(Box::new(FirstFitPlacer)),
-        "ls" | "LS" => Some(Box::new(ListSchedulingPlacer)),
-        "lwf" | "LWF" => Some(Box::new(LwfPlacer::new(kappa))),
-        _ => None,
-    }
-}
+// Placer construction by name lives in `scenario::registry` (the unified
+// algorithm registry shared by the CLI, scenario files and benches).
 
 #[cfg(test)]
 mod tests {
@@ -276,14 +268,6 @@ mod tests {
         ] {
             assert!(placer.place(&j, &st).is_none(), "{}", placer.name());
         }
-    }
-
-    #[test]
-    fn by_name_resolves() {
-        for n in ["rand", "ff", "ls", "lwf"] {
-            assert!(by_name(n, 1, 0).is_some());
-        }
-        assert!(by_name("nope", 1, 0).is_none());
     }
 
     #[test]

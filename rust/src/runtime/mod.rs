@@ -2,6 +2,12 @@
 //! `python/compile/aot.py` and execute them from rust. Python never runs
 //! here — this is the request-path half of the three-layer architecture.
 //!
+//! The PJRT/XLA backend needs the `xla` bindings crate, which the offline
+//! registry does not carry, so it is gated behind the `pjrt` cargo feature.
+//! Without the feature the [`Runtime`] keeps its full API surface (the
+//! coordinator and tests compile unchanged) but reports itself unavailable
+//! at load time; integration tests skip when artifacts are absent anyway.
+//!
 //! Artifacts (see aot.py):
 //! * `train_step`      (params f32[P], tokens s32[B,T+1]) -> (params', loss)
 //! * `train_step_ref`  same computation with pure-jnp kernels (L1 ablation)
@@ -11,11 +17,10 @@
 //! * `init_params.bin` raw LE f32 initial parameter vector
 //! * `meta.json`       config + shape index (parsed with util::json)
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::err;
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::Json;
 
 /// Parsed `meta.json`.
@@ -37,153 +42,246 @@ impl Meta {
         let shape = v
             .get("tokens_shape")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("meta.json missing tokens_shape"))?;
-        let cfg = v.get("config").ok_or_else(|| anyhow!("meta.json missing config"))?;
-        let arts = v
-            .get("artifacts")
-            .ok_or_else(|| anyhow!("meta.json missing artifacts"))?;
+            .ok_or_else(|| err!("meta.json missing tokens_shape"))?;
+        if shape.len() < 2 {
+            return Err(err!("bad tokens_shape"));
+        }
+        let cfg = v.get("config").ok_or_else(|| err!("meta.json missing config"))?;
+        let arts = v.get("artifacts").ok_or_else(|| err!("meta.json missing artifacts"))?;
         let artifact_names = match arts {
             Json::Obj(entries) => entries.iter().map(|(k, _)| k.clone()).collect(),
-            _ => bail!("artifacts must be an object"),
+            _ => return Err(err!("artifacts must be an object")),
         };
         Ok(Meta {
-            preset: v.req_str("preset").map_err(|e| anyhow!(e))?.to_string(),
-            n_params: v.req_usize("n_params").map_err(|e| anyhow!(e))?,
-            batch: v.req_usize("batch").map_err(|e| anyhow!(e))?,
+            preset: v.req_str("preset").map_err(Error::msg)?.to_string(),
+            n_params: v.req_usize("n_params").map_err(Error::msg)?,
+            batch: v.req_usize("batch").map_err(Error::msg)?,
             tokens_shape: (
-                shape[0].as_usize().ok_or_else(|| anyhow!("bad tokens_shape"))?,
-                shape[1].as_usize().ok_or_else(|| anyhow!("bad tokens_shape"))?,
+                shape[0].as_usize().ok_or_else(|| err!("bad tokens_shape"))?,
+                shape[1].as_usize().ok_or_else(|| err!("bad tokens_shape"))?,
             ),
-            lr: v.req_f64("lr").map_err(|e| anyhow!(e))?,
-            vocab: cfg.req_usize("vocab").map_err(|e| anyhow!(e))?,
+            lr: v.req_f64("lr").map_err(Error::msg)?,
+            vocab: cfg.req_usize("vocab").map_err(Error::msg)?,
             artifact_names,
         })
     }
 }
 
-/// A compiled model runtime: one PJRT CPU client plus the compiled
-/// executables for each artifact.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub meta: Meta,
-    pub dir: PathBuf,
+/// Read `dir/meta.json` (shared by both backends).
+fn load_meta(dir: &std::path::Path) -> Result<Meta> {
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+        .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+    Meta::parse(&meta_text)
 }
 
-impl Runtime {
-    /// Load `meta.json` + every listed HLO artifact from `dir` and compile
-    /// them on a fresh PJRT CPU client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
-        let meta = Meta::parse(&meta_text)?;
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        let mut exes = HashMap::new();
-        for name in &meta.artifact_names {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path).map_err(to_anyhow)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(to_anyhow)?;
-            exes.insert(name.clone(), exe);
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    //! The real PJRT CPU backend. Compiling this module requires the `xla`
+    //! bindings crate to be vendored into the workspace.
+
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use super::{load_meta, Meta};
+    use crate::err;
+    use crate::util::error::Result;
+
+    /// A compiled model runtime: one PJRT CPU client plus the compiled
+    /// executables for each artifact.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+        pub meta: Meta,
+        pub dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Load `meta.json` + every listed HLO artifact from `dir` and
+        /// compile them on a fresh PJRT CPU client.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let meta = load_meta(&dir)?;
+            let client = xla::PjRtClient::cpu().map_err(to_err)?;
+            let mut exes = HashMap::new();
+            for name in &meta.artifact_names {
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(&path).map_err(to_err)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).map_err(to_err)?;
+                exes.insert(name.clone(), exe);
+            }
+            Ok(Runtime { client, exes, meta, dir })
         }
-        Ok(Runtime { client, exes, meta, dir })
-    }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Read `init_params.bin` into an f32 parameter vector.
-    pub fn init_params(&self) -> Result<Vec<f32>> {
-        let bytes = std::fs::read(self.dir.join("init_params.bin"))?;
-        if bytes.len() != self.meta.n_params * 4 {
-            bail!(
-                "init_params.bin is {} bytes, expected {}",
-                bytes.len(),
-                self.meta.n_params * 4
-            );
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
 
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        self.exes
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))
-    }
-
-    fn params_literal(&self, params: &[f32]) -> Result<xla::Literal> {
-        if params.len() != self.meta.n_params {
-            bail!("params length {} != {}", params.len(), self.meta.n_params);
+        /// Read `init_params.bin` into an f32 parameter vector.
+        pub fn init_params(&self) -> Result<Vec<f32>> {
+            let bytes = std::fs::read(self.dir.join("init_params.bin"))?;
+            if bytes.len() != self.meta.n_params * 4 {
+                return Err(err!(
+                    "init_params.bin is {} bytes, expected {}",
+                    bytes.len(),
+                    self.meta.n_params * 4
+                ));
+            }
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
         }
-        Ok(xla::Literal::vec1(params))
-    }
 
-    fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
-        let (b, t) = self.meta.tokens_shape;
-        if tokens.len() != b * t {
-            bail!("tokens length {} != {}x{}", tokens.len(), b, t);
+        fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            self.exes.get(name).ok_or_else(|| err!("artifact '{name}' not loaded"))
         }
-        xla::Literal::vec1(tokens)
-            .reshape(&[b as i64, t as i64])
-            .map_err(to_anyhow)
+
+        fn params_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+            if params.len() != self.meta.n_params {
+                return Err(err!("params length {} != {}", params.len(), self.meta.n_params));
+            }
+            Ok(xla::Literal::vec1(params))
+        }
+
+        fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
+            let (b, t) = self.meta.tokens_shape;
+            if tokens.len() != b * t {
+                return Err(err!("tokens length {} != {}x{}", tokens.len(), b, t));
+            }
+            xla::Literal::vec1(tokens).reshape(&[b as i64, t as i64]).map_err(to_err)
+        }
+
+        fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+            let exe = self.exe(name)?;
+            let result = exe.execute::<xla::Literal>(inputs).map_err(to_err)?;
+            result[0][0].to_literal_sync().map_err(to_err)
+        }
+
+        /// One SGD step: returns (new params, loss). `pallas` picks the
+        /// Pallas or the pure-jnp (`train_step_ref`) variant.
+        pub fn train_step(
+            &self,
+            params: &[f32],
+            tokens: &[i32],
+            pallas: bool,
+        ) -> Result<(Vec<f32>, f32)> {
+            let name = if pallas { "train_step" } else { "train_step_ref" };
+            let out =
+                self.run(name, &[self.params_literal(params)?, self.tokens_literal(tokens)?])?;
+            let (p, l) = out.to_tuple2().map_err(to_err)?;
+            Ok((
+                p.to_vec::<f32>().map_err(to_err)?,
+                l.get_first_element::<f32>().map_err(to_err)?,
+            ))
+        }
+
+        /// One data-parallel worker's gradient computation: (grads, loss).
+        pub fn grad_step(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+            let out = self
+                .run("grad_step", &[self.params_literal(params)?, self.tokens_literal(tokens)?])?;
+            let (g, l) = out.to_tuple2().map_err(to_err)?;
+            Ok((
+                g.to_vec::<f32>().map_err(to_err)?,
+                l.get_first_element::<f32>().map_err(to_err)?,
+            ))
+        }
+
+        /// One reduction stage: x + y element-wise over the parameter vector.
+        pub fn allreduce_sum(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+            let out =
+                self.run("allreduce_sum", &[self.params_literal(x)?, self.params_literal(y)?])?;
+            out.to_tuple1().map_err(to_err)?.to_vec::<f32>().map_err(to_err)
+        }
+
+        /// Leader update: params - scale · grads.
+        pub fn apply_grads(&self, params: &[f32], grads: &[f32], scale: f32) -> Result<Vec<f32>> {
+            let out = self.run(
+                "apply_grads",
+                &[
+                    self.params_literal(params)?,
+                    self.params_literal(grads)?,
+                    xla::Literal::scalar(scale),
+                ],
+            )?;
+            out.to_tuple1().map_err(to_err)?.to_vec::<f32>().map_err(to_err)
+        }
     }
 
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let exe = self.exe(name)?;
-        let result = exe.execute::<xla::Literal>(inputs).map_err(to_anyhow)?;
-        result[0][0].to_literal_sync().map_err(to_anyhow)
-    }
-
-    /// One SGD step: returns (new params, loss). `pallas` picks the Pallas
-    /// or the pure-jnp (`train_step_ref`) variant.
-    pub fn train_step(&self, params: &[f32], tokens: &[i32], pallas: bool) -> Result<(Vec<f32>, f32)> {
-        let name = if pallas { "train_step" } else { "train_step_ref" };
-        let out = self.run(name, &[self.params_literal(params)?, self.tokens_literal(tokens)?])?;
-        let (p, l) = out.to_tuple2().map_err(to_anyhow)?;
-        Ok((p.to_vec::<f32>().map_err(to_anyhow)?, l.get_first_element::<f32>().map_err(to_anyhow)?))
-    }
-
-    /// One data-parallel worker's gradient computation: (grads, loss).
-    pub fn grad_step(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
-        let out = self.run("grad_step", &[self.params_literal(params)?, self.tokens_literal(tokens)?])?;
-        let (g, l) = out.to_tuple2().map_err(to_anyhow)?;
-        Ok((g.to_vec::<f32>().map_err(to_anyhow)?, l.get_first_element::<f32>().map_err(to_anyhow)?))
-    }
-
-    /// One reduction stage: x + y element-wise over the parameter vector.
-    pub fn allreduce_sum(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
-        let out = self.run("allreduce_sum", &[self.params_literal(x)?, self.params_literal(y)?])?;
-        out.to_tuple1()
-            .map_err(to_anyhow)?
-            .to_vec::<f32>()
-            .map_err(to_anyhow)
-    }
-
-    /// Leader update: params - scale · grads.
-    pub fn apply_grads(&self, params: &[f32], grads: &[f32], scale: f32) -> Result<Vec<f32>> {
-        let out = self.run(
-            "apply_grads",
-            &[
-                self.params_literal(params)?,
-                self.params_literal(grads)?,
-                xla::Literal::scalar(scale),
-            ],
-        )?;
-        out.to_tuple1()
-            .map_err(to_anyhow)?
-            .to_vec::<f32>()
-            .map_err(to_anyhow)
+    fn to_err(e: xla::Error) -> crate::util::error::Error {
+        err!("{e}")
     }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow!("{e}")
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend {
+    //! API-compatible stand-in used when the crate is built without the
+    //! `pjrt` feature: loading parses `meta.json` (so misconfiguration is
+    //! still reported precisely) and then declines to execute.
+
+    use std::path::{Path, PathBuf};
+
+    use super::{load_meta, Meta};
+    use crate::err;
+    use crate::util::error::{Error, Result};
+
+    /// Stub runtime: same surface as the PJRT-backed one, always errors.
+    pub struct Runtime {
+        pub meta: Meta,
+        pub dir: PathBuf,
+    }
+
+    fn unavailable() -> Error {
+        err!(
+            "PJRT runtime unavailable: this binary was built without the `pjrt` \
+             cargo feature (which requires the vendored `xla` bindings crate); \
+             the simulator/scenario API is fully functional without it"
+        )
+    }
+
+    impl Runtime {
+        pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let _meta = load_meta(&dir)?;
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn init_params(&self) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+
+        pub fn train_step(
+            &self,
+            _params: &[f32],
+            _tokens: &[i32],
+            _pallas: bool,
+        ) -> Result<(Vec<f32>, f32)> {
+            Err(unavailable())
+        }
+
+        pub fn grad_step(&self, _params: &[f32], _tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+            Err(unavailable())
+        }
+
+        pub fn allreduce_sum(&self, _x: &[f32], _y: &[f32]) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+
+        pub fn apply_grads(&self, _params: &[f32], _grads: &[f32], _scale: f32) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+    }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::Runtime;
 
 /// Default artifacts directory: `$DDL_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
@@ -215,5 +313,13 @@ mod tests {
     fn meta_rejects_missing_fields() {
         assert!(Meta::parse("{}").is_err());
         assert!(Meta::parse(r#"{"preset": "x"}"#).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_artifacts_or_feature() {
+        // Missing meta.json dominates; a present one reports the feature.
+        let e = Runtime::load("/definitely/not/a/dir").unwrap_err().to_string();
+        assert!(e.contains("meta.json"), "{e}");
     }
 }

@@ -1,0 +1,471 @@
+//! Experiment = a [`Scenario`] plus grid axes. Expanding the grid yields
+//! one scenario per (placer × κ × policy × priority × seed) combination;
+//! [`Experiment::run`] executes the grid across `std::thread` workers and
+//! collects [`RunRecord`]s in grid order.
+//!
+//! Determinism contract: each scenario run is fully deterministic and the
+//! results vector is indexed by grid position, so `run(1)` and `run(n)`
+//! produce byte-identical `records_to_json` / `records_to_csv` output —
+//! parallelism only buys wall-clock (see benches/grid_parallel.rs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Evaluation;
+use crate::scenario::{registry, Scenario, TraceSource};
+use crate::sim::JobPriority;
+use crate::trace::JobSpec;
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::Json;
+
+/// The outcome of one scenario run: the spec that produced it plus the
+/// paper's evaluation metrics and engine counters. Serializes without any
+/// wall-clock fields so records are reproducible artifacts.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub scenario: Scenario,
+    pub eval: Evaluation,
+    pub n_events: u64,
+    pub max_contention: usize,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scenario", self.scenario.to_json())
+            .set("label", self.scenario.label())
+            .set("eval", self.eval.to_json())
+            .set("n_finished", self.eval.jct.n)
+            .set("n_events", self.n_events)
+            .set("max_contention", self.max_contention)
+    }
+
+    /// Column names for [`RunRecord::csv_row`]. `n_finished` counts the
+    /// jobs that completed (the metrics are computed over exactly those).
+    pub fn csv_header() -> &'static [&'static str] {
+        &[
+            "name", "placer", "kappa", "policy", "priority", "repricing", "seed", "n_finished",
+            "avg_util", "avg_alloc_util", "avg_jct_s", "median_jct_s", "p95_jct_s",
+            "makespan_s", "n_events", "clean_admissions", "contended_admissions",
+            "max_contention",
+        ]
+    }
+
+    pub fn csv_row(&self) -> Vec<String> {
+        let s = &self.scenario;
+        vec![
+            csv_field(&s.name),
+            csv_field(&s.placer),
+            s.kappa.to_string(),
+            csv_field(&s.policy),
+            s.priority.name().to_string(),
+            s.repricing.name().to_string(),
+            s.seed.to_string(),
+            self.eval.jct.n.to_string(),
+            format!("{}", self.eval.avg_gpu_util),
+            format!("{}", self.eval.avg_alloc_util),
+            format!("{}", self.eval.jct.mean),
+            format!("{}", self.eval.jct.median),
+            format!("{}", self.eval.jct.p95),
+            format!("{}", self.eval.makespan),
+            self.n_events.to_string(),
+            self.eval.clean_admissions.to_string(),
+            self.eval.contended_admissions.to_string(),
+            self.max_contention.to_string(),
+        ]
+    }
+}
+
+/// RFC 4180-style escaping: quote fields containing separators or quotes
+/// (scenario names are free-form; a comma must not shift the columns).
+fn csv_field(s: &str) -> String {
+    if s.contains(&[',', '"', '\n', '\r'][..]) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Serialize records to pretty JSON (deterministic for a deterministic grid).
+pub fn records_to_json(records: &[RunRecord]) -> String {
+    Json::Arr(records.iter().map(RunRecord::to_json).collect()).to_string_pretty()
+}
+
+/// Serialize records to CSV with [`RunRecord::csv_header`] columns.
+pub fn records_to_csv(records: &[RunRecord]) -> String {
+    let mut out = RunRecord::csv_header().join(",");
+    out.push('\n');
+    for r in records {
+        out.push_str(&r.csv_row().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// A scenario grid: the base scenario plus per-axis value lists. Empty
+/// axes keep the base value, so `Experiment::single(s)` is one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Experiment {
+    pub base: Scenario,
+    pub placers: Vec<String>,
+    pub kappas: Vec<usize>,
+    pub policies: Vec<String>,
+    pub priorities: Vec<JobPriority>,
+    pub seeds: Vec<u64>,
+}
+
+impl Experiment {
+    /// Default worker count for local runs: every available core.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// No axes: the grid is exactly the base scenario.
+    pub fn single(base: Scenario) -> Experiment {
+        Experiment {
+            base,
+            placers: Vec::new(),
+            kappas: Vec::new(),
+            policies: Vec::new(),
+            priorities: Vec::new(),
+            seeds: Vec::new(),
+        }
+    }
+
+    /// The paper's full evaluation grid over `base`: placers
+    /// {rand, ff, ls, lwf} × policies {srsf1, srsf2, srsf3, ada}
+    /// (Tables IV–V in one experiment).
+    pub fn paper_grid(base: Scenario) -> Experiment {
+        Experiment {
+            placers: registry::PLACERS.iter().map(|s| s.to_string()).collect(),
+            policies: registry::POLICIES.iter().map(|s| s.to_string()).collect(),
+            ..Experiment::single(base)
+        }
+    }
+
+    /// Expand the grid in axis-nesting order placer → κ → policy →
+    /// priority → seed, validating every algorithm name up front.
+    pub fn grid(&self) -> Result<Vec<Scenario>> {
+        let one = |v: &[String], base: &str| -> Vec<String> {
+            if v.is_empty() {
+                vec![base.to_string()]
+            } else {
+                v.to_vec()
+            }
+        };
+        let placers = one(&self.placers, &self.base.placer);
+        let policies = one(&self.policies, &self.base.policy);
+        let kappas =
+            if self.kappas.is_empty() { vec![self.base.kappa] } else { self.kappas.clone() };
+        let priorities = if self.priorities.is_empty() {
+            vec![self.base.priority]
+        } else {
+            self.priorities.clone()
+        };
+        let seeds = if self.seeds.is_empty() { vec![self.base.seed] } else { self.seeds.clone() };
+        for p in &placers {
+            registry::make_placer(p, 1, 0)?;
+        }
+        for p in &policies {
+            registry::make_policy(p, self.base.comm)?;
+        }
+        let n_runs =
+            placers.len() * kappas.len() * policies.len() * priorities.len() * seeds.len();
+        let mut out = Vec::with_capacity(n_runs);
+        for placer in &placers {
+            for &kappa in &kappas {
+                for policy in &policies {
+                    for &priority in &priorities {
+                        for &seed in &seeds {
+                            out.push(Scenario {
+                                placer: placer.clone(),
+                                kappa,
+                                policy: policy.clone(),
+                                priority,
+                                seed,
+                                ..self.base.clone()
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run the whole grid. `threads <= 1` runs serially; otherwise up to
+    /// `threads` workers pull scenarios from a shared counter. Either way
+    /// the returned records are in grid order and identical. Each unique
+    /// trace (source + effective seed) is resolved once and shared across
+    /// the grid cells that use it, not re-read/regenerated per cell.
+    pub fn run(&self, threads: usize) -> Result<Vec<RunRecord>> {
+        let scenarios = self.grid()?;
+        let mut cache: Vec<((TraceSource, Option<u64>), Arc<Vec<JobSpec>>)> = Vec::new();
+        let mut workloads: Vec<Arc<Vec<JobSpec>>> = Vec::with_capacity(scenarios.len());
+        for s in &scenarios {
+            let key = (s.trace.clone(), s.effective_trace_seed());
+            let jobs = match cache.iter().find(|(k, _)| *k == key) {
+                Some((_, jobs)) => Arc::clone(jobs),
+                None => {
+                    let jobs = Arc::new(s.jobs()?);
+                    cache.push((key, Arc::clone(&jobs)));
+                    jobs
+                }
+            };
+            workloads.push(jobs);
+        }
+        let workers = threads.max(1).min(scenarios.len().max(1));
+        if workers <= 1 {
+            return scenarios
+                .iter()
+                .zip(&workloads)
+                .map(|(s, jobs)| s.run_with_jobs(jobs))
+                .collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<RunRecord>>>> =
+            scenarios.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= scenarios.len() {
+                        break;
+                    }
+                    let record = scenarios[i].run_with_jobs(&workloads[i]);
+                    *slots[i].lock().unwrap() = Some(record);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner().unwrap().unwrap_or_else(|| {
+                    Err(Error::msg("experiment worker died before filling its slot"))
+                })
+            })
+            .collect()
+    }
+
+    // ---- serialization -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let strs = |v: &[String]| Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect());
+        Json::obj().set("base", self.base.to_json()).set(
+            "axes",
+            Json::obj()
+                .set("placer", strs(&self.placers))
+                .set("kappa", Json::Arr(self.kappas.iter().map(|&k| Json::from(k)).collect()))
+                .set("policy", strs(&self.policies))
+                .set(
+                    "priority",
+                    Json::Arr(self.priorities.iter().map(|p| Json::from(p.name())).collect()),
+                )
+                .set("seed", Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect())),
+        )
+    }
+
+    pub fn to_json_text(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    pub fn from_json(v: &Json) -> Result<Experiment> {
+        let base = Scenario::from_json(
+            v.get("base").ok_or_else(|| Error::msg("experiment JSON missing 'base'"))?,
+        )?;
+        let mut exp = Experiment::single(base);
+        let Some(axes) = v.get("axes") else { return Ok(exp) };
+        // Reject unknown axis keys: a typo like "placers" would otherwise
+        // silently run only the base scenario.
+        if let Json::Obj(entries) = axes {
+            for (key, _) in entries {
+                if !matches!(key.as_str(), "placer" | "kappa" | "policy" | "priority" | "seed") {
+                    return Err(Error::msg(format!(
+                        "unknown experiment axis '{key}' (placer|kappa|policy|priority|seed)"
+                    )));
+                }
+            }
+        } else {
+            return Err(Error::msg("'axes' must be an object"));
+        }
+        let str_axis = |key: &str| -> Result<Vec<String>> {
+            match axes.get(key) {
+                None => Ok(Vec::new()),
+                Some(a) => a
+                    .as_arr()
+                    .ok_or_else(|| Error::msg(format!("axis '{key}' must be an array")))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| Error::msg(format!("axis '{key}' entries must be strings")))
+                    })
+                    .collect(),
+            }
+        };
+        exp.placers = str_axis("placer")?;
+        exp.policies = str_axis("policy")?;
+        if let Some(a) = axes.get("kappa") {
+            exp.kappas = a
+                .as_arr()
+                .ok_or_else(|| Error::msg("axis 'kappa' must be an array"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| Error::msg("kappa entries must be integers")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(a) = axes.get("seed") {
+            exp.seeds = a
+                .as_arr()
+                .ok_or_else(|| Error::msg("axis 'seed' must be an array"))?
+                .iter()
+                .map(|x| x.as_u64().ok_or_else(|| Error::msg("seed entries must be integers")))
+                .collect::<Result<_>>()?;
+        }
+        exp.priorities = str_axis("priority")?
+            .iter()
+            .map(|s| {
+                JobPriority::parse(s)
+                    .ok_or_else(|| Error::msg(format!("unknown priority '{s}' (srsf|fifo|las)")))
+            })
+            .collect::<Result<_>>()?;
+        Ok(exp)
+    }
+
+    /// Parse from JSON text. Accepts either a full experiment object
+    /// (`{"base": {...}, "axes": {...}}`) or a bare scenario object, which
+    /// becomes a single-run experiment — so any scenario file is runnable
+    /// as a (degenerate) grid.
+    pub fn from_text(text: &str) -> Result<Experiment> {
+        let v = Json::parse(text).context("parsing experiment JSON")?;
+        if v.get("base").is_some() {
+            Experiment::from_json(&v)
+        } else {
+            Ok(Experiment::single(Scenario::from_json(&v)?))
+        }
+    }
+
+    /// Load from a JSON file (scenario or experiment form).
+    pub fn from_file(path: &str) -> Result<Experiment> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file '{path}'"))?;
+        Experiment::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_grid() -> Experiment {
+        Experiment {
+            placers: vec!["lwf".into(), "rand".into()],
+            policies: vec!["srsf1".into(), "ada".into()],
+            ..Experiment::single(Scenario::small("grid", 2, 2, 12))
+        }
+    }
+
+    #[test]
+    fn grid_expansion_order_and_count() {
+        let g = small_grid().grid().unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!((g[0].placer.as_str(), g[0].policy.as_str()), ("lwf", "srsf1"));
+        assert_eq!((g[1].placer.as_str(), g[1].policy.as_str()), ("lwf", "ada"));
+        assert_eq!((g[2].placer.as_str(), g[2].policy.as_str()), ("rand", "srsf1"));
+        assert_eq!((g[3].placer.as_str(), g[3].policy.as_str()), ("rand", "ada"));
+    }
+
+    #[test]
+    fn empty_axes_use_base_values() {
+        let base = Scenario::small("one", 2, 2, 6);
+        let g = Experiment::single(base.clone()).grid().unwrap();
+        assert_eq!(g, vec![base]);
+    }
+
+    #[test]
+    fn grid_rejects_unknown_axis_names() {
+        let mut e = small_grid();
+        e.placers.push("teleport".into());
+        assert!(e.grid().unwrap_err().to_string().contains("unknown placer"));
+    }
+
+    #[test]
+    fn parallel_run_matches_serial_byte_for_byte() {
+        let e = small_grid();
+        let serial = e.run(1).unwrap();
+        let parallel = e.run(4).unwrap();
+        assert_eq!(records_to_json(&serial), records_to_json(&parallel));
+        assert_eq!(records_to_csv(&serial), records_to_csv(&parallel));
+    }
+
+    #[test]
+    fn seed_axis_changes_generated_workload() {
+        let e = Experiment {
+            seeds: vec![1, 2],
+            ..Experiment::single(Scenario::small("seeds", 2, 2, 12))
+        };
+        let recs = e.run(2).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_ne!(recs[0].eval.jct.mean, recs[1].eval.jct.mean);
+    }
+
+    #[test]
+    fn experiment_json_roundtrip() {
+        let e = Experiment {
+            kappas: vec![1, 2],
+            priorities: vec![JobPriority::Srsf, JobPriority::Fifo],
+            seeds: vec![3, 4],
+            ..small_grid()
+        };
+        let back = Experiment::from_text(&e.to_json_text()).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn bare_scenario_text_parses_as_single_experiment() {
+        let s = Scenario::small("bare", 2, 2, 6);
+        let e = Experiment::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(e, Experiment::single(s));
+    }
+
+    #[test]
+    fn unknown_axis_key_rejected() {
+        let base = Scenario::small("axes", 2, 2, 6).to_json_text();
+        let text = format!("{{\"base\": {base}, \"axes\": {{\"placers\": [\"lwf\"]}}}}");
+        let e = Experiment::from_text(&text).unwrap_err().to_string();
+        assert!(e.contains("unknown experiment axis 'placers'"), "{e}");
+    }
+
+    #[test]
+    fn csv_escapes_free_form_names() {
+        let mut s = Scenario::small("paper, v2", 2, 2, 6);
+        s.name = "has \"quotes\", commas".into();
+        let recs = Experiment::single(s).run(1).unwrap();
+        let csv = records_to_csv(&recs);
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.starts_with("\"has \"\"quotes\"\", commas\","), "{row}");
+        // Quoted commas must not shift the column count (naive split on
+        // quoted commas over-counts; strip the quoted field first).
+        let rest = &row[row.rfind('"').unwrap() + 2..];
+        assert_eq!(rest.split(',').count(), RunRecord::csv_header().len() - 1);
+    }
+
+    #[test]
+    fn csv_shape_matches_header() {
+        let recs = Experiment::single(Scenario::small("csv", 2, 2, 6)).run(1).unwrap();
+        let csv = records_to_csv(&recs);
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(header.split(',').count(), RunRecord::csv_header().len());
+        let row = lines.next().unwrap();
+        assert_eq!(row.split(',').count(), RunRecord::csv_header().len());
+    }
+
+    #[test]
+    fn record_json_carries_scenario_and_metrics() {
+        let rec = Scenario::small("rec", 2, 2, 6).run().unwrap();
+        let v = Json::parse(&records_to_json(&[rec])).unwrap();
+        let first = &v.as_arr().unwrap()[0];
+        assert_eq!(first.get("scenario").unwrap().req_str("name").unwrap(), "rec");
+        assert!(first.get("eval").unwrap().req_f64("avg_jct").unwrap() > 0.0);
+    }
+}

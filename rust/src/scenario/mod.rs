@@ -1,0 +1,471 @@
+//! Declarative run specifications — the public API of the simulator.
+//!
+//! A [`Scenario`] names everything one simulation run needs: cluster shape,
+//! Eq (5) contention model, trace source (file | generated | inline),
+//! placer + κ, communication policy, job priority, repricing mode and the
+//! RNG seed. Scenarios serialize to JSON (`util::json`), so every
+//! evaluation setup is a shareable data file instead of hand-wired code —
+//! see docs/SCENARIOS.md for the schema.
+//!
+//! [`registry`] is the single string → algorithm mapping (placers and
+//! policies, with their paper-style labels); [`experiment`] expands a
+//! scenario across grid axes and executes the grid on `std::thread`
+//! workers, collecting deterministic [`RunRecord`]s.
+//!
+//! ```no_run
+//! use ddl_sched::prelude::*;
+//!
+//! let record = Scenario::paper().run().unwrap();
+//! println!("avg JCT: {:.1}s", record.eval.jct.mean);
+//! ```
+
+pub mod experiment;
+pub mod registry;
+
+pub use experiment::{records_to_csv, records_to_json, Experiment, RunRecord};
+
+use crate::cluster::ClusterSpec;
+use crate::metrics::Evaluation;
+use crate::model::CommModel;
+use crate::sim::{self, JobPriority, Repricing, SimConfig};
+use crate::trace::{self, JobSpec, TraceConfig};
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::Json;
+
+/// Where a scenario's jobs come from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceSource {
+    /// A trace JSON file (as written by `ddl-sched trace-gen`).
+    File(String),
+    /// Generate `jobs` jobs with the §V-A workload shape. `seed: None`
+    /// inherits the scenario seed, which makes the experiment seed axis
+    /// vary the workload and the RAND placer together.
+    Generated { jobs: usize, seed: Option<u64> },
+    /// Jobs spelled out inline in the scenario file.
+    Inline(Vec<JobSpec>),
+}
+
+impl TraceSource {
+    fn to_json(&self) -> Json {
+        match self {
+            TraceSource::File(path) => {
+                Json::obj().set("source", "file").set("path", path.as_str())
+            }
+            TraceSource::Generated { jobs, seed } => {
+                let v = Json::obj().set("source", "generated").set("jobs", *jobs);
+                match seed {
+                    Some(s) => v.set("seed", *s),
+                    None => v,
+                }
+            }
+            TraceSource::Inline(jobs) => Json::obj()
+                .set("source", "inline")
+                .set("jobs", Json::Arr(jobs.iter().map(JobSpec::to_json).collect())),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<TraceSource, String> {
+        match v.req_str("source")? {
+            "file" => Ok(TraceSource::File(v.req_str("path")?.to_string())),
+            "generated" => Ok(TraceSource::Generated {
+                jobs: v.req_usize("jobs")?,
+                seed: v.get("seed").and_then(Json::as_u64),
+            }),
+            "inline" => {
+                let arr = v
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "inline trace needs a 'jobs' array".to_string())?;
+                Ok(TraceSource::Inline(
+                    arr.iter().map(JobSpec::from_json).collect::<Result<_, _>>()?,
+                ))
+            }
+            other => Err(format!("unknown trace source '{other}' (file|generated|inline)")),
+        }
+    }
+}
+
+/// One fully-specified simulation run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Free-form scenario name (carried into records and file names).
+    pub name: String,
+    pub cluster: ClusterSpec,
+    pub comm: CommModel,
+    pub trace: TraceSource,
+    /// Registry placer name (see [`registry::PLACERS`]).
+    pub placer: String,
+    /// LWF-κ consolidation threshold.
+    pub kappa: usize,
+    /// Registry policy name (see [`registry::POLICIES`]).
+    pub policy: String,
+    pub priority: JobPriority,
+    pub repricing: Repricing,
+    /// Seeds the RAND placer and any `Generated` trace without its own seed.
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The paper's evaluation setup: 160-job §V-A workload on the 64-GPU
+    /// 10 GbE testbed, LWF-1 placement, Ada-SRSF admission.
+    pub fn paper() -> Scenario {
+        Scenario {
+            name: "paper".to_string(),
+            cluster: ClusterSpec::paper_64gpu(),
+            comm: CommModel::paper_10gbe(),
+            trace: TraceSource::Generated { jobs: 160, seed: None },
+            placer: "lwf".to_string(),
+            kappa: 1,
+            policy: "ada".to_string(),
+            priority: JobPriority::Srsf,
+            repricing: Repricing::AtAdmission,
+            seed: 42,
+        }
+    }
+
+    /// A scaled-down variant for tests and demos: `jobs` jobs on a
+    /// `n_servers × gpus_per_server` cluster.
+    pub fn small(name: &str, n_servers: usize, gpus_per_server: usize, jobs: usize) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            cluster: ClusterSpec::tiny(n_servers, gpus_per_server),
+            trace: TraceSource::Generated { jobs, seed: None },
+            ..Scenario::paper()
+        }
+    }
+
+    /// Paper-style method label, e.g. `LWF-1/Ada-SRSF` (plus `/fifo`,
+    /// `/las` or `/dynamic` markers when those axes leave paper defaults).
+    pub fn label(&self) -> String {
+        let mut label = format!(
+            "{}/{}",
+            registry::placer_label(&self.placer, self.kappa),
+            registry::policy_label(&self.policy)
+        );
+        if self.priority != JobPriority::Srsf {
+            label.push('/');
+            label.push_str(self.priority.name());
+        }
+        if self.repricing != Repricing::AtAdmission {
+            label.push('/');
+            label.push_str(self.repricing.name());
+        }
+        label
+    }
+
+    /// The engine configuration this scenario describes.
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            cluster: self.cluster,
+            comm: self.comm,
+            repricing: self.repricing,
+            priority: self.priority,
+            log_events: false,
+        }
+    }
+
+    /// Resolve the trace source into concrete jobs.
+    pub fn jobs(&self) -> Result<Vec<JobSpec>> {
+        match &self.trace {
+            TraceSource::File(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading trace file '{path}'"))?;
+                trace::from_json(&text).map_err(Error::msg)
+            }
+            TraceSource::Generated { jobs, seed } => {
+                let seed = seed.unwrap_or(self.seed);
+                let cfg = if *jobs == 160 {
+                    TraceConfig { seed, ..TraceConfig::paper_160() }
+                } else {
+                    TraceConfig::scaled(*jobs, seed)
+                };
+                let mut jobs = trace::generate(&cfg);
+                // The scaled §V-A histogram can emit jobs wider than a small
+                // scenario cluster; clamp so every generated workload is
+                // placeable (the paper setup is never affected: 32 <= 64).
+                let cap = self.cluster.n_gpus();
+                for j in &mut jobs {
+                    j.n_gpus = j.n_gpus.min(cap);
+                }
+                Ok(jobs)
+            }
+            TraceSource::Inline(jobs) => Ok(jobs.clone()),
+        }
+    }
+
+    /// The seed that actually drives a `Generated` trace; `None` for
+    /// file/inline sources (their content is seed-independent).
+    pub(crate) fn effective_trace_seed(&self) -> Option<u64> {
+        match &self.trace {
+            TraceSource::Generated { seed, .. } => Some(seed.unwrap_or(self.seed)),
+            _ => None,
+        }
+    }
+
+    /// Execute the scenario: resolve the trace, build the algorithms from
+    /// the [`registry`], run the simulator and evaluate. Deterministic for
+    /// a fixed scenario — this is what makes parallel experiment runs
+    /// byte-identical to serial ones.
+    pub fn run(&self) -> Result<RunRecord> {
+        self.run_with_jobs(&self.jobs()?)
+    }
+
+    /// Core execution against an already-resolved workload.
+    /// `Experiment::run` resolves each unique trace once and shares it
+    /// across grid cells instead of re-reading/regenerating per cell.
+    pub(crate) fn run_with_jobs(&self, jobs: &[JobSpec]) -> Result<RunRecord> {
+        if jobs.is_empty() {
+            return Err(Error::msg(format!(
+                "scenario '{}' resolves to an empty workload",
+                self.name
+            )));
+        }
+        let cfg = self.sim_config();
+        let mut placer = registry::make_placer(&self.placer, self.kappa, self.seed)?;
+        let policy = registry::make_policy(&self.policy, self.comm)?;
+        let res = sim::simulate(&cfg, jobs, placer.as_mut(), policy.as_ref());
+        if !res.jct.iter().any(|t| t.is_finite()) {
+            return Err(Error::msg(format!(
+                "scenario '{}': no job finished (workload infeasible on this cluster?)",
+                self.name
+            )));
+        }
+        let eval = Evaluation::from_sim(&self.label(), &res);
+        Ok(RunRecord {
+            scenario: self.clone(),
+            eval,
+            n_events: res.n_events,
+            max_contention: res.max_contention,
+        })
+    }
+
+    // ---- serialization -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("cluster", self.cluster.to_json())
+            .set("comm", self.comm.to_json())
+            .set("trace", self.trace.to_json())
+            .set("placer", self.placer.as_str())
+            .set("kappa", self.kappa)
+            .set("policy", self.policy.as_str())
+            .set("priority", self.priority.name())
+            .set("repricing", self.repricing.name())
+            .set("seed", self.seed)
+    }
+
+    /// Pretty JSON text (the shareable artifact form).
+    pub fn to_json_text(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let placer = v.req_str("placer").map_err(Error::msg)?.to_string();
+        let policy = v.req_str("policy").map_err(Error::msg)?.to_string();
+        // Validate algorithm names eagerly so a bad scenario file fails at
+        // load time, not mid-experiment.
+        registry::make_placer(&placer, 1, 0)?;
+        registry::make_policy(&policy, CommModel::paper_10gbe())?;
+        let priority = v.req_str("priority").map_err(Error::msg)?;
+        let repricing = v.req_str("repricing").map_err(Error::msg)?;
+        Ok(Scenario {
+            name: v.req_str("name").map_err(Error::msg)?.to_string(),
+            cluster: ClusterSpec::from_json(
+                v.get("cluster").ok_or_else(|| Error::msg("missing 'cluster'"))?,
+            )
+            .map_err(Error::msg)?,
+            comm: CommModel::from_json(
+                v.get("comm").ok_or_else(|| Error::msg("missing 'comm'"))?,
+            )
+            .map_err(Error::msg)?,
+            trace: TraceSource::from_json(
+                v.get("trace").ok_or_else(|| Error::msg("missing 'trace'"))?,
+            )
+            .map_err(Error::msg)?,
+            placer,
+            kappa: v.req_usize("kappa").map_err(Error::msg)?,
+            policy,
+            priority: JobPriority::parse(priority).ok_or_else(|| {
+                Error::msg(format!("unknown priority '{priority}' (srsf|fifo|las)"))
+            })?,
+            repricing: Repricing::parse(repricing).ok_or_else(|| {
+                Error::msg(format!("unknown repricing '{repricing}' (at-admission|dynamic)"))
+            })?,
+            seed: v.req_u64("seed").map_err(Error::msg)?,
+        })
+    }
+
+    /// Parse a scenario from JSON text.
+    pub fn from_text(text: &str) -> Result<Scenario> {
+        let v = Json::parse(text).context("parsing scenario JSON")?;
+        Scenario::from_json(&v)
+    }
+
+    /// Load a scenario from a JSON file.
+    pub fn from_file(path: &str) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file '{path}'"))?;
+        Scenario::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DnnModel;
+
+    #[test]
+    fn paper_scenario_json_roundtrip() {
+        let s = Scenario::paper();
+        let text = s.to_json_text();
+        let back = Scenario::from_text(&text).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn nondefault_scenario_json_roundtrip() {
+        let s = Scenario {
+            name: "ablate".into(),
+            cluster: ClusterSpec::tiny(3, 2),
+            comm: CommModel { a: 1e-3, b: 9e-10, eta: 2.5e-10 },
+            trace: TraceSource::Generated { jobs: 24, seed: Some(9) },
+            placer: "rand".into(),
+            kappa: 4,
+            policy: "srsf2".into(),
+            priority: JobPriority::Las,
+            repricing: Repricing::Dynamic,
+            seed: 7,
+        };
+        let back = Scenario::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn inline_trace_roundtrip() {
+        let jobs = vec![
+            JobSpec { id: 0, arrival: 0.0, model: DnnModel::ResNet50, n_gpus: 2, iterations: 30 },
+            JobSpec { id: 1, arrival: 5.5, model: DnnModel::Vgg16, n_gpus: 4, iterations: 10 },
+        ];
+        let s = Scenario {
+            trace: TraceSource::Inline(jobs.clone()),
+            ..Scenario::small("inline", 2, 2, 0)
+        };
+        let back = Scenario::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(back.jobs().unwrap(), jobs);
+    }
+
+    #[test]
+    fn file_trace_source_roundtrip_and_load() {
+        let jobs = trace::generate(&TraceConfig::scaled(8, 3));
+        let path = std::env::temp_dir().join("ddl_sched_scenario_trace_test.json");
+        std::fs::write(&path, trace::to_json(&jobs)).unwrap();
+        let s = Scenario {
+            trace: TraceSource::File(path.to_string_lossy().into_owned()),
+            ..Scenario::small("file", 2, 2, 0)
+        };
+        let back = Scenario::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(s, back);
+        assert_eq!(back.jobs().unwrap(), jobs);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_names() {
+        let mut s = Scenario::paper();
+        s.placer = "magic".into();
+        assert!(Scenario::from_text(&s.to_json_text())
+            .unwrap_err()
+            .to_string()
+            .contains("unknown placer"));
+        let mut s = Scenario::paper();
+        s.policy = "magic".into();
+        assert!(Scenario::from_text(&s.to_json_text())
+            .unwrap_err()
+            .to_string()
+            .contains("unknown policy"));
+    }
+
+    #[test]
+    fn from_text_rejects_bad_enum_spellings() {
+        let text = Scenario::paper().to_json_text().replace("\"srsf\"", "\"sjf\"");
+        assert!(Scenario::from_text(&text).unwrap_err().to_string().contains("priority"));
+        let text = Scenario::paper()
+            .to_json_text()
+            .replace("\"at-admission\"", "\"mid-flight\"");
+        assert!(Scenario::from_text(&text).unwrap_err().to_string().contains("repricing"));
+    }
+
+    #[test]
+    fn generated_jobs_clamped_to_cluster_width() {
+        let s = Scenario::small("clamp", 2, 2, 10);
+        let jobs = s.jobs().unwrap();
+        assert_eq!(jobs.len(), 10);
+        assert!(jobs.iter().all(|j| j.n_gpus <= s.cluster.n_gpus()));
+    }
+
+    #[test]
+    fn generated_trace_inherits_scenario_seed() {
+        let a = Scenario { seed: 1, ..Scenario::small("s", 2, 2, 12) };
+        let b = Scenario { seed: 2, ..Scenario::small("s", 2, 2, 12) };
+        assert_ne!(a.jobs().unwrap(), b.jobs().unwrap());
+        let pinned = Scenario {
+            trace: TraceSource::Generated { jobs: 12, seed: Some(5) },
+            ..a.clone()
+        };
+        let pinned2 = Scenario { seed: 99, ..pinned.clone() };
+        assert_eq!(pinned.jobs().unwrap(), pinned2.jobs().unwrap());
+    }
+
+    #[test]
+    fn label_composition() {
+        let s = Scenario::paper();
+        assert_eq!(s.label(), "LWF-1/Ada-SRSF");
+        let s = Scenario {
+            placer: "rand".into(),
+            policy: "srsf1".into(),
+            priority: JobPriority::Fifo,
+            repricing: Repricing::Dynamic,
+            ..Scenario::paper()
+        };
+        assert_eq!(s.label(), "RAND/SRSF(1)/fifo/dynamic");
+    }
+
+    #[test]
+    fn empty_workload_errors_instead_of_panicking() {
+        let s = Scenario {
+            trace: TraceSource::Generated { jobs: 0, seed: None },
+            ..Scenario::small("empty", 2, 2, 0)
+        };
+        let e = s.run().unwrap_err().to_string();
+        assert!(e.contains("empty workload"), "{e}");
+        let s = Scenario {
+            trace: TraceSource::Inline(Vec::new()),
+            ..Scenario::small("empty-inline", 2, 2, 0)
+        };
+        assert!(s.run().is_err());
+    }
+
+    #[test]
+    fn run_small_scenario_end_to_end() {
+        let rec = Scenario::small("smoke", 2, 2, 10).run().unwrap();
+        assert_eq!(rec.eval.jct.n, 10);
+        assert!(rec.eval.jct.mean > 0.0 && rec.eval.jct.mean.is_finite());
+        assert!(rec.n_events > 0);
+        assert_eq!(rec.scenario.name, "smoke");
+    }
+
+    #[test]
+    fn sim_config_maps_all_fields() {
+        let s = Scenario {
+            priority: JobPriority::Las,
+            repricing: Repricing::Dynamic,
+            ..Scenario::paper()
+        };
+        let cfg = s.sim_config();
+        assert_eq!(cfg.priority, JobPriority::Las);
+        assert_eq!(cfg.repricing, Repricing::Dynamic);
+        assert_eq!(cfg.cluster, s.cluster);
+        assert_eq!(cfg.comm, s.comm);
+    }
+}

@@ -1,0 +1,149 @@
+//! Unified algorithm registry: the single string → constructor mapping for
+//! placement and communication-scheduling algorithms. Replaces the two
+//! ad-hoc `by_name` factories that previously lived in `placement` and
+//! `sched` with duplicated alias tables; every frontend (CLI, scenario
+//! files, benches, the live coordinator gate) resolves names here.
+
+use crate::model::CommModel;
+use crate::placement::{
+    FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RandomPlacer,
+};
+use crate::sched::{AdaDual, CommPolicy, SrsfCap};
+use crate::util::error::{Error, Result};
+
+/// Canonical placer names, in paper presentation order (Table IV).
+pub const PLACERS: [&str; 4] = ["rand", "ff", "ls", "lwf"];
+
+/// Canonical policy names, in paper presentation order (Table V).
+pub const POLICIES: [&str; 4] = ["srsf1", "srsf2", "srsf3", "ada"];
+
+/// Resolve a placer name or alias to its canonical form.
+pub fn canonical_placer(name: &str) -> Option<&'static str> {
+    match name {
+        "rand" | "RAND" | "random" => Some("rand"),
+        "ff" | "FF" | "first-fit" => Some("ff"),
+        "ls" | "LS" | "list-scheduling" => Some("ls"),
+        "lwf" | "LWF" | "LWF-k" => Some("lwf"),
+        _ => None,
+    }
+}
+
+/// Resolve a policy name or alias to its canonical form.
+pub fn canonical_policy(name: &str) -> Option<&'static str> {
+    match name {
+        "srsf1" | "SRSF(1)" => Some("srsf1"),
+        "srsf2" | "SRSF(2)" => Some("srsf2"),
+        "srsf3" | "SRSF(3)" => Some("srsf3"),
+        "ada" | "adadual" | "AdaDUAL" | "Ada-SRSF" => Some("ada"),
+        _ => None,
+    }
+}
+
+/// Construct a placer. `kappa` is LWF's consolidation threshold; `seed`
+/// feeds the RAND baseline (ignored by the deterministic placers).
+pub fn make_placer(name: &str, kappa: usize, seed: u64) -> Result<Box<dyn Placer + Send>> {
+    match canonical_placer(name) {
+        Some("rand") => Ok(Box::new(RandomPlacer::new(seed))),
+        Some("ff") => Ok(Box::new(FirstFitPlacer)),
+        Some("ls") => Ok(Box::new(ListSchedulingPlacer)),
+        Some("lwf") => Ok(Box::new(LwfPlacer::new(kappa))),
+        _ => Err(unknown("placer", name, &PLACERS)),
+    }
+}
+
+/// Construct a communication admission policy. The box is `Send + Sync` so
+/// policies can be shared across experiment workers and live job threads.
+pub fn make_policy(name: &str, comm: CommModel) -> Result<Box<dyn CommPolicy + Send + Sync>> {
+    match canonical_policy(name) {
+        Some("srsf1") => Ok(Box::new(SrsfCap { cap: 1 })),
+        Some("srsf2") => Ok(Box::new(SrsfCap { cap: 2 })),
+        Some("srsf3") => Ok(Box::new(SrsfCap { cap: 3 })),
+        Some("ada") => Ok(Box::new(AdaDual { model: comm })),
+        _ => Err(unknown("policy", name, &POLICIES)),
+    }
+}
+
+/// Paper-style display label for a placer ("LWF-1", "RAND", ...).
+pub fn placer_label(name: &str, kappa: usize) -> String {
+    match canonical_placer(name) {
+        Some("lwf") => format!("LWF-{kappa}"),
+        Some(c) => c.to_uppercase(),
+        None => name.to_string(),
+    }
+}
+
+/// Paper-style display label for a policy ("SRSF(1)", "Ada-SRSF", ...).
+pub fn policy_label(name: &str) -> String {
+    match canonical_policy(name) {
+        Some("ada") => "Ada-SRSF".to_string(),
+        Some(c) => format!("SRSF({})", &c[4..]),
+        None => name.to_string(),
+    }
+}
+
+fn unknown(kind: &str, name: &str, known: &[&str]) -> Error {
+    Error::msg(format!("unknown {kind} '{name}' (known: {})", known.join(", ")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_canonical_placer_resolves() {
+        for name in PLACERS {
+            assert_eq!(canonical_placer(name), Some(name));
+            let p = make_placer(name, 1, 0).unwrap();
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn every_canonical_policy_resolves() {
+        let cm = CommModel::paper_10gbe();
+        for name in POLICIES {
+            assert_eq!(canonical_policy(name), Some(name));
+            let p = make_policy(name, cm).unwrap();
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical() {
+        assert_eq!(canonical_placer("LWF-k"), Some("lwf"));
+        assert_eq!(canonical_placer("RAND"), Some("rand"));
+        assert_eq!(canonical_policy("Ada-SRSF"), Some("ada"));
+        assert_eq!(canonical_policy("SRSF(2)"), Some("srsf2"));
+    }
+
+    #[test]
+    fn unknown_names_error_and_list_known() {
+        let e = make_placer("nope", 1, 0).unwrap_err().to_string();
+        assert!(e.contains("unknown placer 'nope'") && e.contains("lwf"), "{e}");
+        let e = make_policy("bogus", CommModel::paper_10gbe()).unwrap_err().to_string();
+        assert!(e.contains("unknown policy 'bogus'") && e.contains("ada"), "{e}");
+    }
+
+    #[test]
+    fn labels_match_paper_spelling() {
+        assert_eq!(placer_label("lwf", 4), "LWF-4");
+        assert_eq!(placer_label("rand", 1), "RAND");
+        assert_eq!(placer_label("ff", 1), "FF");
+        assert_eq!(policy_label("ada"), "Ada-SRSF");
+        assert_eq!(policy_label("srsf3"), "SRSF(3)");
+    }
+
+    #[test]
+    fn lwf_kappa_threading() {
+        let mut p = make_placer("lwf", 2, 0).unwrap();
+        let st = crate::cluster::ClusterState::new(crate::cluster::ClusterSpec::tiny(2, 2));
+        let job = crate::trace::JobSpec {
+            id: 0,
+            arrival: 0.0,
+            model: crate::model::DnnModel::ResNet50,
+            n_gpus: 2,
+            iterations: 10,
+        };
+        assert!(p.place(&job, &st).is_some());
+    }
+}

@@ -121,16 +121,8 @@ pub fn srsf_cmp(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
     a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
 }
 
-/// Construct a policy by name (CLI/bench convenience).
-pub fn by_name(name: &str, cm: CommModel) -> Option<Box<dyn CommPolicy>> {
-    match name {
-        "srsf1" | "SRSF(1)" => Some(Box::new(SrsfCap { cap: 1 })),
-        "srsf2" | "SRSF(2)" => Some(Box::new(SrsfCap { cap: 2 })),
-        "srsf3" | "SRSF(3)" => Some(Box::new(SrsfCap { cap: 3 })),
-        "ada" | "adadual" | "Ada-SRSF" => Some(Box::new(AdaDual { model: cm })),
-        _ => None,
-    }
-}
+// Policy construction by name lives in `scenario::registry` (the unified
+// algorithm registry shared by the CLI, scenario files and the live gate).
 
 #[cfg(test)]
 mod tests {
@@ -213,15 +205,6 @@ mod tests {
         let (max, old) = view.max_tasks(&[0, 1]);
         assert_eq!(max, 2);
         assert_eq!(old.len(), 2);
-    }
-
-    #[test]
-    fn by_name_resolves_policies() {
-        let cm = CommModel::paper_10gbe();
-        for n in ["srsf1", "srsf2", "srsf3", "ada"] {
-            assert!(by_name(n, cm).is_some(), "{n}");
-        }
-        assert!(by_name("bogus", cm).is_none());
     }
 
     #[test]

@@ -10,10 +10,6 @@ use crate::sched::{srsf_cmp, Admission, CommPolicy, NetView};
 use crate::trace::JobSpec;
 
 const EPS: f64 = 1e-9;
-/// Transfers are "done" below this many bytes remaining. Sub-byte residue
-/// is floating-point noise; waiting for it to drain can deadlock once the
-/// residual drain time falls below one ulp of the simulation clock.
-const EPS_BYTES: f64 = 1e-3;
 
 /// How a transfer's rate reacts to contention changes mid-flight.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,6 +27,25 @@ pub enum Repricing {
     AtAdmission,
 }
 
+impl Repricing {
+    /// Canonical scenario-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Repricing::Dynamic => "dynamic",
+            Repricing::AtAdmission => "at-admission",
+        }
+    }
+
+    /// Parse the scenario-file spelling (also accepts the variant names).
+    pub fn parse(s: &str) -> Option<Repricing> {
+        match s {
+            "dynamic" | "Dynamic" | "exact" => Some(Repricing::Dynamic),
+            "at-admission" | "AtAdmission" | "paper" => Some(Repricing::AtAdmission),
+            _ => None,
+        }
+    }
+}
+
 /// Job priority rule used for queueing, per-GPU task selection and
 /// pending-communication ordering. The paper uses SRSF (Tiresias); FIFO
 /// and LAS are the classical baselines its related-work section contrasts.
@@ -44,7 +59,34 @@ pub enum JobPriority {
     Las,
 }
 
+impl JobPriority {
+    /// Canonical scenario-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobPriority::Srsf => "srsf",
+            JobPriority::Fifo => "fifo",
+            JobPriority::Las => "las",
+        }
+    }
+
+    /// Parse the scenario-file spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<JobPriority> {
+        match s.to_ascii_lowercase().as_str() {
+            "srsf" => Some(JobPriority::Srsf),
+            "fifo" => Some(JobPriority::Fifo),
+            "las" => Some(JobPriority::Las),
+            _ => None,
+        }
+    }
+
+    /// Every priority rule, in scenario-sweep order.
+    pub fn all() -> [JobPriority; 3] {
+        [JobPriority::Srsf, JobPriority::Fifo, JobPriority::Las]
+    }
+}
+
 /// Simulator configuration.
+#[derive(Clone, Debug)]
 pub struct SimConfig {
     pub cluster: ClusterSpec,
     pub comm: CommModel,

@@ -5,6 +5,7 @@
 //! Every option is named; values parse on demand with typed getters.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 #[derive(Clone, Debug)]
 pub struct Args {
@@ -14,15 +15,26 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("cannot parse --{key} value '{value}' as {ty}")]
     BadValue { key: String, value: String, ty: &'static str },
-    #[error("missing required option --{0}")]
     MissingRequired(String),
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} expects a value"),
+            CliError::BadValue { key, value, ty } => {
+                write!(f, "cannot parse --{key} value '{value}' as {ty}")
+            }
+            CliError::MissingRequired(k) => write!(f, "missing required option --{k}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of raw arguments (without argv[0]).

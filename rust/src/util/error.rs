@@ -1,0 +1,120 @@
+//! Minimal message-chain error type — in-repo substitute for `anyhow` and
+//! `thiserror` (offline registry; DESIGN.md §Substitutions).
+//!
+//! Any `std::error::Error` converts into [`Error`] through `?`; `err!` /
+//! `bail!` build ad-hoc errors from format strings; [`Context`] mirrors
+//! anyhow's `.context()` / `.with_context()` by prefixing the message chain.
+
+use std::fmt;
+
+/// A message-based error. Deliberately does NOT implement
+/// `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// impl below coherent with the reflexive `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prefix the message chain with higher-level context.
+    pub fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to a failing result, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = io_fail().context("loading config").unwrap_err();
+        assert!(e.to_string().starts_with("loading config: "), "{e}");
+        let e = io_fail().with_context(|| format!("attempt {}", 2)).unwrap_err();
+        assert!(e.to_string().starts_with("attempt 2: "), "{e}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = err!("bad value {} for {}", 7, "kappa");
+        assert_eq!(e.to_string(), "bad value 7 for kappa");
+        fn f() -> Result<()> {
+            bail!("nope: {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope: 1");
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = err!("x");
+        assert_eq!(format!("{e:?}"), format!("{e}"));
+    }
+}

@@ -19,12 +19,19 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     // ----- constructors ---------------------------------------------------
@@ -56,8 +63,13 @@ impl Json {
         }
     }
 
+    /// Integer view. Numbers are stored as f64, so only values up to 2^53
+    /// are exactly representable; larger ones are rejected rather than
+    /// silently rounded (a mangled seed would break run reproducibility).
     pub fn as_u64(&self) -> Option<u64> {
-        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as u64)
+        self.as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= 9_007_199_254_740_992.0)
+            .map(|x| x as u64)
     }
 
     pub fn as_usize(&self) -> Option<usize> {
@@ -92,6 +104,10 @@ impl Json {
 
     pub fn req_usize(&self, key: &str) -> Result<usize, String> {
         self.get(key).and_then(Json::as_usize).ok_or_else(|| format!("missing integer field '{key}'"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing integer field '{key}'"))
     }
 
     pub fn req_str(&self, key: &str) -> Result<&str, String> {
@@ -502,5 +518,13 @@ mod tests {
     fn integers_serialize_without_dot() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn u64_rejects_values_beyond_f64_exactness() {
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), Some(1 << 53));
+        assert_eq!(Json::Num(9.1e15).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
     }
 }

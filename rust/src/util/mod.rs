@@ -1,9 +1,10 @@
 //! In-repo substrates replacing crates the offline registry does not carry
-//! (`rand`, `serde_json`, `clap`, `criterion`, `proptest`) — see DESIGN.md
-//! §Substitutions.
+//! (`rand`, `serde_json`, `clap`, `criterion`, `proptest`, `anyhow`,
+//! `thiserror`) — see DESIGN.md §Substitutions.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,120 @@
+//! Scenario/Experiment API integration: the paper grid runs end-to-end
+//! from a single JSON artifact, parallel execution is byte-identical to
+//! serial, and scenario files round-trip through disk — the same path the
+//! `ddl-sched sweep --scenario FILE --threads N` CLI takes.
+
+use ddl_sched::prelude::*;
+
+/// A fast stand-in for the paper grid: same 4 x 4 placer x policy axes on
+/// a scaled-down workload so the whole test stays in the sub-second range.
+fn small_paper_grid() -> Experiment {
+    Experiment::paper_grid(Scenario::small("grid-test", 4, 4, 24))
+}
+
+#[test]
+fn paper_grid_runs_from_one_json_artifact() {
+    // Serialize the grid to its artifact form, re-load it, run it: exactly
+    // what the CLI does with a scenario file.
+    let artifact = small_paper_grid().to_json_text();
+    let exp = Experiment::from_text(&artifact).unwrap();
+    let records = exp.run(2).unwrap();
+    assert_eq!(records.len(), registry::PLACERS.len() * registry::POLICIES.len());
+    for r in &records {
+        assert_eq!(r.eval.jct.n, 24, "{} lost jobs", r.scenario.label());
+        assert!(r.eval.jct.mean > 0.0 && r.eval.jct.mean.is_finite());
+        assert!(r.eval.avg_gpu_util > 0.0 && r.eval.avg_gpu_util <= 1.0);
+    }
+    // Every placer x policy combination appears exactly once.
+    for placer in registry::PLACERS {
+        for policy in registry::POLICIES {
+            let n = records
+                .iter()
+                .filter(|r| r.scenario.placer == placer && r.scenario.policy == policy)
+                .count();
+            assert_eq!(n, 1, "{placer}/{policy}");
+        }
+    }
+}
+
+#[test]
+fn parallel_grid_is_byte_identical_to_serial() {
+    let exp = small_paper_grid();
+    let serial = exp.run(1).unwrap();
+    let parallel = exp.run(4).unwrap();
+    assert_eq!(records_to_json(&serial), records_to_json(&parallel));
+    assert_eq!(records_to_csv(&serial), records_to_csv(&parallel));
+}
+
+#[test]
+fn scenario_file_roundtrip_through_disk() {
+    let dir = std::env::temp_dir();
+    let scenario_path = dir.join("ddl_sched_it_scenario.json");
+    let s = Scenario::small("disk-roundtrip", 2, 2, 10);
+    std::fs::write(&scenario_path, s.to_json_text()).unwrap();
+    let loaded = Scenario::from_file(scenario_path.to_str().unwrap()).unwrap();
+    assert_eq!(loaded, s);
+    // A bare scenario file also loads as a single-run experiment.
+    let exp = Experiment::from_file(scenario_path.to_str().unwrap()).unwrap();
+    assert_eq!(exp, Experiment::single(s));
+    let records = exp.run(1).unwrap();
+    assert_eq!(records.len(), 1);
+    let _ = std::fs::remove_file(&scenario_path);
+}
+
+#[test]
+fn priority_axis_is_sweepable() {
+    // The SRSF/FIFO/LAS axis (sweep --what priority) runs and produces
+    // distinct schedules on a contended workload.
+    let exp = Experiment {
+        priorities: JobPriority::all().to_vec(),
+        ..Experiment::single(Scenario::small("priority", 2, 2, 20))
+    };
+    let records = exp.run(3).unwrap();
+    assert_eq!(records.len(), 3);
+    let srsf = &records[0];
+    let fifo = &records[1];
+    assert_eq!(srsf.scenario.priority, JobPriority::Srsf);
+    assert_eq!(fifo.scenario.priority, JobPriority::Fifo);
+    assert!(
+        (srsf.eval.jct.mean - fifo.eval.jct.mean).abs() > 1e-9,
+        "SRSF and FIFO produced identical schedules on a contended workload"
+    );
+}
+
+#[test]
+fn run_record_json_parses_back() {
+    let records = Experiment::single(Scenario::small("json", 2, 2, 8)).run(1).unwrap();
+    let text = records_to_json(&records);
+    let v = ddl_sched::util::json::Json::parse(&text).unwrap();
+    let arr = v.as_arr().unwrap();
+    assert_eq!(arr.len(), 1);
+    let scenario = Scenario::from_json(arr[0].get("scenario").unwrap()).unwrap();
+    assert_eq!(scenario, records[0].scenario);
+}
+
+#[test]
+fn committed_paper_grid_artifact_parses_and_expands() {
+    // The repo ships the paper grid as a scenario file; it must stay in
+    // sync with the schema (cargo runs integration tests from the package
+    // root, where scenarios/ lives).
+    let exp = Experiment::from_file("scenarios/paper_grid.json").unwrap();
+    assert_eq!(exp.base.name, "paper");
+    assert_eq!(exp.base.cluster.n_gpus(), 64);
+    let grid = exp.grid().unwrap();
+    assert_eq!(grid.len(), 16);
+}
+
+#[test]
+fn registry_matches_legacy_names_end_to_end() {
+    // The names the old placement::by_name / sched::by_name accepted keep
+    // resolving through the unified registry.
+    for name in ["rand", "RAND", "ff", "FF", "ls", "LS", "lwf", "LWF"] {
+        assert!(registry::make_placer(name, 1, 0).is_ok(), "{name}");
+    }
+    let cm = CommModel::paper_10gbe();
+    for name in ["srsf1", "SRSF(1)", "srsf2", "SRSF(2)", "srsf3", "SRSF(3)", "ada", "adadual"] {
+        assert!(registry::make_policy(name, cm).is_ok(), "{name}");
+    }
+    assert!(registry::make_placer("nope", 1, 0).is_err());
+    assert!(registry::make_policy("nope", cm).is_err());
+}

@@ -6,8 +6,8 @@ use ddl_sched::prelude::*;
 
 fn eval(placer_name: &str, policy_name: &str, jobs: &[JobSpec]) -> Evaluation {
     let cfg = SimConfig::paper();
-    let mut placer = placement::by_name(placer_name, 1, 7).unwrap();
-    let policy = sched::by_name(policy_name, cfg.comm).unwrap();
+    let mut placer = registry::make_placer(placer_name, 1, 7).unwrap();
+    let policy = registry::make_policy(policy_name, cfg.comm).unwrap();
     let res = sim::simulate(&cfg, &jobs.to_vec(), placer.as_mut(), policy.as_ref());
     Evaluation::from_sim(&format!("{placer_name}/{policy_name}"), &res)
 }
