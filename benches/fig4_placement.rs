@@ -31,7 +31,7 @@ fn main() {
     );
 
     let mut avg_jcts = Vec::new();
-    for name in registry::PLACERS {
+    for name in registry::PAPER_PLACERS {
         let scenario = Scenario { placer: name.to_string(), ..base.clone() };
         // Time the full scenario run (the sim_hotpath bench dives deeper).
         let timing = bench(&format!("sim/{name}"), 1, 3, || {

@@ -23,7 +23,7 @@ fn main() {
     let n_runs = exp.grid().unwrap().len();
     println!(
         "paper grid: {n_runs} runs ({} placers x {} policies), {} bytes of scenario JSON\n",
-        registry::PLACERS.len(),
+        registry::PAPER_PLACERS.len(),
         registry::POLICIES.len(),
         artifact.len()
     );

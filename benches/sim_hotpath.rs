@@ -1,7 +1,8 @@
 //! L3 performance benchmark: simulator throughput (events/second) on the
-//! paper workload and scaled variants, plus micro-benchmarks of the hot
-//! helpers (placement, admission, two-task oracle). This is the §Perf
-//! harness for EXPERIMENTS.md — run before/after each optimisation.
+//! paper workload and scaled variants (flat and two-tier fabrics), plus
+//! micro-benchmarks of the hot helpers (placement, admission, two-task
+//! oracle). This is the §Perf harness for docs/EXPERIMENTS.md — run
+//! before/after each optimisation (CI smoke-runs it in release mode).
 
 use ddl_sched::prelude::*;
 use ddl_sched::util::bench::bench;
@@ -33,6 +34,27 @@ fn main() {
             format!("{:.2}", events as f64 / timing.mean_s / 1e6),
         ]);
     }
+    // The link-indexed fabric path: same paper workload on a 4:1
+    // oversubscribed two-tier fabric with rack-locality placement.
+    {
+        let mut cfg2 = SimConfig::paper();
+        cfg2.topology = TopologySpec::TwoTier { rack_size: 4, oversubscription: 4.0 };
+        let jobs = trace::generate(&TraceConfig::paper_160());
+        let mut events = 0u64;
+        let label = "160 jobs (2-tier 4:1)";
+        let timing = bench(label, 1, 3, || {
+            let mut placer = RackLwfPlacer::new(1, 4);
+            let policy = AdaDual { model: cfg2.comm };
+            let res = sim::simulate(&cfg2, &jobs, &mut placer, &policy);
+            events = res.n_events;
+        });
+        t.row(&[
+            label.to_string(),
+            format!("{events}"),
+            format!("{:.1}", timing.mean_s * 1e3),
+            format!("{:.2}", events as f64 / timing.mean_s / 1e6),
+        ]);
+    }
     t.print();
 
     // ---- micro benches -----------------------------------------------------
@@ -55,14 +77,14 @@ fn main() {
     });
     t.row(&[timing.name.clone(), format!("{:.2} us", timing.mean_s * 1e6)]);
 
-    let per_server: Vec<Vec<(usize, f64)>> = vec![vec![(1, 2.0e8)]; 16];
+    let per_link: Vec<Vec<(usize, f64)>> = vec![vec![(1, 2.0e8)]; 16];
     let policy = AdaDual { model: cm };
     let timing = bench("AdaDUAL admission decision", 10, 10000, || {
         use ddl_sched::sched::{CommPolicy, NetView};
         std::hint::black_box(policy.admit(
             1.0e8,
             &[0, 3, 7, 12],
-            &NetView { per_server: &per_server },
+            &NetView { per_link: &per_link },
         ));
     });
     t.row(&[timing.name.clone(), format!("{:.3} us", timing.mean_s * 1e6)]);

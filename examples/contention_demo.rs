@@ -47,6 +47,7 @@ fn main() {
     let cfg = SimConfig {
         cluster: ClusterSpec::tiny(4, 4),
         comm: CommModel::paper_10gbe(),
+        topology: TopologySpec::Flat,
         repricing: sim::Repricing::Dynamic,
         priority: sim::JobPriority::Srsf,
         log_events: false,

@@ -20,7 +20,7 @@ fn main() {
         ..Scenario::paper()
     };
     let exp = Experiment {
-        placers: registry::PLACERS.iter().map(|s| s.to_string()).collect(),
+        placers: registry::PAPER_PLACERS.iter().map(|s| s.to_string()).collect(),
         ..Experiment::single(base)
     };
     let records = exp.run(threads).unwrap();

@@ -62,6 +62,33 @@ impl ClusterSpec {
         servers
     }
 
+    // -- rack awareness (the `net` two-tier fabric and rack-locality
+    // placement group servers into racks of `rack_size`; the spec itself
+    // stays rack-free so flat scenario files are unchanged) --------------
+
+    /// `rack_size` clamped to something indexable on this cluster
+    /// (`usize::MAX` — "no rack tier" — becomes one all-covering rack).
+    fn clamped_rack(&self, rack_size: usize) -> usize {
+        rack_size.clamp(1, self.n_servers.max(1))
+    }
+
+    /// Rack of `server` when servers are grouped into racks of `rack_size`.
+    pub fn rack_of(&self, server: ServerId, rack_size: usize) -> usize {
+        server / self.clamped_rack(rack_size)
+    }
+
+    /// Number of racks of `rack_size` servers (the last may be partial).
+    pub fn n_racks(&self, rack_size: usize) -> usize {
+        self.n_servers.div_ceil(self.clamped_rack(rack_size))
+    }
+
+    /// Servers in `rack` under racks of `rack_size`.
+    pub fn servers_of_rack(&self, rack: usize, rack_size: usize) -> std::ops::Range<ServerId> {
+        let rs = self.clamped_rack(rack_size);
+        let start = (rack * rs).min(self.n_servers);
+        start..((rack + 1) * rs).min(self.n_servers)
+    }
+
     /// Scenario-file serialization (see docs/SCENARIOS.md).
     pub fn to_json(&self) -> Json {
         Json::obj()
@@ -196,6 +223,23 @@ mod tests {
         st.allocate(&[0], 1e9, 10.0);
         st.drain_load(&[0], 25.0);
         assert_eq!(st.gpus[0].load, 0.0);
+    }
+
+    #[test]
+    fn rack_grouping() {
+        let spec = ClusterSpec::tiny(5, 2);
+        assert_eq!(spec.n_racks(2), 3); // {0,1} {2,3} {4}
+        assert_eq!(spec.rack_of(0, 2), 0);
+        assert_eq!(spec.rack_of(3, 2), 1);
+        assert_eq!(spec.rack_of(4, 2), 2);
+        assert_eq!(spec.servers_of_rack(1, 2).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(spec.servers_of_rack(2, 2).collect::<Vec<_>>(), vec![4]);
+        // No rack tier: everything is one rack.
+        assert_eq!(spec.n_racks(usize::MAX), 1);
+        assert_eq!(spec.servers_of_rack(0, usize::MAX).count(), 5);
+        assert_eq!(spec.rack_of(4, usize::MAX), 0);
+        // Out-of-range rack index yields an empty range, not a panic.
+        assert_eq!(spec.servers_of_rack(9, 2).count(), 0);
     }
 
     #[test]

@@ -26,8 +26,11 @@ struct Flight {
 }
 
 struct GateState {
-    /// Active flight seqs per server.
-    per_server: Vec<Vec<usize>>,
+    /// Active flight seqs per fabric link. The live testbed is a single
+    /// non-blocking switch (`net::TopologySpec::Flat`), where link id ==
+    /// server id — so the gate tracks one NIC link per server, exactly
+    /// like the simulator's flat fabric.
+    per_link: Vec<Vec<usize>>,
     flights: Vec<Flight>,
     admitted_total: usize,
     contended_total: usize,
@@ -58,7 +61,7 @@ impl NetGate {
         let policy = registry::make_policy(policy, comm)?;
         Ok(NetGate {
             state: Mutex::new(GateState {
-                per_server: vec![Vec::new(); n_servers],
+                per_link: vec![Vec::new(); n_servers],
                 flights: Vec::new(),
                 admitted_total: 0,
                 contended_total: 0,
@@ -86,7 +89,7 @@ impl NetGate {
         let mut st = self.state.lock().unwrap();
         loop {
             let view: Vec<Vec<(usize, f64)>> = st
-                .per_server
+                .per_link
                 .iter()
                 .map(|ids| {
                     ids.iter()
@@ -97,11 +100,11 @@ impl NetGate {
                         .collect()
                 })
                 .collect();
-            let net = NetView { per_server: &view };
+            let net = NetView { per_link: &view };
             if self.policy.admit(msg_bytes, servers, &net) == Admission::Start {
                 let k = servers
                     .iter()
-                    .map(|&s| st.per_server[s].len())
+                    .map(|&s| st.per_link[s].len())
                     .max()
                     .unwrap_or(0)
                     + 1;
@@ -112,7 +115,7 @@ impl NetGate {
                     k_at_admit: k,
                 });
                 for &s in servers {
-                    st.per_server[s].push(seq);
+                    st.per_link[s].push(seq);
                 }
                 st.admitted_total += 1;
                 if k > 1 {
@@ -136,7 +139,7 @@ impl NetGate {
     pub fn release(&self, token: GateToken) {
         let mut st = self.state.lock().unwrap();
         for &s in &token.servers {
-            st.per_server[s].retain(|&x| x != token.seq);
+            st.per_link[s].retain(|&x| x != token.seq);
         }
         st.flights.retain(|f| f.seq != token.seq);
         drop(st);

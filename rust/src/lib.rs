@@ -6,7 +6,9 @@
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: the DAG job
 //!   model ([`dag`]), the Eq (5) contention network model ([`model`]),
-//!   LWF-κ placement ([`placement`]), AdaDUAL/Ada-SRSF communication
+//!   the link-level fabric topology ([`net`]: flat / two-tier
+//!   oversubscribed / heterogeneous presets), LWF-κ and rack-locality
+//!   placement ([`placement`]), AdaDUAL/Ada-SRSF communication
 //!   scheduling ([`sched`]), the event-driven cluster simulator ([`sim`]),
 //!   the evaluation metrics ([`metrics`]) and the declarative
 //!   scenario/experiment API ([`scenario`]). A live multi-job training
@@ -40,6 +42,7 @@ pub mod coordinator;
 pub mod dag;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod placement;
 pub mod runtime;
 pub mod scenario;
@@ -53,8 +56,10 @@ pub mod prelude {
     pub use crate::cluster::{ClusterSpec, ClusterState};
     pub use crate::metrics::{self, Evaluation};
     pub use crate::model::{self, AllReduceAlgo, CommModel, DnnModel, PerfModel};
+    pub use crate::net::{self, LinkId, Topology, TopologySpec};
     pub use crate::placement::{
-        self, FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RandomPlacer,
+        self, FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RackLwfPlacer,
+        RandomPlacer,
     };
     pub use crate::scenario::{
         self, records_to_csv, records_to_json, registry, Experiment, RunRecord, Scenario,

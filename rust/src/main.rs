@@ -57,20 +57,22 @@ fn print_help() {
          USAGE: ddl-sched <subcommand> [--options]\n\
          \n\
          A run is described by a *scenario*: a JSON file naming the cluster,\n\
-         comm model, trace source, placer, kappa, policy, priority, repricing\n\
-         and seed (schema: docs/SCENARIOS.md). A *sweep* expands a scenario\n\
-         across grid axes and runs it on worker threads.\n\
+         comm model, fabric topology (flat | two-tier | heterogeneous),\n\
+         trace source, placer, kappa, policy, priority, repricing and seed\n\
+         (schema: docs/SCENARIOS.md). A *sweep* expands a scenario across\n\
+         grid axes and runs it on worker threads.\n\
          \n\
          SUBCOMMANDS\n\
          \x20 scenario-gen [--grid] [--out scenario.json]\n\
          \x20            emit the paper scenario (or the full placer x policy\n\
          \x20            grid with --grid) as a starting-point JSON file\n\
          \x20 trace-gen  --jobs N --seed S [--out trace.json]   generate a workload\n\
-         \x20 simulate   [--scenario F] [--trace F] [--placer lwf|ff|ls|rand]\n\
+         \x20 simulate   [--scenario F] [--trace F] [--placer lwf|lwf-rack|ff|ls|rand]\n\
          \x20            [--kappa K] [--policy ada|srsf1|srsf2|srsf3]\n\
          \x20            [--priority srsf|fifo|las] [--repricing at-admission|dynamic]\n\
-         \x20            [--seed S] [--jobs N]                  run one scenario\n\
-         \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority]\n\
+         \x20            [--oversub R] [--rack-size N] [--seed S] [--jobs N]\n\
+         \x20                                                   run one scenario\n\
+         \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority|oversub]\n\
          \x20            [--grid] [--threads N] [--out-json F] [--out-csv F]\n\
          \x20            [--jobs N] [--seed S]                  run a scenario grid\n\
          \x20 e2e        [--jobs N] [--steps N] [--workers W] [--no-pallas]\n\
@@ -81,7 +83,9 @@ fn print_help() {
          EXAMPLES\n\
          \x20 ddl-sched scenario-gen --grid --out grid.json\n\
          \x20 ddl-sched sweep --scenario grid.json --threads 8 --out-csv grid.csv\n\
-         \x20 ddl-sched simulate --placer lwf --policy ada --jobs 160"
+         \x20 ddl-sched sweep --scenario scenarios/oversub_sweep.json --threads 8\n\
+         \x20 ddl-sched simulate --placer lwf --policy ada --jobs 160\n\
+         \x20 ddl-sched simulate --placer lwf-rack --oversub 4 --rack-size 4"
     );
 }
 
@@ -109,6 +113,19 @@ fn scenario_from_flags(args: &Args) -> Result<Scenario> {
     if let Some(r) = args.get("repricing") {
         s.repricing = sim::Repricing::parse(r)
             .ok_or_else(|| err!("unknown repricing '{r}' (at-admission|dynamic)"))?;
+    }
+    // --oversub R puts the run on a two-tier fabric (racks of --rack-size
+    // servers, default net::DEFAULT_RACK_SIZE) with an R:1 core.
+    if args.get("rack-size").is_some() && args.get("oversub").is_none() {
+        bail!("--rack-size only applies to a two-tier fabric; add --oversub R");
+    }
+    if args.get("oversub").is_some() {
+        let topo = net::TopologySpec::TwoTier {
+            rack_size: args.usize_or("rack-size", net::DEFAULT_RACK_SIZE)?,
+            oversubscription: args.f64_or("oversub", 1.0)?,
+        };
+        topo.validate(&s.cluster).map_err(ddl_sched::util::error::Error::msg)?;
+        s.topology = topo;
     }
     s.trace = if let Some(path) = args.get("trace") {
         TraceSource::File(path.to_string())
@@ -188,13 +205,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             exp = Experiment::paper_grid(exp.base);
         } else if let Some(what) = what {
             match what {
-                "placer" => exp.placers = registry::PLACERS.iter().map(|s| s.to_string()).collect(),
+                "placer" => {
+                    exp.placers =
+                        registry::PAPER_PLACERS.iter().map(|s| s.to_string()).collect()
+                }
                 "policy" => {
                     exp.policies = registry::POLICIES.iter().map(|s| s.to_string()).collect()
                 }
                 "kappa" => exp.kappas = vec![1, 2, 4, 8, 16],
                 "priority" => exp.priorities = sim::JobPriority::all().to_vec(),
-                other => bail!("unknown sweep '{other}' (placer|policy|kappa|priority)"),
+                "oversub" => exp.oversubs = vec![2.0, 4.0, 8.0],
+                other => {
+                    bail!("unknown sweep '{other}' (placer|policy|kappa|priority|oversub)")
+                }
             }
         }
     }

@@ -25,10 +25,18 @@ pub struct CommModel {
 
 impl CommModel {
     /// The paper's fitted constants (Fig 2a) with η fitted from the Fig 2b
-    /// k-way sweep (see `fit_eta` + EXPERIMENTS.md §Fig2): η ≈ 0.3·b.
+    /// k-way sweep (see `fit_eta` + docs/EXPERIMENTS.md §Fig2): η ≈ 0.3·b.
     pub fn paper_10gbe() -> CommModel {
         let b = 8.53e-10;
         CommModel { a: 6.69e-4, b, eta: 0.3 * b }
+    }
+
+    /// Per-byte constants scaled by `factor`, latency unchanged — how the
+    /// `net` fabric derives an oversubscribed core uplink (factor = the
+    /// oversubscription ratio, draining bytes `factor`× slower) or a
+    /// faster NIC grade (factor < 1) from a base model.
+    pub fn scaled(&self, factor: f64) -> CommModel {
+        CommModel { a: self.a, b: self.b * factor, eta: self.eta * factor }
     }
 
     /// Eq (2): contention-free all-reduce of `m` bytes.

@@ -1,0 +1,399 @@
+//! Link-level network fabric model — the topology-aware generalisation of
+//! the paper's flat per-server contention bookkeeping.
+//!
+//! The paper's testbed (§V-A) is 16 servers behind one non-blocking
+//! switch, so its Eq (5) contention level is simply "active communication
+//! tasks per server NIC". That stops being true the moment the cluster
+//! has racks with oversubscribed core uplinks or mixed-bandwidth NICs —
+//! the regimes where placement sensitivity actually dominates JCT. This
+//! module models the fabric as a set of [`Link`]s, each with its own
+//! [`CommModel`] parameters; an All-Reduce spanning a server set crosses
+//! `links_between(servers)` and its effective contention level k and
+//! per-byte drain time are the **max over the links it crosses** (the
+//! bottleneck link), not the max over server NIC counts.
+//!
+//! Presets ([`TopologySpec`], the scenario-file `topology` section —
+//! docs/SCENARIOS.md):
+//!
+//! * `flat` — one NIC link per server, all with the base comm model.
+//!   `LinkId` == `ServerId`, so contention counts reduce *exactly* to the
+//!   paper's per-server counts: a flat scenario reproduces the seed
+//!   engine bit-for-bit (property-tested in `sim::tests`).
+//! * `two-tier` — racks of `rack_size` servers; cross-rack transfers
+//!   additionally cross each involved rack's core uplink, whose per-byte
+//!   constants are the base model's scaled by the `oversubscription`
+//!   ratio (a 4:1 oversubscribed core drains bytes 4x slower).
+//! * `heterogeneous` — flat structure with explicit per-server NIC
+//!   [`CommModel`]s (mixed 10/25/100 GbE fleets).
+
+use crate::cluster::{ClusterSpec, ServerId};
+use crate::model::CommModel;
+use crate::util::json::Json;
+
+/// Index into a [`Topology`]'s link table. In a `flat` fabric link ids
+/// coincide with server ids; rack uplinks are appended after the NICs.
+pub type LinkId = usize;
+
+/// Rack width used when an oversubscription sweep starts from a rackless
+/// base topology: the paper's 16 servers split into 4 racks of 4.
+pub const DEFAULT_RACK_SIZE: usize = 4;
+
+/// Declarative topology description — what scenario files carry.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum TopologySpec {
+    /// One non-blocking switch (the paper's testbed). The default.
+    #[default]
+    Flat,
+    /// Racks of `rack_size` servers behind a shared core with the given
+    /// downlink:uplink `oversubscription` ratio (1.0 = non-blocking).
+    TwoTier { rack_size: usize, oversubscription: f64 },
+    /// Flat structure, but each server NIC has its own comm model
+    /// (`nics[s]` is server `s`'s link parameters).
+    Heterogeneous { nics: Vec<CommModel> },
+}
+
+impl TopologySpec {
+    /// Canonical scenario-file preset name.
+    pub fn preset(&self) -> &'static str {
+        match self {
+            TopologySpec::Flat => "flat",
+            TopologySpec::TwoTier { .. } => "two-tier",
+            TopologySpec::Heterogeneous { .. } => "heterogeneous",
+        }
+    }
+
+    pub fn is_flat(&self) -> bool {
+        matches!(self, TopologySpec::Flat)
+    }
+
+    /// Servers per rack, for rack-locality-aware placement. Fabrics
+    /// without a rack tier report `usize::MAX` ("everything is one
+    /// rack"); consumers clamp to the cluster size.
+    pub fn rack_size(&self) -> usize {
+        match self {
+            TopologySpec::TwoTier { rack_size, .. } => *rack_size,
+            _ => usize::MAX,
+        }
+    }
+
+    /// Method-label suffix for non-default fabrics (`None` for flat, so
+    /// paper labels are untouched).
+    pub fn label(&self) -> Option<String> {
+        match self {
+            TopologySpec::Flat => None,
+            TopologySpec::TwoTier { oversubscription, .. } => {
+                Some(format!("2tier-{oversubscription}:1"))
+            }
+            TopologySpec::Heterogeneous { .. } => Some("hetero".to_string()),
+        }
+    }
+
+    /// Validate against the cluster this topology will be built over.
+    pub fn validate(&self, cluster: &ClusterSpec) -> Result<(), String> {
+        match self {
+            TopologySpec::Flat => Ok(()),
+            TopologySpec::TwoTier { rack_size, oversubscription } => {
+                if *rack_size == 0 {
+                    return Err("two-tier topology needs rack_size >= 1".to_string());
+                }
+                if !oversubscription.is_finite() || *oversubscription < 1.0 {
+                    return Err(format!(
+                        "invalid oversubscription {oversubscription}: must be a finite ratio >= 1"
+                    ));
+                }
+                Ok(())
+            }
+            TopologySpec::Heterogeneous { nics } => {
+                if nics.len() != cluster.n_servers {
+                    return Err(format!(
+                        "heterogeneous topology needs one NIC model per server: \
+                         got {} for {} servers",
+                        nics.len(),
+                        cluster.n_servers
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Scenario-file serialization (docs/SCENARIOS.md §Topology).
+    pub fn to_json(&self) -> Json {
+        match self {
+            TopologySpec::Flat => Json::obj().set("preset", "flat"),
+            TopologySpec::TwoTier { rack_size, oversubscription } => Json::obj()
+                .set("preset", "two-tier")
+                .set("rack_size", *rack_size)
+                .set("oversubscription", *oversubscription),
+            TopologySpec::Heterogeneous { nics } => Json::obj()
+                .set("preset", "heterogeneous")
+                .set("nics", Json::Arr(nics.iter().map(CommModel::to_json).collect())),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<TopologySpec, String> {
+        match v.req_str("preset")? {
+            "flat" => Ok(TopologySpec::Flat),
+            "two-tier" | "two_tier" | "2tier" => Ok(TopologySpec::TwoTier {
+                rack_size: v.req_usize("rack_size")?,
+                oversubscription: v.req_f64("oversubscription")?,
+            }),
+            "heterogeneous" | "hetero" => {
+                let arr = v
+                    .get("nics")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "heterogeneous topology needs a 'nics' array".to_string())?;
+                Ok(TopologySpec::Heterogeneous {
+                    nics: arr.iter().map(CommModel::from_json).collect::<Result<_, _>>()?,
+                })
+            }
+            other => {
+                Err(format!("unknown topology preset '{other}' (flat|two-tier|heterogeneous)"))
+            }
+        }
+    }
+}
+
+/// What a link physically is (for diagnostics and tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Server NIC. `LinkId` == `ServerId` for these.
+    Nic(ServerId),
+    /// Shared rack-to-core uplink.
+    RackUplink(usize),
+}
+
+/// One physical link with its own Eq (2)/(5) parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Link {
+    pub kind: LinkKind,
+    pub model: CommModel,
+}
+
+/// A built fabric: resolves the server set of a transfer to the links it
+/// crosses. Construction validates the spec (`Scenario` loading validates
+/// earlier, so scenario-driven runs never hit the error path here).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n_servers: usize,
+    /// Servers per rack; `n_servers` when the fabric has no rack tier.
+    rack_size: usize,
+    /// Whether rack uplinks exist (two-tier).
+    has_uplinks: bool,
+    /// NIC links `[0, n_servers)`, then rack uplinks.
+    links: Vec<Link>,
+}
+
+impl Topology {
+    pub fn build(
+        cluster: &ClusterSpec,
+        base: &CommModel,
+        spec: &TopologySpec,
+    ) -> Result<Topology, String> {
+        spec.validate(cluster)?;
+        let n = cluster.n_servers;
+        let mut links: Vec<Link> =
+            (0..n).map(|s| Link { kind: LinkKind::Nic(s), model: *base }).collect();
+        match spec {
+            TopologySpec::Flat => Ok(Topology {
+                n_servers: n,
+                rack_size: n.max(1),
+                has_uplinks: false,
+                links,
+            }),
+            TopologySpec::TwoTier { rack_size, oversubscription } => {
+                let rs = (*rack_size).clamp(1, n.max(1));
+                let up = base.scaled(*oversubscription);
+                for r in 0..cluster.n_racks(rs) {
+                    links.push(Link { kind: LinkKind::RackUplink(r), model: up });
+                }
+                Ok(Topology { n_servers: n, rack_size: rs, has_uplinks: true, links })
+            }
+            TopologySpec::Heterogeneous { nics } => {
+                for (s, m) in nics.iter().enumerate() {
+                    links[s].model = *m;
+                }
+                Ok(Topology {
+                    n_servers: n,
+                    rack_size: n.max(1),
+                    has_uplinks: false,
+                    links,
+                })
+            }
+        }
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn link(&self, l: LinkId) -> &Link {
+        &self.links[l]
+    }
+
+    /// Eq (2)/(5) parameters of link `l`.
+    pub fn link_model(&self, l: LinkId) -> &CommModel {
+        &self.links[l].model
+    }
+
+    pub fn rack_of(&self, server: ServerId) -> usize {
+        server / self.rack_size
+    }
+
+    /// Links crossed by an All-Reduce spanning `servers` (the sorted,
+    /// deduped set from `ClusterSpec::servers_of`): every server's NIC,
+    /// plus — when the transfer leaves a rack — each involved rack's core
+    /// uplink. In a flat fabric this is exactly `servers`, which is what
+    /// makes the flat preset reproduce the seed per-server bookkeeping.
+    pub fn links_between(&self, servers: &[ServerId]) -> Vec<LinkId> {
+        let mut out: Vec<LinkId> = servers.to_vec();
+        if self.has_uplinks && !servers.is_empty() {
+            let mut racks: Vec<usize> = servers.iter().map(|&s| self.rack_of(s)).collect();
+            racks.sort_unstable();
+            racks.dedup();
+            if racks.len() > 1 {
+                for r in racks {
+                    out.push(self.n_servers + r);
+                }
+            }
+        }
+        out
+    }
+
+    /// Worst-case (idle-fabric) latency over a link set: the max Eq (2)
+    /// `a` among the crossed links. Uniform fabrics reduce to the base
+    /// model's `a` exactly.
+    pub fn latency_over(&self, links: &[LinkId]) -> f64 {
+        links.iter().map(|&l| self.links[l].model.a).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> CommModel {
+        CommModel::paper_10gbe()
+    }
+
+    fn cluster(n: usize) -> ClusterSpec {
+        ClusterSpec::tiny(n, 4)
+    }
+
+    #[test]
+    fn flat_links_are_server_nics() {
+        let t = Topology::build(&cluster(4), &base(), &TopologySpec::Flat).unwrap();
+        assert_eq!(t.n_links(), 4);
+        assert_eq!(t.links_between(&[1, 3]), vec![1, 3]);
+        assert_eq!(t.links_between(&[0]), vec![0]);
+        assert_eq!(t.link(2).kind, LinkKind::Nic(2));
+        assert_eq!(*t.link_model(2), base());
+    }
+
+    #[test]
+    fn two_tier_within_rack_stays_off_the_core() {
+        let spec = TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 };
+        let t = Topology::build(&cluster(4), &base(), &spec).unwrap();
+        assert_eq!(t.n_links(), 6); // 4 NICs + 2 rack uplinks
+        // Servers 0,1 share rack 0: NICs only.
+        assert_eq!(t.links_between(&[0, 1]), vec![0, 1]);
+        // Servers 1,2 span racks 0 and 1: NICs + both uplinks.
+        assert_eq!(t.links_between(&[1, 2]), vec![1, 2, 4, 5]);
+        assert_eq!(t.link(4).kind, LinkKind::RackUplink(0));
+    }
+
+    #[test]
+    fn two_tier_uplink_is_oversubscribed() {
+        let spec = TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 };
+        let t = Topology::build(&cluster(4), &base(), &spec).unwrap();
+        let nic = t.link_model(0);
+        let up = t.link_model(4);
+        assert_eq!(up.a, nic.a);
+        assert_eq!(up.b, 4.0 * nic.b);
+        assert_eq!(up.eta, 4.0 * nic.eta);
+    }
+
+    #[test]
+    fn two_tier_partial_last_rack() {
+        let spec = TopologySpec::TwoTier { rack_size: 2, oversubscription: 2.0 };
+        let t = Topology::build(&cluster(5), &base(), &spec).unwrap();
+        assert_eq!(t.n_links(), 5 + 3); // racks {0,1} {2,3} {4}
+        assert_eq!(t.rack_of(4), 2);
+        assert_eq!(t.links_between(&[3, 4]), vec![3, 4, 5 + 1, 5 + 2]);
+    }
+
+    #[test]
+    fn heterogeneous_keeps_per_server_models() {
+        let slow = base();
+        let fast = base().scaled(1.0 / 4.0);
+        let spec = TopologySpec::Heterogeneous { nics: vec![slow, fast] };
+        let t = Topology::build(&cluster(2), &base(), &spec).unwrap();
+        assert_eq!(t.links_between(&[0, 1]), vec![0, 1]);
+        assert_eq!(*t.link_model(0), slow);
+        assert_eq!(*t.link_model(1), fast);
+    }
+
+    #[test]
+    fn latency_over_uniform_links_is_base_latency() {
+        let t = Topology::build(&cluster(4), &base(), &TopologySpec::Flat).unwrap();
+        assert_eq!(t.latency_over(&[0, 2, 3]), base().a);
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let c = cluster(4);
+        let e = TopologySpec::TwoTier { rack_size: 0, oversubscription: 2.0 }
+            .validate(&c)
+            .unwrap_err();
+        assert!(e.contains("rack_size"), "{e}");
+        for bad in [0.5, 0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let e = TopologySpec::TwoTier { rack_size: 2, oversubscription: bad }
+                .validate(&c)
+                .unwrap_err();
+            assert!(e.contains("oversubscription"), "{e}");
+        }
+        let e = TopologySpec::Heterogeneous { nics: vec![base(); 3] }
+            .validate(&c)
+            .unwrap_err();
+        assert!(e.contains("one NIC model per server"), "{e}");
+        assert!(TopologySpec::Flat.validate(&c).is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_all_presets() {
+        let specs = [
+            TopologySpec::Flat,
+            TopologySpec::TwoTier { rack_size: 4, oversubscription: 8.0 },
+            TopologySpec::Heterogeneous { nics: vec![base(), base().scaled(2.5)] },
+        ];
+        for spec in specs {
+            let back = TopologySpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, back);
+        }
+    }
+
+    #[test]
+    fn json_rejects_unknown_preset() {
+        let v = Json::obj().set("preset", "dragonfly");
+        let e = TopologySpec::from_json(&v).unwrap_err();
+        assert!(e.contains("unknown topology preset 'dragonfly'"), "{e}");
+    }
+
+    #[test]
+    fn rack_size_accessor() {
+        assert_eq!(TopologySpec::Flat.rack_size(), usize::MAX);
+        assert_eq!(
+            TopologySpec::TwoTier { rack_size: 8, oversubscription: 2.0 }.rack_size(),
+            8
+        );
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(TopologySpec::Flat.label(), None);
+        assert_eq!(
+            TopologySpec::TwoTier { rack_size: 4, oversubscription: 4.0 }.label().unwrap(),
+            "2tier-4:1"
+        );
+    }
+}

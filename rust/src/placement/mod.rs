@@ -5,11 +5,14 @@
 //! * LS   — List-Scheduling: the n globally least-loaded feasible GPUs
 //! * LWF-κ — Algorithm 1: LS for jobs needing ≤ κ GPUs; for bigger jobs,
 //!   sort servers by total load and fill server-by-server (consolidation)
+//! * LWF-rack — our extension for the two-tier fabric (`net`): the same
+//!   consolidation idea one level up — fill rack-by-rack before
+//!   server-by-server, minimising core-uplink crossings
 //!
 //! All placers see the same `ClusterState` (per-GPU load `L_g`, free
 //! memory) and must return exactly `n_gpus` distinct feasible GPUs or None.
 
-use crate::cluster::{ClusterState, GpuId};
+use crate::cluster::{ClusterState, GpuId, ServerId};
 use crate::trace::JobSpec;
 use crate::util::rng::Pcg;
 
@@ -163,6 +166,80 @@ impl Placer for LwfPlacer {
     }
 }
 
+// ---------------------------------------------------------------------------
+
+/// LWF-rack: rack-locality-aware LWF. Jobs needing ≤ κ GPUs behave like
+/// LS (they rarely cross servers at all); bigger jobs fill rack-by-rack —
+/// racks ordered by total remaining workload, servers within a rack by
+/// load, GPUs within a server by load — so a job lands in as few racks as
+/// possible (fewest oversubscribed core-uplink crossings) before it lands
+/// in as few servers as possible. On a rackless fabric
+/// (`rack_size >= n_servers`, e.g. `TopologySpec::Flat.rack_size()`)
+/// everything is one rack and the ordering degenerates to LWF's.
+pub struct RackLwfPlacer {
+    pub kappa: usize,
+    /// Servers per rack; clamped to the cluster size at decision time.
+    pub rack_size: usize,
+}
+
+impl RackLwfPlacer {
+    pub fn new(kappa: usize, rack_size: usize) -> RackLwfPlacer {
+        RackLwfPlacer { kappa, rack_size }
+    }
+}
+
+impl Placer for RackLwfPlacer {
+    fn name(&self) -> &'static str {
+        "LWF-rack"
+    }
+
+    fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>> {
+        let n = job.n_gpus;
+        if n <= self.kappa {
+            return ListSchedulingPlacer.place(job, state);
+        }
+        let spec = state.spec;
+        let rack_load = |r: usize| -> f64 {
+            spec.servers_of_rack(r, self.rack_size).map(|s| state.server_load(s)).sum()
+        };
+        let mut racks: Vec<usize> = (0..spec.n_racks(self.rack_size)).collect();
+        racks.sort_by(|&a, &b| {
+            rack_load(a).partial_cmp(&rack_load(b)).unwrap().then(a.cmp(&b))
+        });
+        let mut chosen: Vec<GpuId> = Vec::with_capacity(n);
+        for r in racks {
+            let mut servers: Vec<ServerId> = spec.servers_of_rack(r, self.rack_size).collect();
+            servers.sort_by(|&a, &b| {
+                state
+                    .server_load(a)
+                    .partial_cmp(&state.server_load(b))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            for s in servers {
+                let mut gpus: Vec<GpuId> = spec
+                    .gpus_of(s)
+                    .filter(|&g| state.fits(g, job.mem_bytes()))
+                    .collect();
+                gpus.sort_by(|&a, &b| {
+                    state.gpus[a]
+                        .load
+                        .partial_cmp(&state.gpus[b].load)
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                for g in gpus {
+                    chosen.push(g);
+                    if chosen.len() == n {
+                        return Some(chosen);
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
 // Placer construction by name lives in `scenario::registry` (the unified
 // algorithm registry shared by the CLI, scenario files and benches).
 
@@ -265,9 +342,55 @@ mod tests {
             Box::new(FirstFitPlacer),
             Box::new(ListSchedulingPlacer),
             Box::new(LwfPlacer::new(1)),
+            Box::new(RackLwfPlacer::new(1, 2)),
         ] {
             assert!(placer.place(&j, &st).is_none(), "{}", placer.name());
         }
+    }
+
+    #[test]
+    fn rack_lwf_small_job_acts_like_ls() {
+        let mut st = state();
+        st.allocate(&[0], 1e9, 10.0);
+        let rack = RackLwfPlacer::new(2, 2).place(&job(2), &st).unwrap();
+        let ls = ListSchedulingPlacer.place(&job(2), &st).unwrap();
+        assert_eq!(rack, ls);
+    }
+
+    #[test]
+    fn rack_lwf_consolidates_into_one_rack() {
+        // 4 servers x 4 GPUs in racks of 2. An 8-GPU job fits one rack;
+        // plain LWF would take the two globally lightest servers even if
+        // they straddle racks.
+        let mut st = state();
+        // Make servers 1 and 2 the lightest pair — but they are in
+        // different racks ({0,1} and {2,3}).
+        st.allocate(&[0, 1, 2, 3], 1e9, 50.0); // server 0 heavy
+        st.allocate(&[12, 13, 14, 15], 1e9, 60.0); // server 3 heavy
+        let got = RackLwfPlacer::new(1, 2).place(&job(8), &st).unwrap();
+        let servers = st.spec.servers_of(&got);
+        let racks: Vec<usize> =
+            servers.iter().map(|&s| st.spec.rack_of(s, 2)).collect();
+        assert!(
+            racks.iter().all(|&r| r == racks[0]),
+            "job straddles racks: servers {servers:?}"
+        );
+        // And within the choice it still prefers the lighter rack (rack 0
+        // carries 50, rack 1 carries 60).
+        assert_eq!(racks[0], 0, "heavier rack chosen: {servers:?}");
+        // Plain LWF (rackless ordering) picks servers 1 and 2 here.
+        let lwf = LwfPlacer::new(1).place(&job(8), &st).unwrap();
+        assert_eq!(st.spec.servers_of(&lwf), vec![1, 2]);
+    }
+
+    #[test]
+    fn rack_lwf_degenerates_to_lwf_without_racks() {
+        let mut st = state();
+        st.allocate(&[0, 1, 2, 3], 1e9, 100.0);
+        st.allocate(&[4, 5], 1e9, 10.0);
+        let rack = RackLwfPlacer::new(1, usize::MAX).place(&job(8), &st).unwrap();
+        let lwf = LwfPlacer::new(1).place(&job(8), &st).unwrap();
+        assert_eq!(rack, lwf);
     }
 
     #[test]

@@ -3,10 +3,13 @@
 //! here — this is the request-path half of the three-layer architecture.
 //!
 //! The PJRT/XLA backend needs the `xla` bindings crate, which the offline
-//! registry does not carry, so it is gated behind the `pjrt` cargo feature.
-//! Without the feature the [`Runtime`] keeps its full API surface (the
-//! coordinator and tests compile unchanged) but reports itself unavailable
-//! at load time; integration tests skip when artifacts are absent anyway.
+//! registry does not carry, so it is gated behind the `pjrt` cargo feature
+//! *and* the `ddl_pjrt_vendored` cfg (set via
+//! `RUSTFLAGS="--cfg ddl_pjrt_vendored"` once the bindings are vendored —
+//! a bare `--all-features` build must stay resolvable for CI). Without
+//! both, the [`Runtime`] keeps its full API surface (the coordinator and
+//! tests compile unchanged) but reports itself unavailable at load time;
+//! integration tests skip when artifacts are absent anyway.
 //!
 //! Artifacts (see aot.py):
 //! * `train_step`      (params f32[P], tokens s32[B,T+1]) -> (params', loss)
@@ -74,7 +77,7 @@ fn load_meta(dir: &std::path::Path) -> Result<Meta> {
     Meta::parse(&meta_text)
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", ddl_pjrt_vendored))]
 mod pjrt_backend {
     //! The real PJRT CPU backend. Compiling this module requires the `xla`
     //! bindings crate to be vendored into the workspace.
@@ -213,10 +216,10 @@ mod pjrt_backend {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", ddl_pjrt_vendored))]
 pub use pjrt_backend::Runtime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", ddl_pjrt_vendored)))]
 mod stub_backend {
     //! API-compatible stand-in used when the crate is built without the
     //! `pjrt` feature: loading parses `meta.json` (so misconfiguration is
@@ -280,7 +283,7 @@ mod stub_backend {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", ddl_pjrt_vendored)))]
 pub use stub_backend::Runtime;
 
 /// Default artifacts directory: `$DDL_ARTIFACTS` or `./artifacts`.
@@ -315,7 +318,7 @@ mod tests {
         assert!(Meta::parse(r#"{"preset": "x"}"#).is_err());
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", ddl_pjrt_vendored)))]
     #[test]
     fn stub_load_reports_missing_artifacts_or_feature() {
         // Missing meta.json dominates; a present one reports the feature.

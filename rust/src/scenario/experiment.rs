@@ -1,5 +1,6 @@
 //! Experiment = a [`Scenario`] plus grid axes. Expanding the grid yields
-//! one scenario per (placer × κ × policy × priority × seed) combination;
+//! one scenario per (placer × κ × policy × priority × oversubscription ×
+//! seed) combination;
 //! [`Experiment::run`] executes the grid across `std::thread` workers and
 //! collects [`RunRecord`]s in grid order.
 //!
@@ -12,6 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::metrics::Evaluation;
+use crate::net::{TopologySpec, DEFAULT_RACK_SIZE};
 use crate::scenario::{registry, Scenario, TraceSource};
 use crate::sim::JobPriority;
 use crate::trace::JobSpec;
@@ -111,6 +113,10 @@ pub struct Experiment {
     pub kappas: Vec<usize>,
     pub policies: Vec<String>,
     pub priorities: Vec<JobPriority>,
+    /// Two-tier core oversubscription ratios. Each value replaces the
+    /// base topology with `TwoTier` at that ratio (keeping the base's
+    /// rack size, or `net::DEFAULT_RACK_SIZE` if the base is rackless).
+    pub oversubs: Vec<f64>,
     pub seeds: Vec<u64>,
 }
 
@@ -128,6 +134,7 @@ impl Experiment {
             kappas: Vec::new(),
             policies: Vec::new(),
             priorities: Vec::new(),
+            oversubs: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -137,14 +144,23 @@ impl Experiment {
     /// (Tables IV–V in one experiment).
     pub fn paper_grid(base: Scenario) -> Experiment {
         Experiment {
-            placers: registry::PLACERS.iter().map(|s| s.to_string()).collect(),
+            placers: registry::PAPER_PLACERS.iter().map(|s| s.to_string()).collect(),
             policies: registry::POLICIES.iter().map(|s| s.to_string()).collect(),
             ..Experiment::single(base)
         }
     }
 
+    /// Rack width the `oversub` axis builds its two-tier topologies with.
+    fn oversub_rack_size(&self) -> usize {
+        match self.base.topology {
+            TopologySpec::TwoTier { rack_size, .. } => rack_size,
+            _ => DEFAULT_RACK_SIZE,
+        }
+    }
+
     /// Expand the grid in axis-nesting order placer → κ → policy →
-    /// priority → seed, validating every algorithm name up front.
+    /// priority → oversubscription → seed, validating every algorithm
+    /// name and topology up front.
     pub fn grid(&self) -> Result<Vec<Scenario>> {
         let one = |v: &[String], base: &str| -> Vec<String> {
             if v.is_empty() {
@@ -163,28 +179,58 @@ impl Experiment {
             self.priorities.clone()
         };
         let seeds = if self.seeds.is_empty() { vec![self.base.seed] } else { self.seeds.clone() };
+        // `None` = keep the base topology; `Some(r)` = two-tier at ratio r.
+        let oversubs: Vec<Option<f64>> = if self.oversubs.is_empty() {
+            vec![None]
+        } else {
+            self.oversubs.iter().map(|&r| Some(r)).collect()
+        };
         for p in &placers {
-            registry::make_placer(p, 1, 0)?;
+            registry::make_placer(p, 1, 0, usize::MAX)?;
         }
         for p in &policies {
             registry::make_policy(p, self.base.comm)?;
         }
-        let n_runs =
-            placers.len() * kappas.len() * policies.len() * priorities.len() * seeds.len();
+        let rack_size = self.oversub_rack_size();
+        for &r in &self.oversubs {
+            TopologySpec::TwoTier { rack_size, oversubscription: r }
+                .validate(&self.base.cluster)
+                .map_err(Error::msg)?;
+        }
+        let n_runs = placers.len()
+            * kappas.len()
+            * policies.len()
+            * priorities.len()
+            * oversubs.len()
+            * seeds.len();
         let mut out = Vec::with_capacity(n_runs);
         for placer in &placers {
             for &kappa in &kappas {
                 for policy in &policies {
                     for &priority in &priorities {
-                        for &seed in &seeds {
-                            out.push(Scenario {
-                                placer: placer.clone(),
-                                kappa,
-                                policy: policy.clone(),
-                                priority,
-                                seed,
-                                ..self.base.clone()
-                            });
+                        for &oversub in &oversubs {
+                            for &seed in &seeds {
+                                let mut s = Scenario {
+                                    placer: placer.clone(),
+                                    kappa,
+                                    policy: policy.clone(),
+                                    priority,
+                                    seed,
+                                    ..self.base.clone()
+                                };
+                                if let Some(r) = oversub {
+                                    s.topology = TopologySpec::TwoTier {
+                                        rack_size,
+                                        oversubscription: r,
+                                    };
+                                    // The CSV record schema has no topology
+                                    // column (kept byte-stable for flat
+                                    // grids), so make the axis recoverable
+                                    // from the free-form name column.
+                                    s.name = format!("{}@{r}:1", s.name);
+                                }
+                                out.push(s);
+                            }
                         }
                     }
                 }
@@ -251,18 +297,24 @@ impl Experiment {
 
     pub fn to_json(&self) -> Json {
         let strs = |v: &[String]| Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect());
-        Json::obj().set("base", self.base.to_json()).set(
-            "axes",
-            Json::obj()
-                .set("placer", strs(&self.placers))
-                .set("kappa", Json::Arr(self.kappas.iter().map(|&k| Json::from(k)).collect()))
-                .set("policy", strs(&self.policies))
-                .set(
-                    "priority",
-                    Json::Arr(self.priorities.iter().map(|p| Json::from(p.name())).collect()),
-                )
-                .set("seed", Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect())),
-        )
+        let mut axes = Json::obj()
+            .set("placer", strs(&self.placers))
+            .set("kappa", Json::Arr(self.kappas.iter().map(|&k| Json::from(k)).collect()))
+            .set("policy", strs(&self.policies))
+            .set(
+                "priority",
+                Json::Arr(self.priorities.iter().map(|p| Json::from(p.name())).collect()),
+            );
+        // Like Scenario's flat topology, the empty oversub axis is elided
+        // so pre-topology experiment artifacts stay byte-stable.
+        if !self.oversubs.is_empty() {
+            axes = axes.set(
+                "oversub",
+                Json::Arr(self.oversubs.iter().map(|&r| Json::from(r)).collect()),
+            );
+        }
+        axes = axes.set("seed", Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect()));
+        Json::obj().set("base", self.base.to_json()).set("axes", axes)
     }
 
     pub fn to_json_text(&self) -> String {
@@ -279,9 +331,13 @@ impl Experiment {
         // silently run only the base scenario.
         if let Json::Obj(entries) = axes {
             for (key, _) in entries {
-                if !matches!(key.as_str(), "placer" | "kappa" | "policy" | "priority" | "seed") {
+                if !matches!(
+                    key.as_str(),
+                    "placer" | "kappa" | "policy" | "priority" | "oversub" | "seed"
+                ) {
                     return Err(Error::msg(format!(
-                        "unknown experiment axis '{key}' (placer|kappa|policy|priority|seed)"
+                        "unknown experiment axis '{key}' \
+                         (placer|kappa|policy|priority|oversub|seed)"
                     )));
                 }
             }
@@ -311,6 +367,16 @@ impl Experiment {
                 .ok_or_else(|| Error::msg("axis 'kappa' must be an array"))?
                 .iter()
                 .map(|x| x.as_usize().ok_or_else(|| Error::msg("kappa entries must be integers")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(a) = axes.get("oversub") {
+            exp.oversubs = a
+                .as_arr()
+                .ok_or_else(|| Error::msg("axis 'oversub' must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| Error::msg("oversub entries must be numbers"))
+                })
                 .collect::<Result<_>>()?;
         }
         if let Some(a) = axes.get("seed") {
@@ -355,6 +421,7 @@ impl Experiment {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::{TopologySpec, DEFAULT_RACK_SIZE};
 
     fn small_grid() -> Experiment {
         Experiment {
@@ -433,6 +500,91 @@ mod tests {
         let text = format!("{{\"base\": {base}, \"axes\": {{\"placers\": [\"lwf\"]}}}}");
         let e = Experiment::from_text(&text).unwrap_err().to_string();
         assert!(e.contains("unknown experiment axis 'placers'"), "{e}");
+    }
+
+    #[test]
+    fn oversub_axis_expands_to_two_tier_topologies() {
+        let e = Experiment {
+            policies: vec!["srsf1".into(), "ada".into()],
+            oversubs: vec![2.0, 4.0, 8.0],
+            ..Experiment::single(Scenario::small("oversub", 4, 2, 8))
+        };
+        let g = e.grid().unwrap();
+        assert_eq!(g.len(), 6);
+        // The ratio is recoverable from the record name (the CSV schema
+        // carries no topology column).
+        assert_eq!(g[0].name, "oversub@2:1");
+        assert_eq!(g[2].name, "oversub@8:1");
+        for s in &g {
+            match s.topology {
+                TopologySpec::TwoTier { rack_size, oversubscription } => {
+                    assert_eq!(rack_size, DEFAULT_RACK_SIZE);
+                    assert!([2.0, 4.0, 8.0].contains(&oversubscription));
+                }
+                ref other => panic!("expected two-tier, got {other:?}"),
+            }
+        }
+        // Nesting order: policy is outer, oversub inner.
+        assert_eq!(g[0].policy, "srsf1");
+        assert!(matches!(
+            g[0].topology,
+            TopologySpec::TwoTier { oversubscription, .. } if oversubscription == 2.0
+        ));
+        assert!(matches!(
+            g[2].topology,
+            TopologySpec::TwoTier { oversubscription, .. } if oversubscription == 8.0
+        ));
+    }
+
+    #[test]
+    fn oversub_axis_keeps_base_rack_size() {
+        let base = Scenario {
+            topology: TopologySpec::TwoTier { rack_size: 2, oversubscription: 1.0 },
+            ..Scenario::small("racked", 4, 2, 8)
+        };
+        let e = Experiment { oversubs: vec![4.0], ..Experiment::single(base) };
+        let g = e.grid().unwrap();
+        assert_eq!(
+            g[0].topology,
+            TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 }
+        );
+    }
+
+    #[test]
+    fn oversub_axis_rejects_invalid_ratio() {
+        let e = Experiment {
+            oversubs: vec![0.5],
+            ..Experiment::single(Scenario::small("bad", 2, 2, 6))
+        };
+        let err = e.grid().unwrap_err().to_string();
+        assert!(err.contains("oversubscription"), "{err}");
+    }
+
+    #[test]
+    fn oversub_axis_json_roundtrip_and_elision() {
+        let plain = small_grid();
+        assert!(!plain.to_json_text().contains("oversub"), "empty axis must be elided");
+        let e = Experiment { oversubs: vec![2.0, 8.0], ..small_grid() };
+        let back = Experiment::from_text(&e.to_json_text()).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn oversub_sweep_runs_end_to_end() {
+        let e = Experiment {
+            oversubs: vec![1.0, 8.0],
+            ..Experiment::single(Scenario {
+                placer: "lwf-rack".into(),
+                topology: TopologySpec::TwoTier { rack_size: 2, oversubscription: 1.0 },
+                ..Scenario::small("2tier-run", 4, 2, 10)
+            })
+        };
+        let recs = e.run(2).unwrap();
+        assert_eq!(recs.len(), 2);
+        for r in &recs {
+            assert_eq!(r.eval.jct.n, 10);
+            assert!(r.eval.jct.mean.is_finite());
+        }
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Declarative run specifications — the public API of the simulator.
 //!
 //! A [`Scenario`] names everything one simulation run needs: cluster shape,
-//! Eq (5) contention model, trace source (file | generated | inline),
+//! Eq (5) contention model, fabric topology (`net::TopologySpec`; the
+//! default `flat` preset is elided from JSON so paper-era files and
+//! records stay byte-stable), trace source (file | generated | inline),
 //! placer + κ, communication policy, job priority, repricing mode and the
 //! RNG seed. Scenarios serialize to JSON (`util::json`), so every
 //! evaluation setup is a shareable data file instead of hand-wired code —
@@ -27,6 +29,7 @@ pub use experiment::{records_to_csv, records_to_json, Experiment, RunRecord};
 use crate::cluster::ClusterSpec;
 use crate::metrics::Evaluation;
 use crate::model::CommModel;
+use crate::net::TopologySpec;
 use crate::sim::{self, JobPriority, Repricing, SimConfig};
 use crate::trace::{self, JobSpec, TraceConfig};
 use crate::util::error::{Context, Error, Result};
@@ -92,6 +95,9 @@ pub struct Scenario {
     pub name: String,
     pub cluster: ClusterSpec,
     pub comm: CommModel,
+    /// Fabric topology; `comm` is the base link model the presets derive
+    /// per-link parameters from. `Flat` reproduces the paper testbed.
+    pub topology: TopologySpec,
     pub trace: TraceSource,
     /// Registry placer name (see [`registry::PLACERS`]).
     pub placer: String,
@@ -113,6 +119,7 @@ impl Scenario {
             name: "paper".to_string(),
             cluster: ClusterSpec::paper_64gpu(),
             comm: CommModel::paper_10gbe(),
+            topology: TopologySpec::Flat,
             trace: TraceSource::Generated { jobs: 160, seed: None },
             placer: "lwf".to_string(),
             kappa: 1,
@@ -150,6 +157,10 @@ impl Scenario {
             label.push('/');
             label.push_str(self.repricing.name());
         }
+        if let Some(topo) = self.topology.label() {
+            label.push('/');
+            label.push_str(&topo);
+        }
         label
     }
 
@@ -158,6 +169,7 @@ impl Scenario {
         SimConfig {
             cluster: self.cluster,
             comm: self.comm,
+            topology: self.topology.clone(),
             repricing: self.repricing,
             priority: self.priority,
             log_events: false,
@@ -221,7 +233,12 @@ impl Scenario {
             )));
         }
         let cfg = self.sim_config();
-        let mut placer = registry::make_placer(&self.placer, self.kappa, self.seed)?;
+        let mut placer = registry::make_placer(
+            &self.placer,
+            self.kappa,
+            self.seed,
+            self.topology.rack_size(),
+        )?;
         let policy = registry::make_policy(&self.policy, self.comm)?;
         let res = sim::simulate(&cfg, jobs, placer.as_mut(), policy.as_ref());
         if !res.jct.iter().any(|t| t.is_finite()) {
@@ -242,11 +259,17 @@ impl Scenario {
     // ---- serialization -----------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut v = Json::obj()
             .set("name", self.name.as_str())
             .set("cluster", self.cluster.to_json())
-            .set("comm", self.comm.to_json())
-            .set("trace", self.trace.to_json())
+            .set("comm", self.comm.to_json());
+        // The default flat fabric is elided so flat scenarios — the whole
+        // pre-topology corpus, paper grid included — serialize (and hence
+        // hash/diff) byte-identically to the old schema.
+        if !self.topology.is_flat() {
+            v = v.set("topology", self.topology.to_json());
+        }
+        v.set("trace", self.trace.to_json())
             .set("placer", self.placer.as_str())
             .set("kappa", self.kappa)
             .set("policy", self.policy.as_str())
@@ -265,20 +288,29 @@ impl Scenario {
         let policy = v.req_str("policy").map_err(Error::msg)?.to_string();
         // Validate algorithm names eagerly so a bad scenario file fails at
         // load time, not mid-experiment.
-        registry::make_placer(&placer, 1, 0)?;
+        registry::make_placer(&placer, 1, 0, usize::MAX)?;
         registry::make_policy(&policy, CommModel::paper_10gbe())?;
         let priority = v.req_str("priority").map_err(Error::msg)?;
         let repricing = v.req_str("repricing").map_err(Error::msg)?;
+        let cluster = ClusterSpec::from_json(
+            v.get("cluster").ok_or_else(|| Error::msg("missing 'cluster'"))?,
+        )
+        .map_err(Error::msg)?;
+        // An absent topology section means the paper's flat switch, so
+        // every pre-topology scenario file keeps loading unchanged.
+        let topology = match v.get("topology") {
+            None => TopologySpec::Flat,
+            Some(t) => TopologySpec::from_json(t).map_err(Error::msg)?,
+        };
+        topology.validate(&cluster).map_err(Error::msg)?;
         Ok(Scenario {
             name: v.req_str("name").map_err(Error::msg)?.to_string(),
-            cluster: ClusterSpec::from_json(
-                v.get("cluster").ok_or_else(|| Error::msg("missing 'cluster'"))?,
-            )
-            .map_err(Error::msg)?,
+            cluster,
             comm: CommModel::from_json(
                 v.get("comm").ok_or_else(|| Error::msg("missing 'comm'"))?,
             )
             .map_err(Error::msg)?,
+            topology,
             trace: TraceSource::from_json(
                 v.get("trace").ok_or_else(|| Error::msg("missing 'trace'"))?,
             )
@@ -460,6 +492,7 @@ mod tests {
         let s = Scenario {
             priority: JobPriority::Las,
             repricing: Repricing::Dynamic,
+            topology: TopologySpec::TwoTier { rack_size: 4, oversubscription: 2.0 },
             ..Scenario::paper()
         };
         let cfg = s.sim_config();
@@ -467,5 +500,94 @@ mod tests {
         assert_eq!(cfg.repricing, Repricing::Dynamic);
         assert_eq!(cfg.cluster, s.cluster);
         assert_eq!(cfg.comm, s.comm);
+        assert_eq!(cfg.topology, s.topology);
+    }
+
+    // ---- topology schema ---------------------------------------------------
+
+    fn two_tier(rack_size: usize, oversub: f64) -> Scenario {
+        Scenario {
+            topology: TopologySpec::TwoTier { rack_size, oversubscription: oversub },
+            ..Scenario::paper()
+        }
+    }
+
+    #[test]
+    fn topology_json_roundtrip() {
+        let s = two_tier(4, 8.0);
+        let back = Scenario::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(s, back);
+        let s = Scenario {
+            cluster: ClusterSpec::tiny(2, 2),
+            topology: TopologySpec::Heterogeneous {
+                nics: vec![CommModel::paper_10gbe(), CommModel::paper_10gbe().scaled(0.25)],
+            },
+            trace: TraceSource::Generated { jobs: 6, seed: None },
+            ..Scenario::paper()
+        };
+        let back = Scenario::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn flat_topology_is_elided_and_explicit_flat_is_accepted() {
+        // Flat is the default: not serialized...
+        let text = Scenario::paper().to_json_text();
+        assert!(!text.contains("topology"), "flat must be elided:\n{text}");
+        // ...but an explicit {"preset": "flat"} section loads to the same
+        // scenario and re-serializes byte-identically to the elided form.
+        let explicit = text.replace(
+            "\"comm\": {",
+            "\"topology\": {\"preset\": \"flat\"},\n  \"comm\": {",
+        );
+        assert_ne!(explicit, text);
+        let back = Scenario::from_text(&explicit).unwrap();
+        assert_eq!(back, Scenario::paper());
+        assert_eq!(back.to_json_text(), text);
+    }
+
+    #[test]
+    fn topology_rejects_unknown_preset() {
+        let text = two_tier(4, 2.0).to_json_text().replace("two-tier", "three-tier");
+        let e = Scenario::from_text(&text).unwrap_err().to_string();
+        assert!(e.contains("unknown topology preset 'three-tier'"), "{e}");
+    }
+
+    #[test]
+    fn topology_rejects_invalid_oversubscription() {
+        let text = two_tier(4, 4.0)
+            .to_json_text()
+            .replace("\"oversubscription\": 4", "\"oversubscription\": 0.25");
+        let e = Scenario::from_text(&text).unwrap_err().to_string();
+        assert!(e.contains("oversubscription"), "{e}");
+    }
+
+    #[test]
+    fn topology_rejects_wrong_nic_count() {
+        let s = Scenario {
+            topology: TopologySpec::Heterogeneous { nics: vec![CommModel::paper_10gbe(); 3] },
+            ..Scenario::paper() // 16 servers
+        };
+        let e = Scenario::from_text(&s.to_json_text()).unwrap_err().to_string();
+        assert!(e.contains("one NIC model per server"), "{e}");
+    }
+
+    #[test]
+    fn label_carries_topology() {
+        assert_eq!(two_tier(4, 4.0).label(), "LWF-1/Ada-SRSF/2tier-4:1");
+        assert_eq!(Scenario::paper().label(), "LWF-1/Ada-SRSF");
+    }
+
+    #[test]
+    fn two_tier_scenario_runs_end_to_end() {
+        let s = Scenario {
+            topology: TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 },
+            placer: "lwf-rack".into(),
+            ..Scenario::small("2tier", 4, 2, 12)
+        };
+        let rec = s.run().unwrap();
+        assert_eq!(rec.eval.jct.n, 12);
+        assert!(rec.eval.jct.mean.is_finite() && rec.eval.jct.mean > 0.0);
+        assert!(rec.scenario.label().ends_with("2tier-4:1"));
     }
 }

@@ -6,13 +6,19 @@
 
 use crate::model::CommModel;
 use crate::placement::{
-    FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RandomPlacer,
+    FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RackLwfPlacer, RandomPlacer,
 };
 use crate::sched::{AdaDual, CommPolicy, SrsfCap};
 use crate::util::error::{Error, Result};
 
-/// Canonical placer names, in paper presentation order (Table IV).
-pub const PLACERS: [&str; 4] = ["rand", "ff", "ls", "lwf"];
+/// Canonical placer names: the paper's Table IV four, then our
+/// rack-locality extension (which needs a racked `net` topology to
+/// differ from LWF — on a flat fabric it degenerates to LWF exactly).
+pub const PLACERS: [&str; 5] = ["rand", "ff", "ls", "lwf", "lwf-rack"];
+
+/// The paper's Table IV placer axis (what `Experiment::paper_grid` and
+/// the committed `scenarios/paper_grid.json` sweep).
+pub const PAPER_PLACERS: [&str; 4] = ["rand", "ff", "ls", "lwf"];
 
 /// Canonical policy names, in paper presentation order (Table V).
 pub const POLICIES: [&str; 4] = ["srsf1", "srsf2", "srsf3", "ada"];
@@ -24,6 +30,7 @@ pub fn canonical_placer(name: &str) -> Option<&'static str> {
         "ff" | "FF" | "first-fit" => Some("ff"),
         "ls" | "LS" | "list-scheduling" => Some("ls"),
         "lwf" | "LWF" | "LWF-k" => Some("lwf"),
+        "lwf-rack" | "LWF-rack" | "lwf_rack" | "rack" => Some("lwf-rack"),
         _ => None,
     }
 }
@@ -40,13 +47,22 @@ pub fn canonical_policy(name: &str) -> Option<&'static str> {
 }
 
 /// Construct a placer. `kappa` is LWF's consolidation threshold; `seed`
-/// feeds the RAND baseline (ignored by the deterministic placers).
-pub fn make_placer(name: &str, kappa: usize, seed: u64) -> Result<Box<dyn Placer + Send>> {
+/// feeds the RAND baseline (ignored by the deterministic placers);
+/// `rack_size` is the fabric's rack width for the rack-locality placer
+/// (pass `TopologySpec::rack_size()` — `usize::MAX` on rackless fabrics,
+/// where LWF-rack degenerates to LWF).
+pub fn make_placer(
+    name: &str,
+    kappa: usize,
+    seed: u64,
+    rack_size: usize,
+) -> Result<Box<dyn Placer + Send>> {
     match canonical_placer(name) {
         Some("rand") => Ok(Box::new(RandomPlacer::new(seed))),
         Some("ff") => Ok(Box::new(FirstFitPlacer)),
         Some("ls") => Ok(Box::new(ListSchedulingPlacer)),
         Some("lwf") => Ok(Box::new(LwfPlacer::new(kappa))),
+        Some("lwf-rack") => Ok(Box::new(RackLwfPlacer::new(kappa, rack_size))),
         _ => Err(unknown("placer", name, &PLACERS)),
     }
 }
@@ -67,6 +83,7 @@ pub fn make_policy(name: &str, comm: CommModel) -> Result<Box<dyn CommPolicy + S
 pub fn placer_label(name: &str, kappa: usize) -> String {
     match canonical_placer(name) {
         Some("lwf") => format!("LWF-{kappa}"),
+        Some("lwf-rack") => format!("LWF-rack-{kappa}"),
         Some(c) => c.to_uppercase(),
         None => name.to_string(),
     }
@@ -93,9 +110,11 @@ mod tests {
     fn every_canonical_placer_resolves() {
         for name in PLACERS {
             assert_eq!(canonical_placer(name), Some(name));
-            let p = make_placer(name, 1, 0).unwrap();
+            let p = make_placer(name, 1, 0, usize::MAX).unwrap();
             assert!(!p.name().is_empty());
         }
+        // The paper axis is a strict prefix of the full list.
+        assert_eq!(&PLACERS[..PAPER_PLACERS.len()], &PAPER_PLACERS[..]);
     }
 
     #[test]
@@ -112,13 +131,15 @@ mod tests {
     fn aliases_resolve_to_canonical() {
         assert_eq!(canonical_placer("LWF-k"), Some("lwf"));
         assert_eq!(canonical_placer("RAND"), Some("rand"));
+        assert_eq!(canonical_placer("rack"), Some("lwf-rack"));
+        assert_eq!(canonical_placer("LWF-rack"), Some("lwf-rack"));
         assert_eq!(canonical_policy("Ada-SRSF"), Some("ada"));
         assert_eq!(canonical_policy("SRSF(2)"), Some("srsf2"));
     }
 
     #[test]
     fn unknown_names_error_and_list_known() {
-        let e = make_placer("nope", 1, 0).unwrap_err().to_string();
+        let e = make_placer("nope", 1, 0, usize::MAX).unwrap_err().to_string();
         assert!(e.contains("unknown placer 'nope'") && e.contains("lwf"), "{e}");
         let e = make_policy("bogus", CommModel::paper_10gbe()).unwrap_err().to_string();
         assert!(e.contains("unknown policy 'bogus'") && e.contains("ada"), "{e}");
@@ -127,6 +148,7 @@ mod tests {
     #[test]
     fn labels_match_paper_spelling() {
         assert_eq!(placer_label("lwf", 4), "LWF-4");
+        assert_eq!(placer_label("lwf-rack", 2), "LWF-rack-2");
         assert_eq!(placer_label("rand", 1), "RAND");
         assert_eq!(placer_label("ff", 1), "FF");
         assert_eq!(policy_label("ada"), "Ada-SRSF");
@@ -135,7 +157,7 @@ mod tests {
 
     #[test]
     fn lwf_kappa_threading() {
-        let mut p = make_placer("lwf", 2, 0).unwrap();
+        let mut p = make_placer("lwf", 2, 0, usize::MAX).unwrap();
         let st = crate::cluster::ClusterState::new(crate::cluster::ClusterSpec::tiny(2, 2));
         let job = crate::trace::JobSpec {
             id: 0,

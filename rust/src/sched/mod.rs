@@ -1,8 +1,10 @@
 //! Communication-task scheduling (§IV-B): admission policies deciding
-//! whether a ready All-Reduce may start *now* on its servers.
+//! whether a ready All-Reduce may start *now* on the fabric links it
+//! crosses (`net::Topology::links_between`; in the paper's flat testbed
+//! the links are exactly the server NICs, so link ids == server ids).
 //!
-//! * `SrsfCap(n)` — the paper's SRSF(n) family: admit iff every server the
-//!   task touches currently carries fewer than n active communication
+//! * `SrsfCap(n)` — the paper's SRSF(n) family: admit iff every link the
+//!   task crosses currently carries fewer than n active communication
 //!   tasks. SRSF(1) forbids all contention; SRSF(2)/(3) blindly accept
 //!   2-/3-way contention.
 //! * `AdaDual` — Algorithm 2: admit immediately when the servers are idle;
@@ -14,23 +16,23 @@
 
 pub mod two_tasks;
 
-use crate::cluster::ServerId;
 use crate::model::CommModel;
+use crate::net::LinkId;
 
 /// A snapshot of network state for admission decisions:
-/// per server, the list of (comm task id, remaining message bytes).
+/// per fabric link, the list of (comm task id, remaining message bytes).
 pub struct NetView<'a> {
-    pub per_server: &'a [Vec<(usize, f64)>],
+    pub per_link: &'a [Vec<(usize, f64)>],
 }
 
 impl<'a> NetView<'a> {
-    /// Maximum count of active communication tasks over `servers`
+    /// Maximum count of active communication tasks over `links`
     /// (Algorithm 2 lines 2–7), plus the union of those tasks.
-    pub fn max_tasks(&self, servers: &[ServerId]) -> (usize, Vec<(usize, f64)>) {
+    pub fn max_tasks(&self, links: &[LinkId]) -> (usize, Vec<(usize, f64)>) {
         let mut max = 0;
         let mut old: Vec<(usize, f64)> = Vec::new();
-        for &s in servers {
-            let tasks = &self.per_server[s];
+        for &s in links {
+            let tasks = &self.per_link[s];
             if tasks.len() > max {
                 max = tasks.len();
             }
@@ -55,11 +57,11 @@ pub enum Admission {
 /// A communication-task admission policy.
 pub trait CommPolicy {
     fn name(&self) -> String;
-    /// May a new task of `msg_bytes` spanning `servers` start now?
-    fn admit(&self, msg_bytes: f64, servers: &[ServerId], net: &NetView) -> Admission;
+    /// May a new task of `msg_bytes` crossing `links` start now?
+    fn admit(&self, msg_bytes: f64, links: &[LinkId], net: &NetView) -> Admission;
 }
 
-/// SRSF(n): per-server active-communication cap of `n`.
+/// SRSF(n): per-link active-communication cap of `n`.
 #[derive(Clone, Copy, Debug)]
 pub struct SrsfCap {
     pub cap: usize,
@@ -70,8 +72,8 @@ impl CommPolicy for SrsfCap {
         format!("SRSF({})", self.cap)
     }
 
-    fn admit(&self, _msg: f64, servers: &[ServerId], net: &NetView) -> Admission {
-        let (max, _) = net.max_tasks(servers);
+    fn admit(&self, _msg: f64, links: &[LinkId], net: &NetView) -> Admission {
+        let (max, _) = net.max_tasks(links);
         if max < self.cap {
             Admission::Start
         } else {
@@ -91,14 +93,14 @@ impl CommPolicy for AdaDual {
         "AdaDUAL".to_string()
     }
 
-    fn admit(&self, msg_bytes: f64, servers: &[ServerId], net: &NetView) -> Admission {
-        let (max, old) = net.max_tasks(servers);
+    fn admit(&self, msg_bytes: f64, links: &[LinkId], net: &NetView) -> Admission {
+        let (max, old) = net.max_tasks(links);
         match max {
             // Lines 8–10: idle servers — start immediately.
             0 => Admission::Start,
             // Lines 11–18: one existing task — Theorem 2 ratio test against
             // its remaining message size. With several distinct single
-            // tasks across our servers, test against the *largest*
+            // tasks across our links, test against the *largest*
             // remaining one (the most conservative pairing).
             1 => {
                 let m_old = old.iter().map(|&(_, m)| m).fold(0.0f64, f64::max);
@@ -128,8 +130,8 @@ pub fn srsf_cmp(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
 mod tests {
     use super::*;
 
-    fn net(per_server: Vec<Vec<(usize, f64)>>) -> Vec<Vec<(usize, f64)>> {
-        per_server
+    fn net(per_link: Vec<Vec<(usize, f64)>>) -> Vec<Vec<(usize, f64)>> {
+        per_link
     }
 
     #[test]
@@ -137,10 +139,10 @@ mod tests {
         let p = SrsfCap { cap: 1 };
         let empty = net(vec![vec![], vec![]]);
         let busy = net(vec![vec![(7, 1e8)], vec![]]);
-        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_server: &empty }), Admission::Start);
-        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_server: &busy }), Admission::Wait);
-        // ...but a task on an unrelated server does not block.
-        assert_eq!(p.admit(1e6, &[1], &NetView { per_server: &busy }), Admission::Start);
+        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_link: &empty }), Admission::Start);
+        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_link: &busy }), Admission::Wait);
+        // ...but a task on an unrelated link does not block.
+        assert_eq!(p.admit(1e6, &[1], &NetView { per_link: &busy }), Admission::Start);
     }
 
     #[test]
@@ -148,15 +150,15 @@ mod tests {
         let p = SrsfCap { cap: 2 };
         let one = net(vec![vec![(1, 5e8)]]);
         let two = net(vec![vec![(1, 5e8), (2, 2e8)]]);
-        assert_eq!(p.admit(1e6, &[0], &NetView { per_server: &one }), Admission::Start);
-        assert_eq!(p.admit(1e6, &[0], &NetView { per_server: &two }), Admission::Wait);
+        assert_eq!(p.admit(1e6, &[0], &NetView { per_link: &one }), Admission::Start);
+        assert_eq!(p.admit(1e6, &[0], &NetView { per_link: &two }), Admission::Wait);
     }
 
     #[test]
     fn adadual_idle_starts() {
         let p = AdaDual { model: CommModel::paper_10gbe() };
         let empty = net(vec![vec![], vec![], vec![]]);
-        assert_eq!(p.admit(5e8, &[0, 2], &NetView { per_server: &empty }), Admission::Start);
+        assert_eq!(p.admit(5e8, &[0, 2], &NetView { per_link: &empty }), Admission::Start);
     }
 
     #[test]
@@ -168,12 +170,12 @@ mod tests {
         let small = net(vec![vec![(9, m_old)]]);
         // Well under the threshold: overlap pays off.
         assert_eq!(
-            p.admit(m_old * th * 0.9, &[0], &NetView { per_server: &small }),
+            p.admit(m_old * th * 0.9, &[0], &NetView { per_link: &small }),
             Admission::Start
         );
         // Over the threshold: wait for the big one to finish.
         assert_eq!(
-            p.admit(m_old * th * 1.1, &[0], &NetView { per_server: &small }),
+            p.admit(m_old * th * 1.1, &[0], &NetView { per_link: &small }),
             Admission::Wait
         );
     }
@@ -183,7 +185,7 @@ mod tests {
         let cm = CommModel::paper_10gbe();
         let p = AdaDual { model: cm };
         let two = net(vec![vec![(1, 9e9), (2, 9e9)]]);
-        assert_eq!(p.admit(1.0, &[0], &NetView { per_server: &two }), Admission::Wait);
+        assert_eq!(p.admit(1.0, &[0], &NetView { per_link: &two }), Admission::Wait);
     }
 
     #[test]
@@ -191,17 +193,17 @@ mod tests {
         let cm = CommModel::paper_10gbe();
         let p = AdaDual { model: cm };
         let th = cm.adadual_threshold();
-        // Server 0 has a small old task, server 1 a big one; test pairs
+        // Link 0 has a small old task, link 1 a big one; test pairs
         // against the big one.
         let mixed = net(vec![vec![(1, 1e6)], vec![(2, 1e9)]]);
         let msg = 1e9 * th * 0.9; // fine vs 1e9, terrible vs 1e6
-        assert_eq!(p.admit(msg, &[0, 1], &NetView { per_server: &mixed }), Admission::Start);
+        assert_eq!(p.admit(msg, &[0, 1], &NetView { per_link: &mixed }), Admission::Start);
     }
 
     #[test]
     fn max_tasks_dedups_union() {
         let shared = net(vec![vec![(5, 1e8)], vec![(5, 1e8), (6, 2e8)]]);
-        let view = NetView { per_server: &shared };
+        let view = NetView { per_link: &shared };
         let (max, old) = view.max_tasks(&[0, 1]);
         assert_eq!(max, 2);
         assert_eq!(old.len(), 2);

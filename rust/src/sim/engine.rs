@@ -3,8 +3,9 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::cluster::{ClusterSpec, ClusterState, GpuId, ServerId};
+use crate::cluster::{ClusterSpec, ClusterState, GpuId};
 use crate::model::CommModel;
+use crate::net::{LinkId, Topology, TopologySpec};
 use crate::placement::Placer;
 use crate::sched::{srsf_cmp, Admission, CommPolicy, NetView};
 use crate::trace::JobSpec;
@@ -18,7 +19,7 @@ pub enum Repricing {
     /// finishes on a shared server — the physically exact differential
     /// form of Eq (5). Under this model a newcomer slows already-running
     /// elephants down, which *erodes* AdaDUAL's pairwise win (see
-    /// EXPERIMENTS.md §TableV-discussion).
+    /// docs/EXPERIMENTS.md §TableV-discussion).
     Dynamic,
     /// A transfer's k (and thus duration) is fixed once, at admission —
     /// the behaviour of the paper's slot-based simulator: each task's cost
@@ -90,6 +91,10 @@ impl JobPriority {
 pub struct SimConfig {
     pub cluster: ClusterSpec,
     pub comm: CommModel,
+    /// Fabric topology (paper: `Flat` — contention on server NICs only).
+    /// `comm` stays the base link model; presets derive per-link
+    /// parameters from it (see `net::Topology::build`).
+    pub topology: TopologySpec,
     /// Contention repricing mode (paper: `AtAdmission`).
     pub repricing: Repricing,
     /// Job priority rule (paper: SRSF).
@@ -104,6 +109,7 @@ impl SimConfig {
         SimConfig {
             cluster: ClusterSpec::paper_64gpu(),
             comm: CommModel::paper_10gbe(),
+            topology: TopologySpec::Flat,
             repricing: Repricing::AtAdmission,
             priority: JobPriority::Srsf,
             log_events: false,
@@ -206,11 +212,14 @@ impl Eq for Timed {}
 
 impl Ord for Timed {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first.
+        // BinaryHeap is a max-heap: invert for earliest-first. total_cmp
+        // keeps the heap a total order even if an event time goes NaN
+        // (a poisoned comm model must surface as a wrong result, not a
+        // panic mid-event-loop); for the finite times of a healthy run it
+        // agrees with partial_cmp.
         other
             .t
-            .partial_cmp(&self.t)
-            .unwrap()
+            .total_cmp(&self.t)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -225,7 +234,8 @@ impl PartialOrd for Timed {
 struct JobRt {
     spec: JobSpec,
     gpus: Vec<GpuId>,
-    servers: Vec<ServerId>,
+    /// Fabric links this job's All-Reduce crosses (fixed at placement).
+    links: Vec<LinkId>,
     multi_server: bool,
     t_fwd: f64,
     t_bwd: f64,
@@ -260,10 +270,16 @@ impl JobRt {
 /// One active All-Reduce transfer.
 struct CommTask {
     job: usize,
-    servers: Vec<ServerId>,
+    /// Links the transfer crosses (== its job's `links`).
+    links: Vec<LinkId>,
     latency_left: f64,
     remaining: f64,
+    /// Effective contention level: max active-task count over `links`.
     k: usize,
+    /// Effective per-byte drain time: the bottleneck link's Eq (5) price
+    /// at its current occupancy (on a flat fabric this is exactly
+    /// `comm.per_byte(k)`, the seed engine's pricing).
+    per_byte: f64,
     last_update: f64,
     version: u64,
     done: bool,
@@ -292,6 +308,7 @@ pub fn simulate(
 
 struct Engine<'a> {
     cfg: &'a SimConfig,
+    topo: Topology,
     cluster: ClusterState,
     jobs: Vec<JobRt>,
     gpus: Vec<GpuRt>,
@@ -305,8 +322,15 @@ struct Engine<'a> {
     /// Ids of in-flight comm tasks (the only ones advance_network visits;
     /// scanning the whole historical `comms` vec would be quadratic).
     active_comms: Vec<usize>,
-    /// Active comm-task ids per server.
-    per_server: Vec<Vec<usize>>,
+    /// Position of each comm id inside `active_comms` (usize::MAX once
+    /// inactive), so completion is an O(1) swap-remove instead of an O(n)
+    /// retain scan over every in-flight transfer.
+    active_pos: Vec<usize>,
+    /// Active comm-task ids per fabric link (NICs, then rack uplinks).
+    per_link: Vec<Vec<usize>>,
+    /// DDL_SIM_DEBUG progress logging, read once at construction instead
+    /// of one env lookup per million-event heartbeat.
+    debug: bool,
     n_events: u64,
     contended_admissions: u64,
     clean_admissions: u64,
@@ -329,7 +353,7 @@ impl<'a> Engine<'a> {
                 JobRt {
                     spec: spec.clone(),
                     gpus: Vec::new(),
-                    servers: Vec::new(),
+                    links: Vec::new(),
                     multi_server: false,
                     t_fwd: m.t_fwd(b, peak),
                     t_bwd: m.t_bwd(b, peak),
@@ -347,8 +371,14 @@ impl<'a> Engine<'a> {
         for (i, j) in jobs.iter().enumerate() {
             heap.push(Timed { t: j.arrival, seq: i as u64, ev: Ev::Arrive { job: i } });
         }
+        // Scenario loading validates the topology against the cluster up
+        // front; direct engine users get the same message via panic.
+        let topo = Topology::build(&cfg.cluster, &cfg.comm, &cfg.topology)
+            .unwrap_or_else(|e| panic!("invalid SimConfig topology: {e}"));
+        let n_links = topo.n_links();
         Engine {
             cfg,
+            topo,
             cluster: ClusterState::new(cfg.cluster),
             gpus: (0..cfg.cluster.n_gpus())
                 .map(|_| GpuRt {
@@ -366,7 +396,9 @@ impl<'a> Engine<'a> {
             pending_comm: Vec::new(),
             comms: Vec::new(),
             active_comms: Vec::new(),
-            per_server: vec![Vec::new(); cfg.cluster.n_servers],
+            active_pos: Vec::new(),
+            per_link: vec![Vec::new(); n_links],
+            debug: std::env::var_os("DDL_SIM_DEBUG").is_some(),
             n_events: 0,
             contended_admissions: 0,
             clean_admissions: 0,
@@ -394,7 +426,7 @@ impl<'a> Engine<'a> {
                 break;
             }
             self.n_events += 1;
-            if self.n_events % 1_000_000 == 0 && std::env::var_os("DDL_SIM_DEBUG").is_some() {
+            if self.n_events % 1_000_000 == 0 && self.debug {
                 eprintln!(
                     "[sim] ev={}M t={:.1} heap={} active={} pending={} queue={} unfinished={}",
                     self.n_events / 1_000_000,
@@ -432,7 +464,7 @@ impl<'a> Engine<'a> {
                     // a repredicted event can land exactly at `t` forever
                     // (observed livelock); treat sub-ulp residue as done.
                     let c = &self.comms[comm];
-                    let residual = c.latency_left + c.remaining * self.cfg.comm.per_byte(c.k);
+                    let residual = c.latency_left + c.remaining * c.per_byte;
                     let eps_t = EPS + t.abs() * 1e-12;
                     if residual > eps_t {
                         self.repredict(t, comm);
@@ -481,21 +513,26 @@ impl<'a> Engine<'a> {
         if self.queue.is_empty() {
             return;
         }
-        let mut order: Vec<usize> = self.queue.clone();
+        // Take the queue and rebuild it from the leftovers while walking
+        // the sorted order — O(n log n), versus the O(n²)
+        // `retain(placed.contains)` difference this replaced. Queue order
+        // is irrelevant between passes (every pass re-sorts by the total
+        // order `(queue_key, id)`), so behaviour is unchanged.
+        let mut order: Vec<usize> = std::mem::take(&mut self.queue);
         order.sort_by(|&a, &b| srsf_cmp((self.queue_key(a), a), (self.queue_key(b), b)));
-        let mut placed: Vec<usize> = Vec::new();
         for job in order {
             let spec = self.jobs[job].spec.clone();
             if let Some(gpus) = placer.place(&spec, &self.cluster) {
                 self.commit_placement(t, job, gpus);
-                placed.push(job);
+            } else {
+                self.queue.push(job);
             }
         }
-        self.queue.retain(|j| !placed.contains(j));
     }
 
     fn commit_placement(&mut self, t: f64, job: usize, gpus: Vec<GpuId>) {
         let servers = self.cfg.cluster.servers_of(&gpus);
+        let links = self.topo.links_between(&servers);
         let multi = servers.len() > 1;
         // Algorithm 1 bookkeeping: L_J = (C_J + E_J) · |G(J)| added to each
         // chosen GPU, drained as iterations complete.
@@ -514,7 +551,7 @@ impl<'a> Engine<'a> {
             j.load_total = load;
             j.load_per_iter = load / j.spec.iterations as f64;
             j.gpus = gpus;
-            j.servers = servers;
+            j.links = links;
             j.multi_server = multi;
             j.placed_at = Some(t);
         }
@@ -625,7 +662,9 @@ impl<'a> Engine<'a> {
                 dt -= use_lat;
             }
             if dt > 0.0 {
-                c.remaining -= dt * self.cfg.comm.rate(c.k);
+                // Drain at the bottleneck link's rate (1/per_byte); on a
+                // flat fabric this is exactly `comm.rate(k)`.
+                c.remaining -= dt * (1.0 / c.per_byte);
                 if c.remaining < 0.0 {
                     c.remaining = 0.0;
                 }
@@ -634,50 +673,63 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Contention level for a task spanning `servers`: max |C_s| (Eq 5).
-    fn contention_of(&self, servers: &[ServerId]) -> usize {
-        servers
-            .iter()
-            .map(|&s| self.per_server[s].len())
-            .max()
-            .unwrap_or(0)
+    /// Contention level for a task crossing `links`: max |C_l| — Eq (5)
+    /// generalised from server NICs to fabric links.
+    fn contention_on(&self, links: &[LinkId]) -> usize {
+        links.iter().map(|&l| self.per_link[l].len()).max().unwrap_or(0)
     }
 
-    /// Re-derive k and the predicted completion of comm task `id` at time t.
-    /// Under AtAdmission pricing, k is recomputed only while the task has
-    /// not started draining (i.e. at admission); afterwards it stays locked.
+    /// Re-derive k, the bottleneck per-byte price and the predicted
+    /// completion of comm task `id` at time t. Under AtAdmission pricing,
+    /// both are recomputed only while the task has not started draining
+    /// (i.e. at admission); afterwards they stay locked.
     fn repredict(&mut self, t: f64, id: usize) {
         let locked = self.cfg.repricing == Repricing::AtAdmission && self.comms[id].version > 0;
-        let k = if locked {
-            self.comms[id].k
+        let (k, per_byte) = if locked {
+            (self.comms[id].k, self.comms[id].per_byte)
         } else {
-            // Inline max over this task's servers (no allocation; this is
-            // on the Dynamic-repricing hot path).
+            // Inline max over this task's links (no allocation; this is
+            // on the Dynamic-repricing hot path). The effective price is
+            // the *bottleneck* link's: max per-link Eq (5) per-byte time
+            // at that link's own occupancy. On a uniform fabric both
+            // maxima land on the same link and this reduces to the seed
+            // engine's `comm.per_byte(max |C_s|)` exactly.
             let mut k = 1;
-            for i in 0..self.comms[id].servers.len() {
-                k = k.max(self.per_server[self.comms[id].servers[i]].len());
+            let mut pb = 0.0f64;
+            for i in 0..self.comms[id].links.len() {
+                let l = self.comms[id].links[i];
+                let occ = self.per_link[l].len().max(1);
+                k = k.max(occ);
+                let p = self.topo.link_model(l).per_byte(occ);
+                if p > pb {
+                    pb = p;
+                }
             }
-            k
+            if pb <= 0.0 {
+                pb = self.cfg.comm.per_byte(k); // no links: degenerate fabric
+            }
+            (k, pb)
         };
         let c = &mut self.comms[id];
         c.k = k;
+        c.per_byte = per_byte;
         c.version += 1;
-        let eta = t + c.latency_left + c.remaining * self.cfg.comm.per_byte(k);
+        let eta = t + c.latency_left + c.remaining * per_byte;
         let v = c.version;
         self.max_contention = self.max_contention.max(k);
         self.push(eta, Ev::CommDone { comm: id, version: v });
     }
 
-    /// After membership on `servers` changed, refresh every task touching
+    /// After membership on `links` changed, refresh every task touching
     /// them (Dynamic repricing). Under AtAdmission pricing, rates are
     /// locked at start and this is a no-op for existing tasks.
-    fn refresh_servers(&mut self, t: f64, servers: &[ServerId]) {
+    fn refresh_links(&mut self, t: f64, links: &[LinkId]) {
         if self.cfg.repricing == Repricing::AtAdmission {
             return;
         }
-        let mut affected: Vec<usize> = servers
+        let mut affected: Vec<usize> = links
             .iter()
-            .flat_map(|&s| self.per_server[s].iter().copied())
+            .flat_map(|&l| self.per_link[l].iter().copied())
             .collect();
         affected.sort_unstable();
         affected.dedup();
@@ -691,23 +743,27 @@ impl<'a> Engine<'a> {
             return;
         }
         self.advance_network(t);
-        let mut order = self.pending_comm.clone();
+        // Take the pending set and rebuild it from the rejects while
+        // walking the sorted order — O(n log n), versus the O(n²)
+        // `retain(admitted.contains)` difference this replaced (the set
+        // is re-sorted by the total order `(run_key, id)` every pass, so
+        // its carry-over order is irrelevant).
+        let mut order = std::mem::take(&mut self.pending_comm);
         order.sort_by(|&a, &b| srsf_cmp((self.run_key(a), a), (self.run_key(b), b)));
-        let mut admitted: Vec<usize> = Vec::new();
         // Build the admission view once per pass and refresh it only after
         // an admission actually changes the network state — rebuilding per
         // pending job was the #1 hot spot at paper scale (§Perf).
         let mut view: Vec<Vec<(usize, f64)>> = self
-            .per_server
+            .per_link
             .iter()
             .map(|ids| ids.iter().map(|&c| (c, self.comms[c].remaining)).collect())
             .collect();
         for job in order {
             let msg = self.jobs[job].spec.message_bytes();
-            let servers = self.jobs[job].servers.clone();
-            let net = NetView { per_server: &view };
-            if policy.admit(msg, &servers, &net) == Admission::Start {
-                let pre = self.contention_of(&servers);
+            let links = self.jobs[job].links.clone();
+            let net = NetView { per_link: &view };
+            if policy.admit(msg, &links, &net) == Admission::Start {
+                let pre = self.contention_on(&links);
                 if pre == 0 {
                     self.clean_admissions += 1;
                 } else {
@@ -716,33 +772,36 @@ impl<'a> Engine<'a> {
                 let id = self.comms.len();
                 self.comms.push(CommTask {
                     job,
-                    servers: servers.clone(),
-                    latency_left: self.cfg.comm.a,
+                    links: links.clone(),
+                    latency_left: self.topo.latency_over(&links),
                     remaining: msg,
                     k: 1,
+                    per_byte: self.cfg.comm.per_byte(1),
                     last_update: t,
                     version: 0,
                     done: false,
                 });
-                for &s in &servers {
-                    self.per_server[s].push(id);
+                for &l in &links {
+                    self.per_link[l].push(id);
                 }
+                self.active_pos.push(self.active_comms.len());
+                debug_assert_eq!(self.active_pos.len(), self.comms.len());
                 self.active_comms.push(id);
                 self.jobs[job].comm_pending = false;
                 self.log(t, || format!("comm-start job{job} k={}", pre + 1));
                 // Price the new task; under Dynamic repricing also refresh
-                // everyone sharing its servers.
+                // everyone sharing its links.
                 self.repredict(t, id);
-                self.refresh_servers(t, &servers);
-                admitted.push(job);
+                self.refresh_links(t, &links);
                 // Network state changed: refresh the shared view in place
-                // (only the admitted task's servers gained an entry).
-                for &s in &servers {
-                    view[s].push((id, self.comms[id].remaining));
+                // (only the admitted task's links gained an entry).
+                for &l in &links {
+                    view[l].push((id, self.comms[id].remaining));
                 }
+            } else {
+                self.pending_comm.push(job);
             }
         }
-        self.pending_comm.retain(|j| !admitted.contains(j));
     }
 
     fn complete_comm(
@@ -753,14 +812,21 @@ impl<'a> Engine<'a> {
         policy: &dyn CommPolicy,
     ) {
         let job = self.comms[id].job;
-        let servers = self.comms[id].servers.clone();
+        let links = self.comms[id].links.clone();
         self.comms[id].done = true;
-        self.active_comms.retain(|&c| c != id);
-        for &s in &servers {
-            self.per_server[s].retain(|&c| c != id);
+        // O(1) swap-remove from the in-flight set (per-link lists stay a
+        // retain: their length is the contention level, ≤ a few).
+        let pos = self.active_pos[id];
+        let _ = self.active_comms.swap_remove(pos);
+        if let Some(&moved) = self.active_comms.get(pos) {
+            self.active_pos[moved] = pos;
+        }
+        self.active_pos[id] = usize::MAX;
+        for &l in &links {
+            self.per_link[l].retain(|&c| c != id);
         }
         self.log(t, || format!("comm-done job{job}"));
-        self.refresh_servers(t, &servers);
+        self.refresh_links(t, &links);
         self.iteration_complete(t, job);
         self.try_admit(t, policy);
         if self.need_place {

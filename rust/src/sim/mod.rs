@@ -9,12 +9,18 @@
 //! Semantics are identical — scheduling decisions happen exactly at task
 //! boundaries, which is when Algorithm 3's per-slot loop would act.
 //!
-//! Network dynamics: an active All-Reduce on servers S(J) first pays the
-//! latency `a`, then drains its M bytes at per-byte time `k·b + (k−1)·η`
-//! where `k = max_{s∈S} |C_s|` (Eq 5's differential form). Whenever a task
-//! starts or finishes, the contention level — and hence the predicted
-//! completion — of every task sharing a server is recomputed; stale
-//! completion events are skipped via per-task version counters.
+//! Network dynamics: an active All-Reduce crossing fabric links L(J)
+//! (`net::Topology::links_between` over its servers — just the server
+//! NICs in the paper's flat testbed, plus rack uplinks in a two-tier
+//! fabric) first pays the worst-link latency `a`, then drains its M bytes
+//! at the bottleneck link's per-byte time `k·b_l + (k−1)·η_l` where
+//! `k = max_{l∈L} |C_l|` (Eq 5's differential form, generalised per
+//! link). Whenever a task starts or finishes, the contention level — and
+//! hence the predicted completion — of every task sharing a link is
+//! recomputed; stale completion events are skipped via per-task version
+//! counters. `SimConfig::topology` picks the fabric; the `flat` preset
+//! reproduces the seed per-server engine bit-for-bit (property-tested in
+//! `tests`).
 
 mod engine;
 

@@ -5,6 +5,7 @@ use super::*;
 use crate::sim::Repricing;
 use crate::cluster::ClusterSpec;
 use crate::model::{CommModel, DnnModel};
+use crate::net::TopologySpec;
 use crate::placement::{FirstFitPlacer, LwfPlacer};
 use crate::sched::{AdaDual, SrsfCap};
 use crate::trace::{self, JobSpec, TraceConfig};
@@ -14,9 +15,22 @@ fn cfg(n_servers: usize, gpus_per_server: usize) -> SimConfig {
     SimConfig {
         cluster: ClusterSpec::tiny(n_servers, gpus_per_server),
         comm: CommModel::paper_10gbe(),
+        topology: TopologySpec::Flat,
         repricing: Repricing::Dynamic,
         priority: JobPriority::Srsf,
         log_events: false,
+    }
+}
+
+fn two_tier_cfg(
+    n_servers: usize,
+    gpus_per_server: usize,
+    rack_size: usize,
+    oversub: f64,
+) -> SimConfig {
+    SimConfig {
+        topology: TopologySpec::TwoTier { rack_size, oversubscription: oversub },
+        ..cfg(n_servers, gpus_per_server)
     }
 }
 
@@ -295,4 +309,242 @@ fn prop_more_contention_allowed_never_reduces_max() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// net topology: the flat preset must reproduce the seed engine's
+// per-server contention bookkeeping; two-tier opens genuinely new physics.
+
+/// Replay an event log and independently re-derive per-server contention
+/// counts (the seed engine's `per_server` bookkeeping), checking every
+/// comm-start's logged k against them. This is an oracle *outside* the
+/// link-indexed engine: it only uses placements and the comm lifecycle.
+fn check_flat_matches_per_server_oracle(
+    spec: &ClusterSpec,
+    events: &[EventLog],
+) -> Result<(), String> {
+    fn job_id(rest: &str) -> Result<usize, String> {
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        digits.parse().map_err(|_| format!("bad job id in '{rest}'"))
+    }
+    let mut servers_of_job: Vec<Option<Vec<usize>>> = Vec::new();
+    let mut counts = vec![0usize; spec.n_servers];
+    let mut saw_comm = false;
+    for e in events {
+        let w = e.what.as_str();
+        if let Some(rest) = w.strip_prefix("place job") {
+            let id = job_id(rest)?;
+            let lb = w.find('[').ok_or_else(|| format!("no gpu list in '{w}'"))?;
+            let rb = w.rfind(']').unwrap();
+            let gpus: Vec<usize> = w[lb + 1..rb]
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect();
+            if servers_of_job.len() <= id {
+                servers_of_job.resize(id + 1, None);
+            }
+            servers_of_job[id] = Some(spec.servers_of(&gpus));
+        } else if let Some(rest) = w.strip_prefix("comm-start job") {
+            saw_comm = true;
+            let id = job_id(rest)?;
+            let k: usize = rest
+                .split("k=")
+                .nth(1)
+                .and_then(|x| x.parse().ok())
+                .ok_or_else(|| format!("no k in '{w}'"))?;
+            let servers = servers_of_job[id]
+                .as_ref()
+                .ok_or_else(|| format!("comm-start before place for job {id}"))?;
+            let expect = 1 + servers.iter().map(|&s| counts[s]).max().unwrap();
+            if k != expect {
+                return Err(format!(
+                    "job {id}: engine k={k} but per-server oracle says {expect}"
+                ));
+            }
+            for &s in servers {
+                counts[s] += 1;
+            }
+        } else if let Some(rest) = w.strip_prefix("comm-done job") {
+            let id = job_id(rest)?;
+            for &s in servers_of_job[id].as_ref().unwrap() {
+                counts[s] -= 1;
+            }
+        }
+    }
+    if !saw_comm {
+        return Err("workload produced no communication".to_string());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_flat_topology_reproduces_seed_per_server_contention() {
+    // Random multi-server workloads through both repricing modes and both
+    // policy families: every admission's contention level under the
+    // link-indexed flat fabric must equal the per-server count the seed
+    // engine tracked.
+    prop_check(25, |g| {
+        let n_servers = g.usize(2, 4);
+        let mut c = cfg(n_servers, g.usize(1, 2));
+        c.log_events = true;
+        c.repricing = if g.bool() { Repricing::Dynamic } else { Repricing::AtAdmission };
+        let total = c.cluster.n_gpus();
+        let n_jobs = g.usize(2, 6);
+        let models = crate::model::ALL_MODELS;
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| JobSpec {
+                id: i,
+                arrival: g.f64(0.0, 10.0),
+                model: *g.pick(&models),
+                // At least 2 servers' worth of GPUs so All-Reduces happen.
+                n_gpus: g.usize(c.cluster.gpus_per_server + 1, total),
+                iterations: g.u64(1, 15),
+            })
+            .collect();
+        let res = if g.bool() {
+            let mut p = FirstFitPlacer;
+            simulate(&c, &jobs, &mut p, &SrsfCap { cap: g.usize(1, 3) })
+        } else {
+            let mut p = FirstFitPlacer;
+            simulate(&c, &jobs, &mut p, &AdaDual { model: c.comm })
+        };
+        check_flat_matches_per_server_oracle(&c.cluster, &res.events)
+    });
+}
+
+#[test]
+fn prop_flat_equals_uniform_heterogeneous() {
+    // A heterogeneous fabric whose every NIC carries the base model is
+    // physically the flat fabric; the two presets must produce identical
+    // results (they exercise different Topology construction paths).
+    prop_check(10, |g| {
+        let n_servers = g.usize(2, 4);
+        let c_flat = cfg(n_servers, 2);
+        let c_het = SimConfig {
+            topology: TopologySpec::Heterogeneous {
+                nics: vec![c_flat.comm; n_servers],
+            },
+            ..c_flat.clone()
+        };
+        let models = crate::model::ALL_MODELS;
+        let n_jobs = g.usize(2, 6);
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| JobSpec {
+                id: i,
+                arrival: g.f64(0.0, 10.0),
+                model: *g.pick(&models),
+                n_gpus: g.usize(1, n_servers * 2),
+                iterations: g.u64(1, 20),
+            })
+            .collect();
+        let mut p1 = LwfPlacer::new(1);
+        let r1 = simulate(&c_flat, &jobs, &mut p1, &AdaDual { model: c_flat.comm });
+        let mut p2 = LwfPlacer::new(1);
+        let r2 = simulate(&c_het, &jobs, &mut p2, &AdaDual { model: c_het.comm });
+        // Bitwise comparison: an unplaceable job's NaN must compare equal
+        // to itself, and "identical" here really means bit-identical.
+        let same = r1.jct.len() == r2.jct.len()
+            && r1.jct.iter().zip(&r2.jct).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            return Err(format!("jct diverged: {:?} vs {:?}", r1.jct, r2.jct));
+        }
+        if r1.n_events != r2.n_events
+            || r1.clean_admissions != r2.clean_admissions
+            || r1.contended_admissions != r2.contended_admissions
+            || r1.max_contention != r2.max_contention
+        {
+            return Err("engine counters diverged between flat and uniform-hetero".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn two_tier_cross_rack_pays_oversubscribed_core_analytically() {
+    // One job spanning both racks of a 4-server fabric (1 GPU each, racks
+    // of 2) at 4:1: each All-Reduce crosses the core, whose per-byte time
+    // is 4b, so JCT = compute + iters * (a + 4bM) exactly.
+    let oversub = 4.0;
+    let c = two_tier_cfg(4, 1, 2, oversub);
+    let iters = 30u64;
+    let j = job(0, 0.0, DnnModel::ResNet50, 4, iters);
+    let res = run(&c, &[j.clone()]);
+    let compute = j.compute_total(c.cluster.gpu_peak_gflops);
+    let per_iter_comm = c.comm.a + oversub * c.comm.b * j.message_bytes();
+    let want = compute + iters as f64 * per_iter_comm;
+    assert!(
+        (res.jct[0] - want).abs() < 1e-6,
+        "jct {} vs analytic {want}",
+        res.jct[0]
+    );
+    assert_eq!(res.max_contention, 1);
+}
+
+#[test]
+fn two_tier_within_rack_matches_flat_exactly() {
+    // A job confined to one rack never touches the core: its schedule is
+    // bit-identical to the flat fabric's.
+    let j = job(0, 0.0, DnnModel::Vgg16, 2, 25); // servers 0,1 = rack 0
+    let flat = run(&cfg(4, 1), &[j.clone()]);
+    let racked = run(&two_tier_cfg(4, 1, 2, 8.0), &[j]);
+    assert_eq!(flat.jct, racked.jct);
+    assert_eq!(flat.n_events, racked.n_events);
+}
+
+#[test]
+fn two_tier_makespan_grows_with_oversubscription() {
+    // Two cross-rack jobs under SRSF(1) (comm serialised): a slower core
+    // strictly stretches the schedule.
+    let jobs = [
+        job(0, 0.0, DnnModel::Vgg16, 4, 15),
+        job(1, 0.0, DnnModel::ResNet50, 4, 15),
+    ];
+    let mk = |oversub: f64| {
+        let c = two_tier_cfg(4, 1, 2, oversub);
+        let mut p = FirstFitPlacer;
+        simulate(&c, &jobs, &mut p, &SrsfCap { cap: 1 }).makespan
+    };
+    let m1 = mk(1.0);
+    let m4 = mk(4.0);
+    let m8 = mk(8.0);
+    assert!(m1 < m4 && m4 < m8, "makespans not monotonic: {m1} {m4} {m8}");
+}
+
+#[test]
+fn two_tier_contention_meets_on_the_core_link() {
+    // Two jobs on disjoint server pairs but both crossing racks: their
+    // NICs never collide, yet SRSF(1) must still serialise them because
+    // they share the rack uplinks — contention the flat model cannot see.
+    let c = two_tier_cfg(4, 1, 2, 4.0);
+    // servers {0,2} and {1,3}: disjoint NICs, both cross racks 0 and 1.
+    struct PairPlacer;
+    impl crate::placement::Placer for PairPlacer {
+        fn name(&self) -> &'static str {
+            "pair"
+        }
+        fn place(
+            &mut self,
+            job: &JobSpec,
+            _state: &crate::cluster::ClusterState,
+        ) -> Option<Vec<usize>> {
+            Some(if job.id == 0 { vec![0, 2] } else { vec![1, 3] })
+        }
+    }
+    let jobs = [
+        job(0, 0.0, DnnModel::Vgg16, 2, 10),
+        job(1, 0.0, DnnModel::Vgg16, 2, 10),
+    ];
+    let mut p = PairPlacer;
+    let srsf2 = simulate(&c, &jobs, &mut p, &SrsfCap { cap: 2 });
+    assert!(
+        srsf2.contended_admissions > 0,
+        "uplink contention never observed"
+    );
+    assert_eq!(srsf2.max_contention, 2);
+    // On the flat fabric the same layout shows zero contention.
+    let c_flat = cfg(4, 1);
+    let mut p = PairPlacer;
+    let flat = simulate(&c_flat, &jobs, &mut p, &SrsfCap { cap: 2 });
+    assert_eq!(flat.contended_admissions, 0);
+    assert_eq!(flat.max_contention, 1);
 }

@@ -18,14 +18,14 @@ fn paper_grid_runs_from_one_json_artifact() {
     let artifact = small_paper_grid().to_json_text();
     let exp = Experiment::from_text(&artifact).unwrap();
     let records = exp.run(2).unwrap();
-    assert_eq!(records.len(), registry::PLACERS.len() * registry::POLICIES.len());
+    assert_eq!(records.len(), registry::PAPER_PLACERS.len() * registry::POLICIES.len());
     for r in &records {
         assert_eq!(r.eval.jct.n, 24, "{} lost jobs", r.scenario.label());
         assert!(r.eval.jct.mean > 0.0 && r.eval.jct.mean.is_finite());
         assert!(r.eval.avg_gpu_util > 0.0 && r.eval.avg_gpu_util <= 1.0);
     }
     // Every placer x policy combination appears exactly once.
-    for placer in registry::PLACERS {
+    for placer in registry::PAPER_PLACERS {
         for policy in registry::POLICIES {
             let n = records
                 .iter()
@@ -105,16 +105,75 @@ fn committed_paper_grid_artifact_parses_and_expands() {
 }
 
 #[test]
+fn committed_oversub_sweep_artifact_parses_and_expands() {
+    // The two-tier oversubscription family ships as a scenario file:
+    // policy x {2:1, 4:1, 8:1} over the paper workload on racks of 4.
+    let exp = Experiment::from_file("scenarios/oversub_sweep.json").unwrap();
+    assert_eq!(exp.oversubs, vec![2.0, 4.0, 8.0]);
+    let grid = exp.grid().unwrap();
+    assert_eq!(grid.len(), registry::POLICIES.len() * 3);
+    for s in &grid {
+        match s.topology {
+            TopologySpec::TwoTier { rack_size, oversubscription } => {
+                assert_eq!(rack_size, 4);
+                assert!([2.0, 4.0, 8.0].contains(&oversubscription));
+            }
+            ref other => panic!("expected two-tier, got {other:?}"),
+        }
+        assert_eq!(s.placer, "lwf-rack");
+    }
+}
+
+#[test]
+fn two_tier_grid_runs_end_to_end() {
+    // A scaled-down oversubscription sweep through the whole
+    // file -> grid -> threads -> records pipeline.
+    let base = Scenario {
+        placer: "lwf-rack".into(),
+        topology: TopologySpec::TwoTier { rack_size: 2, oversubscription: 2.0 },
+        ..Scenario::small("2tier-grid", 4, 2, 16)
+    };
+    let exp = Experiment {
+        policies: vec!["srsf1".into(), "ada".into()],
+        oversubs: vec![2.0, 8.0],
+        ..Experiment::single(base)
+    };
+    let text = exp.to_json_text();
+    let reloaded = Experiment::from_text(&text).unwrap();
+    assert_eq!(reloaded, exp);
+    let serial = reloaded.run(1).unwrap();
+    let parallel = reloaded.run(4).unwrap();
+    assert_eq!(records_to_json(&serial), records_to_json(&parallel));
+    assert_eq!(serial.len(), 4);
+    for r in &serial {
+        assert_eq!(r.eval.jct.n, 16, "{} lost jobs", r.scenario.label());
+        assert!(r.scenario.label().contains("2tier"), "{}", r.scenario.label());
+    }
+}
+
+#[test]
+fn flat_record_json_is_topology_free() {
+    // Byte-stability contract: a flat scenario's RunRecord JSON carries no
+    // topology section, exactly like the pre-net schema.
+    let recs = Experiment::single(Scenario::small("flat-json", 2, 2, 8)).run(1).unwrap();
+    let text = records_to_json(&recs);
+    assert!(!text.contains("topology"), "flat record JSON grew a topology field");
+    // And the CSV column set is unchanged.
+    let csv = records_to_csv(&recs);
+    assert!(!csv.lines().next().unwrap().contains("topology"));
+}
+
+#[test]
 fn registry_matches_legacy_names_end_to_end() {
     // The names the old placement::by_name / sched::by_name accepted keep
     // resolving through the unified registry.
-    for name in ["rand", "RAND", "ff", "FF", "ls", "LS", "lwf", "LWF"] {
-        assert!(registry::make_placer(name, 1, 0).is_ok(), "{name}");
+    for name in ["rand", "RAND", "ff", "FF", "ls", "LS", "lwf", "LWF", "lwf-rack"] {
+        assert!(registry::make_placer(name, 1, 0, usize::MAX).is_ok(), "{name}");
     }
     let cm = CommModel::paper_10gbe();
     for name in ["srsf1", "SRSF(1)", "srsf2", "SRSF(2)", "srsf3", "SRSF(3)", "ada", "adadual"] {
         assert!(registry::make_policy(name, cm).is_ok(), "{name}");
     }
-    assert!(registry::make_placer("nope", 1, 0).is_err());
+    assert!(registry::make_placer("nope", 1, 0, usize::MAX).is_err());
     assert!(registry::make_policy("nope", cm).is_err());
 }

@@ -6,7 +6,7 @@ use ddl_sched::prelude::*;
 
 fn eval(placer_name: &str, policy_name: &str, jobs: &[JobSpec]) -> Evaluation {
     let cfg = SimConfig::paper();
-    let mut placer = registry::make_placer(placer_name, 1, 7).unwrap();
+    let mut placer = registry::make_placer(placer_name, 1, 7, usize::MAX).unwrap();
     let policy = registry::make_policy(policy_name, cfg.comm).unwrap();
     let res = sim::simulate(&cfg, &jobs.to_vec(), placer.as_mut(), policy.as_ref());
     Evaluation::from_sim(&format!("{placer_name}/{policy_name}"), &res)
@@ -54,7 +54,7 @@ fn finding_ada_beats_srsf_variants_on_paper_trace() {
     // (SRSF(2)/(3)), and Ada-SRSF beats blind acceptance and tracks
     // SRSF(1) closely. The paper's strict Ada-SRSF > SRSF(1) win does NOT
     // reproduce under exact Eq (5) repricing — an analysed divergence, see
-    // EXPERIMENTS.md §TableV: the pairwise-optimal AdaDUAL admission is
+    // docs/EXPERIMENTS.md §TableV-discussion: the pairwise-optimal AdaDUAL admission is
     // myopic w.r.t. repeated elephant slowdowns at high contention, so at
     // the macro scale it lands within a few percent of SRSF(1) instead of
     // 20% ahead. The pairwise win itself is verified in
@@ -135,6 +135,7 @@ fn motivation_contention_blowup() {
     let cfg = SimConfig {
         cluster: ClusterSpec::tiny(4, 4),
         comm: CommModel::paper_10gbe(),
+        topology: TopologySpec::Flat,
         repricing: sim::Repricing::Dynamic,
         priority: sim::JobPriority::Srsf,
         log_events: false,
