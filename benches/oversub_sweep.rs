@@ -12,6 +12,7 @@
 //! Run: `cargo bench --bench oversub_sweep`
 
 use ddl_sched::prelude::*;
+use ddl_sched::util::bench::BenchReport;
 
 const RATIOS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
 
@@ -30,7 +31,21 @@ fn main() {
         oversubs: RATIOS.to_vec(),
         ..Experiment::single(base)
     };
+    let t0 = std::time::Instant::now();
     let records = exp.run(Experiment::default_threads()).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Machine-readable trajectory dump (per-cell event counts; the grid
+    // is timed as a whole, recorded as the summary row).
+    let mut report = BenchReport::new("oversub_sweep");
+    for r in &records {
+        report.record_events(&format!("{} {}", r.scenario.name, r.scenario.label()), r.n_events);
+    }
+    report.record("sweep total", records.iter().map(|r| r.n_events).sum(), wall);
+    match report.write() {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
 
     let mut t = Table::new(
         "two-tier core oversubscription — avg JCT(s), LWF-rack-1 placement",

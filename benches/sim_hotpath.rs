@@ -1,18 +1,64 @@
-//! L3 performance benchmark: simulator throughput (events/second) on the
-//! paper workload and scaled variants (flat and two-tier fabrics), plus
-//! micro-benchmarks of the hot helpers (placement, admission, two-task
-//! oracle). This is the §Perf harness for docs/EXPERIMENTS.md — run
-//! before/after each optimisation (CI smoke-runs it in release mode).
+//! L3 performance benchmark: simulator throughput on the paper workload
+//! and scaled variants (flat and two-tier fabrics), with steady-state
+//! fast-forwarding measured against the event-exact engine (`coalescing`
+//! off → on: heap events before/after and the resulting events/s), plus
+//! micro-benchmarks of the hot helpers. This is the §Perf harness for
+//! docs/EXPERIMENTS.md — run before/after each optimisation (CI
+//! smoke-runs it in release mode and uploads the machine-readable row
+//! dump `results/BENCH_sim_hotpath.json` as an artifact so the perf
+//! trajectory is tracked across PRs).
 
 use ddl_sched::prelude::*;
-use ddl_sched::util::bench::bench;
+use ddl_sched::util::bench::{bench, BenchReport};
+
+/// Run one workload twice — event-exact, then coalescing — and report
+/// the event-count reduction plus the coalesced run's throughput.
+fn run_row(
+    t: &mut Table,
+    report: &mut BenchReport,
+    label: &str,
+    base: &SimConfig,
+    jobs: &[JobSpec],
+    rack_size: Option<usize>,
+) {
+    let mut events = [0u64; 2];
+    let mut wall = [0f64; 2];
+    for (i, coalescing) in [false, true].into_iter().enumerate() {
+        let cfg = SimConfig { coalescing, ..base.clone() };
+        let mode = if coalescing { "coalescing=on" } else { "coalescing=off" };
+        let timing = bench(&format!("{label} {mode}"), 1, 3, || {
+            let res = match rack_size {
+                Some(r) => {
+                    let mut placer = RackLwfPlacer::new(1, r);
+                    sim::simulate(&cfg, jobs, &mut placer, &AdaDual { model: cfg.comm })
+                }
+                None => {
+                    let mut placer = LwfPlacer::new(1);
+                    sim::simulate(&cfg, jobs, &mut placer, &AdaDual { model: cfg.comm })
+                }
+            };
+            events[i] = res.n_events;
+        });
+        wall[i] = timing.mean_s;
+        report.record(&format!("{label} {mode}"), events[i], timing.mean_s);
+    }
+    t.row(&[
+        label.to_string(),
+        format!("{}", events[0]),
+        format!("{}", events[1]),
+        format!("{:.1}x", events[0] as f64 / events[1].max(1) as f64),
+        format!("{:.1}", wall[1] * 1e3),
+        format!("{:.2}", events[1] as f64 / wall[1] / 1e6),
+    ]);
+}
 
 fn main() {
     let cfg = SimConfig::paper();
+    let mut report = BenchReport::new("sim_hotpath");
 
     let mut t = Table::new(
-        "L3 hot path — full simulations",
-        &["workload", "events", "wall (ms)", "events/s (M)"],
+        "L3 hot path — full simulations, event-exact vs fast-forwarded",
+        &["workload", "events off", "events on", "reduction", "wall on (ms)", "events/s (M)"],
     );
     for (label, n_jobs) in [("40 jobs", 40), ("160 jobs (paper)", 160), ("320 jobs", 320)] {
         let jobs = if n_jobs == 160 {
@@ -20,19 +66,7 @@ fn main() {
         } else {
             trace::generate(&TraceConfig::scaled(n_jobs, 11))
         };
-        let mut events = 0u64;
-        let timing = bench(label, 1, 3, || {
-            let mut placer = LwfPlacer::new(1);
-            let policy = AdaDual { model: cfg.comm };
-            let res = sim::simulate(&cfg, &jobs, &mut placer, &policy);
-            events = res.n_events;
-        });
-        t.row(&[
-            label.to_string(),
-            format!("{events}"),
-            format!("{:.1}", timing.mean_s * 1e3),
-            format!("{:.2}", events as f64 / timing.mean_s / 1e6),
-        ]);
+        run_row(&mut t, &mut report, label, &cfg, &jobs, None);
     }
     // The link-indexed fabric path: same paper workload on a 4:1
     // oversubscribed two-tier fabric with rack-locality placement.
@@ -40,20 +74,7 @@ fn main() {
         let mut cfg2 = SimConfig::paper();
         cfg2.topology = TopologySpec::TwoTier { rack_size: 4, oversubscription: 4.0 };
         let jobs = trace::generate(&TraceConfig::paper_160());
-        let mut events = 0u64;
-        let label = "160 jobs (2-tier 4:1)";
-        let timing = bench(label, 1, 3, || {
-            let mut placer = RackLwfPlacer::new(1, 4);
-            let policy = AdaDual { model: cfg2.comm };
-            let res = sim::simulate(&cfg2, &jobs, &mut placer, &policy);
-            events = res.n_events;
-        });
-        t.row(&[
-            label.to_string(),
-            format!("{events}"),
-            format!("{:.1}", timing.mean_s * 1e3),
-            format!("{:.2}", events as f64 / timing.mean_s / 1e6),
-        ]);
+        run_row(&mut t, &mut report, "160 jobs (2-tier 4:1)", &cfg2, &jobs, Some(4));
     }
     t.print();
 
@@ -94,4 +115,9 @@ fn main() {
     });
     t.row(&[timing.name.clone(), format!("{:.2} us", timing.mean_s * 1e6)]);
     t.print();
+
+    match report.write() {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
 }

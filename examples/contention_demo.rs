@@ -50,6 +50,7 @@ fn main() {
         topology: TopologySpec::Flat,
         repricing: sim::Repricing::Dynamic,
         priority: sim::JobPriority::Srsf,
+        coalescing: true,
         log_events: false,
     };
     let iters = 2000;

@@ -179,6 +179,26 @@ impl ClusterState {
             self.gpus[g].load = (self.gpus[g].load - amount).max(0.0);
         }
     }
+
+    /// Drain `n` iterations' load in one call — the batched form the
+    /// simulator's fast-forwarded macro-events use. Replays the exact
+    /// per-iteration `drain_load` chain (the subtraction sequence is not
+    /// reassociated: results must stay bit-identical to n single drains),
+    /// stopping early at the chain's fixed point (a drained-to-zero
+    /// counter stays zero).
+    pub fn drain_load_n(&mut self, gpus: &[GpuId], amount: f64, n: u64) {
+        for &g in gpus {
+            let mut load = self.gpus[g].load;
+            for _ in 0..n {
+                let next = (load - amount).max(0.0);
+                if next.to_bits() == load.to_bits() {
+                    break; // fixed point: every further drain is identical
+                }
+                load = next;
+            }
+            self.gpus[g].load = load;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -223,6 +243,36 @@ mod tests {
         st.allocate(&[0], 1e9, 10.0);
         st.drain_load(&[0], 25.0);
         assert_eq!(st.gpus[0].load, 0.0);
+    }
+
+    #[test]
+    fn drain_load_n_matches_n_single_drains_bitwise() {
+        // The batched drain must replay the per-iteration chain exactly —
+        // including the non-associative float subtractions — for any mix
+        // of partial and past-zero drains.
+        for (load, amount, n) in [
+            (100.0, 0.37, 113u64),
+            (100.0, 3.3, 200),
+            (5.0, 0.0, 50),
+            (0.0, 1.0, 10),
+            (1.0, 1e-3, 1),
+        ] {
+            let mut a = ClusterState::new(ClusterSpec::tiny(1, 2));
+            let mut b = ClusterState::new(ClusterSpec::tiny(1, 2));
+            a.allocate(&[0, 1], 1e9, load);
+            b.allocate(&[0, 1], 1e9, load);
+            for _ in 0..n {
+                a.drain_load(&[0, 1], amount);
+            }
+            b.drain_load_n(&[0, 1], amount, n);
+            assert_eq!(
+                a.gpus[0].load.to_bits(),
+                b.gpus[0].load.to_bits(),
+                "load={load} amount={amount} n={n}: {} vs {}",
+                a.gpus[0].load,
+                b.gpus[0].load
+            );
+        }
     }
 
     #[test]

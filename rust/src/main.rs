@@ -58,9 +58,10 @@ fn print_help() {
          \n\
          A run is described by a *scenario*: a JSON file naming the cluster,\n\
          comm model, fabric topology (flat | two-tier | heterogeneous),\n\
-         trace source, placer, kappa, policy, priority, repricing and seed\n\
-         (schema: docs/SCENARIOS.md). A *sweep* expands a scenario across\n\
-         grid axes and runs it on worker threads.\n\
+         trace source, placer, kappa, policy, priority, repricing, the\n\
+         coalescing engine knob and seed (schema: docs/SCENARIOS.md). A\n\
+         *sweep* expands a scenario across grid axes and runs it on worker\n\
+         threads.\n\
          \n\
          SUBCOMMANDS\n\
          \x20 scenario-gen [--grid] [--out scenario.json]\n\
@@ -70,8 +71,8 @@ fn print_help() {
          \x20 simulate   [--scenario F] [--trace F] [--placer lwf|lwf-rack|ff|ls|rand]\n\
          \x20            [--kappa K] [--policy ada|srsf1|srsf2|srsf3]\n\
          \x20            [--priority srsf|fifo|las] [--repricing at-admission|dynamic]\n\
-         \x20            [--oversub R] [--rack-size N] [--seed S] [--jobs N]\n\
-         \x20                                                   run one scenario\n\
+         \x20            [--oversub R] [--rack-size N] [--coalescing on|off]\n\
+         \x20            [--seed S] [--jobs N]                  run one scenario\n\
          \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority|oversub]\n\
          \x20            [--grid] [--threads N] [--out-json F] [--out-csv F]\n\
          \x20            [--jobs N] [--seed S]                  run a scenario grid\n\
@@ -113,6 +114,15 @@ fn scenario_from_flags(args: &Args) -> Result<Scenario> {
     if let Some(r) = args.get("repricing") {
         s.repricing = sim::Repricing::parse(r)
             .ok_or_else(|| err!("unknown repricing '{r}' (at-admission|dynamic)"))?;
+    }
+    // Engine-speed knob: steady-state iteration fast-forwarding (results
+    // are identical either way; `off` is the event-exact oracle).
+    if let Some(c) = args.get("coalescing") {
+        s.coalescing = match c {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => bail!("unknown --coalescing '{other}' (on|off)"),
+        };
     }
     // --oversub R puts the run on a two-tier fabric (racks of --rack-size
     // servers, default net::DEFAULT_RACK_SIZE) with an R:1 core.

@@ -18,7 +18,9 @@
 //! * `flat` — one NIC link per server, all with the base comm model.
 //!   `LinkId` == `ServerId`, so contention counts reduce *exactly* to the
 //!   paper's per-server counts: a flat scenario reproduces the seed
-//!   engine bit-for-bit (property-tested in `sim::tests`).
+//!   engine's contention structure exactly, and its timing to within
+//!   the ulp-level residual-arithmetic change described in
+//!   docs/EXPERIMENTS.md §Oversub (property-tested in `sim::tests`).
 //! * `two-tier` — racks of `rack_size` servers; cross-rack transfers
 //!   additionally cross each involved rack's core uplink, whose per-byte
 //!   constants are the base model's scaled by the `oversubscription`

@@ -199,36 +199,35 @@ impl Placer for RackLwfPlacer {
             return ListSchedulingPlacer.place(job, state);
         }
         let spec = state.spec;
+        // Load keys are computed once per candidate and sorted as
+        // (load, id) tuples; deriving them inside the comparators cost a
+        // rack-load aggregation (a sum over every GPU of every server of
+        // the rack) per *comparison* instead of per candidate. Ordering
+        // is unchanged: ascending load, ties by id.
         let rack_load = |r: usize| -> f64 {
             spec.servers_of_rack(r, self.rack_size).map(|s| state.server_load(s)).sum()
         };
-        let mut racks: Vec<usize> = (0..spec.n_racks(self.rack_size)).collect();
-        racks.sort_by(|&a, &b| {
-            rack_load(a).partial_cmp(&rack_load(b)).unwrap().then(a.cmp(&b))
-        });
+        let by_load = |a: &(f64, usize), b: &(f64, usize)| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        };
+        let mut racks: Vec<(f64, usize)> =
+            (0..spec.n_racks(self.rack_size)).map(|r| (rack_load(r), r)).collect();
+        racks.sort_by(by_load);
         let mut chosen: Vec<GpuId> = Vec::with_capacity(n);
-        for r in racks {
-            let mut servers: Vec<ServerId> = spec.servers_of_rack(r, self.rack_size).collect();
-            servers.sort_by(|&a, &b| {
-                state
-                    .server_load(a)
-                    .partial_cmp(&state.server_load(b))
-                    .unwrap()
-                    .then(a.cmp(&b))
-            });
-            for s in servers {
-                let mut gpus: Vec<GpuId> = spec
+        for (_, r) in racks {
+            let mut servers: Vec<(f64, ServerId)> = spec
+                .servers_of_rack(r, self.rack_size)
+                .map(|s| (state.server_load(s), s))
+                .collect();
+            servers.sort_by(by_load);
+            for (_, s) in servers {
+                let mut gpus: Vec<(f64, GpuId)> = spec
                     .gpus_of(s)
                     .filter(|&g| state.fits(g, job.mem_bytes()))
+                    .map(|g| (state.gpus[g].load, g))
                     .collect();
-                gpus.sort_by(|&a, &b| {
-                    state.gpus[a]
-                        .load
-                        .partial_cmp(&state.gpus[b].load)
-                        .unwrap()
-                        .then(a.cmp(&b))
-                });
-                for g in gpus {
+                gpus.sort_by(by_load);
+                for (_, g) in gpus {
                     chosen.push(g);
                     if chosen.len() == n {
                         return Some(chosen);

@@ -588,6 +588,24 @@ mod tests {
     }
 
     #[test]
+    fn grid_carries_base_coalescing() {
+        // The speed knob is not an axis — every cell inherits it from the
+        // base scenario (and the record schema is unchanged by it).
+        let e = Experiment {
+            policies: vec!["srsf1".into(), "ada".into()],
+            ..Experiment::single(Scenario {
+                coalescing: false,
+                ..Scenario::small("ff-base", 2, 2, 6)
+            })
+        };
+        let g = e.grid().unwrap();
+        assert_eq!(g.len(), 2);
+        assert!(g.iter().all(|s| !s.coalescing));
+        let back = Experiment::from_text(&e.to_json_text()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
     fn csv_escapes_free_form_names() {
         let mut s = Scenario::small("paper, v2", 2, 2, 6);
         s.name = "has \"quotes\", commas".into();

@@ -107,6 +107,11 @@ pub struct Scenario {
     pub policy: String,
     pub priority: JobPriority,
     pub repricing: Repricing,
+    /// Steady-state iteration fast-forwarding in the engine (default on).
+    /// A pure speed knob: results are identical either way
+    /// (property-tested), so it never appears in labels, and the default
+    /// is elided from JSON to keep pre-existing files byte-stable.
+    pub coalescing: bool,
     /// Seeds the RAND placer and any `Generated` trace without its own seed.
     pub seed: u64,
 }
@@ -126,6 +131,7 @@ impl Scenario {
             policy: "ada".to_string(),
             priority: JobPriority::Srsf,
             repricing: Repricing::AtAdmission,
+            coalescing: true,
             seed: 42,
         }
     }
@@ -172,6 +178,7 @@ impl Scenario {
             topology: self.topology.clone(),
             repricing: self.repricing,
             priority: self.priority,
+            coalescing: self.coalescing,
             log_events: false,
         }
     }
@@ -269,13 +276,20 @@ impl Scenario {
         if !self.topology.is_flat() {
             v = v.set("topology", self.topology.to_json());
         }
-        v.set("trace", self.trace.to_json())
+        let mut v = v
+            .set("trace", self.trace.to_json())
             .set("placer", self.placer.as_str())
             .set("kappa", self.kappa)
             .set("policy", self.policy.as_str())
             .set("priority", self.priority.name())
-            .set("repricing", self.repricing.name())
-            .set("seed", self.seed)
+            .set("repricing", self.repricing.name());
+        // Like the flat topology, the default (on) is elided: coalescing
+        // is a pure engine-speed knob with identical results, and
+        // pre-existing scenario files must stay byte-stable.
+        if !self.coalescing {
+            v = v.set("coalescing", false);
+        }
+        v.set("seed", self.seed)
     }
 
     /// Pretty JSON text (the shareable artifact form).
@@ -303,6 +317,13 @@ impl Scenario {
             Some(t) => TopologySpec::from_json(t).map_err(Error::msg)?,
         };
         topology.validate(&cluster).map_err(Error::msg)?;
+        // Absent means the default: fast-forwarding on.
+        let coalescing = match v.get("coalescing") {
+            None => true,
+            Some(c) => c
+                .as_bool()
+                .ok_or_else(|| Error::msg("'coalescing' must be a boolean (true|false)"))?,
+        };
         Ok(Scenario {
             name: v.req_str("name").map_err(Error::msg)?.to_string(),
             cluster,
@@ -324,6 +345,7 @@ impl Scenario {
             repricing: Repricing::parse(repricing).ok_or_else(|| {
                 Error::msg(format!("unknown repricing '{repricing}' (at-admission|dynamic)"))
             })?,
+            coalescing,
             seed: v.req_u64("seed").map_err(Error::msg)?,
         })
     }
@@ -361,12 +383,14 @@ mod tests {
             name: "ablate".into(),
             cluster: ClusterSpec::tiny(3, 2),
             comm: CommModel { a: 1e-3, b: 9e-10, eta: 2.5e-10 },
+            topology: TopologySpec::Flat,
             trace: TraceSource::Generated { jobs: 24, seed: Some(9) },
             placer: "rand".into(),
             kappa: 4,
             policy: "srsf2".into(),
             priority: JobPriority::Las,
             repricing: Repricing::Dynamic,
+            coalescing: false,
             seed: 7,
         };
         let back = Scenario::from_text(&s.to_json_text()).unwrap();
@@ -501,6 +525,57 @@ mod tests {
         assert_eq!(cfg.cluster, s.cluster);
         assert_eq!(cfg.comm, s.comm);
         assert_eq!(cfg.topology, s.topology);
+        assert!(cfg.coalescing);
+        let off = Scenario { coalescing: false, ..s };
+        assert!(!off.sim_config().coalescing);
+    }
+
+    // ---- coalescing knob ---------------------------------------------------
+
+    #[test]
+    fn coalescing_default_elided_and_off_roundtrips() {
+        // The default (on) never appears in JSON: paper-era files and
+        // records stay byte-stable.
+        let text = Scenario::paper().to_json_text();
+        assert!(!text.contains("coalescing"), "default must be elided:\n{text}");
+        // Off is serialized and survives the roundtrip.
+        let s = Scenario { coalescing: false, ..Scenario::paper() };
+        let text = s.to_json_text();
+        assert!(text.contains("\"coalescing\": false"), "{text}");
+        assert_eq!(Scenario::from_text(&text).unwrap(), s);
+        // An explicit `true` loads as the default and re-serializes elided.
+        let explicit = Scenario::paper()
+            .to_json_text()
+            .replace("\"seed\": 42", "\"coalescing\": true,\n  \"seed\": 42");
+        let back = Scenario::from_text(&explicit).unwrap();
+        assert_eq!(back, Scenario::paper());
+        assert!(!back.to_json_text().contains("coalescing"));
+    }
+
+    #[test]
+    fn coalescing_rejects_non_boolean() {
+        let text = Scenario::paper()
+            .to_json_text()
+            .replace("\"seed\": 42", "\"coalescing\": \"off\",\n  \"seed\": 42");
+        let e = Scenario::from_text(&text).unwrap_err().to_string();
+        assert!(e.contains("coalescing"), "{e}");
+    }
+
+    #[test]
+    fn coalescing_does_not_change_results_or_labels() {
+        let on = Scenario::small("ff-equiv", 2, 2, 10);
+        let off = Scenario { coalescing: false, ..on.clone() };
+        // Identical results is the engine's contract — a speed knob must
+        // not leak into the method label either.
+        assert_eq!(on.label(), off.label());
+        let a = on.run().unwrap();
+        let b = off.run().unwrap();
+        assert_eq!(a.eval.jct.mean.to_bits(), b.eval.jct.mean.to_bits());
+        assert_eq!(a.eval.jct.p95.to_bits(), b.eval.jct.p95.to_bits());
+        assert_eq!(a.eval.makespan.to_bits(), b.eval.makespan.to_bits());
+        assert_eq!(a.eval.clean_admissions, b.eval.clean_admissions);
+        assert_eq!(a.eval.contended_admissions, b.eval.contended_admissions);
+        assert!(a.n_events <= b.n_events, "coalescing added events");
     }
 
     // ---- topology schema ---------------------------------------------------

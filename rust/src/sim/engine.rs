@@ -99,6 +99,12 @@ pub struct SimConfig {
     pub repricing: Repricing,
     /// Job priority rule (paper: SRSF).
     pub priority: JobPriority,
+    /// Steady-state iteration fast-forwarding: jobs in a provably
+    /// non-interacting regime jump many iterations per heap event
+    /// (docs/EXPERIMENTS.md §Perf). Results are identical to the
+    /// event-exact engine (property-tested); `false` forces one event per
+    /// task, for debugging and as the equivalence oracle.
+    pub coalescing: bool,
     /// Record a per-event log (for debugging / the contention demo).
     pub log_events: bool,
 }
@@ -112,6 +118,7 @@ impl SimConfig {
             topology: TopologySpec::Flat,
             repricing: Repricing::AtAdmission,
             priority: JobPriority::Srsf,
+            coalescing: true,
             log_events: false,
         }
     }
@@ -164,9 +171,15 @@ impl SimResult {
         per / self.gpu_busy.len() as f64
     }
 
-    /// Per-GPU utilisations (for the Fig 4b/5b/6b distributions).
+    /// Per-GPU utilisations (for the Fig 4b/5b/6b distributions). A run
+    /// with no makespan reports zero utilisation everywhere, matching
+    /// `avg_gpu_util` (the two used to disagree: this divided by an
+    /// epsilon-clamped makespan — docs/EXPERIMENTS.md §Perf).
     pub fn gpu_utils(&self) -> Vec<f64> {
-        self.gpu_busy.iter().map(|b| b / self.makespan.max(EPS)).collect()
+        if self.makespan <= 0.0 {
+            return vec![0.0; self.gpu_busy.len()];
+        }
+        self.gpu_busy.iter().map(|b| b / self.makespan).collect()
     }
 
     /// Utilisation over each GPU's *allocated window* (first placement to
@@ -199,6 +212,12 @@ enum Ev {
     Arrive { job: usize },
     ComputeDone { gpu: GpuId, job: usize, phase: Phase },
     CommDone { comm: usize, version: u64 },
+    /// Macro-event: `job` runs its whole remaining steady-state iteration
+    /// chain analytically and finishes when this fires. Version-stamped
+    /// like `CommDone`: any interaction dissolves the macro-event
+    /// (reconciling partial progress) and bumps the version, so the stale
+    /// completion is skipped.
+    FastForward { job: usize, version: u64 },
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -230,6 +249,23 @@ impl PartialOrd for Timed {
     }
 }
 
+/// Active macro-event: the analytic stand-in for a steady-state job's
+/// remaining per-iteration event chain (see `try_fast_forward`).
+struct FfState {
+    /// Start of the first coalesced iteration (an exact event time).
+    start_t: f64,
+    /// Iterations the macro-event covers — all that remain.
+    iters: u64,
+    /// Finish time of the last covered iteration, computed by replaying
+    /// the exact engine's per-event float arithmetic, so completion is
+    /// bit-identical to the event-exact schedule.
+    end_t: f64,
+    /// Worst-link latency `a` per All-Reduce (0 for single-server jobs).
+    lat: f64,
+    /// Locked k = 1 bottleneck per-byte price (0 for single-server jobs).
+    per_byte: f64,
+}
+
 /// Per-job runtime state.
 struct JobRt {
     spec: JobSpec,
@@ -248,6 +284,17 @@ struct JobRt {
     load_per_iter: f64,
     /// Total bookkeeping load committed at placement (for final release).
     load_total: f64,
+    /// Placement order (1-based commit counter). Two jobs placed in the
+    /// same pass with the same model run bitwise-lockstep iteration
+    /// chains, and their same-timestamp events always process in
+    /// placement order — the tie-break `reconcile_ff` needs when a
+    /// macro-event boundary lands exactly on an interrupting finish.
+    placed_seq: u64,
+    /// Active macro-event, if the job is currently fast-forwarded.
+    ff: Option<FfState>,
+    /// Stamp carried by `FastForward` events; reconciliation bumps it so
+    /// a dissolved macro-event's completion is skipped as stale.
+    ff_version: u64,
 }
 
 impl JobRt {
@@ -267,7 +314,12 @@ impl JobRt {
     }
 }
 
-/// One active All-Reduce transfer.
+/// One active All-Reduce transfer. `latency_left`/`remaining` are the
+/// residuals *at* `anchor_t` (admission, or the last repricing); state at
+/// any later time is derived in closed form by `Engine::residual_at`
+/// rather than advanced incrementally — so the values are independent of
+/// when intermediate events happened to look, which is what lets
+/// fast-forwarding skip events without perturbing other transfers.
 struct CommTask {
     job: usize,
     /// Links the transfer crosses (== its job's `links`).
@@ -280,7 +332,8 @@ struct CommTask {
     /// at its current occupancy (on a flat fabric this is exactly
     /// `comm.per_byte(k)`, the seed engine's pricing).
     per_byte: f64,
-    last_update: f64,
+    /// Time the residuals above were last fixed (admission / repricing).
+    anchor_t: f64,
     version: u64,
     done: bool,
 }
@@ -306,6 +359,41 @@ pub fn simulate(
     Engine::new(cfg, jobs).run(placer, policy)
 }
 
+/// One steady iteration's event-time chain, replicating the exact
+/// engine's float-operation order bit-for-bit: the forward `ComputeDone`
+/// lands at `s + t_fwd`, the backward at `(s + t_fwd) + t_bwd`, and the
+/// `CommDone` prediction made at admission at `(t2 + lat) + drain` where
+/// `drain = msg · per_byte(1)`. Returns (fwd done, bwd done, iteration
+/// end).
+#[inline]
+fn iter_bounds(
+    s: f64,
+    t_fwd: f64,
+    t_bwd: f64,
+    multi: bool,
+    lat: f64,
+    drain: f64,
+) -> (f64, f64, f64) {
+    let t1 = s + t_fwd;
+    let t2 = t1 + t_bwd;
+    let c = if multi { t2 + lat + drain } else { t2 };
+    (t1, t2, c)
+}
+
+/// Do two sorted link sets share a link? (`Topology::links_between`
+/// returns sorted ids: NICs ascending, then uplinks above them.)
+fn links_intersect(a: &[LinkId], b: &[LinkId]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            Ordering::Less => i += 1,
+            Ordering::Greater => j += 1,
+            Ordering::Equal => return true,
+        }
+    }
+    false
+}
+
 struct Engine<'a> {
     cfg: &'a SimConfig,
     topo: Topology,
@@ -319,8 +407,9 @@ struct Engine<'a> {
     /// Job ids with a ready-but-unadmitted All-Reduce.
     pending_comm: Vec<usize>,
     comms: Vec<CommTask>,
-    /// Ids of in-flight comm tasks (the only ones advance_network visits;
-    /// scanning the whole historical `comms` vec would be quadratic).
+    /// Ids of in-flight comm tasks (the only ones the per-pass admission
+    /// view visits; scanning the whole historical `comms` vec would be
+    /// quadratic).
     active_comms: Vec<usize>,
     /// Position of each comm id inside `active_comms` (usize::MAX once
     /// inactive), so completion is an O(1) swap-remove instead of an O(n)
@@ -328,6 +417,24 @@ struct Engine<'a> {
     active_pos: Vec<usize>,
     /// Active comm-task ids per fabric link (NICs, then rack uplinks).
     per_link: Vec<Vec<usize>>,
+    /// Placement commits so far (feeds `JobRt::placed_seq`).
+    placements: u64,
+    /// Running (placed, unfinished) multi-server jobs — the set a
+    /// multi-server macro-event must stay link-disjoint from. Maintained
+    /// at placement/finish so the steadiness check scans this handful
+    /// instead of every job in the trace.
+    running_multi: Vec<usize>,
+    /// Always-empty per-link admission view lent to the policy by the
+    /// steadiness check (allocated once, never mutated — the check runs
+    /// at every iteration boundary of every uncontended multi job).
+    empty_view: Vec<Vec<(usize, f64)>>,
+    /// Jobs currently running under a macro-event (`JobRt::ff` set).
+    ff_jobs: Vec<usize>,
+    /// Scratch for `refresh_links`' affected-task set — reused across
+    /// Dynamic-repricing passes instead of allocated per network change.
+    scratch_affected: Vec<usize>,
+    /// Scratch for `schedule_gpu`'s per-candidate priority keys.
+    scratch_keys: Vec<(f64, usize)>,
     /// DDL_SIM_DEBUG progress logging, read once at construction instead
     /// of one env lookup per million-event heartbeat.
     debug: bool,
@@ -364,6 +471,9 @@ impl<'a> Engine<'a> {
                     finished_at: None,
                     load_per_iter: 0.0,
                     load_total: 0.0,
+                    placed_seq: 0,
+                    ff: None,
+                    ff_version: 0,
                 }
             })
             .collect();
@@ -398,6 +508,12 @@ impl<'a> Engine<'a> {
             active_comms: Vec::new(),
             active_pos: Vec::new(),
             per_link: vec![Vec::new(); n_links],
+            placements: 0,
+            running_multi: Vec::new(),
+            empty_view: vec![Vec::new(); n_links],
+            ff_jobs: Vec::new(),
+            scratch_affected: Vec::new(),
+            scratch_keys: Vec::new(),
             debug: std::env::var_os("DDL_SIM_DEBUG").is_some(),
             n_events: 0,
             contended_admissions: 0,
@@ -442,7 +558,7 @@ impl<'a> Engine<'a> {
                 Ev::Arrive { job } => {
                     self.log(t, || format!("arrive job{job}"));
                     self.queue.push(job);
-                    self.try_place(t, placer);
+                    self.try_place(t, placer, None);
                 }
                 Ev::ComputeDone { gpu, job, phase } => {
                     self.on_compute_done(t, gpu, job, phase, policy);
@@ -451,26 +567,35 @@ impl<'a> Engine<'a> {
                     // would dominate the run time.
                     if self.need_place {
                         self.need_place = false;
-                        self.try_place(t, placer);
+                        self.try_place(t, placer, Some(job));
                     }
                 }
                 Ev::CommDone { comm, version } => {
                     if self.comms[comm].done || self.comms[comm].version != version {
                         continue; // stale prediction
                     }
-                    self.advance_network(t);
                     // Completion test in the *time* domain: once the
                     // residual drain time falls below one ulp of the clock,
                     // a repredicted event can land exactly at `t` forever
                     // (observed livelock); treat sub-ulp residue as done.
-                    let c = &self.comms[comm];
-                    let residual = c.latency_left + c.remaining * c.per_byte;
+                    let (lat_left, rem) = self.residual_at(comm, t);
+                    let residual = lat_left + rem * self.comms[comm].per_byte;
                     let eps_t = EPS + t.abs() * 1e-12;
                     if residual > eps_t {
                         self.repredict(t, comm);
                         continue;
                     }
                     self.complete_comm(t, comm, placer, policy);
+                }
+                Ev::FastForward { job, version } => {
+                    if self.jobs[job].ff_version != version {
+                        continue; // macro-event dissolved by reconciliation
+                    }
+                    self.complete_fast_forward(t, job);
+                    if self.need_place {
+                        self.need_place = false;
+                        self.try_place(t, placer, Some(job));
+                    }
                 }
             }
         }
@@ -509,10 +634,26 @@ impl<'a> Engine<'a> {
 
     // -- placement ----------------------------------------------------------
 
-    fn try_place(&mut self, t: f64, placer: &mut dyn Placer) {
+    /// `interrupter` is the job whose finish triggered this pass (`None`
+    /// for arrivals) — the tie-break reconciliation needs when a
+    /// macro-event boundary coincides bit-exactly with this timestamp.
+    fn try_place(&mut self, t: f64, placer: &mut dyn Placer, interrupter: Option<usize>) {
         if self.queue.is_empty() {
             return;
         }
+        // The placer is about to read per-GPU load/residency, and may put
+        // a newcomer on a fast-forwarded job's GPUs: fold every
+        // macro-event's progress back into real state first. (This is the
+        // single invalidation point — everything that can perturb a
+        // steady job goes through a placement pass; see
+        // `try_fast_forward` for why admissions can't touch one.)
+        self.reconcile_all_ffs(t, interrupter);
+        // A macro-event that ran to completion during reconciliation
+        // finished its job through `finish_job`, which raises
+        // `need_place` — but this very pass is the placement attempt that
+        // flag requests. Consume it now instead of leaking a spurious
+        // extra pass to the next unrelated event.
+        self.need_place = false;
         // Take the queue and rebuild it from the leftovers while walking
         // the sorted order — O(n log n), versus the O(n²)
         // `retain(placed.contains)` difference this replaced. Queue order
@@ -546,6 +687,7 @@ impl<'a> Engine<'a> {
         for &g in &gpus {
             self.gpus[g].first_alloc.get_or_insert(t);
         }
+        self.placements += 1;
         {
             let j = &mut self.jobs[job];
             j.load_total = load;
@@ -554,17 +696,32 @@ impl<'a> Engine<'a> {
             j.links = links;
             j.multi_server = multi;
             j.placed_at = Some(t);
+            j.placed_seq = self.placements;
+        }
+        if multi {
+            self.running_multi.push(job);
         }
         if self.cfg.log_events {
             let gpus = self.jobs[job].gpus.clone();
             self.log(t, || format!("place job{job} gpus={gpus:?}"));
         }
-        self.start_iteration(t, job);
+        // The first iteration always runs event-exact (no macro-event):
+        // we are inside a placement pass, and a *later* placement in this
+        // same pass could still land on these GPUs. Steadiness is
+        // re-checked at every subsequent iteration boundary.
+        self.start_iteration_exact(t, job);
     }
 
     // -- compute ------------------------------------------------------------
 
-    fn start_iteration(&mut self, t: f64, job: usize) {
+    fn start_iteration(&mut self, t: f64, job: usize, policy: &dyn CommPolicy) {
+        if self.cfg.coalescing && self.try_fast_forward(t, job, policy) {
+            return;
+        }
+        self.start_iteration_exact(t, job);
+    }
+
+    fn start_iteration_exact(&mut self, t: f64, job: usize) {
         let gpus = self.jobs[job].gpus.clone();
         self.jobs[job].bwd_remaining = gpus.len();
         for g in gpus {
@@ -577,16 +734,29 @@ impl<'a> Engine<'a> {
         if self.gpus[gpu].busy || self.gpus[gpu].ready.is_empty() {
             return;
         }
-        // Priority rule among the compute-ready tasks resident on this GPU.
-        let best = self.gpus[gpu]
-            .ready
-            .iter()
-            .enumerate()
-            .min_by(|(_, &(ja, _)), (_, &(jb, _))| {
-                srsf_cmp((self.run_key(ja), ja), (self.run_key(jb), jb))
-            })
-            .map(|(i, _)| i)
-            .unwrap();
+        // Priority rule among the compute-ready tasks resident on this
+        // GPU. Keys are computed once per candidate — deriving them
+        // inside every `min` comparison cost O(ready²) evaluations per
+        // scheduling burst under SRSF/LAS — and the one-candidate case
+        // (the common one) skips key derivation entirely.
+        let n_ready = self.gpus[gpu].ready.len();
+        let best = if n_ready == 1 {
+            0
+        } else {
+            let mut keys = std::mem::take(&mut self.scratch_keys);
+            keys.clear();
+            for &(job, _) in &self.gpus[gpu].ready {
+                keys.push((self.run_key(job), job));
+            }
+            let mut best = 0;
+            for (i, &key) in keys.iter().enumerate().skip(1) {
+                if srsf_cmp(key, keys[best]) == Ordering::Less {
+                    best = i;
+                }
+            }
+            self.scratch_keys = keys;
+            best
+        };
         let (job, phase) = self.gpus[gpu].ready.swap_remove(best);
         let dur = match phase {
             Phase::Fwd => self.jobs[job].t_fwd,
@@ -619,7 +789,7 @@ impl<'a> Engine<'a> {
                         self.pending_comm.push(job);
                         self.try_admit(t, policy);
                     } else {
-                        self.iteration_complete(t, job);
+                        self.iteration_complete(t, job, policy);
                     }
                 }
             }
@@ -627,50 +797,323 @@ impl<'a> Engine<'a> {
         self.schedule_gpu(t, gpu);
     }
 
-    fn iteration_complete(&mut self, t: f64, job: usize) {
+    fn iteration_complete(&mut self, t: f64, job: usize, policy: &dyn CommPolicy) {
         self.jobs[job].iters_done += 1;
         let gpus = self.jobs[job].gpus.clone();
         self.cluster.drain_load(&gpus, self.jobs[job].load_per_iter);
         if self.jobs[job].iters_done >= self.jobs[job].spec.iterations {
-            self.jobs[job].finished_at = Some(t);
-            self.unfinished -= 1;
-            let mem = self.jobs[job].spec.mem_bytes();
-            self.cluster.release(&gpus, mem, 0.0);
-            for &g in &gpus {
-                self.gpus[g].last_release = self.gpus[g].last_release.max(t);
-            }
-            self.need_place = true;
-            self.log(t, || format!("finish job{job}"));
+            self.finish_job(t, job, &gpus);
         } else {
-            self.start_iteration(t, job);
+            self.start_iteration(t, job, policy);
+        }
+    }
+
+    /// Final-iteration bookkeeping, shared by the event-exact path and
+    /// macro-event completion: release memory, free the GPUs, let queued
+    /// jobs try to place.
+    fn finish_job(&mut self, t: f64, job: usize, gpus: &[GpuId]) {
+        self.jobs[job].finished_at = Some(t);
+        self.unfinished -= 1;
+        if self.jobs[job].multi_server {
+            self.running_multi.retain(|&j| j != job);
+        }
+        let mem = self.jobs[job].spec.mem_bytes();
+        self.cluster.release(gpus, mem, 0.0);
+        for &g in gpus {
+            self.gpus[g].last_release = self.gpus[g].last_release.max(t);
+        }
+        self.need_place = true;
+        self.log(t, || format!("finish job{job}"));
+    }
+
+    // -- steady-state fast-forwarding -----------------------------------------
+
+    /// Try to replace `job`'s remaining per-iteration event chain with one
+    /// analytic macro-event (docs/EXPERIMENTS.md §Perf). Steadiness — the
+    /// regime in which nothing can observe or perturb the job, so its
+    /// chain is a closed-form recurrence — requires:
+    ///
+    /// * every GPU it occupies hosts it exclusively (no other resident
+    ///   job, so no ready-queue contention and no priority preemption);
+    /// * single-server (no network at all), **or** — under `AtAdmission`
+    ///   pricing, where an uncontended transfer's rate is locked at
+    ///   k = 1 — its links are idle, no other *running* multi-server job
+    ///   shares them (such a job's future admissions would contend
+    ///   without generating an event we could hook), and the admission
+    ///   policy starts an uncontended transfer (asked once: on idle
+    ///   links the decision is the same pure call every iteration).
+    ///
+    /// Invalidation: the only way steadiness can break afterwards is a
+    /// placement (a newcomer onto the job's GPUs, or a new multi-server
+    /// job overlapping its links), and `try_place` reconciles every
+    /// macro-event before the placer runs. Admissions never interact:
+    /// while a macro-event is live, no pending job's links intersect its
+    /// links (debug-asserted in `try_admit`).
+    fn try_fast_forward(&mut self, t: f64, job: usize, policy: &dyn CommPolicy) -> bool {
+        let iters_left = self.jobs[job].spec.iterations - self.jobs[job].iters_done;
+        if iters_left == 0 {
+            return false;
+        }
+        for &g in &self.jobs[job].gpus {
+            if self.gpus[g].busy
+                || !self.gpus[g].ready.is_empty()
+                || self.cluster.gpus[g].residents != 1
+            {
+                return false;
+            }
+        }
+        let multi = self.jobs[job].multi_server;
+        let (lat, per_byte) = if multi {
+            if self.cfg.repricing != Repricing::AtAdmission {
+                return false;
+            }
+            for &l in &self.jobs[job].links {
+                if !self.per_link[l].is_empty() {
+                    return false;
+                }
+            }
+            for &other in &self.running_multi {
+                if other != job
+                    && links_intersect(&self.jobs[other].links, &self.jobs[job].links)
+                {
+                    return false;
+                }
+            }
+            // The per-iteration admission decision on idle links.
+            let msg = self.jobs[job].spec.message_bytes();
+            let view = NetView { per_link: &self.empty_view };
+            if policy.admit(msg, &self.jobs[job].links, &view) != Admission::Start {
+                return false;
+            }
+            // Exactly `repredict`'s unlocked k = 1 bottleneck price.
+            let mut pb = 0.0f64;
+            for &l in &self.jobs[job].links {
+                let p = self.topo.link_model(l).per_byte(1);
+                if p > pb {
+                    pb = p;
+                }
+            }
+            if pb <= 0.0 {
+                pb = self.cfg.comm.per_byte(1); // no links: degenerate fabric
+            }
+            (self.topo.latency_over(&self.jobs[job].links), pb)
+        } else {
+            (0.0, 0.0)
+        };
+        // Replay the exact per-event time chain analytically to the finish.
+        let t_fwd = self.jobs[job].t_fwd;
+        let t_bwd = self.jobs[job].t_bwd;
+        let drain = self.jobs[job].spec.message_bytes() * per_byte;
+        let mut s = t;
+        for _ in 0..iters_left {
+            s = iter_bounds(s, t_fwd, t_bwd, multi, lat, drain).2;
+        }
+        let j = &mut self.jobs[job];
+        j.ff = Some(FfState { start_t: t, iters: iters_left, end_t: s, lat, per_byte });
+        j.ff_version += 1;
+        let v = j.ff_version;
+        self.ff_jobs.push(job);
+        self.push(s, Ev::FastForward { job, version: v });
+        true
+    }
+
+    /// The macro-event fired: the job ran its whole remaining iteration
+    /// chain undisturbed. Apply the batched side-effects and finish it.
+    fn complete_fast_forward(&mut self, t: f64, job: usize) {
+        let Some(ff) = self.jobs[job].ff.take() else {
+            return; // defensive: version matched but state already gone
+        };
+        self.ff_jobs.retain(|&j| j != job);
+        debug_assert_eq!(t.to_bits(), ff.end_t.to_bits());
+        self.apply_iterations(job, &ff, ff.iters);
+        debug_assert_eq!(self.jobs[job].iters_done, self.jobs[job].spec.iterations);
+        let gpus = self.jobs[job].gpus.clone();
+        self.finish_job(t, job, &gpus);
+    }
+
+    /// Batched side-effects of `n` coalesced iterations: per-GPU busy
+    /// accumulation and load drain replay the exact per-iteration float
+    /// chains (not reassociated sums — bit-identity matters), admission
+    /// counters jump, and with event logging on the comm lifecycle is
+    /// synthesised exactly as the event-exact engine would have logged it.
+    fn apply_iterations(&mut self, job: usize, ff: &FfState, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let t_fwd = self.jobs[job].t_fwd;
+        let t_bwd = self.jobs[job].t_bwd;
+        let gpus = self.jobs[job].gpus.clone();
+        for &g in &gpus {
+            let busy = &mut self.gpus[g].busy_accum;
+            for _ in 0..n {
+                *busy += t_fwd;
+                *busy += t_bwd;
+            }
+        }
+        self.cluster.drain_load_n(&gpus, self.jobs[job].load_per_iter, n);
+        self.jobs[job].iters_done += n;
+        if self.jobs[job].multi_server {
+            // Every coalesced All-Reduce started on idle links: k = 1.
+            self.clean_admissions += n;
+            self.max_contention = self.max_contention.max(1);
+            if self.cfg.log_events {
+                let msg = self.jobs[job].spec.message_bytes();
+                let drain = msg * ff.per_byte;
+                let mut s = ff.start_t;
+                for _ in 0..n {
+                    let (_, t2, c) = iter_bounds(s, t_fwd, t_bwd, true, ff.lat, drain);
+                    self.events
+                        .push(EventLog { t: t2, what: format!("comm-start job{job} k=1") });
+                    self.events.push(EventLog { t: c, what: format!("comm-done job{job}") });
+                    s = c;
+                }
+            }
+        }
+    }
+
+    /// Dissolve every active macro-event, rebuilding each job's exact
+    /// micro-state at `t` — called before a placement pass reads cluster
+    /// state. Iterations that completed before `t` are applied in batch;
+    /// the in-flight one is reconstructed as real heap events.
+    fn reconcile_all_ffs(&mut self, t: f64, interrupter: Option<usize>) {
+        if self.ff_jobs.is_empty() {
+            return;
+        }
+        let jobs = std::mem::take(&mut self.ff_jobs);
+        for job in jobs {
+            self.reconcile_ff(t, job, interrupter);
+        }
+    }
+
+    /// Materialise a fast-forwarded job's exact micro-state at time `t`
+    /// (start ≤ t ≤ end): walk the iteration chain to the one in flight
+    /// at `t`, apply everything before it, and push the in-flight
+    /// iteration's pending events — with timestamps bit-identical to the
+    /// ones the event-exact engine would be holding in its heap.
+    ///
+    /// A boundary landing exactly *at* `t` needs the exact engine's heap
+    /// tie-break. Arrivals (`interrupter == None`) always sort first
+    /// (their sequence numbers predate every runtime event), so the
+    /// boundary stays pending. A finish of job F sorts against our
+    /// boundary by push order; the only way the two timestamps collide
+    /// bit-exactly in practice is bitwise-lockstep chains (same model,
+    /// placed in the same pass), where same-timestamp events always
+    /// process in placement order — so the boundary completed first iff
+    /// this job was placed before F. (A trace *crafted* so an arrival is
+    /// bit-equal to an interior boundary can invert that order; see the
+    /// caveat in docs/EXPERIMENTS.md §Perf.)
+    fn reconcile_ff(&mut self, t: f64, job: usize, interrupter: Option<usize>) {
+        let ff = self.jobs[job].ff.take().expect("reconcile without a macro-event");
+        self.jobs[job].ff_version += 1; // the pending FastForward goes stale
+        let boundary_first = interrupter
+            .is_some_and(|f| self.jobs[job].placed_seq < self.jobs[f].placed_seq);
+        let t_fwd = self.jobs[job].t_fwd;
+        let t_bwd = self.jobs[job].t_bwd;
+        let multi = self.jobs[job].multi_server;
+        let msg = self.jobs[job].spec.message_bytes();
+        let drain = msg * ff.per_byte;
+        let mut done = 0u64;
+        let mut s = ff.start_t;
+        let (mut t1, mut t2, mut c) = iter_bounds(s, t_fwd, t_bwd, multi, ff.lat, drain);
+        // Both comparisons are false on a NaN chain (poisoned comm model),
+        // so this stops with wrong results, never a hang — the heap
+        // order's stance.
+        while c < t || (c == t && boundary_first) {
+            done += 1;
+            s = c;
+            if done == ff.iters {
+                // The whole macro-event ran: the interrupter shares the
+                // final timestamp but sorts after the finish.
+                self.apply_iterations(job, &ff, done);
+                let gpus = self.jobs[job].gpus.clone();
+                self.finish_job(t, job, &gpus);
+                return;
+            }
+            let next = iter_bounds(s, t_fwd, t_bwd, multi, ff.lat, drain);
+            t1 = next.0;
+            t2 = next.1;
+            c = next.2;
+        }
+        self.apply_iterations(job, &ff, done);
+        // Rebuild the iteration in flight at `t` (it started at `s`).
+        let gpus = self.jobs[job].gpus.clone();
+        if t <= t1 {
+            // Forward pass running on every GPU.
+            self.jobs[job].bwd_remaining = gpus.len();
+            for &g in &gpus {
+                self.gpus[g].busy = true;
+                self.gpus[g].busy_accum += t_fwd;
+                self.push(t1, Ev::ComputeDone { gpu: g, job, phase: Phase::Fwd });
+            }
+        } else if t <= t2 {
+            // Backward pass running on every GPU.
+            self.jobs[job].bwd_remaining = gpus.len();
+            for &g in &gpus {
+                self.gpus[g].busy = true;
+                self.gpus[g].busy_accum += t_fwd;
+                self.gpus[g].busy_accum += t_bwd;
+                self.push(t2, Ev::ComputeDone { gpu: g, job, phase: Phase::Bwd });
+            }
+        } else {
+            // All-Reduce in flight: admitted clean (k = 1) at t2,
+            // completion predicted for `c` — the exact engine's comm task,
+            // reconstructed field-for-field.
+            debug_assert!(multi);
+            self.jobs[job].bwd_remaining = 0;
+            for &g in &gpus {
+                self.gpus[g].busy_accum += t_fwd;
+                self.gpus[g].busy_accum += t_bwd;
+            }
+            self.clean_admissions += 1;
+            self.max_contention = self.max_contention.max(1);
+            let links = self.jobs[job].links.clone();
+            let id = self.comms.len();
+            self.comms.push(CommTask {
+                job,
+                links: links.clone(),
+                latency_left: ff.lat,
+                remaining: msg,
+                k: 1,
+                per_byte: ff.per_byte,
+                anchor_t: t2,
+                version: 1,
+                done: false,
+            });
+            for &l in &links {
+                self.per_link[l].push(id);
+            }
+            self.active_pos.push(self.active_comms.len());
+            debug_assert_eq!(self.active_pos.len(), self.comms.len());
+            self.active_comms.push(id);
+            self.log(t2, || format!("comm-start job{job} k=1"));
+            self.push(c, Ev::CommDone { comm: id, version: 1 });
         }
     }
 
     // -- network ------------------------------------------------------------
 
-    /// Bring every active transfer's byte counter up to `t`.
-    fn advance_network(&mut self, t: f64) {
-        for &id in &self.active_comms {
-            let c = &mut self.comms[id];
-            let mut dt = t - c.last_update;
-            if dt <= 0.0 {
-                continue;
-            }
-            if c.latency_left > 0.0 {
-                let use_lat = c.latency_left.min(dt);
-                c.latency_left -= use_lat;
-                dt -= use_lat;
-            }
-            if dt > 0.0 {
-                // Drain at the bottleneck link's rate (1/per_byte); on a
-                // flat fabric this is exactly `comm.rate(k)`.
-                c.remaining -= dt * (1.0 / c.per_byte);
-                if c.remaining < 0.0 {
-                    c.remaining = 0.0;
-                }
-            }
-            c.last_update = t;
+    /// Latency and bytes left of comm `id` at time `t`, in closed form
+    /// from the task's pricing anchor. Derived on demand — never advanced
+    /// incrementally — so the value is independent of how many events
+    /// happened to look in between (fast-forwarding removes such events).
+    fn residual_at(&self, id: usize, t: f64) -> (f64, f64) {
+        let c = &self.comms[id];
+        let mut dt = t - c.anchor_t;
+        if dt <= 0.0 {
+            return (c.latency_left, c.remaining);
         }
+        let lat_use = c.latency_left.min(dt);
+        dt -= lat_use;
+        let mut rem = c.remaining;
+        if dt > 0.0 {
+            // Drain at the bottleneck link's rate (1/per_byte); on a
+            // flat fabric this is exactly `comm.rate(k)`.
+            rem -= dt * (1.0 / c.per_byte);
+            if rem < 0.0 {
+                rem = 0.0;
+            }
+        }
+        (c.latency_left - lat_use, rem)
     }
 
     /// Contention level for a task crossing `links`: max |C_l| — Eq (5)
@@ -680,9 +1123,10 @@ impl<'a> Engine<'a> {
     }
 
     /// Re-derive k, the bottleneck per-byte price and the predicted
-    /// completion of comm task `id` at time t. Under AtAdmission pricing,
-    /// both are recomputed only while the task has not started draining
-    /// (i.e. at admission); afterwards they stay locked.
+    /// completion of comm task `id` at time t, re-anchoring its residual
+    /// so the new price applies strictly forward. Under AtAdmission
+    /// pricing, k and the price are computed only while the task has not
+    /// started draining (i.e. at admission); afterwards they stay locked.
     fn repredict(&mut self, t: f64, id: usize) {
         let locked = self.cfg.repricing == Repricing::AtAdmission && self.comms[id].version > 0;
         let (k, per_byte) = if locked {
@@ -710,7 +1154,11 @@ impl<'a> Engine<'a> {
             }
             (k, pb)
         };
+        let (lat_left, rem) = self.residual_at(id, t);
         let c = &mut self.comms[id];
+        c.latency_left = lat_left;
+        c.remaining = rem;
+        c.anchor_t = t;
         c.k = k;
         c.per_byte = per_byte;
         c.version += 1;
@@ -727,22 +1175,26 @@ impl<'a> Engine<'a> {
         if self.cfg.repricing == Repricing::AtAdmission {
             return;
         }
-        let mut affected: Vec<usize> = links
-            .iter()
-            .flat_map(|&l| self.per_link[l].iter().copied())
-            .collect();
+        // Reuse one scratch buffer across passes — this runs on every
+        // Dynamic-repricing network change and used to allocate (and
+        // sort/dedup) a fresh vec each time.
+        let mut affected = std::mem::take(&mut self.scratch_affected);
+        affected.clear();
+        for &l in links {
+            affected.extend_from_slice(&self.per_link[l]);
+        }
         affected.sort_unstable();
         affected.dedup();
-        for id in affected {
+        for &id in &affected {
             self.repredict(t, id);
         }
+        self.scratch_affected = affected;
     }
 
     fn try_admit(&mut self, t: f64, policy: &dyn CommPolicy) {
         if self.pending_comm.is_empty() {
             return;
         }
-        self.advance_network(t);
         // Take the pending set and rebuild it from the rejects while
         // walking the sorted order — O(n log n), versus the O(n²)
         // `retain(admitted.contains)` difference this replaced (the set
@@ -750,17 +1202,34 @@ impl<'a> Engine<'a> {
         // its carry-over order is irrelevant).
         let mut order = std::mem::take(&mut self.pending_comm);
         order.sort_by(|&a, &b| srsf_cmp((self.run_key(a), a), (self.run_key(b), b)));
+        // Macro-events need no invalidation here: a fast-forwarded
+        // multi-server job never shares links with any running
+        // multi-server job (checked at creation, and placements — the
+        // only way a new sharer appears — reconcile first), so no pending
+        // admission can see or touch its virtually-occupied links.
+        if cfg!(debug_assertions) {
+            for &mj in &self.ff_jobs {
+                let clear = !self.jobs[mj].multi_server
+                    || order
+                        .iter()
+                        .all(|&pj| !links_intersect(&self.jobs[mj].links, &self.jobs[pj].links));
+                debug_assert!(clear, "macro-event job {mj} shares links with a pending admission");
+            }
+        }
         // Build the admission view once per pass and refresh it only after
         // an admission actually changes the network state — rebuilding per
         // pending job was the #1 hot spot at paper scale (§Perf).
         let mut view: Vec<Vec<(usize, f64)>> = self
             .per_link
             .iter()
-            .map(|ids| ids.iter().map(|&c| (c, self.comms[c].remaining)).collect())
+            .map(|ids| ids.iter().map(|&c| (c, self.residual_at(c, t).1)).collect())
             .collect();
         for job in order {
             let msg = self.jobs[job].spec.message_bytes();
-            let links = self.jobs[job].links.clone();
+            // Borrow the job's link set for the decision (restored below)
+            // instead of the per-pass clone this replaced; only an actual
+            // admission copies it, into the comm task it creates.
+            let links = std::mem::take(&mut self.jobs[job].links);
             let net = NetView { per_link: &view };
             if policy.admit(msg, &links, &net) == Admission::Start {
                 let pre = self.contention_on(&links);
@@ -777,7 +1246,7 @@ impl<'a> Engine<'a> {
                     remaining: msg,
                     k: 1,
                     per_byte: self.cfg.comm.per_byte(1),
-                    last_update: t,
+                    anchor_t: t,
                     version: 0,
                     done: false,
                 });
@@ -794,11 +1263,14 @@ impl<'a> Engine<'a> {
                 self.repredict(t, id);
                 self.refresh_links(t, &links);
                 // Network state changed: refresh the shared view in place
-                // (only the admitted task's links gained an entry).
+                // (only the admitted task's links gained an entry; its
+                // remaining bytes at admission are the full message).
                 for &l in &links {
-                    view[l].push((id, self.comms[id].remaining));
+                    view[l].push((id, msg));
                 }
+                self.jobs[job].links = links;
             } else {
+                self.jobs[job].links = links;
                 self.pending_comm.push(job);
             }
         }
@@ -827,17 +1299,23 @@ impl<'a> Engine<'a> {
         }
         self.log(t, || format!("comm-done job{job}"));
         self.refresh_links(t, &links);
-        self.iteration_complete(t, job);
+        self.iteration_complete(t, job, policy);
         self.try_admit(t, policy);
         if self.need_place {
             self.need_place = false;
-            self.try_place(t, placer);
+            self.try_place(t, placer, Some(job));
         }
     }
 
     // -- results --------------------------------------------------------------
 
-    fn finish(self) -> SimResult {
+    fn finish(mut self) -> SimResult {
+        // Macro-event reconciliation appends synthesised log entries after
+        // later live ones; restore chronological order so log consumers
+        // see the same sequence the event-exact engine writes. The sort
+        // is stable, so an already-ordered (event-exact) log — including
+        // its same-timestamp processing order — is untouched.
+        self.events.sort_by(|a, b| a.t.total_cmp(&b.t));
         let mut jct = vec![f64::NAN; self.jobs.len()];
         let mut finish = vec![f64::NAN; self.jobs.len()];
         let mut queue_wait = vec![f64::NAN; self.jobs.len()];

@@ -19,8 +19,26 @@
 //! hence the predicted completion — of every task sharing a link is
 //! recomputed; stale completion events are skipped via per-task version
 //! counters. `SimConfig::topology` picks the fabric; the `flat` preset
-//! reproduces the seed per-server engine bit-for-bit (property-tested in
-//! `tests`).
+//! reproduces the seed per-server engine's contention bookkeeping exactly
+//! (property-tested in `tests`; seed *timing* is also bit-identical under
+//! `AtAdmission` pricing, while `Dynamic` repricing now derives transfer
+//! residuals in closed form rather than the seed's incremental advances,
+//! an ulp-level difference).
+//!
+//! Steady-state fast-forwarding (`SimConfig::coalescing`, default on): a
+//! job whose GPUs host nothing else and whose links — if it communicates
+//! at all — are idle, unshared and priced `AtAdmission` runs a
+//! closed-form recurrence, so its whole remaining Fwd/Bwd/Comm event
+//! chain is replaced by one version-stamped macro-event. Anything that
+//! could break steadiness (every such change goes through a placement
+//! pass) dissolves the macro-event first, reconciling the partial
+//! iterations at the interruption time; the replayed float arithmetic is
+//! the event chain's own, so results are *identical* to the event-exact
+//! engine (property-tested field-for-field in `tests`; before/after event
+//! counts in benches/sim_hotpath.rs; design note in docs/EXPERIMENTS.md
+//! §Perf). The equivalence guarantee assumes stateless admission policies
+//! that read only the links of the task under decision — true of every
+//! registry policy.
 
 mod engine;
 

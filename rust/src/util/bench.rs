@@ -5,6 +5,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Timing of one benchmark: wall-clock stats over `iters` runs.
 #[derive(Clone, Debug)]
 pub struct Timing {
@@ -100,6 +102,47 @@ impl Table {
     }
 }
 
+/// Machine-readable bench emission: one `BENCH_<name>.json` file of
+/// `{workload, events, wall_ms, events_per_s}` rows next to the printed
+/// table, so the perf trajectory is diffable across PRs (CI uploads the
+/// sim-hotpath one as an artifact).
+pub struct BenchReport {
+    name: String,
+    rows: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Full row: a timed workload.
+    pub fn record(&mut self, workload: &str, events: u64, wall_s: f64) {
+        self.rows.push(
+            Json::obj()
+                .set("workload", workload)
+                .set("events", events)
+                .set("wall_ms", wall_s * 1e3)
+                .set("events_per_s", events as f64 / wall_s),
+        );
+    }
+
+    /// Row without its own timing (e.g. one cell of a sweep timed as a
+    /// whole — the caller records the aggregate separately).
+    pub fn record_events(&mut self, workload: &str, events: u64) {
+        self.rows.push(Json::obj().set("workload", workload).set("events", events));
+    }
+
+    /// Write `results/BENCH_<name>.json` (creating the dir — the same
+    /// convention as `write_csv`); returns the path written.
+    pub fn write(&self) -> std::io::Result<String> {
+        std::fs::create_dir_all("results")?;
+        let path = format!("results/BENCH_{}.json", self.name);
+        std::fs::write(&path, Json::Arr(self.rows.clone()).to_string_pretty())?;
+        Ok(path)
+    }
+}
+
 /// Write a CSV series to `results/<name>.csv` (creating the dir) so figures
 /// can be re-plotted; returns the path written.
 pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<String> {
@@ -146,5 +189,20 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_report_rows_parse_back() {
+        let mut r = BenchReport::new("unit_test_report");
+        r.record("w1", 1000, 0.5);
+        r.record_events("w2", 42);
+        let text = Json::Arr(r.rows.clone()).to_string_pretty();
+        let v = Json::parse(&text).unwrap();
+        let rows = v.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req_str("workload").unwrap(), "w1");
+        assert_eq!(rows[0].req_f64("events_per_s").unwrap(), 2000.0);
+        assert_eq!(rows[1].req_u64("events").unwrap(), 42);
+        assert!(rows[1].get("wall_ms").is_none());
     }
 }

@@ -138,6 +138,7 @@ fn motivation_contention_blowup() {
         topology: TopologySpec::Flat,
         repricing: sim::Repricing::Dynamic,
         priority: sim::JobPriority::Srsf,
+        coalescing: true,
         log_events: false,
     };
     let job = |id| JobSpec {
