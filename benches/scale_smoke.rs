@@ -1,0 +1,53 @@
+//! CI bounded-memory smoke: a 20k-job generated trace through the
+//! observer engine with sinks off. The point of the observer redesign is
+//! that event cost no longer scales run memory — the engine accumulates
+//! no event strings and no per-event state, so a workload two orders of
+//! magnitude past the paper's completes with a flat footprint. The run
+//! must finish (every job placed and completed) and must report an empty
+//! `events` vec; events/s lands in `results/BENCH_scale_smoke.json` so
+//! the trajectory is tracked next to `BENCH_sim_hotpath.json`.
+
+use ddl_sched::prelude::*;
+use ddl_sched::util::bench::BenchReport;
+
+fn main() {
+    let n_jobs = 20_000;
+    // 256 servers x 4 GPUs: arrival density per GPU stays at roughly half
+    // the paper's, so the cluster keeps up and the queue stays bounded —
+    // this is a throughput/memory gate, not a saturation study.
+    let cluster = ClusterSpec { n_servers: 256, ..ClusterSpec::paper_64gpu() };
+    let cfg = SimConfig { cluster, ..SimConfig::paper() };
+    let mut trace_cfg = TraceConfig::scaled(n_jobs, 7);
+    trace_cfg.horizon = 20_000.0;
+    let jobs = trace::generate(&trace_cfg);
+    assert_eq!(jobs.len(), n_jobs);
+
+    let t0 = std::time::Instant::now();
+    let mut placer = LwfPlacer::new(1);
+    let res = sim::simulate(&cfg, &jobs, &mut placer, &AdaDual { model: cfg.comm });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let finished = res.jct.iter().filter(|t| t.is_finite()).count();
+    assert_eq!(finished, n_jobs, "jobs lost at scale");
+    assert!(res.events.is_empty(), "sinks-off run accumulated event strings");
+
+    let mut t = Table::new(
+        "scale smoke — sinks off",
+        &["workload", "events", "wall (s)", "events/s (M)", "makespan (s)"],
+    );
+    t.row(&[
+        format!("{n_jobs} jobs / {} GPUs", cfg.cluster.n_gpus()),
+        format!("{}", res.n_events),
+        format!("{wall:.2}"),
+        format!("{:.2}", res.n_events as f64 / wall / 1e6),
+        format!("{:.0}", res.makespan),
+    ]);
+    t.print();
+
+    let mut report = BenchReport::new("scale_smoke");
+    report.record(&format!("{n_jobs} jobs sinks-off"), res.n_events, wall);
+    match report.write() {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
+}

@@ -78,6 +78,59 @@ fn main() {
     }
     t.print();
 
+    // ---- observer sinks: events/s with sinks off vs JSONL on ---------------
+    // The output-layer cost question: what does streaming every typed
+    // event as a JSON line cost versus the metrics-only facade? The sink
+    // writes to io::sink() so serialization is isolated from disk.
+    {
+        let jobs = trace::generate(&TraceConfig::paper_160());
+        let mut t = Table::new(
+            "observer sinks — 160 jobs (paper), coalescing on",
+            &["mode", "heap events", "stream events", "wall (ms)", "events/s (M)"],
+        );
+        let mut heap_events = 0u64;
+        let timing = bench("160 jobs sinks-off", 1, 3, || {
+            let mut placer = LwfPlacer::new(1);
+            let res = sim::simulate(&cfg, &jobs, &mut placer, &AdaDual { model: cfg.comm });
+            heap_events = res.n_events;
+        });
+        report.record("160 jobs (paper) sinks-off", heap_events, timing.mean_s);
+        t.row(&[
+            "sinks off".to_string(),
+            format!("{heap_events}"),
+            "-".to_string(),
+            format!("{:.1}", timing.mean_s * 1e3),
+            format!("{:.2}", heap_events as f64 / timing.mean_s / 1e6),
+        ]);
+        let mut stream_events = 0u64;
+        let timing = bench("160 jobs jsonl-on", 1, 3, || {
+            let mut placer = LwfPlacer::new(1);
+            let mut metrics = MetricsObserver::new();
+            let mut sink = JsonlSink::new(std::io::sink());
+            {
+                let mut obs: [&mut dyn SimObserver; 2] = [&mut metrics, &mut sink];
+                sim::simulate_observed(
+                    &cfg,
+                    &jobs,
+                    &mut placer,
+                    &AdaDual { model: cfg.comm },
+                    &mut obs,
+                );
+            }
+            heap_events = metrics.n_events();
+            stream_events = sink.written();
+        });
+        report.record("160 jobs (paper) jsonl-on", heap_events, timing.mean_s);
+        t.row(&[
+            "jsonl on".to_string(),
+            format!("{heap_events}"),
+            format!("{stream_events}"),
+            format!("{:.1}", timing.mean_s * 1e3),
+            format!("{:.2}", heap_events as f64 / timing.mean_s / 1e6),
+        ]);
+        t.print();
+    }
+
     // ---- micro benches -----------------------------------------------------
     let jobs = trace::generate(&TraceConfig::paper_160());
     let mut t = Table::new("micro benches", &["op", "mean"]);

@@ -62,11 +62,14 @@ pub mod prelude {
         RandomPlacer,
     };
     pub use crate::scenario::{
-        self, records_to_csv, records_to_json, registry, Experiment, RunRecord, Scenario,
-        TraceSource,
+        self, records_to_csv, records_to_json, registry, Experiment, OutputSpec, RunRecord,
+        Scenario, TraceSource,
     };
     pub use crate::sched::{self, AdaDual, Admission, CommPolicy, SrsfCap};
-    pub use crate::sim::{self, JobPriority, Repricing, SimConfig, SimResult};
+    pub use crate::sim::{
+        self, ContentionProfiler, JobPriority, JsonlSink, LegacyLog, MetricsObserver, Repricing,
+        SimConfig, SimEvent, SimObserver, SimResult, TimelineObserver,
+    };
     pub use crate::trace::{self, JobSpec, TraceConfig};
     pub use crate::util::bench::{bench, write_csv, Table};
 }

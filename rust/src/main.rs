@@ -72,7 +72,9 @@ fn print_help() {
          \x20            [--kappa K] [--policy ada|srsf1|srsf2|srsf3]\n\
          \x20            [--priority srsf|fifo|las] [--repricing at-admission|dynamic]\n\
          \x20            [--oversub R] [--rack-size N] [--coalescing on|off]\n\
-         \x20            [--seed S] [--jobs N]                  run one scenario\n\
+         \x20            [--events-out F.jsonl] [--timeline-out F] [--contention-out F]\n\
+         \x20            [--no-events] [--seed S] [--jobs N]    run one scenario\n\
+         \x20 simulate   --list        print registry placers/policies/topology presets\n\
          \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority|oversub]\n\
          \x20            [--grid] [--threads N] [--out-json F] [--out-csv F]\n\
          \x20            [--jobs N] [--seed S]                  run a scenario grid\n\
@@ -86,7 +88,8 @@ fn print_help() {
          \x20 ddl-sched sweep --scenario grid.json --threads 8 --out-csv grid.csv\n\
          \x20 ddl-sched sweep --scenario scenarios/oversub_sweep.json --threads 8\n\
          \x20 ddl-sched simulate --placer lwf --policy ada --jobs 160\n\
-         \x20 ddl-sched simulate --placer lwf-rack --oversub 4 --rack-size 4"
+         \x20 ddl-sched simulate --placer lwf-rack --oversub 4 --rack-size 4\n\
+         \x20 ddl-sched simulate --jobs 40 --events-out events.jsonl --timeline-out gantt.json"
     );
 }
 
@@ -170,11 +173,55 @@ fn cmd_trace_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `simulate --list`: the registry's algorithms and topology presets, so
+/// scenario authors stop grepping the source for valid names.
+fn cmd_list() -> Result<()> {
+    let mut t = Table::new("scenario registry", &["kind", "name", "label"]);
+    for p in registry::PLACERS {
+        t.row(&["placer".into(), p.to_string(), registry::placer_label(p, 1)]);
+    }
+    for p in registry::POLICIES {
+        t.row(&["policy".into(), p.to_string(), registry::policy_label(p)]);
+    }
+    for pr in sim::JobPriority::all() {
+        t.row(&["priority".into(), pr.name().to_string(), String::new()]);
+    }
+    for r in [sim::Repricing::AtAdmission, sim::Repricing::Dynamic] {
+        t.row(&["repricing".into(), r.name().to_string(), String::new()]);
+    }
+    for preset in net::TOPOLOGY_PRESETS {
+        t.row(&["topology".into(), preset.to_string(), String::new()]);
+    }
+    t.print();
+    println!(
+        "\nschema: docs/SCENARIOS.md (LWF labels shown for kappa=1; \
+         outputs sinks: events|timeline|contention)"
+    );
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let scenario = match args.get("scenario") {
+    if args.flag("list") {
+        return cmd_list();
+    }
+    let mut scenario = match args.get("scenario") {
         Some(path) => Scenario::from_file(path)?,
         None => scenario_from_flags(args)?,
     };
+    // Observer sinks: --no-events drops whatever the scenario file asked
+    // for; the --*-out flags then (re)attach individual sinks.
+    if args.flag("no-events") {
+        scenario.outputs = OutputSpec::default();
+    }
+    if let Some(p) = args.get("events-out") {
+        scenario.outputs.events = Some(p.to_string());
+    }
+    if let Some(p) = args.get("timeline-out") {
+        scenario.outputs.timeline = Some(p.to_string());
+    }
+    if let Some(p) = args.get("contention-out") {
+        scenario.outputs.contention = Some(p.to_string());
+    }
     let record = scenario.run()?;
     let mut t = Table::new(
         &format!("scenario '{}'", record.scenario.name),
@@ -191,6 +238,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         record.eval.contended_admissions,
         record.max_contention
     );
+    for (what, path) in [
+        ("events", &record.scenario.outputs.events),
+        ("timeline", &record.scenario.outputs.timeline),
+        ("contention profile", &record.scenario.outputs.contention),
+    ] {
+        if let Some(path) = path {
+            println!("wrote {what} to {path}");
+        }
+    }
     Ok(())
 }
 

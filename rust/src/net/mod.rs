@@ -40,6 +40,10 @@ pub type LinkId = usize;
 /// base topology: the paper's 16 servers split into 4 racks of 4.
 pub const DEFAULT_RACK_SIZE: usize = 4;
 
+/// Canonical scenario-file topology preset names, in schema order
+/// (`ddl-sched simulate --list` prints these for scenario authors).
+pub const TOPOLOGY_PRESETS: [&str; 3] = ["flat", "two-tier", "heterogeneous"];
+
 /// Declarative topology description — what scenario files carry.
 #[derive(Clone, Debug, PartialEq, Default)]
 pub enum TopologySpec {

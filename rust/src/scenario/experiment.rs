@@ -203,6 +203,14 @@ impl Experiment {
             * priorities.len()
             * oversubs.len()
             * seeds.len();
+        // Observer sinks are per-run files; every grid cell would clobber
+        // the same paths. A degenerate single-cell grid is fine.
+        if n_runs > 1 && !self.base.outputs.is_default() {
+            return Err(Error::msg(
+                "scenario 'outputs' sinks are per-run files and do not compose with grid \
+                 axes; run the scenario via 'simulate' or drop the axes",
+            ));
+        }
         let mut out = Vec::with_capacity(n_runs);
         for placer in &placers {
             for &kappa in &kappas {
@@ -446,6 +454,24 @@ mod tests {
         let base = Scenario::small("one", 2, 2, 6);
         let g = Experiment::single(base.clone()).grid().unwrap();
         assert_eq!(g, vec![base]);
+    }
+
+    #[test]
+    fn grid_rejects_outputs_with_multiple_cells() {
+        use crate::scenario::OutputSpec;
+        let base = Scenario {
+            outputs: OutputSpec { events: Some("ev.jsonl".into()), ..OutputSpec::default() },
+            ..Scenario::small("sink-grid", 2, 2, 6)
+        };
+        // A single-cell grid keeps the sinks (simulate-equivalent)...
+        assert_eq!(Experiment::single(base.clone()).grid().unwrap().len(), 1);
+        // ...but real axes would clobber the same files per cell.
+        let bad = Experiment {
+            policies: vec!["srsf1".into(), "ada".into()],
+            ..Experiment::single(base)
+        };
+        let e = bad.grid().unwrap_err().to_string();
+        assert!(e.contains("outputs"), "{e}");
     }
 
     #[test]

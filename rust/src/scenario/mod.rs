@@ -4,8 +4,10 @@
 //! Eq (5) contention model, fabric topology (`net::TopologySpec`; the
 //! default `flat` preset is elided from JSON so paper-era files and
 //! records stay byte-stable), trace source (file | generated | inline),
-//! placer + κ, communication policy, job priority, repricing mode and the
-//! RNG seed. Scenarios serialize to JSON (`util::json`), so every
+//! placer + κ, communication policy, job priority, repricing mode, the
+//! RNG seed, and optionally which observer sinks to attach
+//! ([`OutputSpec`]: JSONL event stream, per-GPU timeline, per-link
+//! contention profile — `sim::observe`). Scenarios serialize to JSON (`util::json`), so every
 //! evaluation setup is a shareable data file instead of hand-wired code —
 //! see docs/SCENARIOS.md for the schema.
 //!
@@ -30,6 +32,8 @@ use crate::cluster::ClusterSpec;
 use crate::metrics::Evaluation;
 use crate::model::CommModel;
 use crate::net::TopologySpec;
+use crate::placement::Placer;
+use crate::sched::CommPolicy;
 use crate::sim::{self, JobPriority, Repricing, SimConfig};
 use crate::trace::{self, JobSpec, TraceConfig};
 use crate::util::error::{Context, Error, Result};
@@ -88,6 +92,64 @@ impl TraceSource {
     }
 }
 
+/// Optional per-run output sinks (`sim::observe`), elided from JSON when
+/// empty so the pre-observer scenario corpus stays byte-stable. Paths
+/// are created/truncated at run time; sinks are pure taps — attaching
+/// them never changes the run's metrics or its method label.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct OutputSpec {
+    /// Stream every typed `SimEvent` as JSON Lines (constant memory).
+    pub events: Option<String>,
+    /// Per-GPU Gantt rows, JSON (`sim::TimelineObserver`).
+    pub timeline: Option<String>,
+    /// Per-link time-at-contention-level histogram, JSON
+    /// (`sim::ContentionProfiler`).
+    pub contention: Option<String>,
+}
+
+impl OutputSpec {
+    /// No sinks: the engine runs with the metrics observer alone.
+    pub fn is_default(&self) -> bool {
+        *self == OutputSpec::default()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut v = Json::obj();
+        if let Some(p) = &self.events {
+            v = v.set("events", p.as_str());
+        }
+        if let Some(p) = &self.timeline {
+            v = v.set("timeline", p.as_str());
+        }
+        if let Some(p) = &self.contention {
+            v = v.set("contention", p.as_str());
+        }
+        v
+    }
+
+    fn from_json(v: &Json) -> Result<OutputSpec, String> {
+        let Json::Obj(entries) = v else {
+            return Err("'outputs' must be an object".to_string());
+        };
+        for (key, val) in entries {
+            if !matches!(key.as_str(), "events" | "timeline" | "contention") {
+                return Err(format!(
+                    "unknown outputs key '{key}' (events|timeline|contention)"
+                ));
+            }
+            if val.as_str().is_none() {
+                return Err(format!("outputs '{key}' must be a file path string"));
+            }
+        }
+        let path = |key: &str| v.get(key).and_then(Json::as_str).map(str::to_string);
+        Ok(OutputSpec {
+            events: path("events"),
+            timeline: path("timeline"),
+            contention: path("contention"),
+        })
+    }
+}
+
 /// One fully-specified simulation run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Scenario {
@@ -112,6 +174,9 @@ pub struct Scenario {
     /// (property-tested), so it never appears in labels, and the default
     /// is elided from JSON to keep pre-existing files byte-stable.
     pub coalescing: bool,
+    /// Optional observer sinks to attach to the run (elided-by-default;
+    /// docs/SCENARIOS.md §Outputs).
+    pub outputs: OutputSpec,
     /// Seeds the RAND placer and any `Generated` trace without its own seed.
     pub seed: u64,
 }
@@ -132,6 +197,7 @@ impl Scenario {
             priority: JobPriority::Srsf,
             repricing: Repricing::AtAdmission,
             coalescing: true,
+            outputs: OutputSpec::default(),
             seed: 42,
         }
     }
@@ -247,7 +313,11 @@ impl Scenario {
             self.topology.rack_size(),
         )?;
         let policy = registry::make_policy(&self.policy, self.comm)?;
-        let res = sim::simulate(&cfg, jobs, placer.as_mut(), policy.as_ref());
+        let res = if self.outputs.is_default() {
+            sim::simulate(&cfg, jobs, placer.as_mut(), policy.as_ref())
+        } else {
+            self.run_with_sinks(&cfg, jobs, placer.as_mut(), policy.as_ref())?
+        };
         if !res.jct.iter().any(|t| t.is_finite()) {
             return Err(Error::msg(format!(
                 "scenario '{}': no job finished (workload infeasible on this cluster?)",
@@ -261,6 +331,60 @@ impl Scenario {
             n_events: res.n_events,
             max_contention: res.max_contention,
         })
+    }
+
+    /// Observer-instrumented execution: attach the sinks the `outputs`
+    /// section asks for alongside the metrics observer, write the
+    /// collected artifacts, and return the same facade `SimResult` a
+    /// sink-less run produces (sinks are pure taps — bit-identical
+    /// metrics either way).
+    fn run_with_sinks(
+        &self,
+        cfg: &SimConfig,
+        jobs: &[JobSpec],
+        placer: &mut dyn Placer,
+        policy: &dyn CommPolicy,
+    ) -> Result<sim::SimResult> {
+        let mut metrics = sim::MetricsObserver::new();
+        let mut events = match &self.outputs.events {
+            Some(path) => {
+                let f = std::fs::File::create(path)
+                    .with_context(|| format!("creating events sink '{path}'"))?;
+                Some(sim::JsonlSink::new(std::io::BufWriter::new(f)))
+            }
+            None => None,
+        };
+        let mut timeline = self.outputs.timeline.as_ref().map(|_| sim::TimelineObserver::new());
+        let mut contention =
+            self.outputs.contention.as_ref().map(|_| sim::ContentionProfiler::new());
+        {
+            let mut obs: Vec<&mut dyn sim::SimObserver> = vec![&mut metrics];
+            if let Some(s) = events.as_mut() {
+                obs.push(s);
+            }
+            if let Some(t) = timeline.as_mut() {
+                obs.push(t);
+            }
+            if let Some(c) = contention.as_mut() {
+                obs.push(c);
+            }
+            sim::simulate_observed(cfg, jobs, placer, policy, &mut obs);
+        }
+        if let Some(sink) = events {
+            let path = self.outputs.events.as_deref().unwrap_or_default();
+            sink.finish().with_context(|| format!("writing events sink '{path}'"))?;
+        }
+        if let Some(tl) = &timeline {
+            let path = self.outputs.timeline.as_deref().unwrap_or_default();
+            std::fs::write(path, tl.to_json().to_string_pretty())
+                .with_context(|| format!("writing timeline '{path}'"))?;
+        }
+        if let Some(cp) = &contention {
+            let path = self.outputs.contention.as_deref().unwrap_or_default();
+            std::fs::write(path, cp.to_json().to_string_pretty())
+                .with_context(|| format!("writing contention profile '{path}'"))?;
+        }
+        Ok(metrics.into_result())
     }
 
     // ---- serialization -----------------------------------------------------
@@ -288,6 +412,10 @@ impl Scenario {
         // pre-existing scenario files must stay byte-stable.
         if !self.coalescing {
             v = v.set("coalescing", false);
+        }
+        // Same elision rule for the observer sinks: empty means none.
+        if !self.outputs.is_default() {
+            v = v.set("outputs", self.outputs.to_json());
         }
         v.set("seed", self.seed)
     }
@@ -324,6 +452,11 @@ impl Scenario {
                 .as_bool()
                 .ok_or_else(|| Error::msg("'coalescing' must be a boolean (true|false)"))?,
         };
+        // Absent means the default: no sinks attached.
+        let outputs = match v.get("outputs") {
+            None => OutputSpec::default(),
+            Some(o) => OutputSpec::from_json(o).map_err(Error::msg)?,
+        };
         Ok(Scenario {
             name: v.req_str("name").map_err(Error::msg)?.to_string(),
             cluster,
@@ -346,6 +479,7 @@ impl Scenario {
                 Error::msg(format!("unknown repricing '{repricing}' (at-admission|dynamic)"))
             })?,
             coalescing,
+            outputs,
             seed: v.req_u64("seed").map_err(Error::msg)?,
         })
     }
@@ -391,6 +525,7 @@ mod tests {
             priority: JobPriority::Las,
             repricing: Repricing::Dynamic,
             coalescing: false,
+            outputs: OutputSpec::default(),
             seed: 7,
         };
         let back = Scenario::from_text(&s.to_json_text()).unwrap();
@@ -576,6 +711,98 @@ mod tests {
         assert_eq!(a.eval.clean_admissions, b.eval.clean_admissions);
         assert_eq!(a.eval.contended_admissions, b.eval.contended_admissions);
         assert!(a.n_events <= b.n_events, "coalescing added events");
+    }
+
+    // ---- outputs (observer sinks) ------------------------------------------
+
+    #[test]
+    fn outputs_default_elided_and_roundtrips() {
+        // The empty outputs section never appears in JSON: pre-observer
+        // files and records stay byte-stable.
+        let text = Scenario::paper().to_json_text();
+        assert!(!text.contains("outputs"), "default must be elided:\n{text}");
+        let s = Scenario {
+            outputs: OutputSpec {
+                events: Some("ev.jsonl".into()),
+                timeline: None,
+                contention: Some("cont.json".into()),
+            },
+            ..Scenario::paper()
+        };
+        let text = s.to_json_text();
+        assert!(text.contains("\"outputs\""), "{text}");
+        let back = Scenario::from_text(&text).unwrap();
+        assert_eq!(back, s);
+        // Sinks are a pure output knob: the method label is untouched.
+        assert_eq!(s.label(), Scenario::paper().label());
+    }
+
+    #[test]
+    fn outputs_rejects_unknown_keys_and_non_strings() {
+        let text = Scenario::paper().to_json_text().replace(
+            "\"seed\": 42",
+            "\"outputs\": {\"event\": \"x.jsonl\"},\n  \"seed\": 42",
+        );
+        let e = Scenario::from_text(&text).unwrap_err().to_string();
+        assert!(e.contains("unknown outputs key 'event'"), "{e}");
+        let text = Scenario::paper()
+            .to_json_text()
+            .replace("\"seed\": 42", "\"outputs\": {\"events\": 7},\n  \"seed\": 42");
+        let e = Scenario::from_text(&text).unwrap_err().to_string();
+        assert!(e.contains("must be a file path"), "{e}");
+    }
+
+    #[test]
+    fn outputs_write_sink_files_end_to_end() {
+        let dir = std::env::temp_dir();
+        let ev = dir.join("ddl_sched_outputs_events.jsonl");
+        let tl = dir.join("ddl_sched_outputs_timeline.json");
+        let cp = dir.join("ddl_sched_outputs_contention.json");
+        let plain = Scenario::small("sinks", 2, 2, 8);
+        let s = Scenario {
+            outputs: OutputSpec {
+                events: Some(ev.to_string_lossy().into_owned()),
+                timeline: Some(tl.to_string_lossy().into_owned()),
+                contention: Some(cp.to_string_lossy().into_owned()),
+            },
+            ..plain.clone()
+        };
+        let with_sinks = s.run().unwrap();
+        let without = plain.run().unwrap();
+        // Sinks are pure taps: metrics are bit-identical to a plain run.
+        assert_eq!(with_sinks.eval.jct.mean.to_bits(), without.eval.jct.mean.to_bits());
+        assert_eq!(with_sinks.eval.makespan.to_bits(), without.eval.makespan.to_bits());
+        assert_eq!(with_sinks.n_events, without.n_events);
+        // The JSONL stream exists and every line parses.
+        let events = std::fs::read_to_string(&ev).unwrap();
+        assert!(events.lines().count() > 0, "empty event stream");
+        for line in events.lines() {
+            crate::util::json::Json::parse(line).unwrap();
+        }
+        // Timeline and contention profile parse as JSON.
+        let tl_text = std::fs::read_to_string(&tl).unwrap();
+        let tl_json = crate::util::json::Json::parse(&tl_text).unwrap();
+        assert!(!tl_json.as_arr().unwrap().is_empty(), "no timeline spans");
+        let cp_text = std::fs::read_to_string(&cp).unwrap();
+        crate::util::json::Json::parse(&cp_text).unwrap();
+        for p in [&ev, &tl, &cp] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn outputs_events_sink_error_surfaces() {
+        // An unwritable sink path must fail the run with context, not
+        // silently produce a record.
+        let s = Scenario {
+            outputs: OutputSpec {
+                events: Some("/definitely/not/a/dir/ev.jsonl".into()),
+                ..OutputSpec::default()
+            },
+            ..Scenario::small("bad-sink", 2, 2, 6)
+        };
+        let e = s.run().unwrap_err().to_string();
+        assert!(e.contains("events sink"), "{e}");
     }
 
     // ---- topology schema ---------------------------------------------------

@@ -27,7 +27,12 @@ pub struct NetView<'a> {
 
 impl<'a> NetView<'a> {
     /// Maximum count of active communication tasks over `links`
-    /// (Algorithm 2 lines 2–7), plus the union of those tasks.
+    /// (Algorithm 2 lines 2–7), plus the union of those tasks. The union
+    /// is deduplicated by task id with a sort + dedup — O(n log n) over
+    /// the gathered entries, versus the O(n²) `iter().any` membership
+    /// scan per entry this replaced. Order is by task id (a task shared
+    /// by several links carries the same remaining-bytes value on each,
+    /// so which copy survives is immaterial).
     pub fn max_tasks(&self, links: &[LinkId]) -> (usize, Vec<(usize, f64)>) {
         let mut max = 0;
         let mut old: Vec<(usize, f64)> = Vec::new();
@@ -36,12 +41,10 @@ impl<'a> NetView<'a> {
             if tasks.len() > max {
                 max = tasks.len();
             }
-            for &t in tasks {
-                if !old.iter().any(|&(id, _)| id == t.0) {
-                    old.push(t);
-                }
-            }
+            old.extend_from_slice(tasks);
         }
+        old.sort_unstable_by_key(|&(id, _)| id);
+        old.dedup_by_key(|&mut (id, _)| id);
         (max, old)
     }
 }
@@ -207,6 +210,23 @@ mod tests {
         let (max, old) = view.max_tasks(&[0, 1]);
         assert_eq!(max, 2);
         assert_eq!(old.len(), 2);
+    }
+
+    #[test]
+    fn max_tasks_dedups_many_links_by_id() {
+        // A task spanning every link must appear once in the union no
+        // matter how many links repeat it (the sort-dedup rebuild), and
+        // the per-id remaining bytes survive intact.
+        let everywhere: Vec<Vec<(usize, f64)>> =
+            (0..8).map(|l| vec![(9, 5e8), (l, 1e6)]).collect();
+        let view = NetView { per_link: &everywhere };
+        let links: Vec<usize> = (0..8).collect();
+        let (max, old) = view.max_tasks(&links);
+        assert_eq!(max, 2);
+        assert_eq!(old.len(), 9); // ids 0..8 plus the shared task 9
+        assert_eq!(old.iter().filter(|&&(id, _)| id == 9).count(), 1);
+        let m9 = old.iter().find(|&&(id, _)| id == 9).unwrap().1;
+        assert_eq!(m9, 5e8);
     }
 
     #[test]

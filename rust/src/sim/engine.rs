@@ -10,6 +10,10 @@ use crate::placement::Placer;
 use crate::sched::{srsf_cmp, Admission, CommPolicy, NetView};
 use crate::trace::JobSpec;
 
+use super::observe::{
+    LegacyLog, MetricsObserver, RunStats, SimEvent, SimObserver, TaskPhase as Phase,
+};
+
 const EPS: f64 = 1e-9;
 
 /// How a transfer's rate reacts to contention changes mid-flight.
@@ -106,6 +110,8 @@ pub struct SimConfig {
     /// task, for debugging and as the equivalence oracle.
     pub coalescing: bool,
     /// Record a per-event log (for debugging / the contention demo).
+    /// Compatibility switch: `simulate` attaches a [`LegacyLog`] observer
+    /// iff this is set; the engine itself never formats strings.
     pub log_events: bool,
 }
 
@@ -136,7 +142,10 @@ pub struct EventLog {
     pub what: String,
 }
 
-/// Simulation outputs: everything the paper's metrics need.
+/// Simulation outputs: everything the paper's metrics need. Since the
+/// observer redesign this is a compatibility facade assembled from
+/// [`MetricsObserver`] (and [`LegacyLog`] for `events`) by [`simulate`];
+/// the engine itself only emits typed [`SimEvent`]s.
 #[derive(Clone, Debug)]
 pub struct SimResult {
     /// Per-job completion time F_k − A_k, indexed by job id.
@@ -200,12 +209,6 @@ impl SimResult {
 }
 
 // ---------------------------------------------------------------------------
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Phase {
-    Fwd,
-    Bwd,
-}
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum Ev {
@@ -278,8 +281,6 @@ struct JobRt {
     iters_done: u64,
     bwd_remaining: usize,
     comm_pending: bool,
-    placed_at: Option<f64>,
-    finished_at: Option<f64>,
     /// Bookkeeping load drained from its GPUs per finished iteration.
     load_per_iter: f64,
     /// Total bookkeeping load committed at placement (for final release).
@@ -338,25 +339,64 @@ struct CommTask {
     done: bool,
 }
 
-/// Per-GPU runtime state.
+/// Per-GPU runtime state. Busy time, allocation windows and release
+/// times are no longer accumulated here — observers derive them from
+/// `ComputeStarted` / `JobPlaced` / `JobFinished` events.
 struct GpuRt {
     busy: bool,
     ready: Vec<(usize, Phase)>, // compute-ready (job, phase) on this GPU
-    busy_accum: f64,
-    /// First time a job was placed on this GPU (for allocated-window util).
-    first_alloc: Option<f64>,
-    /// Last time a job released this GPU.
-    last_release: f64,
 }
 
-/// Run one simulation: `jobs` through `placer` + `policy` on `cfg.cluster`.
+/// Run one simulation: `jobs` through `placer` + `policy` on
+/// `cfg.cluster`. A thin facade over [`simulate_observed`]: attaches a
+/// [`MetricsObserver`] (plus a [`LegacyLog`] iff `cfg.log_events`) and
+/// assembles the compatibility [`SimResult`] from them.
 pub fn simulate(
     cfg: &SimConfig,
     jobs: &[JobSpec],
     placer: &mut dyn Placer,
     policy: &dyn CommPolicy,
 ) -> SimResult {
-    Engine::new(cfg, jobs).run(placer, policy)
+    let mut metrics = MetricsObserver::new();
+    if cfg.log_events {
+        let mut log = LegacyLog::new();
+        {
+            let mut obs: [&mut dyn SimObserver; 2] = [&mut metrics, &mut log];
+            simulate_observed(cfg, jobs, placer, policy, &mut obs);
+        }
+        let mut res = metrics.into_result();
+        res.events = log.into_events();
+        res
+    } else {
+        let mut obs: [&mut dyn SimObserver; 1] = [&mut metrics];
+        simulate_observed(cfg, jobs, placer, policy, &mut obs);
+        metrics.into_result()
+    }
+}
+
+/// Run one simulation, streaming typed [`SimEvent`]s to `observers`
+/// instead of accumulating anything. The engine allocates no event
+/// strings and keeps no per-event state, so memory stays bounded for
+/// arbitrarily long traces; what a run "returns" is whatever the
+/// attached observers collected.
+pub fn simulate_observed(
+    cfg: &SimConfig,
+    jobs: &[JobSpec],
+    placer: &mut dyn Placer,
+    policy: &dyn CommPolicy,
+    observers: &mut [&mut dyn SimObserver],
+) {
+    for o in observers.iter_mut() {
+        o.on_start(cfg, jobs);
+    }
+    Engine::new(cfg, jobs, observers).run(placer, policy);
+}
+
+/// Fan one event out to every attached observer.
+fn emit(observers: &mut [&mut dyn SimObserver], ev: SimEvent<'_>) {
+    for o in observers.iter_mut() {
+        o.on_event(&ev);
+    }
 }
 
 /// One steady iteration's event-time chain, replicating the exact
@@ -366,7 +406,7 @@ pub fn simulate(
 /// `drain = msg · per_byte(1)`. Returns (fwd done, bwd done, iteration
 /// end).
 #[inline]
-fn iter_bounds(
+pub(crate) fn iter_bounds(
     s: f64,
     t_fwd: f64,
     t_bwd: f64,
@@ -394,8 +434,12 @@ fn links_intersect(a: &[LinkId], b: &[LinkId]) -> bool {
     false
 }
 
-struct Engine<'a> {
+struct Engine<'a, 'o> {
     cfg: &'a SimConfig,
+    /// Attached observers — the engine's only output channel. Every
+    /// state change that used to feed `SimResult` accumulators or the
+    /// string log is a typed `SimEvent` emission now.
+    observers: &'a mut [&'o mut (dyn SimObserver + 'o)],
     topo: Topology,
     cluster: ClusterState,
     jobs: Vec<JobRt>,
@@ -439,18 +483,18 @@ struct Engine<'a> {
     /// of one env lookup per million-event heartbeat.
     debug: bool,
     n_events: u64,
-    contended_admissions: u64,
-    clean_admissions: u64,
-    max_contention: usize,
-    events: Vec<EventLog>,
     unfinished: usize,
     /// Set when a job finished (memory freed) so the event loop re-attempts
     /// placement of queued jobs.
     need_place: bool,
 }
 
-impl<'a> Engine<'a> {
-    fn new(cfg: &'a SimConfig, jobs: &[JobSpec]) -> Engine<'a> {
+impl<'a, 'o> Engine<'a, 'o> {
+    fn new(
+        cfg: &'a SimConfig,
+        jobs: &[JobSpec],
+        observers: &'a mut [&'o mut (dyn SimObserver + 'o)],
+    ) -> Engine<'a, 'o> {
         let peak = cfg.cluster.gpu_peak_gflops;
         let rt: Vec<JobRt> = jobs
             .iter()
@@ -467,8 +511,6 @@ impl<'a> Engine<'a> {
                     iters_done: 0,
                     bwd_remaining: 0,
                     comm_pending: false,
-                    placed_at: None,
-                    finished_at: None,
                     load_per_iter: 0.0,
                     load_total: 0.0,
                     placed_seq: 0,
@@ -488,16 +530,11 @@ impl<'a> Engine<'a> {
         let n_links = topo.n_links();
         Engine {
             cfg,
+            observers,
             topo,
             cluster: ClusterState::new(cfg.cluster),
             gpus: (0..cfg.cluster.n_gpus())
-                .map(|_| GpuRt {
-                    busy: false,
-                    ready: Vec::new(),
-                    busy_accum: 0.0,
-                    first_alloc: None,
-                    last_release: 0.0,
-                })
+                .map(|_| GpuRt { busy: false, ready: Vec::new() })
                 .collect(),
             jobs: rt,
             heap,
@@ -516,10 +553,6 @@ impl<'a> Engine<'a> {
             scratch_keys: Vec::new(),
             debug: std::env::var_os("DDL_SIM_DEBUG").is_some(),
             n_events: 0,
-            contended_admissions: 0,
-            clean_admissions: 0,
-            max_contention: 0,
-            events: Vec::new(),
             unfinished: jobs.len(),
             need_place: false,
         }
@@ -530,17 +563,13 @@ impl<'a> Engine<'a> {
         self.heap.push(Timed { t, seq: self.seq, ev });
     }
 
-    fn log(&mut self, t: f64, what: impl FnOnce() -> String) {
-        if self.cfg.log_events {
-            self.events.push(EventLog { t, what: what() });
-        }
-    }
-
-    fn run(mut self, placer: &mut dyn Placer, policy: &dyn CommPolicy) -> SimResult {
+    fn run(mut self, placer: &mut dyn Placer, policy: &dyn CommPolicy) {
+        let mut t_end = 0.0;
         while let Some(Timed { t, ev, .. }) = self.heap.pop() {
             if self.unfinished == 0 {
                 break;
             }
+            t_end = t;
             self.n_events += 1;
             if self.n_events % 1_000_000 == 0 && self.debug {
                 eprintln!(
@@ -556,7 +585,7 @@ impl<'a> Engine<'a> {
             }
             match ev {
                 Ev::Arrive { job } => {
-                    self.log(t, || format!("arrive job{job}"));
+                    emit(&mut *self.observers, SimEvent::JobArrived { t, job });
                     self.queue.push(job);
                     self.try_place(t, placer, None);
                 }
@@ -599,7 +628,10 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        self.finish()
+        let stats = RunStats { n_events: self.n_events, t_end };
+        for o in self.observers.iter_mut() {
+            o.on_end(&stats);
+        }
     }
 
     // -- priorities -----------------------------------------------------------
@@ -684,9 +716,6 @@ impl<'a> Engine<'a> {
         let load = (c_j + e_j) * gpus.len() as f64;
         self.cluster
             .allocate(&gpus, self.jobs[job].spec.mem_bytes(), load);
-        for &g in &gpus {
-            self.gpus[g].first_alloc.get_or_insert(t);
-        }
         self.placements += 1;
         {
             let j = &mut self.jobs[job];
@@ -695,16 +724,21 @@ impl<'a> Engine<'a> {
             j.gpus = gpus;
             j.links = links;
             j.multi_server = multi;
-            j.placed_at = Some(t);
             j.placed_seq = self.placements;
         }
         if multi {
             self.running_multi.push(job);
         }
-        if self.cfg.log_events {
-            let gpus = self.jobs[job].gpus.clone();
-            self.log(t, || format!("place job{job} gpus={gpus:?}"));
-        }
+        emit(
+            &mut *self.observers,
+            SimEvent::JobPlaced {
+                t,
+                job,
+                gpus: &self.jobs[job].gpus,
+                links: &self.jobs[job].links,
+                multi_server: multi,
+            },
+        );
         // The first iteration always runs event-exact (no macro-event):
         // we are inside a placement pass, and a *later* placement in this
         // same pass could still land on these GPUs. Steadiness is
@@ -763,7 +797,7 @@ impl<'a> Engine<'a> {
             Phase::Bwd => self.jobs[job].t_bwd,
         };
         self.gpus[gpu].busy = true;
-        self.gpus[gpu].busy_accum += dur;
+        emit(&mut *self.observers, SimEvent::ComputeStarted { t, gpu, job, phase, dur });
         self.push(t + dur, Ev::ComputeDone { gpu, job, phase });
     }
 
@@ -812,18 +846,14 @@ impl<'a> Engine<'a> {
     /// macro-event completion: release memory, free the GPUs, let queued
     /// jobs try to place.
     fn finish_job(&mut self, t: f64, job: usize, gpus: &[GpuId]) {
-        self.jobs[job].finished_at = Some(t);
         self.unfinished -= 1;
         if self.jobs[job].multi_server {
             self.running_multi.retain(|&j| j != job);
         }
         let mem = self.jobs[job].spec.mem_bytes();
         self.cluster.release(gpus, mem, 0.0);
-        for &g in gpus {
-            self.gpus[g].last_release = self.gpus[g].last_release.max(t);
-        }
         self.need_place = true;
-        self.log(t, || format!("finish job{job}"));
+        emit(&mut *self.observers, SimEvent::JobFinished { t, job });
     }
 
     // -- steady-state fast-forwarding -----------------------------------------
@@ -914,6 +944,10 @@ impl<'a> Engine<'a> {
         let v = j.ff_version;
         self.ff_jobs.push(job);
         self.push(s, Ev::FastForward { job, version: v });
+        emit(
+            &mut *self.observers,
+            SimEvent::FastForwardApplied { t, job, iters: iters_left, end_t: s },
+        );
         true
     }
 
@@ -925,50 +959,43 @@ impl<'a> Engine<'a> {
         };
         self.ff_jobs.retain(|&j| j != job);
         debug_assert_eq!(t.to_bits(), ff.end_t.to_bits());
-        self.apply_iterations(job, &ff, ff.iters);
+        self.apply_iterations(job, &ff, ff.iters, ff.end_t);
         debug_assert_eq!(self.jobs[job].iters_done, self.jobs[job].spec.iterations);
         let gpus = self.jobs[job].gpus.clone();
         self.finish_job(t, job, &gpus);
     }
 
-    /// Batched side-effects of `n` coalesced iterations: per-GPU busy
-    /// accumulation and load drain replay the exact per-iteration float
-    /// chains (not reassociated sums — bit-identity matters), admission
-    /// counters jump, and with event logging on the comm lifecycle is
-    /// synthesised exactly as the event-exact engine would have logged it.
-    fn apply_iterations(&mut self, job: usize, ff: &FfState, n: u64) {
+    /// Batched side-effects of `n` coalesced iterations ending at
+    /// `end_t`: the engine drains bookkeeping load and advances the
+    /// iteration counter; everything observable — per-GPU busy time,
+    /// admission counters, the synthesized legacy-log comm lifecycle —
+    /// rides on the single `IterationsCoalesced` event, whose constants
+    /// let observers replay the exact per-iteration float chains
+    /// (bit-identity matters; see `MetricsObserver` / `LegacyLog`).
+    fn apply_iterations(&mut self, job: usize, ff: &FfState, n: u64, end_t: f64) {
         if n == 0 {
             return;
         }
-        let t_fwd = self.jobs[job].t_fwd;
-        let t_bwd = self.jobs[job].t_bwd;
+        emit(
+            &mut *self.observers,
+            SimEvent::IterationsCoalesced {
+                job,
+                gpus: &self.jobs[job].gpus,
+                links: &self.jobs[job].links,
+                n,
+                start_t: ff.start_t,
+                end_t,
+                t_fwd: self.jobs[job].t_fwd,
+                t_bwd: self.jobs[job].t_bwd,
+                multi_server: self.jobs[job].multi_server,
+                lat: ff.lat,
+                per_byte: ff.per_byte,
+                msg_bytes: self.jobs[job].spec.message_bytes(),
+            },
+        );
         let gpus = self.jobs[job].gpus.clone();
-        for &g in &gpus {
-            let busy = &mut self.gpus[g].busy_accum;
-            for _ in 0..n {
-                *busy += t_fwd;
-                *busy += t_bwd;
-            }
-        }
         self.cluster.drain_load_n(&gpus, self.jobs[job].load_per_iter, n);
         self.jobs[job].iters_done += n;
-        if self.jobs[job].multi_server {
-            // Every coalesced All-Reduce started on idle links: k = 1.
-            self.clean_admissions += n;
-            self.max_contention = self.max_contention.max(1);
-            if self.cfg.log_events {
-                let msg = self.jobs[job].spec.message_bytes();
-                let drain = msg * ff.per_byte;
-                let mut s = ff.start_t;
-                for _ in 0..n {
-                    let (_, t2, c) = iter_bounds(s, t_fwd, t_bwd, true, ff.lat, drain);
-                    self.events
-                        .push(EventLog { t: t2, what: format!("comm-start job{job} k=1") });
-                    self.events.push(EventLog { t: c, what: format!("comm-done job{job}") });
-                    s = c;
-                }
-            }
-        }
     }
 
     /// Dissolve every active macro-event, rebuilding each job's exact
@@ -1005,6 +1032,7 @@ impl<'a> Engine<'a> {
     fn reconcile_ff(&mut self, t: f64, job: usize, interrupter: Option<usize>) {
         let ff = self.jobs[job].ff.take().expect("reconcile without a macro-event");
         self.jobs[job].ff_version += 1; // the pending FastForward goes stale
+        emit(&mut *self.observers, SimEvent::FastForwardDissolved { t, job });
         let boundary_first = interrupter
             .is_some_and(|f| self.jobs[job].placed_seq < self.jobs[f].placed_seq);
         let t_fwd = self.jobs[job].t_fwd;
@@ -1024,7 +1052,7 @@ impl<'a> Engine<'a> {
             if done == ff.iters {
                 // The whole macro-event ran: the interrupter shares the
                 // final timestamp but sorts after the finish.
-                self.apply_iterations(job, &ff, done);
+                self.apply_iterations(job, &ff, done, s);
                 let gpus = self.jobs[job].gpus.clone();
                 self.finish_job(t, job, &gpus);
                 return;
@@ -1034,15 +1062,21 @@ impl<'a> Engine<'a> {
             t2 = next.1;
             c = next.2;
         }
-        self.apply_iterations(job, &ff, done);
+        self.apply_iterations(job, &ff, done, s);
         // Rebuild the iteration in flight at `t` (it started at `s`).
+        // The `ComputeStarted` emissions carry the in-flight tasks' real
+        // (past) start times; per-GPU busy accumulation replays the same
+        // per-accumulator addition order the event-exact engine used.
         let gpus = self.jobs[job].gpus.clone();
         if t <= t1 {
             // Forward pass running on every GPU.
             self.jobs[job].bwd_remaining = gpus.len();
             for &g in &gpus {
                 self.gpus[g].busy = true;
-                self.gpus[g].busy_accum += t_fwd;
+                emit(
+                    &mut *self.observers,
+                    SimEvent::ComputeStarted { t: s, gpu: g, job, phase: Phase::Fwd, dur: t_fwd },
+                );
                 self.push(t1, Ev::ComputeDone { gpu: g, job, phase: Phase::Fwd });
             }
         } else if t <= t2 {
@@ -1050,8 +1084,14 @@ impl<'a> Engine<'a> {
             self.jobs[job].bwd_remaining = gpus.len();
             for &g in &gpus {
                 self.gpus[g].busy = true;
-                self.gpus[g].busy_accum += t_fwd;
-                self.gpus[g].busy_accum += t_bwd;
+                emit(
+                    &mut *self.observers,
+                    SimEvent::ComputeStarted { t: s, gpu: g, job, phase: Phase::Fwd, dur: t_fwd },
+                );
+                emit(
+                    &mut *self.observers,
+                    SimEvent::ComputeStarted { t: t1, gpu: g, job, phase: Phase::Bwd, dur: t_bwd },
+                );
                 self.push(t2, Ev::ComputeDone { gpu: g, job, phase: Phase::Bwd });
             }
         } else {
@@ -1061,11 +1101,15 @@ impl<'a> Engine<'a> {
             debug_assert!(multi);
             self.jobs[job].bwd_remaining = 0;
             for &g in &gpus {
-                self.gpus[g].busy_accum += t_fwd;
-                self.gpus[g].busy_accum += t_bwd;
+                emit(
+                    &mut *self.observers,
+                    SimEvent::ComputeStarted { t: s, gpu: g, job, phase: Phase::Fwd, dur: t_fwd },
+                );
+                emit(
+                    &mut *self.observers,
+                    SimEvent::ComputeStarted { t: t1, gpu: g, job, phase: Phase::Bwd, dur: t_bwd },
+                );
             }
-            self.clean_admissions += 1;
-            self.max_contention = self.max_contention.max(1);
             let links = self.jobs[job].links.clone();
             let id = self.comms.len();
             self.comms.push(CommTask {
@@ -1085,7 +1129,16 @@ impl<'a> Engine<'a> {
             self.active_pos.push(self.active_comms.len());
             debug_assert_eq!(self.active_pos.len(), self.comms.len());
             self.active_comms.push(id);
-            self.log(t2, || format!("comm-start job{job} k=1"));
+            emit(
+                &mut *self.observers,
+                SimEvent::CommAdmitted { t: t2, job, comm: id, links: &links, contention: 1 },
+            );
+            for &l in &links {
+                emit(
+                    &mut *self.observers,
+                    SimEvent::ContentionChanged { t: t2, link: l, level: self.per_link[l].len() },
+                );
+            }
             self.push(c, Ev::CommDone { comm: id, version: 1 });
         }
     }
@@ -1164,7 +1217,9 @@ impl<'a> Engine<'a> {
         c.version += 1;
         let eta = t + c.latency_left + c.remaining * per_byte;
         let v = c.version;
-        self.max_contention = self.max_contention.max(k);
+        // No max-contention bookkeeping here any more: occupancy peaks
+        // are realized at admissions, so the `CommAdmitted` contention
+        // field already bounds every repredicted k (MetricsObserver).
         self.push(eta, Ev::CommDone { comm: id, version: v });
     }
 
@@ -1233,11 +1288,6 @@ impl<'a> Engine<'a> {
             let net = NetView { per_link: &view };
             if policy.admit(msg, &links, &net) == Admission::Start {
                 let pre = self.contention_on(&links);
-                if pre == 0 {
-                    self.clean_admissions += 1;
-                } else {
-                    self.contended_admissions += 1;
-                }
                 let id = self.comms.len();
                 self.comms.push(CommTask {
                     job,
@@ -1257,7 +1307,16 @@ impl<'a> Engine<'a> {
                 debug_assert_eq!(self.active_pos.len(), self.comms.len());
                 self.active_comms.push(id);
                 self.jobs[job].comm_pending = false;
-                self.log(t, || format!("comm-start job{job} k={}", pre + 1));
+                emit(
+                    &mut *self.observers,
+                    SimEvent::CommAdmitted { t, job, comm: id, links: &links, contention: pre + 1 },
+                );
+                for &l in &links {
+                    emit(
+                        &mut *self.observers,
+                        SimEvent::ContentionChanged { t, link: l, level: self.per_link[l].len() },
+                    );
+                }
                 // Price the new task; under Dynamic repricing also refresh
                 // everyone sharing its links.
                 self.repredict(t, id);
@@ -1297,7 +1356,13 @@ impl<'a> Engine<'a> {
         for &l in &links {
             self.per_link[l].retain(|&c| c != id);
         }
-        self.log(t, || format!("comm-done job{job}"));
+        emit(&mut *self.observers, SimEvent::CommFinished { t, job, comm: id, links: &links });
+        for &l in &links {
+            emit(
+                &mut *self.observers,
+                SimEvent::ContentionChanged { t, link: l, level: self.per_link[l].len() },
+            );
+        }
         self.refresh_links(t, &links);
         self.iteration_complete(t, job, policy);
         self.try_admit(t, policy);
@@ -1307,45 +1372,4 @@ impl<'a> Engine<'a> {
         }
     }
 
-    // -- results --------------------------------------------------------------
-
-    fn finish(mut self) -> SimResult {
-        // Macro-event reconciliation appends synthesised log entries after
-        // later live ones; restore chronological order so log consumers
-        // see the same sequence the event-exact engine writes. The sort
-        // is stable, so an already-ordered (event-exact) log — including
-        // its same-timestamp processing order — is untouched.
-        self.events.sort_by(|a, b| a.t.total_cmp(&b.t));
-        let mut jct = vec![f64::NAN; self.jobs.len()];
-        let mut finish = vec![f64::NAN; self.jobs.len()];
-        let mut queue_wait = vec![f64::NAN; self.jobs.len()];
-        let mut makespan: f64 = 0.0;
-        for (i, j) in self.jobs.iter().enumerate() {
-            if let Some(f) = j.finished_at {
-                jct[i] = f - j.spec.arrival;
-                finish[i] = f;
-                makespan = makespan.max(f);
-            }
-            if let Some(p) = j.placed_at {
-                queue_wait[i] = p - j.spec.arrival;
-            }
-        }
-        SimResult {
-            jct,
-            finish,
-            queue_wait,
-            gpu_busy: self.gpus.iter().map(|g| g.busy_accum).collect(),
-            gpu_alloc_window: self
-                .gpus
-                .iter()
-                .map(|g| (g.last_release - g.first_alloc.unwrap_or(0.0)).max(0.0))
-                .collect(),
-            makespan,
-            n_events: self.n_events,
-            contended_admissions: self.contended_admissions,
-            clean_admissions: self.clean_admissions,
-            max_contention: self.max_contention,
-            events: self.events,
-        }
-    }
 }

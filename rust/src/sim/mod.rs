@@ -40,9 +40,27 @@
 //! that read only the links of the task under decision — true of every
 //! registry policy.
 
-mod engine;
+//! Output layer ([`observe`]): the engine emits a stream of typed
+//! [`SimEvent`]s to a composable set of [`SimObserver`]s
+//! ([`simulate_observed`]); [`simulate`] is a thin facade that attaches
+//! [`MetricsObserver`] (and [`LegacyLog`] iff `log_events`) and
+//! assembles the classic [`SimResult`] from them. Built-in sinks:
+//! [`JsonlSink`] (constant-memory JSONL streaming), [`TimelineObserver`]
+//! (per-GPU Gantt rows) and [`ContentionProfiler`] (per-link
+//! time-at-contention-level histograms). SPI notes — hook order,
+//! coalescing interaction, consumer guidance — in docs/EXPERIMENTS.md
+//! §Observers.
 
-pub use engine::{simulate, EventLog, JobPriority, Repricing, SimConfig, SimResult};
+mod engine;
+pub mod observe;
+
+pub use engine::{
+    simulate, simulate_observed, EventLog, JobPriority, Repricing, SimConfig, SimResult,
+};
+pub use observe::{
+    ContentionProfiler, JsonlSink, LegacyLog, MetricsObserver, RunStats, SimEvent, SimObserver,
+    TaskPhase, TimelineObserver, TimelineSpan,
+};
 
 #[cfg(test)]
 mod tests;

@@ -1,0 +1,678 @@
+//! Typed event stream + observer/sink API — the engine's output layer.
+//!
+//! The engine no longer accumulates a monolithic result: it *emits* a
+//! stream of typed [`SimEvent`]s to a composable set of [`SimObserver`]s
+//! (`sim::simulate_observed`), and the classic [`SimResult`] is a
+//! compatibility facade assembled from [`MetricsObserver`] by the thin
+//! [`simulate`](super::simulate) wrapper. That buys two things at once:
+//! bounded-memory million-job runs (no per-event strings unless a
+//! [`LegacyLog`] is attached), and stepwise cluster/network signals —
+//! contention levels over time, per-GPU timelines — that observation-
+//! driven schedulers (RL contention schedulers, placement-sensitive
+//! schedulers à la Dally) consume but a post-hoc summary cannot recover.
+//!
+//! Built-in observers:
+//!
+//! * [`MetricsObserver`] — rebuilds every `SimResult` field incrementally
+//!   from the stream, replaying the engine's own float-operation order so
+//!   the facade is *bit-identical* to the pre-observer engine
+//!   (property-tested in `sim::tests`).
+//! * [`LegacyLog`] — reproduces the old `SimResult::events` strings
+//!   byte-for-byte; attach only when the formatted log is wanted (string
+//!   formatting is this observer's whole cost).
+//! * [`JsonlSink`] — streams each event as one compact JSON line to any
+//!   `io::Write` with constant memory.
+//! * [`TimelineObserver`] — per-GPU Gantt rows (job allocation spans).
+//! * [`ContentionProfiler`] — per-link time-at-contention-level
+//!   histograms for paper-style figures.
+//!
+//! Hook order, the coalescing interaction (reconciliation can emit
+//! batches stamped with past timestamps) and consumer guidance are
+//! documented in docs/EXPERIMENTS.md §Observers.
+
+use std::io::{self, Write};
+
+use crate::cluster::GpuId;
+use crate::net::LinkId;
+use crate::trace::JobSpec;
+use crate::util::json::Json;
+
+use super::engine::{iter_bounds, EventLog, SimConfig, SimResult};
+
+/// Which half of an iteration a compute task runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskPhase {
+    Fwd,
+    Bwd,
+}
+
+impl TaskPhase {
+    /// Stable serialized spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskPhase::Fwd => "fwd",
+            TaskPhase::Bwd => "bwd",
+        }
+    }
+}
+
+/// One typed engine event. Borrowed slices point into engine state and
+/// are only valid for the duration of the `on_event` call — observers
+/// that keep them copy (`to_vec`) what they need.
+///
+/// Events are emitted in engine-processing order. With coalescing on,
+/// macro-event reconciliation emits batches whose timestamps lie in the
+/// past (`IterationsCoalesced`, plus rebuilt `ComputeStarted` /
+/// `CommAdmitted` events); consumers that need a strictly time-ordered
+/// stream sort by [`SimEvent::t`] or run with `coalescing: false`.
+#[derive(Clone, Copy, Debug)]
+pub enum SimEvent<'a> {
+    /// A job entered the placement queue.
+    JobArrived { t: f64, job: usize },
+    /// A job was committed to `gpus`, crossing `links` when it
+    /// communicates (`multi_server`).
+    JobPlaced {
+        t: f64,
+        job: usize,
+        gpus: &'a [GpuId],
+        links: &'a [LinkId],
+        multi_server: bool,
+    },
+    /// A job completed its final iteration; memory and GPUs are released.
+    JobFinished { t: f64, job: usize },
+    /// A forward/backward task started on `gpu` and will run for `dur`.
+    ComputeStarted { t: f64, gpu: GpuId, job: usize, phase: TaskPhase, dur: f64 },
+    /// An All-Reduce was admitted onto `links` at effective contention
+    /// level `contention` (the Eq (5) k it is priced at; 1 = clean).
+    CommAdmitted {
+        t: f64,
+        job: usize,
+        comm: usize,
+        links: &'a [LinkId],
+        contention: usize,
+    },
+    /// An All-Reduce drained completely and left its links.
+    CommFinished { t: f64, job: usize, comm: usize, links: &'a [LinkId] },
+    /// A link's active-transfer count changed to `level`.
+    ContentionChanged { t: f64, link: LinkId, level: usize },
+    /// The engine replaced a steady job's remaining `iters` iterations
+    /// with one macro-event completing at `end_t`.
+    FastForwardApplied { t: f64, job: usize, iters: u64, end_t: f64 },
+    /// A macro-event was dissolved by an interaction at `t`; the covered
+    /// iterations arrive as `IterationsCoalesced`.
+    FastForwardDissolved { t: f64, job: usize },
+    /// Batched side-effects of `n` coalesced steady-state iterations
+    /// spanning `[start_t, end_t]`. Carries the exact per-iteration
+    /// constants so observers can replay the event-exact engine's float
+    /// chains (busy time, synthesized comm lifecycle) bit-for-bit.
+    IterationsCoalesced {
+        job: usize,
+        gpus: &'a [GpuId],
+        links: &'a [LinkId],
+        n: u64,
+        start_t: f64,
+        end_t: f64,
+        t_fwd: f64,
+        t_bwd: f64,
+        multi_server: bool,
+        lat: f64,
+        per_byte: f64,
+        msg_bytes: f64,
+    },
+}
+
+impl<'a> SimEvent<'a> {
+    /// Event timestamp (coalesced batches report their start).
+    pub fn t(&self) -> f64 {
+        match *self {
+            SimEvent::JobArrived { t, .. }
+            | SimEvent::JobPlaced { t, .. }
+            | SimEvent::JobFinished { t, .. }
+            | SimEvent::ComputeStarted { t, .. }
+            | SimEvent::CommAdmitted { t, .. }
+            | SimEvent::CommFinished { t, .. }
+            | SimEvent::ContentionChanged { t, .. }
+            | SimEvent::FastForwardApplied { t, .. }
+            | SimEvent::FastForwardDissolved { t, .. } => t,
+            SimEvent::IterationsCoalesced { start_t, .. } => start_t,
+        }
+    }
+
+    /// Stable kebab-case tag used by serialized streams.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SimEvent::JobArrived { .. } => "job-arrived",
+            SimEvent::JobPlaced { .. } => "job-placed",
+            SimEvent::JobFinished { .. } => "job-finished",
+            SimEvent::ComputeStarted { .. } => "compute-started",
+            SimEvent::CommAdmitted { .. } => "comm-admitted",
+            SimEvent::CommFinished { .. } => "comm-finished",
+            SimEvent::ContentionChanged { .. } => "contention-changed",
+            SimEvent::FastForwardApplied { .. } => "fast-forward-applied",
+            SimEvent::FastForwardDissolved { .. } => "fast-forward-dissolved",
+            SimEvent::IterationsCoalesced { .. } => "iterations-coalesced",
+        }
+    }
+
+    /// Compact JSON form (one [`JsonlSink`] line).
+    pub fn to_json(&self) -> Json {
+        fn ids(xs: &[usize]) -> Json {
+            Json::Arr(xs.iter().map(|&x| Json::from(x)).collect())
+        }
+        let v = Json::obj().set("t", self.t()).set("ev", self.kind());
+        match *self {
+            SimEvent::JobArrived { job, .. } | SimEvent::JobFinished { job, .. } => {
+                v.set("job", job)
+            }
+            SimEvent::JobPlaced { job, gpus, links, multi_server, .. } => v
+                .set("job", job)
+                .set("gpus", ids(gpus))
+                .set("links", ids(links))
+                .set("multi_server", multi_server),
+            SimEvent::ComputeStarted { gpu, job, phase, dur, .. } => {
+                v.set("gpu", gpu).set("job", job).set("phase", phase.name()).set("dur", dur)
+            }
+            SimEvent::CommAdmitted { job, comm, links, contention, .. } => v
+                .set("job", job)
+                .set("comm", comm)
+                .set("links", ids(links))
+                .set("contention", contention),
+            SimEvent::CommFinished { job, comm, links, .. } => {
+                v.set("job", job).set("comm", comm).set("links", ids(links))
+            }
+            SimEvent::ContentionChanged { link, level, .. } => {
+                v.set("link", link).set("level", level)
+            }
+            SimEvent::FastForwardApplied { job, iters, end_t, .. } => {
+                v.set("job", job).set("iters", iters).set("end_t", end_t)
+            }
+            SimEvent::FastForwardDissolved { job, .. } => v.set("job", job),
+            SimEvent::IterationsCoalesced {
+                job,
+                gpus,
+                links,
+                n,
+                end_t,
+                t_fwd,
+                t_bwd,
+                multi_server,
+                lat,
+                per_byte,
+                msg_bytes,
+                ..
+            } => v
+                .set("job", job)
+                .set("gpus", ids(gpus))
+                .set("links", ids(links))
+                .set("n", n)
+                .set("end_t", end_t)
+                // The per-iteration replay constants: a stream consumer
+                // can reconstruct every compute window and (for
+                // multi-server jobs) every transfer window inside the
+                // coalesced span from these alone.
+                .set("t_fwd", t_fwd)
+                .set("t_bwd", t_bwd)
+                .set("multi_server", multi_server)
+                .set("lat", lat)
+                .set("per_byte", per_byte)
+                .set("msg_bytes", msg_bytes),
+        }
+    }
+}
+
+/// End-of-run engine counters handed to `on_end`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    /// Heap events the engine processed.
+    pub n_events: u64,
+    /// Timestamp of the last processed event — the end of simulated
+    /// time. Lets observers close out open intervals (e.g. the
+    /// [`ContentionProfiler`]'s final idle stretch).
+    pub t_end: f64,
+}
+
+/// Lifecycle hooks for simulation observers. `on_start` fires once
+/// before the first event (sizing information), `on_event` for every
+/// emission, `on_end` once after the event loop drains.
+pub trait SimObserver {
+    fn on_start(&mut self, _cfg: &SimConfig, _jobs: &[JobSpec]) {}
+    fn on_event(&mut self, ev: &SimEvent<'_>);
+    fn on_end(&mut self, _stats: &RunStats) {}
+}
+
+// ---------------------------------------------------------------------------
+
+/// Rebuilds every [`SimResult`] field incrementally from the event
+/// stream; [`simulate`](super::simulate) is a thin facade over this
+/// observer. Every float operation replays the engine's own emission
+/// order, so the assembled result is bit-identical to the pre-observer
+/// engine's (property-tested in `sim::tests`).
+#[derive(Default)]
+pub struct MetricsObserver {
+    arrival: Vec<f64>,
+    jct: Vec<f64>,
+    finish: Vec<f64>,
+    queue_wait: Vec<f64>,
+    job_gpus: Vec<Vec<GpuId>>,
+    gpu_busy: Vec<f64>,
+    first_alloc: Vec<Option<f64>>,
+    last_release: Vec<f64>,
+    makespan: f64,
+    n_events: u64,
+    contended_admissions: u64,
+    clean_admissions: u64,
+    max_contention: usize,
+}
+
+impl MetricsObserver {
+    pub fn new() -> MetricsObserver {
+        MetricsObserver::default()
+    }
+
+    /// Heap events the engine processed (available after `on_end`).
+    pub fn n_events(&self) -> u64 {
+        self.n_events
+    }
+
+    /// Assemble the compatibility [`SimResult`]. `events` is empty —
+    /// attach a [`LegacyLog`] alongside when the formatted log is wanted.
+    pub fn into_result(self) -> SimResult {
+        SimResult {
+            jct: self.jct,
+            finish: self.finish,
+            queue_wait: self.queue_wait,
+            gpu_busy: self.gpu_busy,
+            gpu_alloc_window: self
+                .first_alloc
+                .iter()
+                .zip(&self.last_release)
+                .map(|(fa, lr)| (lr - fa.unwrap_or(0.0)).max(0.0))
+                .collect(),
+            makespan: self.makespan,
+            n_events: self.n_events,
+            contended_admissions: self.contended_admissions,
+            clean_admissions: self.clean_admissions,
+            max_contention: self.max_contention,
+            events: Vec::new(),
+        }
+    }
+}
+
+impl SimObserver for MetricsObserver {
+    fn on_start(&mut self, cfg: &SimConfig, jobs: &[JobSpec]) {
+        let n_gpus = cfg.cluster.n_gpus();
+        self.arrival = jobs.iter().map(|j| j.arrival).collect();
+        self.jct = vec![f64::NAN; jobs.len()];
+        self.finish = vec![f64::NAN; jobs.len()];
+        self.queue_wait = vec![f64::NAN; jobs.len()];
+        self.job_gpus = vec![Vec::new(); jobs.len()];
+        self.gpu_busy = vec![0.0; n_gpus];
+        self.first_alloc = vec![None; n_gpus];
+        self.last_release = vec![0.0; n_gpus];
+        self.makespan = 0.0;
+        self.n_events = 0;
+        self.contended_admissions = 0;
+        self.clean_admissions = 0;
+        self.max_contention = 0;
+    }
+
+    fn on_event(&mut self, ev: &SimEvent<'_>) {
+        match *ev {
+            SimEvent::JobPlaced { t, job, gpus, .. } => {
+                self.queue_wait[job] = t - self.arrival[job];
+                self.job_gpus[job] = gpus.to_vec();
+                for &g in gpus {
+                    self.first_alloc[g].get_or_insert(t);
+                }
+            }
+            SimEvent::JobFinished { t, job } => {
+                self.finish[job] = t;
+                self.jct[job] = t - self.arrival[job];
+                self.makespan = self.makespan.max(t);
+                for &g in &self.job_gpus[job] {
+                    self.last_release[g] = self.last_release[g].max(t);
+                }
+            }
+            SimEvent::ComputeStarted { gpu, dur, .. } => {
+                self.gpu_busy[gpu] += dur;
+            }
+            SimEvent::CommAdmitted { contention, .. } => {
+                if contention <= 1 {
+                    self.clean_admissions += 1;
+                } else {
+                    self.contended_admissions += 1;
+                }
+                // The admission-time k bounds every later repricing of any
+                // affected task (occupancy peaks are realized at
+                // admissions), so tracking it here reproduces the
+                // engine's old repredict-time max exactly.
+                self.max_contention = self.max_contention.max(contention);
+            }
+            SimEvent::IterationsCoalesced { gpus, n, t_fwd, t_bwd, multi_server, .. } => {
+                // Replay the exact per-iteration addition chain — not a
+                // reassociated `n * (t_fwd + t_bwd)` — bit-identity with
+                // the event-exact engine is the contract.
+                for &g in gpus {
+                    let busy = &mut self.gpu_busy[g];
+                    for _ in 0..n {
+                        *busy += t_fwd;
+                        *busy += t_bwd;
+                    }
+                }
+                if multi_server {
+                    // Every coalesced All-Reduce started on idle links.
+                    self.clean_admissions += n;
+                    self.max_contention = self.max_contention.max(1);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_end(&mut self, stats: &RunStats) {
+        self.n_events = stats.n_events;
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Reproduces the pre-observer `SimResult::events` strings byte-for-byte.
+/// Attach only when the formatted log is actually wanted — the string
+/// formatting this observer performs is exactly the hot-path cost the
+/// event redesign removed from the engine.
+#[derive(Default)]
+pub struct LegacyLog {
+    events: Vec<EventLog>,
+}
+
+impl LegacyLog {
+    pub fn new() -> LegacyLog {
+        LegacyLog::default()
+    }
+
+    /// The chronologically sorted log (the engine's old end-of-run sort:
+    /// stable, so same-timestamp emission order is preserved).
+    pub fn into_events(mut self) -> Vec<EventLog> {
+        self.events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        self.events
+    }
+
+    fn push(&mut self, t: f64, what: String) {
+        self.events.push(EventLog { t, what });
+    }
+}
+
+impl SimObserver for LegacyLog {
+    fn on_event(&mut self, ev: &SimEvent<'_>) {
+        match *ev {
+            SimEvent::JobArrived { t, job } => self.push(t, format!("arrive job{job}")),
+            SimEvent::JobPlaced { t, job, gpus, .. } => {
+                self.push(t, format!("place job{job} gpus={gpus:?}"));
+            }
+            SimEvent::JobFinished { t, job } => self.push(t, format!("finish job{job}")),
+            SimEvent::CommAdmitted { t, job, contention, .. } => {
+                self.push(t, format!("comm-start job{job} k={contention}"));
+            }
+            SimEvent::CommFinished { t, job, .. } => {
+                self.push(t, format!("comm-done job{job}"));
+            }
+            SimEvent::IterationsCoalesced {
+                job,
+                n,
+                start_t,
+                t_fwd,
+                t_bwd,
+                multi_server,
+                lat,
+                per_byte,
+                msg_bytes,
+                ..
+            } => {
+                if !multi_server {
+                    return;
+                }
+                // Synthesise the comm lifecycle exactly as the
+                // event-exact engine would have logged it (same float
+                // chain as the engine's old `apply_iterations`).
+                let drain = msg_bytes * per_byte;
+                let mut s = start_t;
+                for _ in 0..n {
+                    let (_, t2, c) = iter_bounds(s, t_fwd, t_bwd, true, lat, drain);
+                    self.push(t2, format!("comm-start job{job} k=1"));
+                    self.push(c, format!("comm-done job{job}"));
+                    s = c;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Streams every typed event as one compact JSON line to any
+/// [`io::Write`] — constant memory regardless of run length. I/O errors
+/// are deferred: the first one stops writing and surfaces from
+/// [`JsonlSink::finish`].
+pub struct JsonlSink<W: Write> {
+    w: W,
+    written: u64,
+    error: Option<io::Error>,
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w, written: 0, error: None }
+    }
+
+    /// Events written so far.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Flush, surface any deferred I/O error, and return the writer.
+    pub fn finish(mut self) -> io::Result<W> {
+        if let Some(e) = self.error.take() {
+            return Err(e);
+        }
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+impl<W: Write> SimObserver for JsonlSink<W> {
+    fn on_event(&mut self, ev: &SimEvent<'_>) {
+        if self.error.is_some() {
+            return;
+        }
+        let line = ev.to_json().to_string();
+        let res = self.w.write_all(line.as_bytes()).and_then(|()| self.w.write_all(b"\n"));
+        match res {
+            Ok(()) => self.written += 1,
+            Err(e) => self.error = Some(e),
+        }
+    }
+
+    fn on_end(&mut self, _stats: &RunStats) {
+        if let Err(e) = self.w.flush() {
+            self.error.get_or_insert(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// One per-GPU Gantt row: `job` held `gpu` from `start` to `end`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimelineSpan {
+    pub gpu: GpuId,
+    pub job: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Per-GPU Gantt rows built from placement/finish events (allocation
+/// spans, exact regardless of coalescing). Jobs still running when the
+/// event loop drains yield no span.
+#[derive(Default)]
+pub struct TimelineObserver {
+    placed: Vec<Option<(f64, Vec<GpuId>)>>,
+    spans: Vec<TimelineSpan>,
+}
+
+impl TimelineObserver {
+    pub fn new() -> TimelineObserver {
+        TimelineObserver::default()
+    }
+
+    pub fn spans(&self) -> &[TimelineSpan] {
+        &self.spans
+    }
+
+    /// Gantt rows sorted by (gpu, start) — the figure-ready form.
+    pub fn to_json(&self) -> Json {
+        let mut spans = self.spans.clone();
+        spans.sort_by(|a, b| a.gpu.cmp(&b.gpu).then(a.start.total_cmp(&b.start)));
+        Json::Arr(
+            spans
+                .iter()
+                .map(|s| {
+                    Json::obj()
+                        .set("gpu", s.gpu)
+                        .set("job", s.job)
+                        .set("start", s.start)
+                        .set("end", s.end)
+                })
+                .collect(),
+        )
+    }
+}
+
+impl SimObserver for TimelineObserver {
+    fn on_start(&mut self, _cfg: &SimConfig, jobs: &[JobSpec]) {
+        self.placed = vec![None; jobs.len()];
+        self.spans.clear();
+    }
+
+    fn on_event(&mut self, ev: &SimEvent<'_>) {
+        match *ev {
+            SimEvent::JobPlaced { t, job, gpus, .. } => {
+                self.placed[job] = Some((t, gpus.to_vec()));
+            }
+            SimEvent::JobFinished { t, job } => {
+                if let Some((start, gpus)) = self.placed[job].take() {
+                    for gpu in gpus {
+                        self.spans.push(TimelineSpan { gpu, job, start, end: t });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Per-link time-at-contention-level histogram: how many seconds each
+/// fabric link spent with 0, 1, 2, ... active transfers. Each observed
+/// link's open interval is closed out to the run's end time at `on_end`,
+/// so with `coalescing: false` a link's level histogram sums to exactly
+/// the simulated span. Coalesced iterations attribute their
+/// per-iteration transfer windows to level 1 directly (no level
+/// transitions are synthesized), so level-0 time is approximate under
+/// coalescing; run with `coalescing: false` for an exact profile
+/// (docs/EXPERIMENTS.md §Observers).
+#[derive(Default)]
+pub struct ContentionProfiler {
+    level: Vec<usize>,
+    last_t: Vec<f64>,
+    seconds: Vec<Vec<f64>>,
+}
+
+impl ContentionProfiler {
+    pub fn new() -> ContentionProfiler {
+        ContentionProfiler::default()
+    }
+
+    /// Seconds `link` spent at exactly `level` concurrent transfers.
+    pub fn seconds_at(&self, link: LinkId, level: usize) -> f64 {
+        self.seconds.get(link).and_then(|row| row.get(level)).copied().unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.seconds
+                .iter()
+                .enumerate()
+                .map(|(l, row)| {
+                    Json::obj().set("link", l).set(
+                        "seconds_at_level",
+                        Json::Arr(row.iter().map(|&s| Json::from(s)).collect()),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    fn grow(&mut self, link: LinkId) {
+        if self.level.len() <= link {
+            self.level.resize(link + 1, 0);
+            self.last_t.resize(link + 1, 0.0);
+            self.seconds.resize(link + 1, Vec::new());
+        }
+    }
+
+    fn add(&mut self, link: LinkId, level: usize, secs: f64) {
+        let row = &mut self.seconds[link];
+        if row.len() <= level {
+            row.resize(level + 1, 0.0);
+        }
+        row[level] += secs;
+    }
+}
+
+impl SimObserver for ContentionProfiler {
+    fn on_event(&mut self, ev: &SimEvent<'_>) {
+        match *ev {
+            SimEvent::ContentionChanged { t, link, level } => {
+                self.grow(link);
+                // Reconciliation can emit changes stamped in the past;
+                // clamp so a rebuilt transfer cannot produce negative
+                // dwell time.
+                let dt = (t - self.last_t[link]).max(0.0);
+                let cur = self.level[link];
+                self.add(link, cur, dt);
+                self.level[link] = level;
+                self.last_t[link] = t.max(self.last_t[link]);
+            }
+            SimEvent::IterationsCoalesced {
+                links, n, multi_server, lat, per_byte, msg_bytes, ..
+            } => {
+                if !multi_server {
+                    return;
+                }
+                // Each coalesced iteration occupied the links for one
+                // uncontended transfer window.
+                let occupied = n as f64 * (lat + msg_bytes * per_byte);
+                for &l in links {
+                    self.grow(l);
+                    self.add(l, 1, occupied);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_end(&mut self, stats: &RunStats) {
+        // Close every observed link's open interval at the end of
+        // simulated time — without this the histogram drops the tail
+        // after each link's last membership change (usually idle time)
+        // and per-link totals would not sum to the run length.
+        for link in 0..self.level.len() {
+            let dt = (stats.t_end - self.last_t[link]).max(0.0);
+            let cur = self.level[link];
+            self.add(link, cur, dt);
+            self.last_t[link] = stats.t_end.max(self.last_t[link]);
+        }
+    }
+}
