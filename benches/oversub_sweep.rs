@@ -42,6 +42,7 @@ fn main() {
         report.record_events(&format!("{} {}", r.scenario.name, r.scenario.label()), r.n_events);
     }
     report.record("sweep total", records.iter().map(|r| r.n_events).sum(), wall);
+    print!("{}", report.delta_vs_committed());
     match report.write() {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write bench report: {e}"),

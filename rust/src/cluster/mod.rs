@@ -201,6 +201,72 @@ impl ClusterState {
     }
 }
 
+/// Incrementally maintained free-GPU counts per memory threshold — the
+/// simulator's capacity gate for placement. For every distinct per-GPU
+/// memory demand in a workload, `counts[i]` tracks how many GPUs
+/// currently satisfy `free_mem >= thresholds[i]` (exactly the
+/// [`ClusterState::fits`] predicate placers filter on), updated O(log T +
+/// crossings) per GPU allocation/release instead of re-scanned O(GPUs)
+/// per placer call. Every contract-abiding placer returns `None` iff
+/// fewer feasible GPUs than requested exist, so `feasible(mem) <
+/// n_gpus` proves a placement attempt hopeless without invoking it.
+#[derive(Clone, Debug)]
+pub struct FreeGpuIndex {
+    /// Distinct memory demands, sorted ascending (all finite).
+    thresholds: Vec<f64>,
+    /// `counts[i]` = number of GPUs with `free_mem >= thresholds[i]`.
+    counts: Vec<usize>,
+}
+
+impl FreeGpuIndex {
+    /// Build over `state` for the given memory demands (deduplicated
+    /// here; non-finite demands are dropped — nothing can fit them).
+    pub fn new(mut thresholds: Vec<f64>, state: &ClusterState) -> FreeGpuIndex {
+        thresholds.retain(|t| t.is_finite());
+        thresholds.sort_by(f64::total_cmp);
+        thresholds.dedup();
+        let counts = thresholds
+            .iter()
+            .map(|&th| (0..state.spec.n_gpus()).filter(|&g| state.free_mem(g) >= th).count())
+            .collect();
+        FreeGpuIndex { thresholds, counts }
+    }
+
+    /// Number of GPUs currently able to host `mem_bytes`. Demands not
+    /// registered at construction report `usize::MAX` ("unknown — do not
+    /// gate"), so a caller's `feasible < n` test stays conservative.
+    pub fn feasible(&self, mem_bytes: f64) -> usize {
+        match self.thresholds.binary_search_by(|t| t.total_cmp(&mem_bytes)) {
+            Ok(i) => self.counts[i],
+            Err(_) => usize::MAX,
+        }
+    }
+
+    /// One GPU's free memory moved `before` → `after`: adjust the count
+    /// of every threshold the move crossed. A GPU counts toward
+    /// threshold `t` iff `free >= t`, so a decrease loses the thresholds
+    /// in `(after, before]` and an increase gains `(before, after]`.
+    pub fn record(&mut self, before: f64, after: f64) {
+        match after.total_cmp(&before) {
+            std::cmp::Ordering::Less => {
+                let lo = self.thresholds.partition_point(|&t| t <= after);
+                let hi = self.thresholds.partition_point(|&t| t <= before);
+                for c in &mut self.counts[lo..hi] {
+                    *c -= 1;
+                }
+            }
+            std::cmp::Ordering::Greater => {
+                let lo = self.thresholds.partition_point(|&t| t <= before);
+                let hi = self.thresholds.partition_point(|&t| t <= after);
+                for c in &mut self.counts[lo..hi] {
+                    *c += 1;
+                }
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +363,75 @@ mod tests {
         let spec = ClusterSpec::paper_64gpu();
         assert_eq!(spec.n_gpus(), 64);
         assert_eq!(spec.n_servers, 16);
+    }
+
+    #[test]
+    fn free_gpu_index_tracks_fits_exactly() {
+        let spec = ClusterSpec::tiny(2, 2); // 4 GPUs, 16 GB each
+        let mut st = ClusterState::new(spec);
+        let small = 3e9;
+        let big = 9e9;
+        let mut idx = FreeGpuIndex::new(vec![small, big, big, small], &st);
+        let check = |idx: &FreeGpuIndex, st: &ClusterState| {
+            for &mem in &[small, big] {
+                let want = (0..st.spec.n_gpus()).filter(|&g| st.fits(g, mem)).count();
+                assert_eq!(idx.feasible(mem), want, "mem={mem}");
+            }
+        };
+        check(&idx, &st);
+        // Allocate the big job on GPUs 0,1: they keep fitting small but
+        // not big.
+        let before: Vec<f64> = (0..2).map(|g| st.free_mem(g)).collect();
+        st.allocate(&[0, 1], big, 1.0);
+        for (i, g) in (0..2).enumerate() {
+            idx.record(before[i], st.free_mem(g));
+        }
+        assert_eq!(idx.feasible(big), 2);
+        assert_eq!(idx.feasible(small), 4);
+        check(&idx, &st);
+        // Stack small jobs on GPU 2 until nothing fits there.
+        for _ in 0..5 {
+            let b = st.free_mem(2);
+            st.allocate(&[2], small, 1.0);
+            idx.record(b, st.free_mem(2));
+        }
+        assert_eq!(idx.feasible(small), 3);
+        check(&idx, &st);
+        // Release restores the counts.
+        let b = st.free_mem(0);
+        st.release(&[0], big, 0.0);
+        idx.record(b, st.free_mem(0));
+        assert_eq!(idx.feasible(big), 2); // GPUs 0 and 3
+        check(&idx, &st);
+    }
+
+    #[test]
+    fn free_gpu_index_unregistered_demand_never_gates() {
+        let st = ClusterState::new(ClusterSpec::tiny(1, 1));
+        let idx = FreeGpuIndex::new(vec![1e9], &st);
+        assert_eq!(idx.feasible(2e9), usize::MAX);
+        assert!(FreeGpuIndex::new(vec![f64::NAN, 1e9], &st).feasible(1e9) > 0);
+    }
+
+    #[test]
+    fn free_gpu_index_boundary_is_inclusive() {
+        // `fits` is `free >= mem`: a GPU whose free memory lands exactly
+        // on a threshold still counts, and a record() moving free exactly
+        // onto the threshold must not lose it.
+        let spec = ClusterSpec::tiny(1, 1);
+        let mut st = ClusterState::new(spec);
+        let half = st.free_mem(0) / 2.0;
+        let mut idx = FreeGpuIndex::new(vec![half], &st);
+        assert_eq!(idx.feasible(half), 1);
+        let before = st.free_mem(0);
+        st.allocate(&[0], half, 1.0);
+        idx.record(before, st.free_mem(0));
+        // free == half exactly: still feasible.
+        assert_eq!(st.free_mem(0), half);
+        assert_eq!(idx.feasible(half), 1);
+        let before = st.free_mem(0);
+        st.allocate(&[0], half, 1.0);
+        idx.record(before, st.free_mem(0));
+        assert_eq!(idx.feasible(half), 0);
     }
 }

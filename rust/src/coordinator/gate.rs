@@ -88,20 +88,19 @@ impl NetGate {
     pub fn acquire(&self, seq: usize, _job: usize, servers: &[usize], msg_bytes: f64) -> GateToken {
         let mut st = self.state.lock().unwrap();
         loop {
-            let view: Vec<Vec<(usize, f64)>> = st
-                .per_link
-                .iter()
-                .map(|ids| {
-                    ids.iter()
-                        .map(|&s| {
-                            let f = st.flights.iter().find(|f| f.seq == s).unwrap();
-                            (s, self.remaining(f))
-                        })
-                        .collect()
-                })
-                .collect();
-            let net = NetView { per_link: &view };
-            if self.policy.admit(msg_bytes, servers, &net) == Admission::Start {
+            // Lazy view over the live per-link lists: a flight's
+            // remaining bytes are estimated only when the policy inspects
+            // a link carrying it (the previous full per-loop snapshot
+            // materialized every flight on every link per wakeup).
+            let admit = {
+                let remaining = |seq: usize| {
+                    let f = st.flights.iter().find(|f| f.seq == seq).unwrap();
+                    self.remaining(f)
+                };
+                let net = NetView::new(&st.per_link, &remaining);
+                self.policy.admit(msg_bytes, servers, &net)
+            };
+            if admit == Admission::Start {
                 let k = servers
                     .iter()
                     .map(|&s| st.per_link[s].len())

@@ -274,6 +274,22 @@ impl Topology {
     }
 }
 
+/// Do two sorted link sets share a link? ([`Topology::links_between`]
+/// returns sorted ids — NICs ascending, then uplinks above them — so the
+/// simulator's disjointness checks are a linear merge scan, not a
+/// quadratic membership test.)
+pub fn links_intersect(a: &[LinkId], b: &[LinkId]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => return true,
+        }
+    }
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -392,6 +408,20 @@ mod tests {
             TopologySpec::TwoTier { rack_size: 8, oversubscription: 2.0 }.rack_size(),
             8
         );
+    }
+
+    #[test]
+    fn links_intersect_merge_scan() {
+        assert!(links_intersect(&[0, 3, 7], &[1, 2, 3]));
+        assert!(!links_intersect(&[0, 4], &[1, 2, 3, 5]));
+        assert!(!links_intersect(&[], &[1, 2]));
+        assert!(!links_intersect(&[1, 2], &[]));
+        // links_between output stays sorted (NICs, then uplinks) — the
+        // precondition the merge scan depends on.
+        let spec = TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 };
+        let t = Topology::build(&cluster(4), &base(), &spec).unwrap();
+        let ls = t.links_between(&[1, 2]);
+        assert!(ls.windows(2).all(|w| w[0] < w[1]), "{ls:?}");
     }
 
     #[test]

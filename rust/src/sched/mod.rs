@@ -19,33 +19,137 @@ pub mod two_tasks;
 use crate::model::CommModel;
 use crate::net::LinkId;
 
-/// A snapshot of network state for admission decisions:
-/// per fabric link, the list of (comm task id, remaining message bytes).
+/// Resolver a [`NetView`] never invokes: views over an idle fabric (the
+/// engine's steadiness check) carry no tasks, so any residual request is
+/// a logic error worth a loud panic.
+fn unresolved(_id: usize) -> f64 {
+    panic!("NetView: remaining bytes requested from an occupancy-only view")
+}
+
+/// A *lazy* view of network state for admission decisions: per fabric
+/// link, the engine's live list of active comm-task ids, plus a resolver
+/// for a task's remaining message bytes — invoked only for tasks on the
+/// links a policy actually inspects. The engine used to materialize a
+/// full `Vec<Vec<(id, residual)>>` snapshot of every active transfer on
+/// every link once per admission pass (O(links × active) even when the
+/// policy looked at two NICs); this view reads the live per-link lists,
+/// which are maintained O(Δ) at admit/complete, and prices residuals on
+/// demand.
 pub struct NetView<'a> {
-    pub per_link: &'a [Vec<(usize, f64)>],
+    per_link: &'a [Vec<usize>],
+    remaining: &'a dyn Fn(usize) -> f64,
 }
 
 impl<'a> NetView<'a> {
+    pub fn new(per_link: &'a [Vec<usize>], remaining: &'a dyn Fn(usize) -> f64) -> NetView<'a> {
+        NetView { per_link, remaining }
+    }
+
+    /// View that can answer occupancy questions only (idle-fabric checks);
+    /// resolving a residual through it panics.
+    pub fn occupancy_only(per_link: &'a [Vec<usize>]) -> NetView<'a> {
+        NetView { per_link, remaining: &unresolved }
+    }
+
+    /// Number of fabric links the view covers.
+    pub fn n_links(&self) -> usize {
+        self.per_link.len()
+    }
+
+    /// Active comm-task ids on `link`.
+    pub fn link_tasks(&self, link: LinkId) -> &[usize] {
+        &self.per_link[link]
+    }
+
+    /// Remaining message bytes of active task `id` (resolved on demand).
+    pub fn remaining_of(&self, id: usize) -> f64 {
+        (self.remaining)(id)
+    }
+
+    /// Active-transfer count on `link`.
+    pub fn occupancy(&self, link: LinkId) -> usize {
+        self.per_link[link].len()
+    }
+
     /// Maximum count of active communication tasks over `links`
-    /// (Algorithm 2 lines 2–7), plus the union of those tasks. The union
-    /// is deduplicated by task id with a sort + dedup — O(n log n) over
-    /// the gathered entries, versus the O(n²) `iter().any` membership
-    /// scan per entry this replaced. Order is by task id (a task shared
-    /// by several links carries the same remaining-bytes value on each,
-    /// so which copy survives is immaterial).
+    /// (Algorithm 2 lines 2–7). Pure occupancy: no residual resolution,
+    /// no allocation — the whole cost of an SRSF(n) decision.
+    pub fn max_occupancy(&self, links: &[LinkId]) -> usize {
+        links.iter().map(|&l| self.per_link[l].len()).max().unwrap_or(0)
+    }
+
+    /// Largest remaining message among the tasks on `links` (0.0 when
+    /// idle). A task appearing on several links resolves to the same
+    /// value each time, so the max over raw entries equals the max over
+    /// the deduplicated union.
+    pub fn max_remaining(&self, links: &[LinkId]) -> f64 {
+        let mut m = 0.0f64;
+        for &l in links {
+            for &id in &self.per_link[l] {
+                m = m.max((self.remaining)(id));
+            }
+        }
+        m
+    }
+
+    /// Max occupancy plus the deduplicated (id, remaining) union over
+    /// `links` — the fully materialized form, kept for policies and
+    /// tests that want the whole task set. Residuals are resolved once
+    /// per *distinct* task (after the sort + dedup), so even this path
+    /// prices at most the tasks actually present on the inspected links.
     pub fn max_tasks(&self, links: &[LinkId]) -> (usize, Vec<(usize, f64)>) {
         let mut max = 0;
-        let mut old: Vec<(usize, f64)> = Vec::new();
+        let mut ids: Vec<usize> = Vec::new();
         for &s in links {
             let tasks = &self.per_link[s];
             if tasks.len() > max {
                 max = tasks.len();
             }
-            old.extend_from_slice(tasks);
+            ids.extend_from_slice(tasks);
         }
-        old.sort_unstable_by_key(|&(id, _)| id);
-        old.dedup_by_key(|&mut (id, _)| id);
+        ids.sort_unstable();
+        ids.dedup();
+        let old = ids.into_iter().map(|id| (id, (self.remaining)(id))).collect();
         (max, old)
+    }
+}
+
+/// Owned, precomputed network snapshot — the test/bench-friendly
+/// [`NetView`] backing, and the "materialized twin" the lazy-view
+/// equivalence property test compares engine admissions against.
+pub struct MaterializedNet {
+    ids: Vec<Vec<usize>>,
+    /// (task id, remaining bytes), sorted by id for binary-search lookup.
+    remaining: Vec<(usize, f64)>,
+}
+
+impl MaterializedNet {
+    /// Build from the classic per-link (id, remaining) tuple lists.
+    pub fn from_tuples(per_link: &[Vec<(usize, f64)>]) -> MaterializedNet {
+        let ids = per_link
+            .iter()
+            .map(|tasks| tasks.iter().map(|&(id, _)| id).collect())
+            .collect();
+        let mut remaining: Vec<(usize, f64)> =
+            per_link.iter().flatten().copied().collect();
+        remaining.sort_unstable_by_key(|&(id, _)| id);
+        remaining.dedup_by_key(|&mut (id, _)| id);
+        MaterializedNet { ids, remaining }
+    }
+
+    fn remaining_of(&self, id: usize) -> f64 {
+        let i = self
+            .remaining
+            .binary_search_by_key(&id, |&(id, _)| id)
+            .unwrap_or_else(|_| panic!("unknown comm task {id} in materialized view"));
+        self.remaining[i].1
+    }
+
+    /// Run `f` against a [`NetView`] over this snapshot.
+    pub fn with_view<R>(&self, f: impl FnOnce(&NetView<'_>) -> R) -> R {
+        let remaining = |id: usize| self.remaining_of(id);
+        let view = NetView::new(&self.ids, &remaining);
+        f(&view)
     }
 }
 
@@ -76,8 +180,8 @@ impl CommPolicy for SrsfCap {
     }
 
     fn admit(&self, _msg: f64, links: &[LinkId], net: &NetView) -> Admission {
-        let (max, _) = net.max_tasks(links);
-        if max < self.cap {
+        // Occupancy-only: an SRSF(n) decision never needs residuals.
+        if net.max_occupancy(links) < self.cap {
             Admission::Start
         } else {
             Admission::Wait
@@ -97,8 +201,9 @@ impl CommPolicy for AdaDual {
     }
 
     fn admit(&self, msg_bytes: f64, links: &[LinkId], net: &NetView) -> Admission {
-        let (max, old) = net.max_tasks(links);
-        match max {
+        // Occupancy decides the branch; residuals are resolved only in
+        // the one branch (max == 1) whose ratio test needs them.
+        match net.max_occupancy(links) {
             // Lines 8–10: idle servers — start immediately.
             0 => Admission::Start,
             // Lines 11–18: one existing task — Theorem 2 ratio test against
@@ -106,7 +211,7 @@ impl CommPolicy for AdaDual {
             // tasks across our links, test against the *largest*
             // remaining one (the most conservative pairing).
             1 => {
-                let m_old = old.iter().map(|&(_, m)| m).fold(0.0f64, f64::max);
+                let m_old = net.max_remaining(links);
                 if self.model.overlap_beneficial(msg_bytes, m_old) {
                     Admission::Start
                 } else {
@@ -126,15 +231,79 @@ pub fn srsf_cmp(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
     a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
 }
 
+/// The placement queue: jobs held in the `(priority key, id)` total order,
+/// maintained incrementally — an O(log n) binary-search insert per
+/// arrival (plus the `Vec::insert` memmove, a few hundred contiguous
+/// bytes even at 100k-job scale) instead of a full O(n log n) key-driven
+/// re-sort on every placement pass. Sound
+/// because queue keys are *static* per priority rule — SRSF's queued key
+/// is the job's total service (a pure function of its immutable spec,
+/// E_J = 0 before placement), FIFO's is its arrival time, and LAS's is 0
+/// (no service attained yet) — so the order can never drift between
+/// passes (the engine debug-asserts this invariant on every walk).
+#[derive(Default)]
+pub struct JobQueue {
+    /// Sorted ascending by `srsf_cmp` on `(key, job id)`.
+    entries: Vec<(f64, usize)>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert `job` with its (static) priority `key`, keeping the total
+    /// order: O(log n) binary search + the `Vec::insert` tail memmove.
+    /// Ids are unique, so the insertion point is unambiguous.
+    pub fn insert(&mut self, key: f64, job: usize) {
+        let pos = self
+            .entries
+            .partition_point(|&e| srsf_cmp(e, (key, job)) == std::cmp::Ordering::Less);
+        self.entries.insert(pos, (key, job));
+    }
+
+    /// The queue in priority order.
+    pub fn entries(&self) -> &[(f64, usize)] {
+        &self.entries
+    }
+
+    /// Take the whole queue out for a placement walk (the caller hands
+    /// the unplaced remainder back via [`JobQueue::restore`]).
+    pub fn take_all(&mut self) -> Vec<(f64, usize)> {
+        std::mem::take(&mut self.entries)
+    }
+
+    /// Put back the unplaced remainder of a [`JobQueue::take_all`] walk.
+    /// Walking in order and dropping placed entries preserves sortedness
+    /// (debug-asserted).
+    pub fn restore(&mut self, entries: Vec<(f64, usize)>) {
+        debug_assert!(self.entries.is_empty(), "restore over a non-empty queue");
+        debug_assert!(
+            entries.windows(2).all(|w| srsf_cmp(w[0], w[1]) == std::cmp::Ordering::Less),
+            "restored queue lost its sort order"
+        );
+        self.entries = entries;
+    }
+}
+
 // Policy construction by name lives in `scenario::registry` (the unified
 // algorithm registry shared by the CLI, scenario files and the live gate).
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::prop_check;
 
-    fn net(per_link: Vec<Vec<(usize, f64)>>) -> Vec<Vec<(usize, f64)>> {
-        per_link
+    fn net(per_link: Vec<Vec<(usize, f64)>>) -> MaterializedNet {
+        MaterializedNet::from_tuples(&per_link)
     }
 
     #[test]
@@ -142,10 +311,10 @@ mod tests {
         let p = SrsfCap { cap: 1 };
         let empty = net(vec![vec![], vec![]]);
         let busy = net(vec![vec![(7, 1e8)], vec![]]);
-        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_link: &empty }), Admission::Start);
-        assert_eq!(p.admit(1e6, &[0, 1], &NetView { per_link: &busy }), Admission::Wait);
+        assert_eq!(empty.with_view(|n| p.admit(1e6, &[0, 1], n)), Admission::Start);
+        assert_eq!(busy.with_view(|n| p.admit(1e6, &[0, 1], n)), Admission::Wait);
         // ...but a task on an unrelated link does not block.
-        assert_eq!(p.admit(1e6, &[1], &NetView { per_link: &busy }), Admission::Start);
+        assert_eq!(busy.with_view(|n| p.admit(1e6, &[1], n)), Admission::Start);
     }
 
     #[test]
@@ -153,15 +322,27 @@ mod tests {
         let p = SrsfCap { cap: 2 };
         let one = net(vec![vec![(1, 5e8)]]);
         let two = net(vec![vec![(1, 5e8), (2, 2e8)]]);
-        assert_eq!(p.admit(1e6, &[0], &NetView { per_link: &one }), Admission::Start);
-        assert_eq!(p.admit(1e6, &[0], &NetView { per_link: &two }), Admission::Wait);
+        assert_eq!(one.with_view(|n| p.admit(1e6, &[0], n)), Admission::Start);
+        assert_eq!(two.with_view(|n| p.admit(1e6, &[0], n)), Admission::Wait);
     }
 
     #[test]
     fn adadual_idle_starts() {
         let p = AdaDual { model: CommModel::paper_10gbe() };
         let empty = net(vec![vec![], vec![], vec![]]);
-        assert_eq!(p.admit(5e8, &[0, 2], &NetView { per_link: &empty }), Admission::Start);
+        assert_eq!(empty.with_view(|n| p.admit(5e8, &[0, 2], n)), Admission::Start);
+    }
+
+    #[test]
+    fn adadual_idle_starts_on_occupancy_only_view() {
+        // The engine's steadiness check lends policies a residual-free
+        // view of an idle fabric: with no tasks anywhere, no policy may
+        // ever resolve a residual through it.
+        let p = AdaDual { model: CommModel::paper_10gbe() };
+        let idle: Vec<Vec<usize>> = vec![Vec::new(); 3];
+        let view = NetView::occupancy_only(&idle);
+        assert_eq!(p.admit(5e8, &[0, 2], &view), Admission::Start);
+        assert_eq!(SrsfCap { cap: 1 }.admit(5e8, &[1], &view), Admission::Start);
     }
 
     #[test]
@@ -173,12 +354,12 @@ mod tests {
         let small = net(vec![vec![(9, m_old)]]);
         // Well under the threshold: overlap pays off.
         assert_eq!(
-            p.admit(m_old * th * 0.9, &[0], &NetView { per_link: &small }),
+            small.with_view(|n| p.admit(m_old * th * 0.9, &[0], n)),
             Admission::Start
         );
         // Over the threshold: wait for the big one to finish.
         assert_eq!(
-            p.admit(m_old * th * 1.1, &[0], &NetView { per_link: &small }),
+            small.with_view(|n| p.admit(m_old * th * 1.1, &[0], n)),
             Admission::Wait
         );
     }
@@ -188,7 +369,7 @@ mod tests {
         let cm = CommModel::paper_10gbe();
         let p = AdaDual { model: cm };
         let two = net(vec![vec![(1, 9e9), (2, 9e9)]]);
-        assert_eq!(p.admit(1.0, &[0], &NetView { per_link: &two }), Admission::Wait);
+        assert_eq!(two.with_view(|n| p.admit(1.0, &[0], n)), Admission::Wait);
     }
 
     #[test]
@@ -200,14 +381,13 @@ mod tests {
         // against the big one.
         let mixed = net(vec![vec![(1, 1e6)], vec![(2, 1e9)]]);
         let msg = 1e9 * th * 0.9; // fine vs 1e9, terrible vs 1e6
-        assert_eq!(p.admit(msg, &[0, 1], &NetView { per_link: &mixed }), Admission::Start);
+        assert_eq!(mixed.with_view(|n| p.admit(msg, &[0, 1], n)), Admission::Start);
     }
 
     #[test]
     fn max_tasks_dedups_union() {
         let shared = net(vec![vec![(5, 1e8)], vec![(5, 1e8), (6, 2e8)]]);
-        let view = NetView { per_link: &shared };
-        let (max, old) = view.max_tasks(&[0, 1]);
+        let (max, old) = shared.with_view(|n| n.max_tasks(&[0, 1]));
         assert_eq!(max, 2);
         assert_eq!(old.len(), 2);
     }
@@ -219,9 +399,9 @@ mod tests {
         // the per-id remaining bytes survive intact.
         let everywhere: Vec<Vec<(usize, f64)>> =
             (0..8).map(|l| vec![(9, 5e8), (l, 1e6)]).collect();
-        let view = NetView { per_link: &everywhere };
+        let view = net(everywhere);
         let links: Vec<usize> = (0..8).collect();
-        let (max, old) = view.max_tasks(&links);
+        let (max, old) = view.with_view(|n| n.max_tasks(&links));
         assert_eq!(max, 2);
         assert_eq!(old.len(), 9); // ids 0..8 plus the shared task 9
         assert_eq!(old.iter().filter(|&&(id, _)| id == 9).count(), 1);
@@ -230,10 +410,75 @@ mod tests {
     }
 
     #[test]
+    fn lazy_accessors_resolve_on_demand() {
+        let view = net(vec![vec![(3, 7e7)], vec![(3, 7e7), (4, 2e8)], vec![]]);
+        view.with_view(|n| {
+            assert_eq!(n.n_links(), 3);
+            assert_eq!(n.occupancy(1), 2);
+            assert_eq!(n.link_tasks(1), &[3, 4]);
+            assert_eq!(n.max_occupancy(&[0, 2]), 1);
+            assert_eq!(n.max_remaining(&[0, 1]), 2e8);
+            assert_eq!(n.max_remaining(&[2]), 0.0);
+            assert_eq!(n.remaining_of(4), 2e8);
+        });
+    }
+
+    #[test]
     fn srsf_cmp_orders_by_service_then_id() {
         use std::cmp::Ordering::*;
         assert_eq!(srsf_cmp((1.0, 5), (2.0, 1)), Less);
         assert_eq!(srsf_cmp((2.0, 1), (2.0, 5)), Less);
         assert_eq!(srsf_cmp((3.0, 7), (3.0, 7)), Equal);
+    }
+
+    #[test]
+    fn job_queue_basic_order_and_restore() {
+        let mut q = JobQueue::new();
+        q.insert(3.0, 0);
+        q.insert(1.0, 1);
+        q.insert(3.0, 2); // equal key: tie-break by id, after job 0
+        q.insert(0.5, 3);
+        assert_eq!(q.entries(), &[(0.5, 3), (1.0, 1), (3.0, 0), (3.0, 2)]);
+        let mut walked = q.take_all();
+        assert!(q.is_empty());
+        walked.remove(1); // "place" job 1; the rest stays sorted
+        q.restore(walked);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.entries(), &[(0.5, 3), (3.0, 0), (3.0, 2)]);
+    }
+
+    #[test]
+    fn prop_incremental_queue_order_matches_full_sort() {
+        // The load-bearing invariant behind the engine's re-sort removal:
+        // inserting (static key, id) pairs one at a time — in any arrival
+        // order, with heavy key duplication à la LAS — yields exactly the
+        // order a full per-pass re-sort by `srsf_cmp` would produce.
+        prop_check(50, |g| {
+            let n = g.usize(1, 40);
+            let keys: Vec<(f64, usize)> = (0..n)
+                .map(|id| {
+                    // Mix continuous keys with exact duplicates (LAS
+                    // queues are all-zero; FIFO often shares arrivals).
+                    let k = if g.bool() { g.f64(0.0, 10.0) } else { g.usize(0, 3) as f64 };
+                    (k, id)
+                })
+                .collect();
+            let mut order: Vec<usize> = (0..n).collect();
+            g.rng().shuffle(&mut order);
+            let mut q = JobQueue::new();
+            for &i in &order {
+                q.insert(keys[i].0, keys[i].1);
+            }
+            let mut want = keys.clone();
+            want.sort_by(|&a, &b| srsf_cmp(a, b));
+            if q.entries() != &want[..] {
+                return Err(format!(
+                    "incremental order diverged:\n  got:  {:?}\n  want: {:?}",
+                    q.entries(),
+                    want
+                ));
+            }
+            Ok(())
+        });
     }
 }

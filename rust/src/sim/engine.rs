@@ -3,11 +3,11 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::cluster::{ClusterSpec, ClusterState, GpuId};
+use crate::cluster::{ClusterSpec, ClusterState, FreeGpuIndex, GpuId};
 use crate::model::CommModel;
-use crate::net::{LinkId, Topology, TopologySpec};
+use crate::net::{links_intersect, LinkId, Topology, TopologySpec};
 use crate::placement::Placer;
-use crate::sched::{srsf_cmp, Admission, CommPolicy, NetView};
+use crate::sched::{srsf_cmp, Admission, CommPolicy, JobQueue, NetView};
 use crate::trace::JobSpec;
 
 use super::observe::{
@@ -278,6 +278,10 @@ struct JobRt {
     multi_server: bool,
     t_fwd: f64,
     t_bwd: f64,
+    /// Uncontended All-Reduce time `time_free(message_bytes)` — fixed at
+    /// placement (0 for single-server jobs) so the SRSF/LAS priority keys
+    /// don't re-derive it per comparison.
+    t_comm_free: f64,
     iters_done: u64,
     bwd_remaining: usize,
     comm_pending: bool,
@@ -299,14 +303,9 @@ struct JobRt {
 }
 
 impl JobRt {
-    fn remaining_service(&self, cm: &CommModel) -> f64 {
+    fn remaining_service(&self) -> f64 {
         let iters_left = (self.spec.iterations - self.iters_done) as f64;
-        let t_comm = if self.multi_server {
-            cm.time_free(self.spec.message_bytes())
-        } else {
-            0.0
-        };
-        iters_left * (self.t_fwd + self.t_bwd + t_comm) * self.spec.n_gpus as f64
+        iters_left * (self.t_fwd + self.t_bwd + self.t_comm_free) * self.spec.n_gpus as f64
     }
 
     /// SRSF key before placement (E_J = 0, §IV-A Job Priority).
@@ -323,8 +322,16 @@ impl JobRt {
 /// fast-forwarding skip events without perturbing other transfers.
 struct CommTask {
     job: usize,
-    /// Links the transfer crosses (== its job's `links`).
+    /// Links the transfer crosses (== its job's `links`, sorted).
     links: Vec<LinkId>,
+    /// Position of this task's id inside each `per_link[links[i]]` list,
+    /// maintained under swap-removes so completion leaves every crossed
+    /// link in O(1) instead of an O(occupancy) retain scan.
+    link_pos: Vec<usize>,
+    /// A `CommDone` for the *current* `version` sits unpopped in the
+    /// heap. Lets `repredict` count exactly the predictions it strands
+    /// (the stale-entry counter driving heap compaction).
+    predicted: bool,
     latency_left: f64,
     remaining: f64,
     /// Effective contention level: max active-task count over `links`.
@@ -420,19 +427,14 @@ pub(crate) fn iter_bounds(
     (t1, t2, c)
 }
 
-/// Do two sorted link sets share a link? (`Topology::links_between`
-/// returns sorted ids: NICs ascending, then uplinks above them.)
-fn links_intersect(a: &[LinkId], b: &[LinkId]) -> bool {
-    let (mut i, mut j) = (0, 0);
-    while i < a.len() && j < b.len() {
-        match a[i].cmp(&b[j]) {
-            Ordering::Less => i += 1,
-            Ordering::Greater => j += 1,
-            Ordering::Equal => return true,
-        }
-    }
-    false
-}
+/// Stale heap entries (superseded `CommDone` / dissolved `FastForward`
+/// predictions) tolerated before the heap is rebuilt without them.
+/// Dynamic repricing supersedes every affected task's prediction on every
+/// network change, so a contended phase otherwise grows the heap without
+/// bound; compaction keeps it proportional to the live event set. The
+/// second trigger condition (`stale ≥ half the heap`) keeps the rebuild
+/// amortized O(1) per processed event.
+const STALE_COMPACT_MIN: usize = 1024;
 
 struct Engine<'a, 'o> {
     cfg: &'a SimConfig,
@@ -446,8 +448,29 @@ struct Engine<'a, 'o> {
     gpus: Vec<GpuRt>,
     heap: BinaryHeap<Timed>,
     seq: u64,
-    /// Job ids waiting for placement.
-    queue: Vec<usize>,
+    /// Jobs waiting for placement, held in `(static queue key, id)` order
+    /// incrementally — no per-pass re-sort (keys cannot drift; see
+    /// [`JobQueue`]).
+    queue: JobQueue,
+    /// Bumped whenever a finished job releases memory/GPUs. Placement
+    /// feasibility is monotone between releases (allocations only shrink
+    /// free memory), so a job that failed to place at generation G must
+    /// fail again while the generation is still G.
+    release_gen: u64,
+    /// Per job: `release_gen` at its last failed placement attempt
+    /// (`u64::MAX` = never failed, always eligible).
+    place_stamp: Vec<u64>,
+    /// Queued jobs whose stamp differs from `release_gen` — the number of
+    /// placer calls the next pass can possibly make; 0 proves the pass a
+    /// no-op before reconciling any macro-event.
+    queue_eligible: usize,
+    /// Free-GPU counts per distinct memory demand, maintained O(Δ) at
+    /// allocate/release: proves `place` would return `None` (fewer
+    /// feasible GPUs than requested) without the placer's O(cluster)
+    /// feasibility scan.
+    capacity: FreeGpuIndex,
+    /// Scratch for per-GPU free-memory readings around allocate/release.
+    scratch_free: Vec<f64>,
     /// Job ids with a ready-but-unadmitted All-Reduce.
     pending_comm: Vec<usize>,
     comms: Vec<CommTask>,
@@ -468,12 +491,22 @@ struct Engine<'a, 'o> {
     /// at placement/finish so the steadiness check scans this handful
     /// instead of every job in the trace.
     running_multi: Vec<usize>,
-    /// Always-empty per-link admission view lent to the policy by the
+    /// Per job: its position inside `running_multi` (`usize::MAX` when
+    /// absent) — finish is an O(1) swap-remove, not an O(n) retain.
+    running_multi_pos: Vec<usize>,
+    /// Always-empty per-link occupancy view lent to the policy by the
     /// steadiness check (allocated once, never mutated — the check runs
     /// at every iteration boundary of every uncontended multi job).
-    empty_view: Vec<Vec<(usize, f64)>>,
+    empty_view: Vec<Vec<usize>>,
     /// Jobs currently running under a macro-event (`JobRt::ff` set).
     ff_jobs: Vec<usize>,
+    /// Per job: its position inside `ff_jobs` (`usize::MAX` when absent).
+    ff_pos: Vec<usize>,
+    /// Stale entries currently in the heap: superseded `CommDone`
+    /// predictions plus dissolved `FastForward` macro-events. Past
+    /// `STALE_COMPACT_MIN` (and half the heap) the heap is rebuilt
+    /// without them.
+    heap_stale: usize,
     /// Scratch for `refresh_links`' affected-task set — reused across
     /// Dynamic-repricing passes instead of allocated per network change.
     scratch_affected: Vec<usize>,
@@ -508,6 +541,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                     multi_server: false,
                     t_fwd: m.t_fwd(b, peak),
                     t_bwd: m.t_bwd(b, peak),
+                    t_comm_free: 0.0,
                     iters_done: 0,
                     bwd_remaining: 0,
                     comm_pending: false,
@@ -528,18 +562,28 @@ impl<'a, 'o> Engine<'a, 'o> {
         let topo = Topology::build(&cfg.cluster, &cfg.comm, &cfg.topology)
             .unwrap_or_else(|e| panic!("invalid SimConfig topology: {e}"));
         let n_links = topo.n_links();
+        let cluster = ClusterState::new(cfg.cluster);
+        // Every distinct per-GPU memory demand in the trace becomes a
+        // capacity-index threshold, so the placement gate answers the
+        // exact `fits` count for any job without scanning GPUs.
+        let capacity =
+            FreeGpuIndex::new(jobs.iter().map(JobSpec::mem_bytes).collect(), &cluster);
         Engine {
             cfg,
             observers,
             topo,
-            cluster: ClusterState::new(cfg.cluster),
+            cluster,
             gpus: (0..cfg.cluster.n_gpus())
                 .map(|_| GpuRt { busy: false, ready: Vec::new() })
                 .collect(),
-            jobs: rt,
             heap,
             seq: jobs.len() as u64,
-            queue: Vec::new(),
+            queue: JobQueue::new(),
+            release_gen: 0,
+            place_stamp: vec![u64::MAX; jobs.len()],
+            queue_eligible: 0,
+            capacity,
+            scratch_free: Vec::new(),
             pending_comm: Vec::new(),
             comms: Vec::new(),
             active_comms: Vec::new(),
@@ -547,14 +591,18 @@ impl<'a, 'o> Engine<'a, 'o> {
             per_link: vec![Vec::new(); n_links],
             placements: 0,
             running_multi: Vec::new(),
+            running_multi_pos: vec![usize::MAX; jobs.len()],
             empty_view: vec![Vec::new(); n_links],
             ff_jobs: Vec::new(),
+            ff_pos: vec![usize::MAX; jobs.len()],
+            heap_stale: 0,
             scratch_affected: Vec::new(),
             scratch_keys: Vec::new(),
             debug: std::env::var_os("DDL_SIM_DEBUG").is_some(),
             n_events: 0,
             unfinished: jobs.len(),
             need_place: false,
+            jobs: rt,
         }
     }
 
@@ -586,7 +634,9 @@ impl<'a, 'o> Engine<'a, 'o> {
             match ev {
                 Ev::Arrive { job } => {
                     emit(&mut *self.observers, SimEvent::JobArrived { t, job });
-                    self.queue.push(job);
+                    let key = self.queue_key(job);
+                    self.queue.insert(key, job);
+                    self.queue_eligible += 1;
                     self.try_place(t, placer, None);
                 }
                 Ev::ComputeDone { gpu, job, phase } => {
@@ -601,8 +651,14 @@ impl<'a, 'o> Engine<'a, 'o> {
                 }
                 Ev::CommDone { comm, version } => {
                     if self.comms[comm].done || self.comms[comm].version != version {
-                        continue; // stale prediction
+                        // Stale prediction (superseded by a repricing or
+                        // outlived by its task's completion).
+                        debug_assert!(self.heap_stale > 0, "stale-entry counter underflow");
+                        self.heap_stale = self.heap_stale.saturating_sub(1);
+                        continue;
                     }
+                    // The live prediction is consumed by this pop.
+                    self.comms[comm].predicted = false;
                     // Completion test in the *time* domain: once the
                     // residual drain time falls below one ulp of the clock,
                     // a repredicted event can land exactly at `t` forever
@@ -618,7 +674,10 @@ impl<'a, 'o> Engine<'a, 'o> {
                 }
                 Ev::FastForward { job, version } => {
                     if self.jobs[job].ff_version != version {
-                        continue; // macro-event dissolved by reconciliation
+                        // Macro-event dissolved by reconciliation.
+                        debug_assert!(self.heap_stale > 0, "stale-entry counter underflow");
+                        self.heap_stale = self.heap_stale.saturating_sub(1);
+                        continue;
                     }
                     self.complete_fast_forward(t, job);
                     if self.need_place {
@@ -626,6 +685,9 @@ impl<'a, 'o> Engine<'a, 'o> {
                         self.try_place(t, placer, Some(job));
                     }
                 }
+            }
+            if self.heap_stale >= STALE_COMPACT_MIN && self.heap_stale * 2 >= self.heap.len() {
+                self.compact_heap();
             }
         }
         let stats = RunStats { n_events: self.n_events, t_end };
@@ -636,19 +698,17 @@ impl<'a, 'o> Engine<'a, 'o> {
 
     // -- priorities -----------------------------------------------------------
 
-    /// Priority key for a *running* job (smaller = served first).
+    /// Priority key for a *running* job (smaller = served first). SRSF
+    /// and LAS read the job's cached `t_comm_free` (fixed at placement)
+    /// instead of re-deriving `time_free(message_bytes)` inside every
+    /// comparison of every scheduling burst.
     fn run_key(&self, job: usize) -> f64 {
         let j = &self.jobs[job];
         match self.cfg.priority {
-            JobPriority::Srsf => j.remaining_service(&self.cfg.comm),
+            JobPriority::Srsf => j.remaining_service(),
             JobPriority::Fifo => j.spec.arrival,
             JobPriority::Las => {
-                let t_comm = if j.multi_server {
-                    self.cfg.comm.time_free(j.spec.message_bytes())
-                } else {
-                    0.0
-                };
-                j.iters_done as f64 * (j.t_fwd + j.t_bwd + t_comm) * j.spec.n_gpus as f64
+                j.iters_done as f64 * (j.t_fwd + j.t_bwd + j.t_comm_free) * j.spec.n_gpus as f64
             }
         }
     }
@@ -670,7 +730,12 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// for arrivals) — the tie-break reconciliation needs when a
     /// macro-event boundary coincides bit-exactly with this timestamp.
     fn try_place(&mut self, t: f64, placer: &mut dyn Placer, interrupter: Option<usize>) {
-        if self.queue.is_empty() {
+        // Every queued job already failed at the current release
+        // generation → free memory can only have shrunk since, so the
+        // placer would return None for all of them. The pass — including
+        // macro-event reconciliation, which only exists to give the
+        // placer exact state to read — is a provable no-op.
+        if self.queue.is_empty() || self.queue_eligible == 0 {
             return;
         }
         // The placer is about to read per-GPU load/residency, and may put
@@ -686,21 +751,49 @@ impl<'a, 'o> Engine<'a, 'o> {
         // flag requests. Consume it now instead of leaking a spurious
         // extra pass to the next unrelated event.
         self.need_place = false;
-        // Take the queue and rebuild it from the leftovers while walking
-        // the sorted order — O(n log n), versus the O(n²)
-        // `retain(placed.contains)` difference this replaced. Queue order
-        // is irrelevant between passes (every pass re-sorts by the total
-        // order `(queue_key, id)`), so behaviour is unchanged.
-        let mut order: Vec<usize> = std::mem::take(&mut self.queue);
-        order.sort_by(|&a, &b| srsf_cmp((self.queue_key(a), a), (self.queue_key(b), b)));
-        for job in order {
+        // Walk the incrementally maintained priority order (no re-sort:
+        // queue keys are static — see `queue_key`), calling the placer
+        // only for jobs the release-generation stamp and the capacity
+        // index cannot prove hopeless. Dropping placed entries while
+        // walking keeps the remainder sorted for `restore`.
+        let entries = self.queue.take_all();
+        let mut kept: Vec<(f64, usize)> = Vec::with_capacity(entries.len());
+        for (key, job) in entries {
+            debug_assert_eq!(
+                key.to_bits(),
+                self.queue_key(job).to_bits(),
+                "static queue key drifted for job {job}"
+            );
+            if self.place_stamp[job] == self.release_gen {
+                // Failed already at this generation; nothing has been
+                // released since.
+                kept.push((key, job));
+                continue;
+            }
             let spec = self.jobs[job].spec.clone();
+            if self.capacity.feasible(spec.mem_bytes()) < spec.n_gpus {
+                // Fewer feasible GPUs than the job needs: any
+                // contract-abiding placer returns None (checked against
+                // the real placer in debug builds).
+                debug_assert!(
+                    placer.place(&spec, &self.cluster).is_none(),
+                    "capacity gate disagreed with placer for job {job}"
+                );
+                self.place_stamp[job] = self.release_gen;
+                self.queue_eligible -= 1;
+                kept.push((key, job));
+                continue;
+            }
             if let Some(gpus) = placer.place(&spec, &self.cluster) {
+                self.queue_eligible -= 1;
                 self.commit_placement(t, job, gpus);
             } else {
-                self.queue.push(job);
+                self.place_stamp[job] = self.release_gen;
+                self.queue_eligible -= 1;
+                kept.push((key, job));
             }
         }
+        self.queue.restore(kept);
     }
 
     fn commit_placement(&mut self, t: f64, job: usize, gpus: Vec<GpuId>) {
@@ -714,9 +807,21 @@ impl<'a, 'o> Engine<'a, 'o> {
             .spec
             .comm_total(servers.len(), &self.cfg.comm);
         let load = (c_j + e_j) * gpus.len() as f64;
-        self.cluster
-            .allocate(&gpus, self.jobs[job].spec.mem_bytes(), load);
+        let mem = self.jobs[job].spec.mem_bytes();
+        let mut frees = std::mem::take(&mut self.scratch_free);
+        frees.clear();
+        frees.extend(gpus.iter().map(|&g| self.cluster.free_mem(g)));
+        self.cluster.allocate(&gpus, mem, load);
+        for (i, &g) in gpus.iter().enumerate() {
+            self.capacity.record(frees[i], self.cluster.free_mem(g));
+        }
+        self.scratch_free = frees;
         self.placements += 1;
+        let t_comm_free = if multi {
+            self.cfg.comm.time_free(self.jobs[job].spec.message_bytes())
+        } else {
+            0.0
+        };
         {
             let j = &mut self.jobs[job];
             j.load_total = load;
@@ -724,9 +829,11 @@ impl<'a, 'o> Engine<'a, 'o> {
             j.gpus = gpus;
             j.links = links;
             j.multi_server = multi;
+            j.t_comm_free = t_comm_free;
             j.placed_seq = self.placements;
         }
         if multi {
+            self.running_multi_pos[job] = self.running_multi.len();
             self.running_multi.push(job);
         }
         emit(
@@ -848,10 +955,26 @@ impl<'a, 'o> Engine<'a, 'o> {
     fn finish_job(&mut self, t: f64, job: usize, gpus: &[GpuId]) {
         self.unfinished -= 1;
         if self.jobs[job].multi_server {
-            self.running_multi.retain(|&j| j != job);
+            let pos = self.running_multi_pos[job];
+            self.running_multi.swap_remove(pos);
+            if let Some(&moved) = self.running_multi.get(pos) {
+                self.running_multi_pos[moved] = pos;
+            }
+            self.running_multi_pos[job] = usize::MAX;
         }
         let mem = self.jobs[job].spec.mem_bytes();
+        let mut frees = std::mem::take(&mut self.scratch_free);
+        frees.clear();
+        frees.extend(gpus.iter().map(|&g| self.cluster.free_mem(g)));
         self.cluster.release(gpus, mem, 0.0);
+        for (i, &g) in gpus.iter().enumerate() {
+            self.capacity.record(frees[i], self.cluster.free_mem(g));
+        }
+        self.scratch_free = frees;
+        // Memory freed: every queued job is worth a fresh placement
+        // attempt at the next pass.
+        self.release_gen += 1;
+        self.queue_eligible = self.queue.len();
         self.need_place = true;
         emit(&mut *self.observers, SimEvent::JobFinished { t, job });
     }
@@ -911,7 +1034,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             }
             // The per-iteration admission decision on idle links.
             let msg = self.jobs[job].spec.message_bytes();
-            let view = NetView { per_link: &self.empty_view };
+            let view = NetView::occupancy_only(&self.empty_view);
             if policy.admit(msg, &self.jobs[job].links, &view) != Admission::Start {
                 return false;
             }
@@ -942,6 +1065,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         j.ff = Some(FfState { start_t: t, iters: iters_left, end_t: s, lat, per_byte });
         j.ff_version += 1;
         let v = j.ff_version;
+        self.ff_pos[job] = self.ff_jobs.len();
         self.ff_jobs.push(job);
         self.push(s, Ev::FastForward { job, version: v });
         emit(
@@ -957,7 +1081,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         let Some(ff) = self.jobs[job].ff.take() else {
             return; // defensive: version matched but state already gone
         };
-        self.ff_jobs.retain(|&j| j != job);
+        let pos = self.ff_pos[job];
+        self.ff_jobs.swap_remove(pos);
+        if let Some(&moved) = self.ff_jobs.get(pos) {
+            self.ff_pos[moved] = pos;
+        }
+        self.ff_pos[job] = usize::MAX;
         debug_assert_eq!(t.to_bits(), ff.end_t.to_bits());
         self.apply_iterations(job, &ff, ff.iters, ff.end_t);
         debug_assert_eq!(self.jobs[job].iters_done, self.jobs[job].spec.iterations);
@@ -1007,6 +1136,9 @@ impl<'a, 'o> Engine<'a, 'o> {
             return;
         }
         let jobs = std::mem::take(&mut self.ff_jobs);
+        for &job in &jobs {
+            self.ff_pos[job] = usize::MAX;
+        }
         for job in jobs {
             self.reconcile_ff(t, job, interrupter);
         }
@@ -1032,6 +1164,7 @@ impl<'a, 'o> Engine<'a, 'o> {
     fn reconcile_ff(&mut self, t: f64, job: usize, interrupter: Option<usize>) {
         let ff = self.jobs[job].ff.take().expect("reconcile without a macro-event");
         self.jobs[job].ff_version += 1; // the pending FastForward goes stale
+        self.heap_stale += 1;
         emit(&mut *self.observers, SimEvent::FastForwardDissolved { t, job });
         let boundary_first = interrupter
             .is_some_and(|f| self.jobs[job].placed_seq < self.jobs[f].placed_seq);
@@ -1112,9 +1245,14 @@ impl<'a, 'o> Engine<'a, 'o> {
             }
             let links = self.jobs[job].links.clone();
             let id = self.comms.len();
+            // Record where this id will land in each per-link list (the
+            // completion-time swap-remove positions).
+            let link_pos: Vec<usize> = links.iter().map(|&l| self.per_link[l].len()).collect();
             self.comms.push(CommTask {
                 job,
                 links: links.clone(),
+                link_pos,
+                predicted: true,
                 latency_left: ff.lat,
                 remaining: msg,
                 k: 1,
@@ -1215,6 +1353,14 @@ impl<'a, 'o> Engine<'a, 'o> {
         c.k = k;
         c.per_byte = per_byte;
         c.version += 1;
+        // An unpopped prediction for the previous version is stranded in
+        // the heap by this supersession (Dynamic repricing does this to
+        // every affected task per network change — the compaction
+        // counter's main feeder).
+        if c.predicted {
+            self.heap_stale += 1;
+        }
+        c.predicted = true;
         let eta = t + c.latency_left + c.remaining * per_byte;
         let v = c.version;
         // No max-contention bookkeeping here any more: occupancy peaks
@@ -1271,27 +1417,37 @@ impl<'a, 'o> Engine<'a, 'o> {
                 debug_assert!(clear, "macro-event job {mj} shares links with a pending admission");
             }
         }
-        // Build the admission view once per pass and refresh it only after
-        // an admission actually changes the network state — rebuilding per
-        // pending job was the #1 hot spot at paper scale (§Perf).
-        let mut view: Vec<Vec<(usize, f64)>> = self
-            .per_link
-            .iter()
-            .map(|ids| ids.iter().map(|&c| (c, self.residual_at(c, t).1)).collect())
-            .collect();
+        // The admission view is *lazy*: it reads the live per-link id
+        // lists (maintained O(Δ) at admit/complete) and prices a task's
+        // residual only when the policy inspects a link carrying it.
+        // This replaced a per-pass O(links × active) materialized
+        // snapshot — which itself replaced the per-pending-job rebuild
+        // that was the #1 hot spot at paper scale (§Perf). Admissions
+        // inside the pass need no view patching: the live lists already
+        // reflect them, and a freshly admitted/repriced task re-anchors
+        // at `t`, so its lazily derived residual matches what the
+        // patched snapshot used to carry, bit for bit.
         for job in order {
             let msg = self.jobs[job].spec.message_bytes();
             // Borrow the job's link set for the decision (restored below)
             // instead of the per-pass clone this replaced; only an actual
             // admission copies it, into the comm task it creates.
             let links = std::mem::take(&mut self.jobs[job].links);
-            let net = NetView { per_link: &view };
-            if policy.admit(msg, &links, &net) == Admission::Start {
+            let admit = {
+                let remaining = |c: usize| self.residual_at(c, t).1;
+                let net = NetView::new(&self.per_link, &remaining);
+                policy.admit(msg, &links, &net)
+            };
+            if admit == Admission::Start {
                 let pre = self.contention_on(&links);
                 let id = self.comms.len();
+                let link_pos: Vec<usize> =
+                    links.iter().map(|&l| self.per_link[l].len()).collect();
                 self.comms.push(CommTask {
                     job,
                     links: links.clone(),
+                    link_pos,
+                    predicted: false,
                     latency_left: self.topo.latency_over(&links),
                     remaining: msg,
                     k: 1,
@@ -1321,12 +1477,6 @@ impl<'a, 'o> Engine<'a, 'o> {
                 // everyone sharing its links.
                 self.repredict(t, id);
                 self.refresh_links(t, &links);
-                // Network state changed: refresh the shared view in place
-                // (only the admitted task's links gained an entry; its
-                // remaining bytes at admission are the full message).
-                for &l in &links {
-                    view[l].push((id, msg));
-                }
                 self.jobs[job].links = links;
             } else {
                 self.jobs[job].links = links;
@@ -1345,16 +1495,27 @@ impl<'a, 'o> Engine<'a, 'o> {
         let job = self.comms[id].job;
         let links = self.comms[id].links.clone();
         self.comms[id].done = true;
-        // O(1) swap-remove from the in-flight set (per-link lists stay a
-        // retain: their length is the contention level, ≤ a few).
+        // O(1) swap-remove from the in-flight set.
         let pos = self.active_pos[id];
         let _ = self.active_comms.swap_remove(pos);
         if let Some(&moved) = self.active_comms.get(pos) {
             self.active_pos[moved] = pos;
         }
         self.active_pos[id] = usize::MAX;
-        for &l in &links {
-            self.per_link[l].retain(|&c| c != id);
+        // O(1) swap-remove from each crossed link's active list via the
+        // positions recorded at admission (was an O(occupancy) retain
+        // scan per link). A displaced task finds which of its links this
+        // is by binary search — its link set is sorted.
+        for (i, &l) in links.iter().enumerate() {
+            let lp = self.comms[id].link_pos[i];
+            self.per_link[l].swap_remove(lp);
+            if let Some(&moved) = self.per_link[l].get(lp) {
+                let slot = self.comms[moved]
+                    .links
+                    .binary_search(&l)
+                    .expect("displaced comm task not registered on link");
+                self.comms[moved].link_pos[slot] = lp;
+            }
         }
         emit(&mut *self.observers, SimEvent::CommFinished { t, job, comm: id, links: &links });
         for &l in &links {
@@ -1372,4 +1533,27 @@ impl<'a, 'o> Engine<'a, 'o> {
         }
     }
 
+    /// Rebuild the heap without its stale entries (superseded `CommDone`
+    /// predictions, dissolved `FastForward` macro-events). Pop order is
+    /// the total order on `(t, seq)`, so dropping entries that would be
+    /// skipped anyway cannot reorder anything live — the only observable
+    /// effect is `n_events` no longer counting the skipped pops.
+    fn compact_heap(&mut self) {
+        let mut entries = std::mem::take(&mut self.heap).into_vec();
+        let before = entries.len();
+        entries.retain(|e| match e.ev {
+            Ev::CommDone { comm, version } => {
+                !self.comms[comm].done && self.comms[comm].version == version
+            }
+            Ev::FastForward { job, version } => self.jobs[job].ff_version == version,
+            _ => true,
+        });
+        debug_assert_eq!(
+            before - entries.len(),
+            self.heap_stale,
+            "stale-entry counter drifted from heap contents"
+        );
+        self.heap = BinaryHeap::from(entries);
+        self.heap_stale = 0;
+    }
 }

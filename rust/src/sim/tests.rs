@@ -5,9 +5,9 @@ use super::*;
 use crate::sim::Repricing;
 use crate::cluster::ClusterSpec;
 use crate::model::{CommModel, DnnModel};
-use crate::net::TopologySpec;
-use crate::placement::{FirstFitPlacer, LwfPlacer};
-use crate::sched::{AdaDual, SrsfCap};
+use crate::net::{LinkId, TopologySpec};
+use crate::placement::{FirstFitPlacer, LwfPlacer, Placer};
+use crate::sched::{AdaDual, Admission, CommPolicy, MaterializedNet, NetView, SrsfCap};
 use crate::trace::{self, JobSpec, TraceConfig};
 use crate::util::prop::prop_check;
 
@@ -852,6 +852,184 @@ fn prop_observers_reproduce_monolithic_simresult() {
         }
         logs_eq("facade vs manual", &facade.events, &manual.events)
     });
+}
+
+/// Wraps a policy, asserting at every admission decision that the lazy
+/// [`NetView`] (live per-link lists + on-demand residual resolution)
+/// yields the same answer as a fully materialized snapshot of it — the
+/// per-pass `Vec<Vec<(id, remaining)>>` view the engine used to rebuild.
+struct MaterializedCheck<P: CommPolicy> {
+    inner: P,
+}
+
+impl<P: CommPolicy> CommPolicy for MaterializedCheck<P> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn admit(&self, msg: f64, links: &[LinkId], net: &NetView) -> Admission {
+        let lazy = self.inner.admit(msg, links, net);
+        let snapshot: Vec<Vec<(usize, f64)>> = (0..net.n_links())
+            .map(|l| {
+                net.link_tasks(l).iter().map(|&id| (id, net.remaining_of(id))).collect()
+            })
+            .collect();
+        let mat = MaterializedNet::from_tuples(&snapshot);
+        let full = mat.with_view(|m| self.inner.admit(msg, links, m));
+        assert_eq!(lazy, full, "lazy vs materialized admission diverged ({})", self.name());
+        lazy
+    }
+}
+
+#[test]
+fn prop_lazy_netview_admissions_match_materialized_view() {
+    // Random traces × {flat, two-tier} × {srsf, fifo, las} × both
+    // repricings × both policy families (the
+    // prop_observers_reproduce_monolithic_simresult generator): every
+    // admission decision through the lazy view must equal the decision
+    // over a materialized snapshot (asserted inside the wrapper), and the
+    // wrapper itself must be transparent — the whole SimResult and event
+    // log bit-identical to the unwrapped run.
+    prop_check(15, |g| {
+        let (c, jobs, use_ada, cap) = random_setup(g);
+        let mut p = LwfPlacer::new(1);
+        let wrapped = if use_ada {
+            simulate(&c, &jobs, &mut p, &MaterializedCheck { inner: AdaDual { model: c.comm } })
+        } else {
+            simulate(&c, &jobs, &mut p, &MaterializedCheck { inner: SrsfCap { cap } })
+        };
+        let base = run_policy(&c, &jobs, use_ada, cap);
+        check_equivalent(&wrapped, &base)?;
+        if wrapped.n_events != base.n_events {
+            return Err(format!(
+                "n_events diverged: {} vs {}",
+                wrapped.n_events, base.n_events
+            ));
+        }
+        logs_eq("wrapped vs base", &wrapped.events, &base.events)
+    });
+}
+
+#[test]
+fn placement_gate_skips_hopeless_placer_calls() {
+    // A memory-saturated cluster: job 0 fills every GPU; K later jobs
+    // queue behind it. Release-generation + capacity gating must keep
+    // the per-arrival placement pass from re-running the placer over the
+    // whole queue (the old engine made O(queue) placer calls per
+    // arrival, O(K²) overall) — while producing the same schedule.
+    struct CountingPlacer {
+        inner: LwfPlacer,
+        calls: usize,
+    }
+    impl Placer for CountingPlacer {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn place(
+            &mut self,
+            job: &JobSpec,
+            state: &crate::cluster::ClusterState,
+        ) -> Option<Vec<usize>> {
+            self.calls += 1;
+            self.inner.place(job, state)
+        }
+    }
+    let k = 16usize;
+    let mut c = cfg(1, k); // one server, K GPUs
+    // Each GPU holds exactly one resident: a second ResNet50 cannot fit.
+    let mem = DnnModel::ResNet50.spec().mem_bytes;
+    c.cluster.gpu_mem_bytes = 1.5 * mem;
+    let hog = job(0, 0.0, DnnModel::ResNet50, k, 3000); // all K GPUs, long
+    let t_iter = hog.t_iter(c.cluster.gpu_peak_gflops);
+    let mut jobs = vec![hog];
+    for i in 1..=k {
+        // All arrive while job 0 still runs (its runtime is 3000 iters).
+        jobs.push(job(i, i as f64 * t_iter, DnnModel::ResNet50, 1, 5));
+    }
+    let mut placer = CountingPlacer { inner: LwfPlacer::new(1), calls: 0 };
+    let res = simulate(&c, &jobs, &mut placer, &AdaDual { model: c.comm });
+    assert!(res.jct.iter().all(|t| t.is_finite()), "some job never placed");
+    // Gated engine: 1 call (job 0) + ≤1 call per arrival (the newcomer
+    // only; in debug builds the capacity gate double-checks each verdict
+    // against the real placer, at most doubling this) + K calls on the
+    // release pass when job 0 finishes. The ungated engine needed
+    // 1 + K(K+1)/2 + K ≈ 150 for K = 16.
+    let bound = 1 + 2 * k + k + 2;
+    assert!(
+        placer.calls <= bound,
+        "placement gate ineffective: {} placer calls (bound {bound})",
+        placer.calls
+    );
+    // And the schedule itself is untouched by gating: identical to the
+    // plain engine run.
+    let mut plain = LwfPlacer::new(1);
+    let base = simulate(&c, &jobs, &mut plain, &AdaDual { model: c.comm });
+    check_equivalent(&res, &base).unwrap();
+}
+
+#[test]
+fn heap_compaction_dynamic_storm_stays_exact() {
+    // Dynamic repricing reprices every transfer sharing a link on every
+    // admission/completion, stranding the superseded CommDone prediction
+    // each time. ~96 concurrent transfers all crossing the same two NICs
+    // strand thousands of stale entries during the admission burst alone
+    // — far past the compaction threshold — so the heap rebuild runs
+    // repeatedly and must drop exactly the stale set (debug-asserted
+    // against the counter inside `compact_heap`) and no live event:
+    // checked by every job finishing, the per-server contention oracle
+    // holding over the full log, and coalescing on/off equivalence
+    // surviving the storm.
+    struct CrossPlacer; // one feasible GPU per server: every job spans both NICs
+    impl Placer for CrossPlacer {
+        fn name(&self) -> &'static str {
+            "cross"
+        }
+        fn place(
+            &mut self,
+            job: &JobSpec,
+            state: &crate::cluster::ClusterState,
+        ) -> Option<Vec<usize>> {
+            let mut out = Vec::with_capacity(state.spec.n_servers);
+            for s in 0..state.spec.n_servers {
+                let g = state
+                    .spec
+                    .gpus_of(s)
+                    .filter(|&g| state.fits(g, job.mem_bytes()))
+                    .min_by(|&a, &b| {
+                        state.gpus[a]
+                            .load
+                            .partial_cmp(&state.gpus[b].load)
+                            .unwrap()
+                            .then(a.cmp(&b))
+                    })?;
+                out.push(g);
+            }
+            Some(out)
+        }
+    }
+    let mut c = cfg(2, 32); // 64 GPUs behind 2 NICs
+    c.log_events = true;
+    c.repricing = Repricing::Dynamic;
+    let jobs: Vec<JobSpec> = (0..100)
+        .map(|i| JobSpec {
+            id: i,
+            arrival: i as f64 * 0.01,
+            model: DnnModel::Vgg16, // big message: long flights, many repricings
+            n_gpus: 2,              // one GPU on each server via CrossPlacer
+            iterations: 4,
+        })
+        .collect();
+    let run_mode = |coalescing: bool| {
+        let cc = SimConfig { coalescing, ..c.clone() };
+        let mut p = CrossPlacer;
+        simulate(&cc, &jobs, &mut p, &SrsfCap { cap: 1000 })
+    };
+    let on = run_mode(true);
+    let off = run_mode(false);
+    assert!(on.jct.iter().all(|t| t.is_finite()), "job lost in the repricing storm");
+    assert!(on.max_contention > 50, "storm never piled up: k = {}", on.max_contention);
+    check_equivalent(&on, &off).unwrap();
+    check_flat_matches_per_server_oracle(&c.cluster, &on.events).unwrap();
 }
 
 #[test]

@@ -141,6 +141,52 @@ impl BenchReport {
         std::fs::write(&path, Json::Arr(self.rows.clone()).to_string_pretty())?;
         Ok(path)
     }
+
+    /// Render an events/s delta of this run against the committed
+    /// baseline `results/BENCH_<name>.json`, matching rows by workload
+    /// label. Purely informational and deliberately non-fatal: a missing
+    /// or unparseable baseline, or a label with no counterpart, just
+    /// says so — CI prints this into the workflow log so throughput
+    /// regressions are visible in PR checks without flaking the build.
+    /// Call *before* [`BenchReport::write`] (which overwrites the file).
+    pub fn delta_vs_committed(&self) -> String {
+        let path = format!("results/BENCH_{}.json", self.name);
+        let baseline = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(_) => return format!("no committed baseline at {path} — skipping delta\n"),
+        };
+        let rows = match Json::parse(&baseline) {
+            Ok(v) => match v.as_arr() {
+                Some(rows) => rows.to_vec(),
+                None => return format!("baseline {path} is not a row array — skipping delta\n"),
+            },
+            Err(e) => return format!("baseline {path} unparseable ({e:?}) — skipping delta\n"),
+        };
+        let mut out = format!("== events/s delta vs committed {path} ==\n");
+        for row in &self.rows {
+            let Ok(label) = row.req_str("workload") else { continue };
+            let Some(new) = row.get("events_per_s").and_then(Json::as_f64) else {
+                continue;
+            };
+            let old = rows.iter().find_map(|r| {
+                (r.req_str("workload") == Ok(label))
+                    .then(|| r.get("events_per_s").and_then(Json::as_f64))
+                    .flatten()
+            });
+            match old {
+                Some(old) if old > 0.0 => {
+                    let pct = (new / old - 1.0) * 100.0;
+                    out.push_str(&format!(
+                        "{label:<44} {:>10.2} -> {:>10.2} Mev/s  ({pct:+.1}%)\n",
+                        old / 1e6,
+                        new / 1e6
+                    ));
+                }
+                _ => out.push_str(&format!("{label:<44} no baseline row\n")),
+            }
+        }
+        out
+    }
 }
 
 /// Write a CSV series to `results/<name>.csv` (creating the dir) so figures
@@ -189,6 +235,14 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn delta_without_baseline_is_nonfatal() {
+        let mut r = BenchReport::new("definitely_not_committed_baseline");
+        r.record("w", 10, 1.0);
+        let s = r.delta_vs_committed();
+        assert!(s.contains("skipping delta"), "{s}");
     }
 
     #[test]
