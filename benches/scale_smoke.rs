@@ -1,18 +1,28 @@
-//! CI bounded-memory + throughput smoke: a 100k-job generated trace
-//! through the observer engine with sinks off. The observer redesign made
-//! event cost independent of run memory (no event strings, no per-event
-//! state), and the incremental scheduler state (lazy admission views,
-//! release-generation/capacity-gated placement, position-mapped
-//! completions) made per-event cost independent of how much is queued or
-//! in flight — which is what lets this gate run a workload three orders
-//! of magnitude past the paper's 160 jobs. The run must finish (every job
-//! placed and completed) with an empty `events` vec; events/s lands in
-//! `results/BENCH_scale_smoke.json` next to `BENCH_sim_hotpath.json`, and
-//! a non-fatal delta against the committed baseline (including the
-//! pre-gate 20k-job rows) is printed for the CI log.
+//! CI bounded-memory + throughput smoke, two gates:
+//!
+//! 1. **Batch**: a 100k-job generated trace through the observer engine
+//!    with sinks off. The observer redesign made event cost independent of
+//!    run memory (no event strings, no per-event state), and the
+//!    incremental scheduler state (lazy admission views,
+//!    release-generation/capacity-gated placement, position-mapped
+//!    completions) made per-event cost independent of how much is queued
+//!    or in flight — which is what lets this gate run a workload three
+//!    orders of magnitude past the paper's 160 jobs. The run must finish
+//!    (every job placed and completed) with an empty `events` vec.
+//!
+//! 2. **Streaming**: 1M jobs pulled lazily from a [`GeneratedSource`]
+//!    (never materialized as a `Vec`) through `simulate_stream_observed`
+//!    with a constant-memory [`PercentilesObserver`] — the open-ended
+//!    service regime. The gate asserts every job completes and that peak
+//!    RSS stays bounded; p50/p95/p99 JCT and queueing delay are printed
+//!    alongside events/s and peak RSS.
+//!
+//! Rows land in `results/BENCH_scale_smoke.json` next to
+//! `BENCH_sim_hotpath.json`, and a non-fatal delta against the committed
+//! baseline is printed for the CI log.
 
 use ddl_sched::prelude::*;
-use ddl_sched::util::bench::BenchReport;
+use ddl_sched::util::bench::{peak_rss_bytes, BenchReport};
 
 fn main() {
     let n_jobs = 100_000;
@@ -55,6 +65,77 @@ fn main() {
     // Stable-label twin row: comparable across job-count bumps (the
     // events/s-no-worse-than-baseline gate survives 20k -> 100k -> ...).
     report.record("scale gate sinks-off", res.n_events, wall);
+
+    // ---- streaming gate: 1M jobs, never materialized -------------------
+    // Same cluster and the same per-GPU arrival density as the batch gate
+    // (mean gap = horizon / n_jobs(cfg) = 1 s), but the jobs come from an
+    // open lazy source capped at 1M — the trace Vec never exists, and the
+    // only per-job state left at the end is the engine's flat runtime
+    // records plus the observer's P^2 markers.
+    let n_stream: usize = 1_000_000;
+    let mut stream_cfg = TraceConfig::scaled(100_000, 11);
+    stream_cfg.horizon = 100_000.0;
+    let mut src = GeneratedSource::new(&stream_cfg, Some(n_stream));
+    let mut pct = PercentilesObserver::new();
+    let t0 = std::time::Instant::now();
+    {
+        let mut placer = LwfPlacer::new(1);
+        let policy = AdaDual { model: cfg.comm };
+        let mut obs: [&mut dyn SimObserver; 1] = [&mut pct];
+        sim::simulate_stream_observed(&cfg, &mut src, &mut placer, &policy, &mut obs)
+            .expect("streaming gate failed");
+    }
+    let wall_stream = t0.elapsed().as_secs_f64();
+    assert_eq!(pct.arrived(), n_stream as u64, "source under-delivered");
+    assert_eq!(pct.finished(), n_stream as u64, "jobs lost in the stream");
+    assert_eq!(pct.in_flight(), 0);
+
+    let rss = peak_rss_bytes();
+    if let Some(bytes) = rss {
+        // Bounded-RSS gate: generous (covers the batch run's 100k-job
+        // trace too), but far below what accidentally materializing 1M
+        // jobs' event strings or per-event observer state would cost.
+        assert!(
+            bytes < 4 * 1024 * 1024 * 1024,
+            "streaming run peak RSS {bytes} B — memory no longer bounded"
+        );
+    }
+    let rss_mb =
+        rss.map_or("n/a".to_string(), |b| format!("{:.0}", b as f64 / (1024.0 * 1024.0)));
+    let jct = pct.jct_stats();
+    let q = pct.queue_delay_stats();
+    let mut t = Table::new(
+        "scale smoke — streamed 1M jobs",
+        &["metric", "p50", "p95", "p99", "mean"],
+    );
+    t.row(&[
+        "JCT (s)".to_string(),
+        format!("{:.1}", jct.p50),
+        format!("{:.1}", jct.p95),
+        format!("{:.1}", jct.p99),
+        format!("{:.1}", jct.mean),
+    ]);
+    t.row(&[
+        "queue delay (s)".to_string(),
+        format!("{:.1}", q.p50),
+        format!("{:.1}", q.p95),
+        format!("{:.1}", q.p99),
+        format!("{:.1}", q.mean),
+    ]);
+    t.print();
+    println!(
+        "streamed {} jobs: {} events in {:.2} s ({:.2} Mev/s), makespan {:.0} s, peak RSS {} MB",
+        n_stream,
+        pct.n_events(),
+        wall_stream,
+        pct.n_events() as f64 / wall_stream / 1e6,
+        pct.makespan(),
+        rss_mb,
+    );
+
+    report.record_with_rss(&format!("{n_stream} jobs streamed"), pct.n_events(), wall_stream);
+    // Stable-label twin, same convention as the batch gate's.
+    report.record_with_rss("stream gate percentiles", pct.n_events(), wall_stream);
     print!("{}", report.delta_vs_committed());
     match report.write() {
         Ok(path) => println!("wrote {path}"),

@@ -9,7 +9,9 @@
 //!   the link-level fabric topology ([`net`]: flat / two-tier
 //!   oversubscribed / heterogeneous presets), LWF-κ and rack-locality
 //!   placement ([`placement`]), AdaDUAL/Ada-SRSF communication
-//!   scheduling ([`sched`]), the event-driven cluster simulator ([`sim`]),
+//!   scheduling ([`sched`]), the streaming job-source layer ([`source`]:
+//!   materialized, synthetic and CSV trace streams with unknown horizon),
+//!   the event-driven cluster simulator ([`sim`]),
 //!   the evaluation metrics ([`metrics`]) and the declarative
 //!   scenario/experiment API ([`scenario`]). A live multi-job training
 //!   coordinator ([`coordinator`]) drives real AOT-compiled training jobs
@@ -48,6 +50,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sched;
 pub mod sim;
+pub mod source;
 pub mod trace;
 pub mod util;
 
@@ -67,9 +70,13 @@ pub mod prelude {
     };
     pub use crate::sched::{self, AdaDual, Admission, CommPolicy, SrsfCap};
     pub use crate::sim::{
-        self, ContentionProfiler, JobPriority, JsonlSink, LegacyLog, MetricsObserver, Repricing,
-        SimConfig, SimEvent, SimObserver, SimResult, TimelineObserver,
+        self, ContentionProfiler, JobPriority, JsonlSink, LegacyLog, MetricsObserver,
+        PercentilesObserver, Repricing, SimConfig, SimEvent, SimObserver, SimResult,
+        StreamStats, TimelineObserver,
     };
-    pub use crate::trace::{self, JobSpec, TraceConfig};
+    pub use crate::source::{
+        self, CsvTraceSource, GeneratedSource, JobSource, VecSource,
+    };
+    pub use crate::trace::{self, JobSpec, JobStream, TraceConfig};
     pub use crate::util::bench::{bench, write_csv, Table};
 }

@@ -4,6 +4,7 @@
 //! Subcommands:
 //!   scenario-gen  [--grid] [--out FILE]                emit a scenario/grid JSON
 //!   trace-gen     --jobs N --seed S --out FILE         generate a workload trace
+//!   ingest        --csv FILE [--out FILE]              CSV trace -> trace JSON
 //!   simulate      [--scenario FILE | flags]            run one scenario
 //!   sweep         [--what AXIS | --grid] [--threads N] run a scenario grid
 //!   e2e           --jobs N --steps N [--no-pallas]     live coordinator run
@@ -31,6 +32,7 @@ fn main() -> ExitCode {
     let result = match args.subcommand.as_deref() {
         Some("scenario-gen") => cmd_scenario_gen(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
+        Some("ingest") => cmd_ingest(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("e2e") => cmd_e2e(&args),
@@ -68,6 +70,9 @@ fn print_help() {
          \x20            emit the paper scenario (or the full placer x policy\n\
          \x20            grid with --grid) as a starting-point JSON file\n\
          \x20 trace-gen  --jobs N --seed S [--out trace.json]   generate a workload\n\
+         \x20 ingest     --csv trace.csv [--out trace.json] [--max-jobs N]\n\
+         \x20            convert an Alibaba/Philly-style cluster-trace CSV into a\n\
+         \x20            committed trace JSON (sorted, rebased to t=0, re-id'd)\n\
          \x20 simulate   [--scenario F] [--trace F] [--placer lwf|lwf-rack|ff|ls|rand]\n\
          \x20            [--kappa K] [--policy ada|srsf1|srsf2|srsf3]\n\
          \x20            [--priority srsf|fifo|las] [--repricing at-admission|dynamic]\n\
@@ -89,6 +94,7 @@ fn print_help() {
          \x20 ddl-sched sweep --scenario scenarios/oversub_sweep.json --threads 8\n\
          \x20 ddl-sched simulate --placer lwf --policy ada --jobs 160\n\
          \x20 ddl-sched simulate --placer lwf-rack --oversub 4 --rack-size 4\n\
+         \x20 ddl-sched ingest --csv scenarios/sample_trace.csv --out trace.json\n\
          \x20 ddl-sched simulate --jobs 40 --events-out events.jsonl --timeline-out gantt.json"
     );
 }
@@ -173,6 +179,24 @@ fn cmd_trace_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ingest`: convert a raw cluster-trace CSV (Alibaba/Philly-style header
+/// names; column contract in docs/SCENARIOS.md §Trace sources) into a
+/// committed trace JSON — sorted by submit time, rebased to t = 0 and
+/// sequentially re-id'd — ready for `--trace F` or a scenario `file`
+/// source. `--max-jobs N` keeps only the first N jobs after sorting.
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let csv = args.require("csv")?;
+    let out = args.str_or("out", "trace.json");
+    let mut jobs = source::read_csv_jobs(csv)?;
+    jobs.truncate(args.usize_or("max-jobs", usize::MAX)?);
+    if jobs.is_empty() {
+        bail!("{csv}: no data rows to ingest");
+    }
+    std::fs::write(out, trace::to_json(&jobs))?;
+    println!("ingested {} jobs from {csv} into {out}", jobs.len());
+    Ok(())
+}
+
 /// `simulate --list`: the registry's algorithms and topology presets, so
 /// scenario authors stop grepping the source for valid names.
 fn cmd_list() -> Result<()> {
@@ -191,6 +215,9 @@ fn cmd_list() -> Result<()> {
     }
     for preset in net::TOPOLOGY_PRESETS {
         t.row(&["topology".into(), preset.to_string(), String::new()]);
+    }
+    for src in registry::TRACE_SOURCES {
+        t.row(&["trace-source".into(), src.to_string(), String::new()]);
     }
     t.print();
     println!(

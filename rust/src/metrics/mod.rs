@@ -24,12 +24,14 @@ pub struct Evaluation {
 impl Evaluation {
     pub fn from_sim(method: &str, res: &SimResult) -> Evaluation {
         let jcts: Vec<f64> = res.jct.iter().copied().filter(|t| t.is_finite()).collect();
-        assert!(!jcts.is_empty(), "no finished jobs");
+        // Zero finished jobs (empty trace, or all jobs still running at the
+        // horizon) yields an all-zero row rather than a panic.
+        let jct = if jcts.is_empty() { Summary::empty() } else { Summary::of(&jcts) };
         Evaluation {
             method: method.to_string(),
             avg_gpu_util: res.avg_gpu_util(),
             avg_alloc_util: res.avg_alloc_util(),
-            jct: Summary::of(&jcts),
+            jct,
             jct_cdf: stats::ecdf(&jcts),
             gpu_utils: res.gpu_utils(),
             makespan: res.makespan,
@@ -133,6 +135,24 @@ mod tests {
         assert_eq!(row.len(), 5);
         assert_eq!(row[0], "LWF-1");
         assert!(row[1].ends_with('%'));
+    }
+
+    #[test]
+    fn evaluation_of_zero_finished_jobs_is_all_zero() {
+        let mut res = fake_result();
+        res.jct = vec![f64::NAN; 4];
+        res.finish = vec![f64::NAN; 4];
+        res.makespan = 0.0;
+        let e = Evaluation::from_sim("X", &res);
+        assert_eq!(e.jct.n, 0);
+        assert_eq!(e.jct.mean, 0.0);
+        assert_eq!(e.jct.p95, 0.0);
+        assert!(e.jct_cdf.is_empty());
+        assert_eq!(e.avg_gpu_util, 0.0);
+        // Downstream consumers still work on the empty row.
+        assert_eq!(e.cdf_rows().len(), 0);
+        assert_eq!(e.table_row().len(), 5);
+        assert!(e.to_json().to_string().contains("\"avg_jct\""));
     }
 
     #[test]

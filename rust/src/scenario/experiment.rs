@@ -251,7 +251,9 @@ impl Experiment {
     /// `threads` workers pull scenarios from a shared counter. Either way
     /// the returned records are in grid order and identical. Each unique
     /// trace (source + effective seed) is resolved once and shared across
-    /// the grid cells that use it, not re-read/regenerated per cell.
+    /// the grid cells that use it, not re-read/regenerated per cell — a
+    /// `csv` source in particular is parsed and normalized exactly once
+    /// per sweep, however many cells replay it.
     pub fn run(&self, threads: usize) -> Result<Vec<RunRecord>> {
         let scenarios = self.grid()?;
         let mut cache: Vec<((TraceSource, Option<u64>), Arc<Vec<JobSpec>>)> = Vec::new();

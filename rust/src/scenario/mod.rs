@@ -3,7 +3,8 @@
 //! A [`Scenario`] names everything one simulation run needs: cluster shape,
 //! Eq (5) contention model, fabric topology (`net::TopologySpec`; the
 //! default `flat` preset is elided from JSON so paper-era files and
-//! records stay byte-stable), trace source (file | generated | inline),
+//! records stay byte-stable), trace source (file | generated | inline |
+//! csv),
 //! placer + κ, communication policy, job priority, repricing mode, the
 //! RNG seed, and optionally which observer sinks to attach
 //! ([`OutputSpec`]: JSONL event stream, per-GPU timeline, per-link
@@ -35,6 +36,7 @@ use crate::net::TopologySpec;
 use crate::placement::Placer;
 use crate::sched::CommPolicy;
 use crate::sim::{self, JobPriority, Repricing, SimConfig};
+use crate::source::{self, CsvTraceSource, JobSource, VecSource};
 use crate::trace::{self, JobSpec, TraceConfig};
 use crate::util::error::{Context, Error, Result};
 use crate::util::json::Json;
@@ -50,6 +52,12 @@ pub enum TraceSource {
     Generated { jobs: usize, seed: Option<u64> },
     /// Jobs spelled out inline in the scenario file.
     Inline(Vec<JobSpec>),
+    /// A raw cluster-trace CSV (Alibaba/Philly-style column names; see
+    /// docs/SCENARIOS.md for the column contract). Resolved through the
+    /// streaming CSV reader and normalized — sorted by submit time,
+    /// rebased to t = 0, re-id'd. `ddl-sched ingest` converts such a file
+    /// into a committed trace JSON for `file` sources.
+    Csv(String),
 }
 
 impl TraceSource {
@@ -68,10 +76,13 @@ impl TraceSource {
             TraceSource::Inline(jobs) => Json::obj()
                 .set("source", "inline")
                 .set("jobs", Json::Arr(jobs.iter().map(JobSpec::to_json).collect())),
+            TraceSource::Csv(path) => {
+                Json::obj().set("source", "csv").set("path", path.as_str())
+            }
         }
     }
 
-    fn from_json(v: &Json) -> Result<TraceSource, String> {
+    pub(crate) fn from_json(v: &Json) -> Result<TraceSource, String> {
         match v.req_str("source")? {
             "file" => Ok(TraceSource::File(v.req_str("path")?.to_string())),
             "generated" => Ok(TraceSource::Generated {
@@ -87,7 +98,8 @@ impl TraceSource {
                     arr.iter().map(JobSpec::from_json).collect::<Result<_, _>>()?,
                 ))
             }
-            other => Err(format!("unknown trace source '{other}' (file|generated|inline)")),
+            "csv" => Ok(TraceSource::Csv(v.req_str("path")?.to_string())),
+            other => Err(format!("unknown trace source '{other}' (file|generated|inline|csv)")),
         }
     }
 }
@@ -275,7 +287,29 @@ impl Scenario {
                 Ok(jobs)
             }
             TraceSource::Inline(jobs) => Ok(jobs.clone()),
+            TraceSource::Csv(path) => source::read_csv_jobs(path),
         }
+    }
+
+    /// Resolve the trace section into a streaming [`JobSource`] for
+    /// [`sim::simulate_stream`]. File / generated / inline sources
+    /// materialize exactly the jobs [`Scenario::jobs`] returns, so a
+    /// streamed run is bit-identical to the batch path (property-tested
+    /// in `sim::tests`); a `csv` source streams the file line-by-line and
+    /// never holds the full trace in memory.
+    pub fn job_source(&self) -> Result<Box<dyn JobSource>> {
+        if let TraceSource::Csv(path) = &self.trace {
+            return Ok(Box::new(CsvTraceSource::open(path)?));
+        }
+        let jobs = self.jobs()?;
+        if !jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival) {
+            return Err(Error::msg(format!(
+                "scenario '{}': trace is not arrival-sorted; streaming runs need source \
+                 order (sort the jobs, or convert with 'ddl-sched ingest')",
+                self.name
+            )));
+        }
+        Ok(Box::new(VecSource::new(jobs)))
     }
 
     /// The seed that actually drives a `Generated` trace; `None` for
@@ -559,6 +593,59 @@ mod tests {
         assert_eq!(s, back);
         assert_eq!(back.jobs().unwrap(), jobs);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_trace_source_roundtrip_load_and_stream() {
+        let path = std::env::temp_dir().join("ddl_sched_scenario_trace_test.csv");
+        std::fs::write(
+            &path,
+            "# anonymized sample\n\
+             job_id,submit_time,model,n_gpus,iterations\n\
+             j1,100.0,resnet50,2,30\n\
+             j2,103.5,vgg16,4,10\n",
+        )
+        .unwrap();
+        let s = Scenario {
+            trace: TraceSource::Csv(path.to_string_lossy().into_owned()),
+            ..Scenario::small("csv", 2, 2, 0)
+        };
+        let back = Scenario::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(s, back);
+        let jobs = s.jobs().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].arrival, 0.0); // rebased to t = 0
+        assert!((jobs[1].arrival - 3.5).abs() < 1e-12);
+        assert_eq!(jobs[0].model, DnnModel::ResNet50);
+        assert_eq!(jobs[1].n_gpus, 4);
+        // The streaming source yields exactly the batch jobs.
+        let streamed = crate::source::drain(s.job_source().unwrap().as_mut()).unwrap();
+        assert_eq!(streamed, jobs);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unknown_trace_source_lists_csv() {
+        let text = Scenario::paper().to_json_text().replace("\"generated\"", "\"parquet\"");
+        let e = Scenario::from_text(&text).unwrap_err().to_string();
+        assert!(e.contains("file|generated|inline|csv"), "{e}");
+    }
+
+    #[test]
+    fn job_source_matches_jobs_for_generated_and_inline() {
+        let s = Scenario::small("src", 2, 2, 10);
+        let streamed = crate::source::drain(s.job_source().unwrap().as_mut()).unwrap();
+        assert_eq!(streamed, s.jobs().unwrap());
+        // Unsorted inline traces are rejected with a pointer to ingest.
+        let s = Scenario {
+            trace: TraceSource::Inline(vec![
+                JobSpec { id: 0, arrival: 9.0, model: DnnModel::Vgg16, n_gpus: 1, iterations: 5 },
+                JobSpec { id: 1, arrival: 2.0, model: DnnModel::Vgg16, n_gpus: 1, iterations: 5 },
+            ]),
+            ..Scenario::small("unsorted", 2, 2, 0)
+        };
+        let e = s.job_source().unwrap_err().to_string();
+        assert!(e.contains("arrival-sorted"), "{e}");
     }
 
     #[test]

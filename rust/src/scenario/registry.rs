@@ -23,6 +23,11 @@ pub const PAPER_PLACERS: [&str; 4] = ["rand", "ff", "ls", "lwf"];
 /// Canonical policy names, in paper presentation order (Table V).
 pub const POLICIES: [&str; 4] = ["srsf1", "srsf2", "srsf3", "ada"];
 
+/// Trace-source kinds a scenario's `trace.source` field accepts
+/// (docs/SCENARIOS.md §Trace sources). `csv` streams a raw cluster-trace
+/// dump; `ddl-sched ingest` converts one into a committed `file` trace.
+pub const TRACE_SOURCES: [&str; 4] = ["file", "generated", "inline", "csv"];
+
 /// Resolve a placer name or alias to its canonical form.
 pub fn canonical_placer(name: &str) -> Option<&'static str> {
     match name {
@@ -125,6 +130,25 @@ mod tests {
             let p = make_policy(name, cm).unwrap();
             assert!(!p.name().is_empty());
         }
+    }
+
+    #[test]
+    fn every_trace_source_kind_parses() {
+        use crate::scenario::TraceSource;
+        use crate::util::json::Json;
+        // The registry list and the TraceSource parser must agree: every
+        // listed kind is recognized (even if its payload is then missing).
+        for kind in TRACE_SOURCES {
+            let v = Json::obj().set("source", kind);
+            let err = match TraceSource::from_json(&v) {
+                Ok(_) => continue,
+                Err(e) => e.to_string(),
+            };
+            assert!(!err.contains("unknown trace source"), "'{kind}' not recognized: {err}");
+        }
+        let v = Json::obj().set("source", "parquet");
+        let err = TraceSource::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("file|generated|inline|csv"), "{err}");
     }
 
     #[test]

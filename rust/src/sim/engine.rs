@@ -3,18 +3,31 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::bail;
 use crate::cluster::{ClusterSpec, ClusterState, FreeGpuIndex, GpuId};
 use crate::model::CommModel;
 use crate::net::{links_intersect, LinkId, Topology, TopologySpec};
 use crate::placement::Placer;
 use crate::sched::{srsf_cmp, Admission, CommPolicy, JobQueue, NetView};
+use crate::source::JobSource;
 use crate::trace::JobSpec;
+use crate::util::error::Result;
 
 use super::observe::{
     LegacyLog, MetricsObserver, RunStats, SimEvent, SimObserver, TaskPhase as Phase,
 };
 
 const EPS: f64 = 1e-9;
+
+/// Sequence-number domain split for streaming runs. The batch path pushes
+/// every arrival up front with `seq = job index` and then counts runtime
+/// events from `jobs.len()`; a streaming run doesn't know the trace length,
+/// so arrival events keep `seq = job index` while runtime events count up
+/// from this base. The heap pops by `(t, seq)`, so this preserves the batch
+/// path's order bit-for-bit: at equal timestamps an arrival still precedes
+/// every runtime event (`index < RUNTIME_BASE <= runtime seq`), arrivals
+/// keep their id order, and runtime events keep their push order.
+const RUNTIME_BASE: u64 = 1 << 63;
 
 /// How a transfer's rate reacts to contention changes mid-flight.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -396,7 +409,58 @@ pub fn simulate_observed(
     for o in observers.iter_mut() {
         o.on_start(cfg, jobs);
     }
-    Engine::new(cfg, jobs, observers).run(placer, policy);
+    Engine::new(cfg, jobs, observers)
+        .run(placer, policy)
+        .expect("batch simulation cannot fail: no job source to error");
+}
+
+/// Run one simulation fed by a streaming [`JobSource`] instead of a
+/// materialized trace: the engine pulls the next job lazily whenever an
+/// arrival is processed, so the heap holds at most one pending arrival and
+/// memory stays bounded by the jobs *in flight*, not the trace length.
+/// Job ids are assigned in pull order (the source's ids are overwritten);
+/// arrivals must be nondecreasing and finite or the run errors out.
+///
+/// Fed the same (arrival-sorted, sequentially-id'd) jobs, results are
+/// bit-identical to [`simulate`] — property-tested across topologies,
+/// priorities and admission policies.
+pub fn simulate_stream(
+    cfg: &SimConfig,
+    source: &mut dyn JobSource,
+    placer: &mut dyn Placer,
+    policy: &dyn CommPolicy,
+) -> Result<SimResult> {
+    let mut metrics = MetricsObserver::new();
+    if cfg.log_events {
+        let mut log = LegacyLog::new();
+        {
+            let mut obs: [&mut dyn SimObserver; 2] = [&mut metrics, &mut log];
+            simulate_stream_observed(cfg, source, placer, policy, &mut obs)?;
+        }
+        let mut res = metrics.into_result();
+        res.events = log.into_events();
+        Ok(res)
+    } else {
+        let mut obs: [&mut dyn SimObserver; 1] = [&mut metrics];
+        simulate_stream_observed(cfg, source, placer, policy, &mut obs)?;
+        Ok(metrics.into_result())
+    }
+}
+
+/// Streaming counterpart of [`simulate_observed`]. `on_start` receives an
+/// empty job slice — the horizon is unknown — so per-job observers must
+/// size their state on demand (every observer in this crate does).
+pub fn simulate_stream_observed(
+    cfg: &SimConfig,
+    source: &mut dyn JobSource,
+    placer: &mut dyn Placer,
+    policy: &dyn CommPolicy,
+    observers: &mut [&mut dyn SimObserver],
+) -> Result<()> {
+    for o in observers.iter_mut() {
+        o.on_start(cfg, &[]);
+    }
+    Engine::new_streaming(cfg, source, observers).run(placer, policy)
 }
 
 /// Fan one event out to every attached observer.
@@ -520,6 +584,15 @@ struct Engine<'a, 'o> {
     /// Set when a job finished (memory freed) so the event loop re-attempts
     /// placement of queued jobs.
     need_place: bool,
+    /// Streaming mode: the job source polled at arrival boundaries.
+    /// `None` in batch mode, where every arrival is pre-seeded.
+    source: Option<&'a mut (dyn JobSource + 'a)>,
+    /// True once the source reported exhaustion (always true in batch
+    /// mode): together with `unfinished == 0` this ends the run.
+    drained: bool,
+    /// Last pulled arrival time — enforces the source's nondecreasing
+    /// contract.
+    last_arrival: f64,
 }
 
 impl<'a, 'o> Engine<'a, 'o> {
@@ -603,7 +676,98 @@ impl<'a, 'o> Engine<'a, 'o> {
             unfinished: jobs.len(),
             need_place: false,
             jobs: rt,
+            source: None,
+            drained: true,
+            last_arrival: f64::NEG_INFINITY,
         }
+    }
+
+    /// Streaming-mode constructor: no pre-seeded jobs; arrivals are pulled
+    /// from `source` one at a time (see [`simulate_stream_observed`]).
+    fn new_streaming(
+        cfg: &'a SimConfig,
+        source: &'a mut dyn JobSource,
+        observers: &'a mut [&'o mut (dyn SimObserver + 'o)],
+    ) -> Engine<'a, 'o> {
+        let mut eng = Engine::new(cfg, &[], observers);
+        // The trace's memory demands are unknown up front; per-GPU demand
+        // is a function of the model alone, so registering every zoo
+        // model's footprint keeps the capacity gate exact for any
+        // streamed job.
+        eng.capacity = FreeGpuIndex::new(
+            crate::model::ALL_MODELS.iter().map(|m| m.spec().mem_bytes).collect(),
+            &eng.cluster,
+        );
+        eng.seq = RUNTIME_BASE;
+        eng.source = Some(source);
+        eng.drained = false;
+        eng
+    }
+
+    /// Register a streamed job: validate the source contract, assign the
+    /// next id, build runtime state, grow the per-job side tables. Returns
+    /// the id and arrival time for the arrival event.
+    fn add_job(&mut self, mut spec: JobSpec) -> Result<(usize, f64)> {
+        if !spec.arrival.is_finite() {
+            bail!("job source yielded a non-finite arrival time {}", spec.arrival);
+        }
+        if spec.arrival < self.last_arrival {
+            bail!(
+                "job source violated its ordering contract: arrival {} after {}",
+                spec.arrival,
+                self.last_arrival
+            );
+        }
+        self.last_arrival = spec.arrival;
+        let id = self.jobs.len();
+        debug_assert!((id as u64) < RUNTIME_BASE, "job-id seq domain exhausted");
+        spec.id = id;
+        let arrival = spec.arrival;
+        let peak = self.cfg.cluster.gpu_peak_gflops;
+        let m = crate::model::PerfModel::for_model(spec.model);
+        let b = spec.model.spec().batch_size;
+        self.jobs.push(JobRt {
+            t_fwd: m.t_fwd(b, peak),
+            t_bwd: m.t_bwd(b, peak),
+            spec,
+            gpus: Vec::new(),
+            links: Vec::new(),
+            multi_server: false,
+            t_comm_free: 0.0,
+            iters_done: 0,
+            bwd_remaining: 0,
+            comm_pending: false,
+            load_per_iter: 0.0,
+            load_total: 0.0,
+            placed_seq: 0,
+            ff: None,
+            ff_version: 0,
+        });
+        self.place_stamp.push(u64::MAX);
+        self.running_multi_pos.push(usize::MAX);
+        self.ff_pos.push(usize::MAX);
+        self.unfinished += 1;
+        Ok((id, arrival))
+    }
+
+    /// Streaming mode: pull the next job from the source and schedule its
+    /// arrival. Called once at run start and once per processed arrival,
+    /// so the heap holds at most one pending arrival at any time.
+    fn pull_next(&mut self) -> Result<()> {
+        let Some(src) = self.source.as_mut() else {
+            return Ok(());
+        };
+        match src.next_job()? {
+            Some(spec) => {
+                let (id, arrival) = self.add_job(spec)?;
+                // Arrival events live in the job-index seq domain (below
+                // RUNTIME_BASE) — matching the batch path's pre-seeded
+                // `seq = i` pushes, not the runtime counter.
+                self.heap.push(Timed { t: arrival, seq: id as u64, ev: Ev::Arrive { job: id } });
+            }
+            None => self.drained = true,
+        }
+        Ok(())
     }
 
     fn push(&mut self, t: f64, ev: Ev) {
@@ -611,10 +775,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.heap.push(Timed { t, seq: self.seq, ev });
     }
 
-    fn run(mut self, placer: &mut dyn Placer, policy: &dyn CommPolicy) {
+    fn run(mut self, placer: &mut dyn Placer, policy: &dyn CommPolicy) -> Result<()> {
+        // Streaming mode: prime the first arrival (no-op in batch mode).
+        self.pull_next()?;
         let mut t_end = 0.0;
         while let Some(Timed { t, ev, .. }) = self.heap.pop() {
-            if self.unfinished == 0 {
+            if self.unfinished == 0 && self.drained {
                 break;
             }
             t_end = t;
@@ -633,6 +799,10 @@ impl<'a, 'o> Engine<'a, 'o> {
             }
             match ev {
                 Ev::Arrive { job } => {
+                    // Streaming: replace the consumed pending arrival
+                    // before processing, so same-timestamp arrivals keep
+                    // the batch path's pop order.
+                    self.pull_next()?;
                     emit(&mut *self.observers, SimEvent::JobArrived { t, job });
                     let key = self.queue_key(job);
                     self.queue.insert(key, job);
@@ -694,6 +864,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         for o in self.observers.iter_mut() {
             o.on_end(&stats);
         }
+        Ok(())
     }
 
     // -- priorities -----------------------------------------------------------
@@ -977,6 +1148,11 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.queue_eligible = self.queue.len();
         self.need_place = true;
         emit(&mut *self.observers, SimEvent::JobFinished { t, job });
+        // A finished job is never scheduled, priced or placed again:
+        // drop its heap-allocated placement state so a streamed run's
+        // per-finished-job footprint is the flat JobRt alone.
+        self.jobs[job].gpus = Vec::new();
+        self.jobs[job].links = Vec::new();
     }
 
     // -- steady-state fast-forwarding -----------------------------------------

@@ -51,15 +51,27 @@
 //! coalescing interaction, consumer guidance — in docs/EXPERIMENTS.md
 //! §Observers.
 
+//! Streaming mode ([`simulate_stream`] / [`simulate_stream_observed`]):
+//! instead of pre-seeding every arrival from a materialized `Vec`, the
+//! engine polls a [`source::JobSource`](crate::source::JobSource) at
+//! arrival boundaries — the heap holds at most one pending arrival, the
+//! horizon is unknown until the source reports exhaustion, and memory is
+//! bounded by jobs in flight plus a flat per-seen-job record. Fed the same
+//! normalized trace, streamed results are bit-identical to the batch path
+//! (property-tested across topologies × priorities × policies in `tests`).
+//! Pair with [`observe::PercentilesObserver`] for constant-memory tail
+//! metrics over million-job replays (docs/EXPERIMENTS.md §Streaming).
+
 mod engine;
 pub mod observe;
 
 pub use engine::{
-    simulate, simulate_observed, EventLog, JobPriority, Repricing, SimConfig, SimResult,
+    simulate, simulate_observed, simulate_stream, simulate_stream_observed, EventLog,
+    JobPriority, Repricing, SimConfig, SimResult,
 };
 pub use observe::{
-    ContentionProfiler, JsonlSink, LegacyLog, MetricsObserver, RunStats, SimEvent, SimObserver,
-    TaskPhase, TimelineObserver, TimelineSpan,
+    ContentionProfiler, JsonlSink, LegacyLog, MetricsObserver, PercentilesObserver, RunStats,
+    SimEvent, SimObserver, StreamStats, TaskPhase, TimelineObserver, TimelineSpan,
 };
 
 #[cfg(test)]

@@ -25,17 +25,27 @@
 //! * [`TimelineObserver`] — per-GPU Gantt rows (job allocation spans).
 //! * [`ContentionProfiler`] — per-link time-at-contention-level
 //!   histograms for paper-style figures.
+//! * [`PercentilesObserver`] — constant-memory streaming p50/p95/p99 of
+//!   JCT and queueing delay (P² estimators), for open-ended
+//!   [`simulate_stream`](super::simulate_stream) runs where per-job
+//!   vectors would defeat the point.
+//!
+//! Every observer sizes its per-job state on demand (not from `on_start`'s
+//! job slice), because streaming runs pass an empty slice there — the
+//! horizon is unknown.
 //!
 //! Hook order, the coalescing interaction (reconciliation can emit
 //! batches stamped with past timestamps) and consumer guidance are
 //! documented in docs/EXPERIMENTS.md §Observers.
 
+use std::collections::HashMap;
 use std::io::{self, Write};
 
 use crate::cluster::GpuId;
 use crate::net::LinkId;
 use crate::trace::JobSpec;
 use crate::util::json::Json;
+use crate::util::stats::P2Quantile;
 
 use super::engine::{iter_bounds, EventLog, SimConfig, SimResult};
 
@@ -274,6 +284,19 @@ impl MetricsObserver {
         self.n_events
     }
 
+    /// Ensure the per-job vectors cover `job`. Batch runs pre-size in
+    /// `on_start`; streaming runs grow here as arrivals come in.
+    fn grow_job(&mut self, job: usize) {
+        if self.arrival.len() <= job {
+            let n = job + 1;
+            self.arrival.resize(n, f64::NAN);
+            self.jct.resize(n, f64::NAN);
+            self.finish.resize(n, f64::NAN);
+            self.queue_wait.resize(n, f64::NAN);
+            self.job_gpus.resize(n, Vec::new());
+        }
+    }
+
     /// Assemble the compatibility [`SimResult`]. `events` is empty —
     /// attach a [`LegacyLog`] alongside when the formatted log is wanted.
     pub fn into_result(self) -> SimResult {
@@ -318,6 +341,14 @@ impl SimObserver for MetricsObserver {
 
     fn on_event(&mut self, ev: &SimEvent<'_>) {
         match *ev {
+            SimEvent::JobArrived { t, job } => {
+                // In a batch run this rewrites the pre-sized slot with the
+                // very value it holds (the arrival event's timestamp IS
+                // the spec's arrival, bit for bit); in a streaming run it
+                // is what sizes the vectors.
+                self.grow_job(job);
+                self.arrival[job] = t;
+            }
             SimEvent::JobPlaced { t, job, gpus, .. } => {
                 self.queue_wait[job] = t - self.arrival[job];
                 self.job_gpus[job] = gpus.to_vec();
@@ -332,6 +363,9 @@ impl SimObserver for MetricsObserver {
                 for &g in &self.job_gpus[job] {
                     self.last_release[g] = self.last_release[g].max(t);
                 }
+                // The GPU list has served its purpose (the release-time
+                // fold above); keep finished jobs' footprint flat.
+                self.job_gpus[job] = Vec::new();
             }
             SimEvent::ComputeStarted { gpu, dur, .. } => {
                 self.gpu_busy[gpu] += dur;
@@ -557,10 +591,13 @@ impl SimObserver for TimelineObserver {
     fn on_event(&mut self, ev: &SimEvent<'_>) {
         match *ev {
             SimEvent::JobPlaced { t, job, gpus, .. } => {
+                if self.placed.len() <= job {
+                    self.placed.resize(job + 1, None);
+                }
                 self.placed[job] = Some((t, gpus.to_vec()));
             }
             SimEvent::JobFinished { t, job } => {
-                if let Some((start, gpus)) = self.placed[job].take() {
+                if let Some((start, gpus)) = self.placed.get_mut(job).and_then(Option::take) {
                     for gpu in gpus {
                         self.spans.push(TimelineSpan { gpu, job, start, end: t });
                     }
@@ -674,5 +711,203 @@ impl SimObserver for ContentionProfiler {
             self.add(link, cur, dt);
             self.last_t[link] = stats.t_end.max(self.last_t[link]);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Snapshot of one streamed distribution: count, mean, extremes and the
+/// P²-estimated p50/p95/p99. All statistics are 0.0 at count 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamStats {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// One streamed distribution: exact count/mean/min/max plus three P²
+/// quantile markers — constant memory per sample stream.
+struct StreamDist {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    p50: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl StreamDist {
+    fn new() -> StreamDist {
+        StreamDist {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            p50: P2Quantile::new(0.50),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+
+    fn observe(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.p50.observe(x);
+        self.p95.observe(x);
+        self.p99.observe(x);
+    }
+
+    fn stats(&self) -> StreamStats {
+        if self.count == 0 {
+            return StreamStats {
+                count: 0,
+                mean: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            };
+        }
+        StreamStats {
+            count: self.count,
+            mean: self.sum / self.count as f64,
+            min: self.min,
+            max: self.max,
+            p50: self.p50.value().unwrap_or(0.0),
+            p95: self.p95.value().unwrap_or(0.0),
+            p99: self.p99.value().unwrap_or(0.0),
+        }
+    }
+}
+
+/// Constant-memory tail-latency observer for open-ended streamed runs:
+/// p50/p95/p99 of JCT and of queueing delay (arrival → placement) via P²
+/// estimators, plus exact counts, means and extremes. State is
+/// O(jobs in flight) — arrival timestamps are held only between a job's
+/// `JobArrived` and its `JobFinished` — so a million-job replay reports
+/// tails without a million-entry vector anywhere.
+///
+/// Means alone are the wrong summary at this scale: an open stream near
+/// saturation has heavy-tailed waiting, and the scheduler differences the
+/// paper cares about (Ada-SRSF's long-job protection) live in the tail.
+pub struct PercentilesObserver {
+    /// Arrival time per in-flight job; removed at finish.
+    arrival: HashMap<usize, f64>,
+    jct: StreamDist,
+    queue_delay: StreamDist,
+    arrived: u64,
+    makespan: f64,
+    n_events: u64,
+}
+
+impl Default for PercentilesObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PercentilesObserver {
+    pub fn new() -> PercentilesObserver {
+        PercentilesObserver {
+            arrival: HashMap::new(),
+            jct: StreamDist::new(),
+            queue_delay: StreamDist::new(),
+            arrived: 0,
+            makespan: 0.0,
+            n_events: 0,
+        }
+    }
+
+    /// JCT distribution over finished jobs.
+    pub fn jct_stats(&self) -> StreamStats {
+        self.jct.stats()
+    }
+
+    /// Queueing-delay (arrival → placement) distribution over placed jobs.
+    pub fn queue_delay_stats(&self) -> StreamStats {
+        self.queue_delay.stats()
+    }
+
+    /// Jobs that arrived over the run.
+    pub fn arrived(&self) -> u64 {
+        self.arrived
+    }
+
+    /// Finished-job count (== `jct_stats().count`).
+    pub fn finished(&self) -> u64 {
+        self.jct.count
+    }
+
+    /// Jobs arrived but not yet finished when the run ended.
+    pub fn in_flight(&self) -> usize {
+        self.arrival.len()
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    pub fn n_events(&self) -> u64 {
+        self.n_events
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn dist(s: StreamStats) -> Json {
+            Json::obj()
+                .set("count", s.count)
+                .set("mean", s.mean)
+                .set("min", s.min)
+                .set("max", s.max)
+                .set("p50", s.p50)
+                .set("p95", s.p95)
+                .set("p99", s.p99)
+        }
+        Json::obj()
+            .set("arrived", self.arrived)
+            .set("finished", self.finished())
+            .set("in_flight", self.in_flight())
+            .set("makespan", self.makespan)
+            .set("n_events", self.n_events)
+            .set("jct", dist(self.jct_stats()))
+            .set("queue_delay", dist(self.queue_delay_stats()))
+    }
+}
+
+impl SimObserver for PercentilesObserver {
+    fn on_start(&mut self, _cfg: &SimConfig, _jobs: &[JobSpec]) {
+        *self = PercentilesObserver::new();
+    }
+
+    fn on_event(&mut self, ev: &SimEvent<'_>) {
+        match *ev {
+            SimEvent::JobArrived { t, job } => {
+                self.arrived += 1;
+                self.arrival.insert(job, t);
+            }
+            SimEvent::JobPlaced { t, job, .. } => {
+                if let Some(&a) = self.arrival.get(&job) {
+                    self.queue_delay.observe(t - a);
+                }
+            }
+            SimEvent::JobFinished { t, job } => {
+                if let Some(a) = self.arrival.remove(&job) {
+                    self.jct.observe(t - a);
+                }
+                self.makespan = self.makespan.max(t);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_end(&mut self, stats: &RunStats) {
+        self.n_events = stats.n_events;
     }
 }

@@ -1213,6 +1213,130 @@ fn fast_forward_lifecycle_events_emitted() {
     assert!(watch.coalesced_iters > 0);
 }
 
+// ---------------------------------------------------------------------------
+// streaming mode: polling a JobSource at arrival boundaries must be
+// bit-identical to pre-seeding the whole trace (the batch path), and the
+// constant-memory percentile observer must agree with exact statistics.
+
+#[test]
+fn prop_streaming_source_matches_batch_run() {
+    // Random normalized traces × {flat, two-tier} × {srsf, fifo, las} ×
+    // both repricings × both policy families × coalescing on/off: a
+    // VecSource-fed streaming run must reproduce the batch run's
+    // SimResult field-for-field, event-count-for-event-count and legacy
+    // log line-for-line.
+    prop_check(20, |g| {
+        let (mut c, mut jobs, use_ada, cap) = random_setup(g);
+        c.coalescing = g.bool();
+        // The contract's precondition: "same jobs" means the normalized
+        // (arrival-sorted, sequentially-id'd) trace every source yields.
+        crate::source::normalize(&mut jobs);
+        let batch = run_policy(&c, &jobs, use_ada, cap);
+        let mut src = crate::source::VecSource::new(jobs.clone());
+        let mut p = LwfPlacer::new(1);
+        let streamed = if use_ada {
+            simulate_stream(&c, &mut src, &mut p, &AdaDual { model: c.comm })
+        } else {
+            simulate_stream(&c, &mut src, &mut p, &SrsfCap { cap })
+        }
+        .map_err(|e| format!("streaming run failed: {e}"))?;
+        check_equivalent(&streamed, &batch)?;
+        if streamed.n_events != batch.n_events {
+            return Err(format!(
+                "n_events diverged: streamed {} vs batch {}",
+                streamed.n_events, batch.n_events
+            ));
+        }
+        logs_eq("streamed vs batch", &streamed.events, &batch.events)
+    });
+}
+
+#[test]
+fn streaming_empty_source_completes_cleanly() {
+    let c = cfg(2, 2);
+    let mut src = crate::source::VecSource::new(Vec::new());
+    let mut p = LwfPlacer::new(1);
+    let res = simulate_stream(&c, &mut src, &mut p, &AdaDual { model: c.comm }).unwrap();
+    assert!(res.jct.is_empty());
+    assert_eq!(res.makespan, 0.0);
+    assert_eq!(res.n_events, 0);
+    // The zero-job result evaluates without panicking (satellite of the
+    // empty-percentile fix).
+    let e = crate::metrics::Evaluation::from_sim("empty", &res);
+    assert_eq!(e.jct.n, 0);
+}
+
+#[test]
+fn streaming_rejects_out_of_order_sources() {
+    // A source that breaks its ordering contract mid-stream must surface
+    // a clean error, not corrupt the schedule.
+    struct Backwards {
+        left: Vec<JobSpec>,
+    }
+    impl crate::source::JobSource for Backwards {
+        fn next_job(&mut self) -> crate::util::error::Result<Option<JobSpec>> {
+            Ok(self.left.pop())
+        }
+    }
+    let c = cfg(1, 2);
+    let mut src = Backwards {
+        left: vec![
+            job(0, 5.0, DnnModel::ResNet50, 1, 5), // popped second: goes backwards
+            job(1, 9.0, DnnModel::ResNet50, 1, 5),
+        ],
+    };
+    let mut p = LwfPlacer::new(1);
+    let e = simulate_stream(&c, &mut src, &mut p, &AdaDual { model: c.comm })
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("ordering contract"), "{e}");
+}
+
+#[test]
+fn percentiles_observer_matches_exact_metrics() {
+    // Stream a small trace with both the exact metrics observer and the
+    // constant-memory percentile observer attached: counts, means and
+    // (below the P² cutover of 5 samples) exact quantiles must agree.
+    let c = cfg(2, 2);
+    let mut jobs = trace::generate(&TraceConfig::scaled(4, 7));
+    // The scaled histogram can emit jobs wider than this 4-GPU cluster;
+    // clamp (as Scenario::jobs does) so every job places and finishes.
+    for j in &mut jobs {
+        j.n_gpus = j.n_gpus.min(c.cluster.n_gpus());
+    }
+    crate::source::normalize(&mut jobs);
+    let mut metrics = MetricsObserver::new();
+    let mut pct = PercentilesObserver::new();
+    {
+        let mut src = crate::source::VecSource::new(jobs.clone());
+        let mut obs: [&mut dyn SimObserver; 2] = [&mut metrics, &mut pct];
+        let mut p = LwfPlacer::new(1);
+        simulate_stream_observed(&c, &mut src, &mut p, &AdaDual { model: c.comm }, &mut obs)
+            .unwrap();
+    }
+    let exact = metrics.into_result();
+    let jcts: Vec<f64> = exact.jct.iter().copied().filter(|t| t.is_finite()).collect();
+    assert_eq!(jcts.len(), jobs.len(), "not every job finished");
+    let s = pct.jct_stats();
+    assert_eq!(pct.arrived(), jobs.len() as u64);
+    assert_eq!(pct.finished(), jobs.len() as u64);
+    assert_eq!(pct.in_flight(), 0);
+    assert_eq!(s.count, jobs.len() as u64);
+    let mean = jcts.iter().sum::<f64>() / jcts.len() as f64;
+    assert!((s.mean - mean).abs() < 1e-9, "{} vs {mean}", s.mean);
+    let p50 = crate::util::stats::try_percentile(&jcts, 50.0).unwrap();
+    assert!((s.p50 - p50).abs() < 1e-9, "{} vs {p50}", s.p50);
+    assert_eq!(pct.makespan().to_bits(), exact.makespan.to_bits());
+    assert_eq!(pct.n_events(), exact.n_events);
+    // Queue delay is place-time minus arrival; with 4 jobs it is exact too.
+    let q = pct.queue_delay_stats();
+    assert_eq!(q.count, jobs.len() as u64);
+    assert!(q.min >= 0.0);
+    // The JSON snapshot parses and carries both distributions.
+    let v = crate::util::json::Json::parse(&pct.to_json().to_string()).unwrap();
+    assert!(v.get("jct").is_some() && v.get("queue_delay").is_some());
+}
+
 #[test]
 fn two_tier_contention_meets_on_the_core_link() {
     // Two jobs on disjoint server pairs but both crossing racks: their

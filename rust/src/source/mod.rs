@@ -1,0 +1,609 @@
+//! Streaming job sources — the layer between traces and the engine.
+//!
+//! The paper's evaluation drains a fully materialized 160-job trace, but a
+//! production scheduler sees an *open-ended* arrival stream with unknown
+//! horizon. [`JobSource`] is the pull-based abstraction the engine polls at
+//! arrival boundaries: `next_job()` yields `JobSpec`s with nondecreasing
+//! arrival times, `Ok(None)` once the stream is exhausted. Implementations:
+//!
+//! - [`VecSource`] — adapter over a materialized trace (the batch path).
+//! - [`GeneratedSource`] — the synthetic workload as an O(1)-memory open
+//!   stream (gap-process arrivals, i.i.d. size/iteration/model marginals).
+//! - [`CsvTraceSource`] — Alibaba/Philly-style cluster-trace CSVs, streamed
+//!   line-by-line with bounded RSS.
+//!
+//! Contract: arrivals are nondecreasing and finite (the engine re-checks
+//! and errors on violation), and job ids are assigned by the consumer in
+//! pull order — sources need not produce meaningful ids.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use crate::bail;
+use crate::model::{DnnModel, ALL_MODELS, V100_PEAK_GFLOPS};
+use crate::trace::{JobSpec, TraceConfig};
+use crate::util::error::{Context, Result};
+use crate::util::rng::Pcg;
+
+/// A pull-based stream of jobs with unknown horizon.
+pub trait JobSource {
+    /// Pull the next job, or `Ok(None)` when the stream is exhausted (and
+    /// on every call thereafter). Arrivals must be nondecreasing.
+    fn next_job(&mut self) -> Result<Option<JobSpec>>;
+
+    /// Jobs remaining, when the source knows (materialized traces do;
+    /// open streams return `None`).
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Drain a (finite!) source into a `Vec`. Calling this on an uncapped
+/// [`GeneratedSource`] never returns.
+pub fn drain(source: &mut dyn JobSource) -> Result<Vec<JobSpec>> {
+    let mut out = Vec::with_capacity(source.size_hint().unwrap_or(0));
+    while let Some(j) = source.next_job()? {
+        out.push(j);
+    }
+    Ok(out)
+}
+
+/// Normalize a trace into source order in place: stable-sort by arrival,
+/// rebase so the first arrival is t = 0, re-id sequentially. This is the
+/// canonical form every source yields and the batch engine path expects.
+pub fn normalize(jobs: &mut [JobSpec]) {
+    jobs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    let t0 = jobs.first().map(|j| j.arrival).unwrap_or(0.0);
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i;
+        j.arrival -= t0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VecSource
+// ---------------------------------------------------------------------------
+
+/// Adapter over a materialized, arrival-sorted trace.
+pub struct VecSource {
+    jobs: Vec<JobSpec>,
+    next: usize,
+}
+
+impl VecSource {
+    /// Wrap an already arrival-sorted trace (e.g. the output of
+    /// `trace::generate` or a committed scenario trace).
+    pub fn new(jobs: Vec<JobSpec>) -> VecSource {
+        debug_assert!(
+            jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "VecSource::new expects arrival-sorted jobs; use from_unsorted"
+        );
+        VecSource { jobs, next: 0 }
+    }
+
+    /// Wrap an arbitrary trace, normalizing it first (stable sort by
+    /// arrival, rebase to t = 0, sequential ids).
+    pub fn from_unsorted(mut jobs: Vec<JobSpec>) -> VecSource {
+        normalize(&mut jobs);
+        VecSource { jobs, next: 0 }
+    }
+}
+
+impl JobSource for VecSource {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        if self.next >= self.jobs.len() {
+            return Ok(None);
+        }
+        let j = self.jobs[self.next].clone();
+        self.next += 1;
+        Ok(Some(j))
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.jobs.len() - self.next)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GeneratedSource
+// ---------------------------------------------------------------------------
+
+/// The synthetic workload as an open stream with O(1) state.
+///
+/// Arrival gaps are uniform in `[0, 2·mean_gap)` where `mean_gap =
+/// horizon / n_jobs(cfg)` — the same mean arrival rate as the batch
+/// generator. GPU counts are drawn i.i.d. by histogram weight; iterations
+/// and model match the batch marginals exactly.
+///
+/// This is *statistically* matched to `trace::generate`, not byte-identical:
+/// the batch generator draws all arrivals then sorts, which no lazy
+/// bounded-memory stream can reproduce. For a byte-identical lazy view of
+/// the batch draws (unsorted, bounded by the histogram) see
+/// `trace::JobStream`; for bit-identical streaming-vs-batch *engine* runs,
+/// feed the same normalized trace through [`VecSource`].
+pub struct GeneratedSource {
+    rng: Pcg,
+    t: f64,
+    mean_gap: f64,
+    /// (n_gpus, cumulative weight) for the size draw.
+    cum_hist: Vec<(usize, u64)>,
+    total_weight: u64,
+    iter_range: (u64, u64),
+    /// Jobs still to emit; `None` = unbounded.
+    remaining: Option<usize>,
+    count: usize,
+}
+
+impl GeneratedSource {
+    /// `cap = Some(n)` emits exactly `n` jobs; `None` streams forever.
+    pub fn new(cfg: &TraceConfig, cap: Option<usize>) -> GeneratedSource {
+        let n = cfg.n_jobs();
+        assert!(n > 0, "GeneratedSource needs a non-empty gpu_histogram");
+        let mut cum = 0u64;
+        let cum_hist: Vec<(usize, u64)> = cfg
+            .gpu_histogram
+            .iter()
+            .filter(|&&(_, c)| c > 0)
+            .map(|&(g, c)| {
+                cum += c as u64;
+                (g, cum)
+            })
+            .collect();
+        GeneratedSource {
+            // Distinct stream id from trace::generate's 0x7ace: this is an
+            // open stream, not a replay of the batch draws.
+            rng: Pcg::new(cfg.seed, 0x57ea),
+            t: 0.0,
+            mean_gap: cfg.horizon / n as f64,
+            cum_hist,
+            total_weight: cum,
+            iter_range: cfg.iter_range,
+            remaining: cap,
+            count: 0,
+        }
+    }
+}
+
+impl JobSource for GeneratedSource {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        if let Some(r) = &mut self.remaining {
+            if *r == 0 {
+                return Ok(None);
+            }
+            *r -= 1;
+        }
+        self.t += self.rng.range_f64(0.0, 2.0 * self.mean_gap);
+        let w = self.rng.next_below(self.total_weight);
+        let n_gpus = self
+            .cum_hist
+            .iter()
+            .find(|&&(_, cum)| w < cum)
+            .map(|&(g, _)| g)
+            .expect("w < total_weight by construction");
+        let iterations = self.rng.range_u64(self.iter_range.0, self.iter_range.1);
+        let model = *self.rng.choose(&ALL_MODELS);
+        let id = self.count;
+        self.count += 1;
+        Ok(Some(JobSpec { id, arrival: self.t, model, n_gpus, iterations }))
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        self.remaining
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CsvTraceSource
+// ---------------------------------------------------------------------------
+
+/// Which header column plays which role. See the alias table in
+/// `docs/SCENARIOS.md` §Trace sources.
+struct ColumnMap {
+    submit: usize,
+    gpus: usize,
+    model: Option<usize>,
+    iterations: Option<usize>,
+    duration: Option<usize>,
+    n_cols: usize,
+}
+
+const SUBMIT_ALIASES: &[&str] = &["submit_time", "arrival", "arrival_time", "submit"];
+const GPU_ALIASES: &[&str] = &["n_gpus", "gpu_num", "num_gpu", "gpus", "plan_gpu"];
+const MODEL_ALIASES: &[&str] = &["model", "model_name", "workload"];
+const ITER_ALIASES: &[&str] = &["iterations", "iters", "num_iterations"];
+const DURATION_ALIASES: &[&str] = &["duration", "duration_s", "run_time", "runtime"];
+
+impl ColumnMap {
+    fn from_header(header: &str, name: &str) -> Result<ColumnMap> {
+        let cols: Vec<String> = header
+            .trim_start_matches('\u{feff}') // tolerate a UTF-8 BOM
+            .split(',')
+            .map(|c| c.trim().to_ascii_lowercase())
+            .collect();
+        let find = |aliases: &[&str]| cols.iter().position(|c| aliases.contains(&c.as_str()));
+        let Some(submit) = find(SUBMIT_ALIASES) else {
+            bail!("{name}: no submit-time column (one of {SUBMIT_ALIASES:?}) in header '{header}'");
+        };
+        let Some(gpus) = find(GPU_ALIASES) else {
+            bail!("{name}: no GPU-count column (one of {GPU_ALIASES:?}) in header '{header}'");
+        };
+        let iterations = find(ITER_ALIASES);
+        let duration = find(DURATION_ALIASES);
+        if iterations.is_none() && duration.is_none() {
+            bail!(
+                "{name}: need an iterations column ({ITER_ALIASES:?}) or a duration column \
+                 ({DURATION_ALIASES:?}) in header '{header}'"
+            );
+        }
+        Ok(ColumnMap {
+            submit,
+            gpus,
+            model: find(MODEL_ALIASES),
+            iterations,
+            duration,
+            n_cols: cols.len(),
+        })
+    }
+}
+
+/// Case/punctuation-forgiving model lookup: "vgg16", "VGG_16" and
+/// "VGG-16" all resolve to [`DnnModel::Vgg16`].
+pub fn model_from_loose_name(s: &str) -> Option<DnnModel> {
+    fn squash(s: &str) -> String {
+        s.chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .collect::<String>()
+            .to_ascii_lowercase()
+    }
+    let want = squash(s);
+    ALL_MODELS.iter().copied().find(|m| squash(m.spec().name) == want)
+}
+
+/// Streaming reader of Alibaba/Philly-style trace CSVs: one `JobSpec` per
+/// data row, constant memory (one line buffered at a time). The header row
+/// is mandatory; fields are plain comma-separated (no quoting). Submit
+/// times must be nondecreasing — for raw unsorted dumps, run the `ingest`
+/// subcommand (or [`read_csv_jobs`]) which sorts before committing.
+/// Arrivals are rebased so the first job arrives at t = 0.
+pub struct CsvTraceSource<R: BufRead> {
+    reader: R,
+    cols: ColumnMap,
+    name: String,
+    buf: String,
+    line_no: usize,
+    /// Raw submit time of the first job (rebase origin).
+    t0: Option<f64>,
+    /// Last raw submit time seen (ordering check).
+    last_submit: f64,
+    count: usize,
+}
+
+impl CsvTraceSource<BufReader<File>> {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let name = path.display().to_string();
+        let file = File::open(path).with_context(|| format!("opening trace CSV {name}"))?;
+        Self::from_reader(BufReader::new(file), &name)
+    }
+}
+
+impl<R: BufRead> CsvTraceSource<R> {
+    /// Build from any buffered reader; `name` labels error messages.
+    pub fn from_reader(mut reader: R, name: &str) -> Result<Self> {
+        let mut buf = String::new();
+        let mut line_no = 0usize;
+        // First non-empty, non-comment line is the header.
+        let cols = loop {
+            buf.clear();
+            line_no += 1;
+            if reader.read_line(&mut buf)? == 0 {
+                bail!("{name}: empty file, expected a CSV header row");
+            }
+            let line = buf.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            break ColumnMap::from_header(line, name)?;
+        };
+        Ok(CsvTraceSource {
+            reader,
+            cols,
+            name: name.to_string(),
+            buf,
+            line_no,
+            t0: None,
+            last_submit: f64::NEG_INFINITY,
+            count: 0,
+        })
+    }
+
+    /// Parse the next data row into a `JobSpec` whose `arrival` is the raw
+    /// (un-rebased) submit time and `id` the row index. Used by both the
+    /// strict streaming path and the sort-then-commit ingest path.
+    fn next_raw(&mut self) -> Result<Option<JobSpec>> {
+        loop {
+            self.buf.clear();
+            self.line_no += 1;
+            if self.reader.read_line(&mut self.buf)? == 0 {
+                return Ok(None);
+            }
+            let line = self.buf.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            let (name, ln) = (&self.name, self.line_no);
+            if fields.len() != self.cols.n_cols {
+                bail!(
+                    "{name}: line {ln}: expected {} comma-separated fields, got {}",
+                    self.cols.n_cols,
+                    fields.len()
+                );
+            }
+            let submit: f64 = fields[self.cols.submit].parse().map_err(|_| {
+                crate::err!("{name}: line {ln}: bad submit time '{}'", fields[self.cols.submit])
+            })?;
+            if !submit.is_finite() {
+                bail!("{name}: line {ln}: submit time must be finite, got '{submit}'");
+            }
+            let n_gpus: usize = fields[self.cols.gpus].parse().map_err(|_| {
+                crate::err!("{name}: line {ln}: bad GPU count '{}'", fields[self.cols.gpus])
+            })?;
+            if n_gpus == 0 {
+                bail!("{name}: line {ln}: GPU count must be >= 1");
+            }
+            let model = match self.cols.model {
+                Some(i) => model_from_loose_name(fields[i]).ok_or_else(|| {
+                    let known: Vec<&str> = ALL_MODELS.iter().map(|m| m.spec().name).collect();
+                    crate::err!("{name}: line {ln}: unknown model '{}' ({known:?})", fields[i])
+                })?,
+                // No model column: assign round-robin so the mix stays even.
+                None => ALL_MODELS[self.count % ALL_MODELS.len()],
+            };
+            let iterations = match (self.cols.iterations, self.cols.duration) {
+                (Some(i), _) => {
+                    let it: u64 = fields[i].parse().map_err(|_| {
+                        crate::err!("{name}: line {ln}: bad iteration count '{}'", fields[i])
+                    })?;
+                    if it == 0 {
+                        bail!("{name}: line {ln}: iterations must be >= 1");
+                    }
+                    it
+                }
+                (None, Some(i)) => {
+                    let dur: f64 = fields[i].parse().map_err(|_| {
+                        crate::err!("{name}: line {ln}: bad duration '{}'", fields[i])
+                    })?;
+                    if !dur.is_finite() || dur <= 0.0 {
+                        bail!("{name}: line {ln}: duration must be positive, got '{}'", fields[i]);
+                    }
+                    duration_to_iterations(dur, model)
+                }
+                (None, None) => unreachable!("ColumnMap::from_header requires one"),
+            };
+            let id = self.count;
+            self.count += 1;
+            return Ok(Some(JobSpec { id, arrival: submit, model, n_gpus, iterations }));
+        }
+    }
+}
+
+/// Convert a wall-clock duration (seconds) into an iteration count using
+/// the model's per-iteration compute time on the paper's reference V100
+/// (`V100_PEAK_GFLOPS`). Communication/queueing time in the original
+/// cluster is deliberately ignored — the simulator re-derives it.
+pub fn duration_to_iterations(duration_s: f64, model: DnnModel) -> u64 {
+    let spec = JobSpec { id: 0, arrival: 0.0, model, n_gpus: 1, iterations: 1 };
+    let t_iter = spec.t_iter(V100_PEAK_GFLOPS);
+    ((duration_s / t_iter).round() as u64).max(1)
+}
+
+impl<R: BufRead> JobSource for CsvTraceSource<R> {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        let Some(mut job) = self.next_raw()? else {
+            return Ok(None);
+        };
+        if job.arrival < self.last_submit {
+            bail!(
+                "{}: line {}: out-of-order submit time {} after {} — streaming ingestion \
+                 requires nondecreasing arrivals; run `ddl-sched ingest` to sort and commit \
+                 the trace first",
+                self.name,
+                self.line_no,
+                job.arrival,
+                self.last_submit
+            );
+        }
+        self.last_submit = job.arrival;
+        let t0 = *self.t0.get_or_insert(job.arrival);
+        job.arrival -= t0;
+        Ok(Some(job))
+    }
+}
+
+/// Materialize a trace CSV: parse every row (out-of-order submit times
+/// allowed here), then normalize — stable sort by arrival, rebase to
+/// t = 0, sequential ids. This is what `ingest` commits to JSON.
+pub fn read_csv_jobs<P: AsRef<Path>>(path: P) -> Result<Vec<JobSpec>> {
+    let path = path.as_ref();
+    let name = path.display().to_string();
+    let file = File::open(path).with_context(|| format!("opening trace CSV {name}"))?;
+    read_csv_from(BufReader::new(file), &name)
+}
+
+/// [`read_csv_jobs`] over any buffered reader.
+pub fn read_csv_from<R: BufRead>(reader: R, name: &str) -> Result<Vec<JobSpec>> {
+    let mut src = CsvTraceSource::from_reader(reader, name)?;
+    let mut jobs = Vec::new();
+    while let Some(j) = src.next_raw()? {
+        jobs.push(j);
+    }
+    normalize(&mut jobs);
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn csv_source(text: &str) -> CsvTraceSource<&[u8]> {
+        CsvTraceSource::from_reader(text.as_bytes(), "test.csv").unwrap()
+    }
+
+    #[test]
+    fn vec_source_drains_in_order() {
+        let cfg = TraceConfig::scaled(12, 5);
+        let jobs = crate::trace::generate(&cfg);
+        let mut src = VecSource::new(jobs.clone());
+        assert_eq!(src.size_hint(), Some(12));
+        let got = drain(&mut src).unwrap();
+        assert_eq!(got, jobs);
+        assert_eq!(src.size_hint(), Some(0));
+        assert!(src.next_job().unwrap().is_none());
+    }
+
+    #[test]
+    fn from_unsorted_normalizes() {
+        let mk = |id, arrival| JobSpec {
+            id,
+            arrival,
+            model: DnnModel::Vgg16,
+            n_gpus: 1,
+            iterations: 10,
+        };
+        let mut src = VecSource::from_unsorted(vec![mk(7, 30.0), mk(3, 10.0), mk(9, 20.0)]);
+        let got = drain(&mut src).unwrap();
+        let arrivals: Vec<f64> = got.iter().map(|j| j.arrival).collect();
+        assert_eq!(arrivals, vec![0.0, 10.0, 20.0]);
+        let ids: Vec<usize> = got.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn generated_source_is_deterministic_and_sorted() {
+        let cfg = TraceConfig::paper_160();
+        let mut a = GeneratedSource::new(&cfg, Some(500));
+        let mut b = GeneratedSource::new(&cfg, Some(500));
+        let ja = drain(&mut a).unwrap();
+        let jb = drain(&mut b).unwrap();
+        assert_eq!(ja, jb);
+        assert_eq!(ja.len(), 500);
+        for w in ja.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "arrivals nondecreasing");
+        }
+        // Sizes come from the histogram support only.
+        let support: Vec<usize> = cfg.gpu_histogram.iter().map(|&(g, _)| g).collect();
+        for j in &ja {
+            assert!(support.contains(&j.n_gpus), "size {} off-histogram", j.n_gpus);
+            assert!((cfg.iter_range.0..=cfg.iter_range.1).contains(&j.iterations));
+        }
+        // Mean arrival rate tracks horizon / n_jobs within a loose band.
+        let mean_gap = ja.last().unwrap().arrival / 500.0;
+        let want = cfg.horizon / cfg.n_jobs() as f64;
+        assert!((mean_gap / want - 1.0).abs() < 0.25, "gap {mean_gap} vs {want}");
+    }
+
+    #[test]
+    fn generated_source_uncapped_has_no_hint() {
+        let mut src = GeneratedSource::new(&TraceConfig::paper_160(), None);
+        assert_eq!(src.size_hint(), None);
+        for _ in 0..100 {
+            assert!(src.next_job().unwrap().is_some());
+        }
+    }
+
+    #[test]
+    fn csv_header_aliases_and_case() {
+        let mut src = csv_source(
+            "Job_ID,Submit_Time,Model,GPU_Num,Iterations\n\
+             a,100.0,vgg16,2,500\n\
+             b,103.5,resnet-50,1,800\n",
+        );
+        let j1 = src.next_job().unwrap().unwrap();
+        assert_eq!(j1.arrival, 0.0); // rebased
+        assert_eq!(j1.model, DnnModel::Vgg16);
+        assert_eq!(j1.n_gpus, 2);
+        assert_eq!(j1.iterations, 500);
+        let j2 = src.next_job().unwrap().unwrap();
+        assert!((j2.arrival - 3.5).abs() < 1e-12);
+        assert_eq!(j2.model, DnnModel::ResNet50);
+        assert!(src.next_job().unwrap().is_none());
+    }
+
+    #[test]
+    fn csv_duration_fallback_and_default_model() {
+        // No model and no iteration column: round-robin models, duration
+        // converted via the reference V100 iteration time.
+        let mut src = csv_source("submit_time,gpus,duration\n0,1,60\n1,1,60\n");
+        let j1 = src.next_job().unwrap().unwrap();
+        let j2 = src.next_job().unwrap().unwrap();
+        assert_eq!(j1.model, ALL_MODELS[0]);
+        assert_eq!(j2.model, ALL_MODELS[1]);
+        assert_eq!(j1.iterations, duration_to_iterations(60.0, ALL_MODELS[0]));
+        assert!(j1.iterations >= 1);
+    }
+
+    #[test]
+    fn csv_malformed_rows_error() {
+        // Wrong field count.
+        let mut src = csv_source("submit_time,n_gpus,iterations\n1.0,2\n");
+        assert!(src.next_job().unwrap_err().to_string().contains("line 2"));
+        // Unparseable GPU count.
+        let mut src = csv_source("submit_time,n_gpus,iterations\n1.0,two,5\n");
+        assert!(src.next_job().unwrap_err().to_string().contains("bad GPU count"));
+        // Zero GPUs.
+        let mut src = csv_source("submit_time,n_gpus,iterations\n1.0,0,5\n");
+        assert!(src.next_job().unwrap_err().to_string().contains(">= 1"));
+        // Unknown model names the known zoo.
+        let mut src = csv_source("submit_time,n_gpus,model,iterations\n1.0,1,bert,5\n");
+        let e = src.next_job().unwrap_err().to_string();
+        assert!(e.contains("unknown model 'bert'") && e.contains("VGG-16"), "{e}");
+        // Zero iterations.
+        let mut src = csv_source("submit_time,n_gpus,iterations\n1.0,1,0\n");
+        assert!(src.next_job().unwrap_err().to_string().contains("iterations"));
+        // Missing required column.
+        let e = CsvTraceSource::from_reader("when,n_gpus,iterations\n".as_bytes(), "t")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("submit-time"), "{e}");
+        // Neither iterations nor duration.
+        let e = CsvTraceSource::from_reader("submit_time,n_gpus,model\n".as_bytes(), "t")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("iterations") && e.contains("duration"), "{e}");
+    }
+
+    #[test]
+    fn csv_out_of_order_streaming_errors_but_ingest_sorts() {
+        let text = "submit_time,n_gpus,iterations\n10,1,5\n4,1,5\n";
+        let mut src = csv_source(text);
+        assert!(src.next_job().unwrap().is_some());
+        let e = src.next_job().unwrap_err().to_string();
+        assert!(e.contains("out-of-order"), "{e}");
+        // The collect path sorts, rebases and re-ids instead.
+        let jobs = read_csv_from(text.as_bytes(), "t").unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].arrival, 0.0);
+        assert!((jobs[1].arrival - 6.0).abs() < 1e-12);
+        assert_eq!((jobs[0].id, jobs[1].id), (0, 1));
+    }
+
+    #[test]
+    fn csv_skips_blank_and_comment_lines() {
+        let mut src = csv_source(
+            "# anonymized sample\n\nsubmit_time,n_gpus,iterations\n\n# mid comment\n0,1,5\n",
+        );
+        assert!(src.next_job().unwrap().is_some());
+        assert!(src.next_job().unwrap().is_none());
+    }
+
+    #[test]
+    fn loose_model_names() {
+        assert_eq!(model_from_loose_name("VGG-16"), Some(DnnModel::Vgg16));
+        assert_eq!(model_from_loose_name("vgg_16"), Some(DnnModel::Vgg16));
+        assert_eq!(model_from_loose_name("inceptionv3"), Some(DnnModel::InceptionV3));
+        assert_eq!(model_from_loose_name("LSTM PTB"), Some(DnnModel::LstmPtb));
+        assert_eq!(model_from_loose_name("gpt2"), None);
+    }
+}

@@ -142,27 +142,76 @@ impl TraceConfig {
     }
 }
 
-/// Generate a trace: jobs sorted by arrival time, ids in arrival order.
-pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
-    let mut rng = Pcg::new(cfg.seed, 0x7ace);
-    // Expand the histogram into a gpu-count list and shuffle it so arrival
-    // order decorrelates from size.
-    let mut sizes: Vec<usize> = cfg
-        .gpu_histogram
-        .iter()
-        .flat_map(|&(g, c)| std::iter::repeat(g).take(c))
-        .collect();
-    rng.shuffle(&mut sizes);
+/// Lazy per-job view of the synthetic generator: yields jobs one at a
+/// time in **RNG draw order** (not arrival order), with `id` equal to the
+/// draw index. The per-job random draws are byte-identical to what
+/// [`generate`] consumes — `generate` is now literally "collect this
+/// stream, sort by arrival, re-id" — so existing traces and scenario
+/// JSONs are unchanged while callers that don't need a sorted `Vec`
+/// (e.g. sampling a size marginal) can iterate without materializing.
+///
+/// Memory is O(histogram total) for the shuffled size list, not O(trace)
+/// in `JobSpec`s; for an unbounded open stream with O(1) state see
+/// `source::GeneratedSource`.
+pub struct JobStream {
+    rng: Pcg,
+    /// Shuffled GPU-count list; `next_idx` walks it front to back.
+    sizes: Vec<usize>,
+    next_idx: usize,
+    horizon: f64,
+    iter_range: (u64, u64),
+}
 
-    let mut jobs: Vec<JobSpec> = sizes
-        .into_iter()
-        .map(|n_gpus| {
-            let arrival = rng.range_f64(0.0, cfg.horizon);
-            let iterations = rng.range_u64(cfg.iter_range.0, cfg.iter_range.1);
-            let model = *rng.choose(&crate::model::ALL_MODELS);
-            JobSpec { id: 0, arrival, model, n_gpus, iterations }
-        })
-        .collect();
+impl JobStream {
+    pub fn new(cfg: &TraceConfig) -> JobStream {
+        let mut rng = Pcg::new(cfg.seed, 0x7ace);
+        // Expand the histogram into a gpu-count list and shuffle it so
+        // arrival order decorrelates from size.
+        let mut sizes: Vec<usize> = cfg
+            .gpu_histogram
+            .iter()
+            .flat_map(|&(g, c)| std::iter::repeat(g).take(c))
+            .collect();
+        rng.shuffle(&mut sizes);
+        JobStream {
+            rng,
+            sizes,
+            next_idx: 0,
+            horizon: cfg.horizon,
+            iter_range: cfg.iter_range,
+        }
+    }
+
+    /// Jobs remaining in the stream.
+    pub fn remaining(&self) -> usize {
+        self.sizes.len() - self.next_idx
+    }
+}
+
+impl Iterator for JobStream {
+    type Item = JobSpec;
+
+    fn next(&mut self) -> Option<JobSpec> {
+        let n_gpus = *self.sizes.get(self.next_idx)?;
+        let id = self.next_idx;
+        self.next_idx += 1;
+        let arrival = self.rng.range_f64(0.0, self.horizon);
+        let iterations = self.rng.range_u64(self.iter_range.0, self.iter_range.1);
+        let model = *self.rng.choose(&crate::model::ALL_MODELS);
+        Some(JobSpec { id, arrival, model, n_gpus, iterations })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let r = self.remaining();
+        (r, Some(r))
+    }
+}
+
+/// Generate a trace: jobs sorted by arrival time, ids in arrival order.
+/// Byte-identical draws to [`JobStream`]; the sort is the only step the
+/// lazy view omits.
+pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
+    let mut jobs: Vec<JobSpec> = JobStream::new(cfg).collect();
     jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
     for (i, j) in jobs.iter_mut().enumerate() {
         j.id = i;
@@ -224,6 +273,34 @@ mod tests {
         }
         let c = generate(&TraceConfig { seed: 1, ..cfg });
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn job_stream_matches_generate() {
+        let cfg = TraceConfig::paper_160();
+        let streamed: Vec<JobSpec> = JobStream::new(&cfg).collect();
+        assert_eq!(streamed.len(), 160);
+        // Draw order, draw-index ids.
+        for (i, j) in streamed.iter().enumerate() {
+            assert_eq!(j.id, i);
+        }
+        // Sorting + re-iding the stream reproduces generate() exactly.
+        let mut sorted = streamed;
+        sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for (i, j) in sorted.iter_mut().enumerate() {
+            j.id = i;
+        }
+        assert_eq!(sorted, generate(&cfg));
+    }
+
+    #[test]
+    fn job_stream_size_hint_exact() {
+        let mut s = JobStream::new(&TraceConfig::scaled(10, 3));
+        assert_eq!(s.size_hint(), (10, Some(10)));
+        s.next();
+        assert_eq!(s.remaining(), 9);
+        assert_eq!(s.by_ref().count(), 9);
+        assert_eq!(s.next(), None);
     }
 
     #[test]

@@ -133,6 +133,22 @@ impl BenchReport {
         self.rows.push(Json::obj().set("workload", workload).set("events", events));
     }
 
+    /// Full row plus the process peak RSS sampled at record time — for
+    /// bounded-memory gates (the streaming scale smoke). The extra key is
+    /// ignored by [`BenchReport::delta_vs_committed`], so RSS rows diff
+    /// cleanly against pre-RSS baselines.
+    pub fn record_with_rss(&mut self, workload: &str, events: u64, wall_s: f64) {
+        let mut row = Json::obj()
+            .set("workload", workload)
+            .set("events", events)
+            .set("wall_ms", wall_s * 1e3)
+            .set("events_per_s", events as f64 / wall_s);
+        if let Some(rss) = peak_rss_bytes() {
+            row = row.set("peak_rss_mb", rss as f64 / (1024.0 * 1024.0));
+        }
+        self.rows.push(row);
+    }
+
     /// Write `results/BENCH_<name>.json` (creating the dir — the same
     /// convention as `write_csv`); returns the path written.
     pub fn write(&self) -> std::io::Result<String> {
@@ -189,6 +205,16 @@ impl BenchReport {
     }
 }
 
+/// Peak resident set size of this process in bytes — Linux `VmHWM` from
+/// `/proc/self/status`. `None` where procfs is unavailable (non-Linux);
+/// callers print "n/a" instead of failing the bench.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// Write a CSV series to `results/<name>.csv` (creating the dir) so figures
 /// can be re-plotted; returns the path written.
 pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<String> {
@@ -243,6 +269,24 @@ mod tests {
         r.record("w", 10, 1.0);
         let s = r.delta_vs_committed();
         assert!(s.contains("skipping delta"), "{s}");
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn peak_rss_reads_procfs() {
+        let rss = peak_rss_bytes().expect("VmHWM missing from /proc/self/status");
+        // Any running test binary has at least a megabyte resident.
+        assert!(rss > 1024 * 1024, "implausible peak RSS {rss}");
+    }
+
+    #[test]
+    fn rss_row_keeps_delta_schema() {
+        let mut r = BenchReport::new("unit_test_rss_report");
+        r.record_with_rss("w", 1000, 0.5);
+        let row = &r.rows[0];
+        assert_eq!(row.req_f64("events_per_s").unwrap(), 2000.0);
+        // On Linux the RSS key rides along; either way the delta keys stay.
+        assert_eq!(row.req_str("workload").unwrap(), "w");
     }
 
     #[test]

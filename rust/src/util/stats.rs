@@ -20,21 +20,31 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) with linear interpolation, matching numpy's
-/// default "linear" method. Panics on empty input.
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
+/// default "linear" method. `None` on empty input; NaNs sort last
+/// (`total_cmp`) instead of poisoning the sort, so a slice with stray
+/// NaNs still yields a deterministic answer.
+pub fn try_percentile(xs: &[f64], p: f64) -> Option<f64> {
     assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return None;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         v[lo]
     } else {
         let w = rank - lo as f64;
         v[lo] * (1.0 - w) + v[hi] * w
-    }
+    })
+}
+
+/// p-th percentile (0..=100). Panics on empty input — callers that can
+/// see a zero-job workload use [`try_percentile`].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    try_percentile(xs, p).expect("percentile of empty slice")
 }
 
 pub fn median(xs: &[f64]) -> f64 {
@@ -110,6 +120,126 @@ impl Summary {
             max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
         }
     }
+
+    /// The zero-job summary: `n == 0`, every statistic 0.0. Lets callers
+    /// that may legitimately finish no jobs (empty streamed traces) report
+    /// cleanly instead of panicking in [`Summary::of`].
+    pub fn empty() -> Summary {
+        Summary { n: 0, mean: 0.0, median: 0.0, p95: 0.0, min: 0.0, max: 0.0 }
+    }
+}
+
+/// Streaming quantile estimator — the P² algorithm of Jain & Chlamtac
+/// (CACM 1985). Tracks one quantile in O(1) memory: five marker heights
+/// whose positions chase the desired rank via parabolic interpolation.
+/// Exact for the first five observations (they are buffered verbatim);
+/// afterwards the estimate converges to the true quantile for stationary
+/// inputs. This is what lets million-job streamed runs report tail
+/// latencies without retaining per-job samples.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    /// Target quantile in [0, 1], e.g. 0.95.
+    p: f64,
+    count: u64,
+    /// Marker heights q0..q4 (min, lower mid, target, upper mid, max).
+    q: [f64; 5],
+    /// Actual marker positions (1-indexed ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    dn: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!((0.0..=1.0).contains(&p), "quantile must be in [0, 1]");
+        P2Quantile {
+            p,
+            count: 0,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.count < 5 {
+            self.q[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.q.sort_by(f64::total_cmp);
+            }
+            return;
+        }
+        self.count += 1;
+        // Locate the cell k with q[k] <= x < q[k+1], extending the extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.q[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for pos in self.n[k + 1..].iter_mut() {
+            *pos += 1.0;
+        }
+        for (want, step) in self.np.iter_mut().zip(&self.dn) {
+            *want += *step;
+        }
+        // Nudge interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate: `None` before any observation, exact while at most
+    /// five have been seen, the P² marker height afterwards.
+    pub fn value(&self) -> Option<f64> {
+        let c = self.count.min(5) as usize;
+        if c == 0 {
+            None
+        } else if c < 5 {
+            try_percentile(&self.q[..c], self.p * 100.0)
+        } else {
+            Some(self.q[2])
+        }
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +304,71 @@ mod tests {
         let h = histogram(&[-1.0, 0.0, 0.5, 0.99, 5.0], 0.0, 1.0, 2);
         assert_eq!(h, vec![2, 3]); // -1 clamps into [0,.5); 5 clamps into [.5,1)
         assert_eq!(h.iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn try_percentile_handles_empty_and_nan() {
+        assert_eq!(try_percentile(&[], 50.0), None);
+        // NaNs sort last under total_cmp; the call must not panic and the
+        // low percentiles still see the finite values.
+        let xs = [2.0, f64::NAN, 1.0];
+        feq(try_percentile(&xs, 0.0).unwrap(), 1.0);
+        feq(try_percentile(&xs, 50.0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zeroed() {
+        let s = Summary::empty();
+        assert_eq!(s.n, 0);
+        feq(s.mean, 0.0);
+        feq(s.p95, 0.0);
+    }
+
+    #[test]
+    fn p2_exact_below_five_samples() {
+        let mut est = P2Quantile::new(0.5);
+        assert_eq!(est.value(), None);
+        est.observe(3.0);
+        feq(est.value().unwrap(), 3.0);
+        est.observe(1.0);
+        feq(est.value().unwrap(), 2.0);
+        est.observe(2.0);
+        feq(est.value().unwrap(), 2.0);
+        assert_eq!(est.count(), 3);
+    }
+
+    #[test]
+    fn p2_tracks_uniform_median() {
+        // Deterministic low-discrepancy stream over (0, 1): golden-ratio
+        // rotation. The P² median must land near 0.5.
+        let mut est = P2Quantile::new(0.5);
+        let mut x = 0.0f64;
+        for _ in 0..10_000 {
+            x = (x + 0.618_033_988_749_894_9) % 1.0;
+            est.observe(x);
+        }
+        let v = est.value().unwrap();
+        assert!((v - 0.5).abs() < 0.02, "p50 estimate {v}");
+    }
+
+    #[test]
+    fn p2_tail_quantile_close_to_exact() {
+        let mut est = P2Quantile::new(0.95);
+        let mut all = Vec::new();
+        let mut x = 0.0f64;
+        for _ in 0..20_000 {
+            x = (x + 0.618_033_988_749_894_9) % 1.0;
+            // Skewed tail: cube keeps most mass low, stretches the top.
+            let y = x * x * x * 100.0;
+            est.observe(y);
+            all.push(y);
+        }
+        let exact = percentile(&all, 95.0);
+        let got = est.value().unwrap();
+        assert!(
+            (got - exact).abs() / exact < 0.05,
+            "p95 estimate {got} vs exact {exact}"
+        );
     }
 
     #[test]
