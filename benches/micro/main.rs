@@ -1,0 +1,380 @@
+//! Per-component microbench suite: saturate each hot subsystem *in
+//! isolation* — event-heap churn, admission-view reads over the flat
+//! per-link slab, priority-queue insertion (including the gap-buffer
+//! counter-proposal the JobQueue docs reference), the free-GPU capacity
+//! index, and per-link membership churn — plus one end-to-end
+//! steady-state engine row that reports allocations/event when built
+//! with `--features dhat-heap`.
+//!
+//! Attribution convention (docs/EXPERIMENTS.md §Perf): the in-repo heap
+//! profiler counts process-wide allocations, not call sites, so each
+//! workload here exercises exactly one subsystem — a nonzero allocs/op
+//! localizes to that subsystem by construction. Rows land in
+//! `results/BENCH_micro.json` under the committed-baseline delta
+//! convention (results/README.md); deltas are informational, never
+//! build-failing.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use ddl_sched::net::LinkLists;
+use ddl_sched::prelude::*;
+use ddl_sched::sched::JobQueue;
+use ddl_sched::util::bench::{bench, BenchReport};
+use ddl_sched::util::heap as heap_prof;
+use ddl_sched::util::rng::Pcg;
+
+/// Mirror of the engine's heap entry — (t, seq)-ordered min-heap via
+/// reversed comparison — so heap churn is measured on the real ordering
+/// logic without exposing engine internals.
+struct Timed {
+    t: f64,
+    seq: u64,
+}
+
+impl PartialEq for Timed {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Timed {}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The gap-buffer alternative the JobQueue docs argue against: one
+/// contiguous vec with a movable gap at the last insertion point, so
+/// runs of nearby insertions avoid long memmoves. Implemented here (not
+/// in the library) purely to bench the claim — the engine's
+/// take_all/restore pattern closes the gap every placement pass, which
+/// is exactly what the "JobQueue insert" vs "gap-buffer insert" rows
+/// quantify.
+struct GapBuffer {
+    /// Entries below the gap (ascending order).
+    lo: Vec<(f64, usize)>,
+    /// Entries above the gap, *reversed* (top of `hi` is the smallest
+    /// entry above the gap), so moving the gap is push/pop between vecs.
+    hi: Vec<(f64, usize)>,
+}
+
+impl GapBuffer {
+    fn new() -> GapBuffer {
+        GapBuffer { lo: Vec::new(), hi: Vec::new() }
+    }
+
+    fn insert(&mut self, key: f64, job: usize) {
+        let probe = (key, job);
+        // Move the gap left/right until it sits at the insertion point.
+        while self
+            .lo
+            .last()
+            .is_some_and(|&(k, j)| (k, j) > probe)
+        {
+            self.hi.push(self.lo.pop().unwrap());
+        }
+        while self
+            .hi
+            .last()
+            .is_some_and(|&(k, j)| (k, j) < probe)
+        {
+            self.lo.push(self.hi.pop().unwrap());
+        }
+        self.lo.push(probe);
+    }
+
+    /// The engine's per-placement-pass drain: one ordered walk consumes
+    /// the whole queue — which forces the gap closed no matter where the
+    /// insertions left it. This is the structural reason the gap buffer
+    /// cannot win in the engine (see `sched::JobQueue` docs).
+    fn take_all(&mut self) -> Vec<(f64, usize)> {
+        let mut out = std::mem::take(&mut self.lo);
+        while let Some(e) = self.hi.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    fn restore(&mut self, entries: Vec<(f64, usize)>) {
+        self.lo = entries;
+    }
+}
+
+fn push_row(
+    t: &mut Table,
+    report: &mut BenchReport,
+    label: &str,
+    ops: u64,
+    wall_s: f64,
+    allocs: u64,
+) {
+    report.record_with_allocs(label, ops, wall_s, allocs, ops);
+    t.row(&[
+        label.to_string(),
+        format!("{ops}"),
+        format!("{:.2}", wall_s * 1e3),
+        format!("{:.2}", ops as f64 / wall_s / 1e6),
+        if heap_prof::ENABLED {
+            format!("{:.3}", allocs as f64 / ops as f64)
+        } else {
+            "n/a".to_string()
+        },
+    ]);
+}
+
+fn main() {
+    let mut report = BenchReport::new("micro");
+    let mut t = Table::new(
+        "micro — per-subsystem saturation",
+        &["workload", "ops", "wall (ms)", "Mops/s", "allocs/op"],
+    );
+
+    // ---- event-heap churn --------------------------------------------------
+    // Steady-state shape: a warm heap holding ~256 in-flight events, each
+    // op popping the minimum and pushing a successor slightly later —
+    // the engine's push/pop pattern with zero allocator traffic expected
+    // once the heap's backing vec is warm.
+    {
+        const LIVE: usize = 256;
+        const OPS: u64 = 1_000_000;
+        let mut heap = BinaryHeap::with_capacity(LIVE + 1);
+        let mut rng = Pcg::seed(7);
+        let mut seq = 0u64;
+        for _ in 0..LIVE {
+            seq += 1;
+            heap.push(Timed { t: rng.range_f64(0.0, 1.0), seq });
+        }
+        let a0 = heap_prof::snapshot();
+        let timing = bench("heap churn (pop+push, 256 live)", 1, 3, || {
+            for _ in 0..OPS {
+                let top = heap.pop().unwrap();
+                seq += 1;
+                heap.push(Timed { t: top.t + rng.range_f64(0.0, 0.01), seq });
+            }
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4; // 1 warmup + 3 timed
+        push_row(
+            &mut t,
+            &mut report,
+            "heap churn (pop+push, 256 live)",
+            OPS,
+            timing.mean_s,
+            allocs,
+        );
+    }
+
+    // ---- admission view over the flat per-link slab ------------------------
+    // The policy-facing read path: `max_occupancy` probes (the whole
+    // cost of an SRSF(n) decision) over LinkLists through NetView, at
+    // paper-like contention (0–3 tasks per link).
+    {
+        const OPS: u64 = 1_000_000;
+        let mut links = LinkLists::new(16);
+        let mut rng = Pcg::seed(11);
+        for l in 0..16 {
+            for task in 0..rng.range_usize(0, 3) {
+                links.push(l, l * 8 + task);
+            }
+        }
+        let remaining = |_task: usize| 1.0e8;
+        let probe: Vec<usize> = vec![0, 3, 7, 12];
+        let a0 = heap_prof::snapshot();
+        let timing = bench("NetView admission read (LinkLists, 16 links)", 1, 3, || {
+            let view = ddl_sched::sched::NetView::new(&links, &remaining);
+            let mut acc = 0usize;
+            for _ in 0..OPS {
+                acc = acc.wrapping_add(view.max_occupancy(&probe));
+            }
+            std::hint::black_box(acc);
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+        push_row(
+            &mut t,
+            &mut report,
+            "NetView admission read (LinkLists, 16 links)",
+            OPS,
+            timing.mean_s,
+            allocs,
+        );
+    }
+
+    // ---- JobQueue insert vs gap buffer, at three depths --------------------
+    // Each op inserts one random-key job into a warm queue and every
+    // 8th op runs the engine's take_all/restore placement-pass drain.
+    // The drain is what makes the memmove layout win: the gap buffer
+    // pays the same O(n) walk to close its gap, then pays its gap moves
+    // on top (see sched::JobQueue docs for the argument these rows prove).
+    for depth in [16usize, 256, 4096] {
+        const OPS: u64 = 100_000;
+        let keys = |rng: &mut Pcg| rng.range_f64(0.0, 1.0e6);
+
+        let mut q = JobQueue::new();
+        let mut rng = Pcg::seed(13);
+        for j in 0..depth {
+            q.insert(keys(&mut rng), j);
+        }
+        let label = format!("JobQueue insert (depth {depth})");
+        let a0 = heap_prof::snapshot();
+        let timing = bench(&label, 1, 3, || {
+            for op in 0..OPS {
+                q.insert(keys(&mut rng), (op as usize) % depth);
+                if op % 8 == 7 {
+                    let mut entries = q.take_all();
+                    entries.truncate(depth); // keep the depth bounded
+                    q.restore(entries);
+                }
+            }
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+        push_row(&mut t, &mut report, &label, OPS, timing.mean_s, allocs);
+
+        let mut gq = GapBuffer::new();
+        let mut rng = Pcg::seed(13);
+        for j in 0..depth {
+            gq.insert(keys(&mut rng), j);
+        }
+        let label = format!("gap-buffer insert (depth {depth})");
+        let a0 = heap_prof::snapshot();
+        let timing = bench(&label, 1, 3, || {
+            for op in 0..OPS {
+                gq.insert(keys(&mut rng), (op as usize) % depth);
+                if op % 8 == 7 {
+                    let mut entries = gq.take_all();
+                    entries.truncate(depth);
+                    gq.restore(entries);
+                }
+            }
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+        push_row(&mut t, &mut report, &label, OPS, timing.mean_s, allocs);
+    }
+
+    // ---- free-GPU capacity index -------------------------------------------
+    // The placement gate's O(Δ) maintenance: feasibility probes mixed
+    // with allocate/release-style threshold-crossing records.
+    {
+        const OPS: u64 = 1_000_000;
+        let spec = ClusterSpec::paper_64gpu();
+        let state = ClusterState::new(spec);
+        let thresholds: Vec<f64> =
+            (1..=8).map(|i| i as f64 * 2.0 * 1024.0 * 1024.0 * 1024.0).collect();
+        let mut idx = ddl_sched::cluster::FreeGpuIndex::new(thresholds.clone(), &state);
+        let mut rng = Pcg::seed(17);
+        let a0 = heap_prof::snapshot();
+        let timing = bench("FreeGpuIndex probe+record", 1, 3, || {
+            let mut acc = 0usize;
+            for _ in 0..OPS {
+                let m = thresholds[rng.range_usize(0, thresholds.len() - 1)];
+                acc = acc.wrapping_add(idx.feasible(m));
+                // A release/allocate pair crossing one threshold.
+                idx.record(m - 1.0, m + 1.0);
+                idx.record(m + 1.0, m - 1.0);
+            }
+            std::hint::black_box(acc);
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+        push_row(&mut t, &mut report, "FreeGpuIndex probe+record", OPS, timing.mean_s, allocs);
+    }
+
+    // ---- per-link membership churn: LinkLists vs nested vecs ---------------
+    // The admit/complete write path: push a task onto 4 links, then
+    // swap-remove it, forever. The flat slab should show zero allocs/op;
+    // the nested layout allocates only on first growth but still pays
+    // the pointer chase.
+    {
+        const OPS: u64 = 500_000;
+        let probe: [usize; 4] = [0, 3, 7, 12];
+
+        let mut slab = LinkLists::new(16);
+        let a0 = heap_prof::snapshot();
+        let timing = bench("per-link churn (LinkLists, 4 links/op)", 1, 3, || {
+            for op in 0..OPS {
+                let id = op as usize;
+                for &l in &probe {
+                    slab.push(l, id);
+                }
+                for &l in &probe {
+                    let last = slab.len(l) - 1;
+                    slab.swap_remove(l, last);
+                }
+            }
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+        push_row(
+            &mut t,
+            &mut report,
+            "per-link churn (LinkLists, 4 links/op)",
+            OPS,
+            timing.mean_s,
+            allocs,
+        );
+
+        let mut nested: Vec<Vec<usize>> = vec![Vec::new(); 16];
+        let a0 = heap_prof::snapshot();
+        let timing = bench("per-link churn (Vec<Vec>, 4 links/op)", 1, 3, || {
+            for op in 0..OPS {
+                let id = op as usize;
+                for &l in &probe {
+                    nested[l].push(id);
+                }
+                for &l in &probe {
+                    let last = nested[l].len() - 1;
+                    nested[l].swap_remove(last);
+                }
+            }
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+        push_row(
+            &mut t,
+            &mut report,
+            "per-link churn (Vec<Vec>, 4 links/op)",
+            OPS,
+            timing.mean_s,
+            allocs,
+        );
+    }
+
+    // ---- end-to-end: engine steady-state allocations/event -----------------
+    // The number the §Perf allocation-profile table quotes: a saturated
+    // full simulation, allocations divided by heap events processed.
+    // Run with `cargo bench --bench micro --features dhat-heap` for a
+    // live count; without the feature the column prints n/a.
+    {
+        let cfg = SimConfig::paper();
+        let mut tc = TraceConfig::scaled(320, 17);
+        tc.horizon = 600.0;
+        let jobs = trace::generate(&tc);
+        let mut events = 0u64;
+        let a0 = heap_prof::snapshot();
+        let timing = bench("engine steady state (320 jobs saturated)", 1, 3, || {
+            let mut placer = LwfPlacer::new(1);
+            let res = sim::simulate(&cfg, &jobs, &mut placer, &AdaDual { model: cfg.comm });
+            events = res.n_events;
+        });
+        let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+        push_row(
+            &mut t,
+            &mut report,
+            "engine steady state (320 jobs saturated)",
+            events,
+            timing.mean_s,
+            allocs,
+        );
+    }
+
+    t.print();
+    print!("{}", report.delta_vs_committed());
+    match report.write() {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench report: {e}"),
+    }
+}

@@ -133,6 +133,19 @@ fn main() {
         rss_mb,
     );
 
+    // Absolute throughput floor, deliberately an order of magnitude under
+    // any plausible machine (release builds clear 1 Mev/s comfortably):
+    // catches only catastrophic regressions — an accidental O(n) scan per
+    // event, a debug-profile CI misconfiguration — while staying immune
+    // to runner noise. Finer-grained tracking stays with the non-fatal
+    // delta-vs-committed print below, per the bench convention.
+    let stream_evs = pct.n_events() as f64 / wall_stream;
+    assert!(
+        stream_evs > 0.1e6,
+        "streamed gate fell to {:.3} Mev/s — hot path catastrophically slower",
+        stream_evs / 1e6
+    );
+
     report.record_with_rss(&format!("{n_stream} jobs streamed"), pct.n_events(), wall_stream);
     // Stable-label twin, same convention as the batch gate's.
     report.record_with_rss("stream gate percentiles", pct.n_events(), wall_stream);

@@ -89,6 +89,48 @@ fn main() {
     }
     t.print();
 
+    // ---- parallel advancement: worker-count sweep --------------------------
+    // Same saturated workload, coalescing on, reconcile walks fanned out
+    // over 1/2/4 workers. Results are bit-identical by construction
+    // (property-tested in sim::tests); the wall-clock delta is the value
+    // of the fan-out, and the allocs/event column (dhat-heap builds
+    // only) is the §Perf steady-state allocation number.
+    {
+        let mut tc = TraceConfig::scaled(320, 17);
+        tc.horizon = 600.0;
+        let jobs = trace::generate(&tc);
+        let mut t = Table::new(
+            "parallel advancement — 320 jobs saturated, coalescing on",
+            &["workers", "heap events", "wall (ms)", "events/s (M)", "allocs/event"],
+        );
+        for workers in [1usize, 2, 4] {
+            let wcfg = SimConfig { workers, ..cfg.clone() };
+            let label = format!("320 jobs saturated workers={workers}");
+            let mut events = 0u64;
+            let a0 = ddl_sched::util::heap::snapshot();
+            let timing = bench(&label, 1, 3, || {
+                let mut placer = LwfPlacer::new(1);
+                let res = sim::simulate(&wcfg, &jobs, &mut placer, &AdaDual { model: wcfg.comm });
+                events = res.n_events;
+            });
+            // 1 warmup + 3 timed runs share the snapshot window.
+            let allocs = ddl_sched::util::heap::snapshot().since(&a0).allocs / 4;
+            report.record_with_allocs(&label, events, timing.mean_s, allocs, events);
+            t.row(&[
+                format!("{workers}"),
+                format!("{events}"),
+                format!("{:.1}", timing.mean_s * 1e3),
+                format!("{:.2}", events as f64 / timing.mean_s / 1e6),
+                if ddl_sched::util::heap::ENABLED {
+                    format!("{:.3}", allocs as f64 / events.max(1) as f64)
+                } else {
+                    "n/a".to_string()
+                },
+            ]);
+        }
+        t.print();
+    }
+
     // ---- observer sinks: events/s with sinks off vs JSONL on ---------------
     // The output-layer cost question: what does streaming every typed
     // event as a JSON line cost versus the metrics-only facade? The sink

@@ -52,6 +52,7 @@ fn main() {
         priority: sim::JobPriority::Srsf,
         coalescing: true,
         log_events: false,
+        workers: 1,
     };
     let iters = 2000;
 

@@ -6,6 +6,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::model::CommModel;
+use crate::net::LinkLists;
 use crate::scenario::registry;
 use crate::sched::{Admission, CommPolicy, NetView};
 use crate::util::error::Result;
@@ -26,11 +27,12 @@ struct Flight {
 }
 
 struct GateState {
-    /// Active flight seqs per fabric link. The live testbed is a single
+    /// Active flight seqs per fabric link, in the same flat [`LinkLists`]
+    /// slab the simulator's hot path uses. The live testbed is a single
     /// non-blocking switch (`net::TopologySpec::Flat`), where link id ==
     /// server id — so the gate tracks one NIC link per server, exactly
     /// like the simulator's flat fabric.
-    per_link: Vec<Vec<usize>>,
+    per_link: LinkLists,
     flights: Vec<Flight>,
     admitted_total: usize,
     contended_total: usize,
@@ -61,7 +63,7 @@ impl NetGate {
         let policy = registry::make_policy(policy, comm)?;
         Ok(NetGate {
             state: Mutex::new(GateState {
-                per_link: vec![Vec::new(); n_servers],
+                per_link: LinkLists::new(n_servers),
                 flights: Vec::new(),
                 admitted_total: 0,
                 contended_total: 0,
@@ -103,7 +105,7 @@ impl NetGate {
             if admit == Admission::Start {
                 let k = servers
                     .iter()
-                    .map(|&s| st.per_link[s].len())
+                    .map(|&s| st.per_link.len(s))
                     .max()
                     .unwrap_or(0)
                     + 1;
@@ -114,7 +116,7 @@ impl NetGate {
                     k_at_admit: k,
                 });
                 for &s in servers {
-                    st.per_link[s].push(seq);
+                    st.per_link.push(s, seq);
                 }
                 st.admitted_total += 1;
                 if k > 1 {
@@ -138,7 +140,13 @@ impl NetGate {
     pub fn release(&self, token: GateToken) {
         let mut st = self.state.lock().unwrap();
         for &s in &token.servers {
-            st.per_link[s].retain(|&x| x != token.seq);
+            // Find-then-swap-remove replaces the old `retain` scan; a
+            // link carries a handful of flights, so position lookup is
+            // the same O(occupancy) but without rewriting the whole row.
+            let pos = st.per_link.tasks(s).iter().position(|&x| x == token.seq);
+            if let Some(pos) = pos {
+                st.per_link.swap_remove(s, pos);
+            }
         }
         st.flights.retain(|f| f.seq != token.seq);
         drop(st);

@@ -290,6 +290,160 @@ pub fn links_intersect(a: &[LinkId], b: &[LinkId]) -> bool {
     false
 }
 
+/// Per-link active-task membership a [`sched::NetView`](crate::sched::NetView)
+/// can read: anything exposing a task-id slice per fabric link. Lets the
+/// admission view run over either the classic nested `Vec<Vec<usize>>`
+/// (tests, the materialized twin) or the engine's flat [`LinkLists`]
+/// slab without copying.
+pub trait LinkTasks {
+    /// Number of fabric links covered.
+    fn n_links(&self) -> usize;
+    /// Active comm-task ids on `link`.
+    fn tasks(&self, link: LinkId) -> &[usize];
+}
+
+impl LinkTasks for [Vec<usize>] {
+    fn n_links(&self) -> usize {
+        self.len()
+    }
+
+    fn tasks(&self, link: LinkId) -> &[usize] {
+        &self[link]
+    }
+}
+
+impl LinkTasks for Vec<Vec<usize>> {
+    fn n_links(&self) -> usize {
+        self.len()
+    }
+
+    fn tasks(&self, link: LinkId) -> &[usize] {
+        &self[link]
+    }
+}
+
+impl LinkTasks for LinkLists {
+    fn n_links(&self) -> usize {
+        LinkLists::n_links(self)
+    }
+
+    fn tasks(&self, link: LinkId) -> &[usize] {
+        LinkLists::tasks(self, link)
+    }
+}
+
+/// Flat structure-of-arrays per-link membership lists — the hot-path
+/// replacement for the engine's `per_link: Vec<Vec<usize>>`.
+///
+/// The nested layout paid one heap allocation per link up front, one
+/// pointer chase per occupancy probe, and scattered every link's list
+/// across the heap; under contention the admission view walks several
+/// links per decision, so the probes dominate. This slab keeps every
+/// list in **one** contiguous allocation, row `l` occupying
+/// `data[l*stride .. l*stride + lens[l]]`. Occupancy is a single indexed
+/// load from `lens`; a task-id slice is a bounds-computed subslice of
+/// `data`; push and swap-remove are O(1) writes with no allocator
+/// traffic in steady state.
+///
+/// `stride` is the per-link capacity; when any link outgrows it the
+/// whole slab rebuilds at double the stride (amortized like `Vec`
+/// growth: O(links) moves per doubling, a handful of doublings over a
+/// run). Real contention levels are small — the paper's policies cap
+/// useful k at 2–3 — so the default stride of 4 makes rebuilds rare.
+#[derive(Clone, Debug)]
+pub struct LinkLists {
+    /// Per-link row capacity (doubles on overflow).
+    stride: usize,
+    /// Live length of each row.
+    lens: Vec<u32>,
+    /// Row-major id storage: row `l` is `data[l*stride..]`.
+    data: Vec<usize>,
+}
+
+impl LinkLists {
+    /// Empty lists for `n_links` links at the default stride.
+    pub fn new(n_links: usize) -> LinkLists {
+        LinkLists::with_stride(n_links, 4)
+    }
+
+    /// Empty lists with an explicit initial per-link capacity.
+    pub fn with_stride(n_links: usize, stride: usize) -> LinkLists {
+        let stride = stride.max(1);
+        LinkLists { stride, lens: vec![0; n_links], data: vec![0; n_links * stride] }
+    }
+
+    /// Number of fabric links covered.
+    pub fn n_links(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Active-task count on `link`.
+    pub fn len(&self, link: LinkId) -> usize {
+        self.lens[link] as usize
+    }
+
+    /// Whether `link` carries no active task.
+    pub fn is_empty(&self, link: LinkId) -> bool {
+        self.lens[link] == 0
+    }
+
+    /// Active task ids on `link`, in insertion (swap-remove-perturbed)
+    /// order — the same order the nested layout maintained.
+    pub fn tasks(&self, link: LinkId) -> &[usize] {
+        let o = link * self.stride;
+        &self.data[o..o + self.lens[link] as usize]
+    }
+
+    /// The id at `pos` of `link`'s row, if still in bounds — the
+    /// "who moved into the vacated slot" probe after a swap-remove.
+    pub fn get(&self, link: LinkId, pos: usize) -> Option<usize> {
+        (pos < self.lens[link] as usize).then(|| self.data[link * self.stride + pos])
+    }
+
+    /// Append `id` to `link`'s row (O(1); doubles the slab stride first
+    /// if the row is full).
+    pub fn push(&mut self, link: LinkId, id: usize) {
+        if self.lens[link] as usize == self.stride {
+            self.grow();
+        }
+        self.data[link * self.stride + self.lens[link] as usize] = id;
+        self.lens[link] += 1;
+    }
+
+    /// Remove and return the id at `pos` of `link`'s row by moving the
+    /// row's last id into its place — `Vec::swap_remove` semantics, so
+    /// the engine's recorded `link_pos` bookkeeping carries over
+    /// unchanged.
+    pub fn swap_remove(&mut self, link: LinkId, pos: usize) -> usize {
+        let n = self.lens[link] as usize;
+        assert!(pos < n, "swap_remove past the end of link {link}'s row");
+        let o = link * self.stride;
+        let v = self.data[o + pos];
+        self.data[o + pos] = self.data[o + n - 1];
+        self.lens[link] -= 1;
+        v
+    }
+
+    /// Total active entries over all rows (duplicates across links count
+    /// once per row, matching the nested layout's sum of lengths).
+    pub fn total(&self) -> usize {
+        self.lens.iter().map(|&n| n as usize).sum()
+    }
+
+    /// Rebuild the slab at double the stride, preserving every row.
+    fn grow(&mut self) {
+        let new_stride = self.stride * 2;
+        let mut data = vec![0usize; self.lens.len() * new_stride];
+        for l in 0..self.lens.len() {
+            let n = self.lens[l] as usize;
+            data[l * new_stride..l * new_stride + n]
+                .copy_from_slice(&self.data[l * self.stride..l * self.stride + n]);
+        }
+        self.stride = new_stride;
+        self.data = data;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,5 +585,77 @@ mod tests {
             TopologySpec::TwoTier { rack_size: 4, oversubscription: 4.0 }.label().unwrap(),
             "2tier-4:1"
         );
+    }
+
+    #[test]
+    fn link_lists_push_remove_get() {
+        let mut ll = LinkLists::with_stride(3, 2);
+        assert_eq!(ll.n_links(), 3);
+        assert!(ll.is_empty(1));
+        ll.push(1, 10);
+        ll.push(1, 11);
+        ll.push(2, 20);
+        assert_eq!(ll.tasks(1), &[10, 11]);
+        assert_eq!(ll.len(1), 2);
+        assert_eq!(ll.total(), 3);
+        // Vec::swap_remove semantics: the last id moves into the hole.
+        assert_eq!(ll.swap_remove(1, 0), 10);
+        assert_eq!(ll.tasks(1), &[11]);
+        assert_eq!(ll.get(1, 0), Some(11));
+        assert_eq!(ll.get(1, 1), None);
+        assert_eq!(ll.swap_remove(2, 0), 20);
+        assert!(ll.is_empty(2));
+        assert!(ll.is_empty(0));
+    }
+
+    #[test]
+    fn link_lists_grow_preserves_rows() {
+        let mut ll = LinkLists::with_stride(4, 1);
+        for id in 0..9 {
+            ll.push(2, id); // forces several stride doublings
+        }
+        ll.push(0, 100);
+        assert_eq!(ll.tasks(2), &[0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(ll.tasks(0), &[100]);
+        assert!(ll.is_empty(1) && ll.is_empty(3));
+    }
+
+    #[test]
+    fn prop_link_lists_equivalent_to_nested_vecs() {
+        // The slab must behave exactly like the Vec<Vec<usize>> it
+        // replaced under any interleaving of push / swap_remove — same
+        // slices, same swap-remove returns, same "who moved" probes.
+        crate::util::prop::prop_check(40, |g| {
+            let n_links = g.usize(1, 6);
+            let mut model: Vec<Vec<usize>> = vec![Vec::new(); n_links];
+            let mut ll = LinkLists::with_stride(n_links, 1);
+            for id in 0..g.usize(1, 60) {
+                let l = g.usize(0, n_links - 1);
+                if g.bool() || model[l].is_empty() {
+                    model[l].push(id);
+                    ll.push(l, id);
+                } else {
+                    let pos = g.usize(0, model[l].len() - 1);
+                    let want = model[l].swap_remove(pos);
+                    let got = ll.swap_remove(l, pos);
+                    if want != got {
+                        return Err(format!("swap_remove({l},{pos}): {got} vs {want}"));
+                    }
+                    let moved = ll.get(l, pos);
+                    if moved != model[l].get(pos).copied() {
+                        return Err(format!("get after remove diverged: {moved:?}"));
+                    }
+                }
+                for (l, row) in model.iter().enumerate() {
+                    if ll.tasks(l) != &row[..] {
+                        return Err(format!(
+                            "row {l} diverged: {:?} vs {row:?}",
+                            ll.tasks(l)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

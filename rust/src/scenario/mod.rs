@@ -258,6 +258,7 @@ impl Scenario {
             priority: self.priority,
             coalescing: self.coalescing,
             log_events: false,
+            workers: 1,
         }
     }
 

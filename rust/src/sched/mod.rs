@@ -17,7 +17,7 @@
 pub mod two_tasks;
 
 use crate::model::CommModel;
-use crate::net::LinkId;
+use crate::net::{LinkId, LinkTasks};
 
 /// Resolver a [`NetView`] never invokes: views over an idle fabric (the
 /// engine's steadiness check) carry no tasks, so any residual request is
@@ -34,31 +34,36 @@ fn unresolved(_id: usize) -> f64 {
 /// every link once per admission pass (O(links × active) even when the
 /// policy looked at two NICs); this view reads the live per-link lists,
 /// which are maintained O(Δ) at admit/complete, and prices residuals on
-/// demand.
+/// demand. The backing storage is any [`LinkTasks`] — the engine's flat
+/// [`net::LinkLists`](crate::net::LinkLists) slab on the hot path,
+/// nested `Vec<Vec<usize>>` for tests and the materialized twin.
 pub struct NetView<'a> {
-    per_link: &'a [Vec<usize>],
+    links: &'a dyn LinkTasks,
     remaining: &'a dyn Fn(usize) -> f64,
 }
 
 impl<'a> NetView<'a> {
-    pub fn new(per_link: &'a [Vec<usize>], remaining: &'a dyn Fn(usize) -> f64) -> NetView<'a> {
-        NetView { per_link, remaining }
+    pub fn new<T: LinkTasks + ?Sized>(
+        links: &'a T,
+        remaining: &'a dyn Fn(usize) -> f64,
+    ) -> NetView<'a> {
+        NetView { links, remaining }
     }
 
     /// View that can answer occupancy questions only (idle-fabric checks);
     /// resolving a residual through it panics.
-    pub fn occupancy_only(per_link: &'a [Vec<usize>]) -> NetView<'a> {
-        NetView { per_link, remaining: &unresolved }
+    pub fn occupancy_only<T: LinkTasks + ?Sized>(links: &'a T) -> NetView<'a> {
+        NetView { links, remaining: &unresolved }
     }
 
     /// Number of fabric links the view covers.
     pub fn n_links(&self) -> usize {
-        self.per_link.len()
+        self.links.n_links()
     }
 
     /// Active comm-task ids on `link`.
     pub fn link_tasks(&self, link: LinkId) -> &[usize] {
-        &self.per_link[link]
+        self.links.tasks(link)
     }
 
     /// Remaining message bytes of active task `id` (resolved on demand).
@@ -68,14 +73,14 @@ impl<'a> NetView<'a> {
 
     /// Active-transfer count on `link`.
     pub fn occupancy(&self, link: LinkId) -> usize {
-        self.per_link[link].len()
+        self.links.tasks(link).len()
     }
 
     /// Maximum count of active communication tasks over `links`
     /// (Algorithm 2 lines 2–7). Pure occupancy: no residual resolution,
     /// no allocation — the whole cost of an SRSF(n) decision.
     pub fn max_occupancy(&self, links: &[LinkId]) -> usize {
-        links.iter().map(|&l| self.per_link[l].len()).max().unwrap_or(0)
+        links.iter().map(|&l| self.links.tasks(l).len()).max().unwrap_or(0)
     }
 
     /// Largest remaining message among the tasks on `links` (0.0 when
@@ -85,7 +90,7 @@ impl<'a> NetView<'a> {
     pub fn max_remaining(&self, links: &[LinkId]) -> f64 {
         let mut m = 0.0f64;
         for &l in links {
-            for &id in &self.per_link[l] {
+            for &id in self.links.tasks(l) {
                 m = m.max((self.remaining)(id));
             }
         }
@@ -101,7 +106,7 @@ impl<'a> NetView<'a> {
         let mut max = 0;
         let mut ids: Vec<usize> = Vec::new();
         for &s in links {
-            let tasks = &self.per_link[s];
+            let tasks = self.links.tasks(s);
             if tasks.len() > max {
                 max = tasks.len();
             }
@@ -235,7 +240,25 @@ pub fn srsf_cmp(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
 /// maintained incrementally — an O(log n) binary-search insert per
 /// arrival (plus the `Vec::insert` memmove, a few hundred contiguous
 /// bytes even at 100k-job scale) instead of a full O(n log n) key-driven
-/// re-sort on every placement pass. Sound
+/// re-sort on every placement pass.
+///
+/// **Why the O(n) memmove stays** (evaluated against a two-stack /
+/// gap-buffer layout; microbenched head-to-head in `benches/micro/`,
+/// the `JobQueue insert` vs `gap-buffer insert` rows). A gap buffer
+/// wins when consecutive inserts cluster near the gap — but this
+/// queue's access pattern forces the gap away on *every* use: each
+/// arrival triggers a placement pass, and the pass walks the whole
+/// queue through [`JobQueue::take_all`]/[`JobQueue::restore`] (a full
+/// linear traversal that any gap layout must first close the gap for,
+/// an O(n) move of its own). So per arrival both layouts pay one O(n)
+/// contiguous move; the flat `Vec` pays it as a single branch-free
+/// `memmove` of a few-hundred-byte tail, while the gap buffer adds gap
+/// bookkeeping to every probe and breaks `entries()`'s borrowed-slice
+/// API (callers would need a two-segment iterator or an O(n)
+/// compaction). At realistic queue depths — tens of entries in the
+/// paper regime, low thousands under the 100k-job saturation gate —
+/// the memmove is measured in nanoseconds and never shows up in the
+/// sim_hotpath profile. Sound
 /// because queue keys are *static* per priority rule — SRSF's queued key
 /// is the job's total service (a pure function of its immutable spec,
 /// E_J = 0 before placement), FIFO's is its arrival time, and LAS's is 0

@@ -6,7 +6,7 @@ use std::collections::BinaryHeap;
 use crate::bail;
 use crate::cluster::{ClusterSpec, ClusterState, FreeGpuIndex, GpuId};
 use crate::model::CommModel;
-use crate::net::{links_intersect, LinkId, Topology, TopologySpec};
+use crate::net::{links_intersect, LinkId, LinkLists, Topology, TopologySpec};
 use crate::placement::Placer;
 use crate::sched::{srsf_cmp, Admission, CommPolicy, JobQueue, NetView};
 use crate::source::JobSource;
@@ -126,6 +126,15 @@ pub struct SimConfig {
     /// Compatibility switch: `simulate` attaches a [`LegacyLog`] observer
     /// iff this is set; the engine itself never formats strings.
     pub log_events: bool,
+    /// Worker threads for reconcile-time advancement of non-interacting
+    /// jobs (1 = serial, the default). When a placement pass dissolves
+    /// several live macro-events at once, each job's pure float-chain
+    /// walk fans out over up to `workers` scoped threads; the results
+    /// are applied serially in the serial engine's order, so every
+    /// emission, heap push and float operation is bit-identical for any
+    /// value (property-tested across the generator grid). Only the jobs
+    /// steadiness already proved non-interacting ever run concurrently.
+    pub workers: usize,
 }
 
 impl SimConfig {
@@ -139,6 +148,7 @@ impl SimConfig {
             priority: JobPriority::Srsf,
             coalescing: true,
             log_events: false,
+            workers: 1,
         }
     }
 
@@ -305,7 +315,7 @@ struct JobRt {
     /// Placement order (1-based commit counter). Two jobs placed in the
     /// same pass with the same model run bitwise-lockstep iteration
     /// chains, and their same-timestamp events always process in
-    /// placement order — the tie-break `reconcile_ff` needs when a
+    /// placement order — the tie-break reconciliation needs when a
     /// macro-event boundary lands exactly on an interrupting finish.
     placed_seq: u64,
     /// Active macro-event, if the job is currently fast-forwarded.
@@ -335,11 +345,17 @@ impl JobRt {
 /// fast-forwarding skip events without perturbing other transfers.
 struct CommTask {
     job: usize,
+    /// Logical transfer id reported to observers. Comm *slots* are
+    /// recycled (`Engine::free_slots`) so steady-state admission reuses a
+    /// dead task's storage, but the ids observers see keep counting
+    /// monotonically — event streams stay byte-identical to the
+    /// grow-only engine this replaced.
+    pub_id: usize,
     /// Links the transfer crosses (== its job's `links`, sorted).
     links: Vec<LinkId>,
-    /// Position of this task's id inside each `per_link[links[i]]` list,
-    /// maintained under swap-removes so completion leaves every crossed
-    /// link in O(1) instead of an O(occupancy) retain scan.
+    /// Position of this task's id inside each `per_link` row for
+    /// `links[i]`, maintained under swap-removes so completion leaves
+    /// every crossed link in O(1) instead of an O(occupancy) retain scan.
     link_pos: Vec<usize>,
     /// A `CommDone` for the *current* `version` sits unpopped in the
     /// heap. Lets `repredict` count exactly the predictions it strands
@@ -355,7 +371,16 @@ struct CommTask {
     per_byte: f64,
     /// Time the residuals above were last fixed (admission / repricing).
     anchor_t: f64,
+    /// Prediction generation. Continues across slot reuse — never reset —
+    /// so a `CommDone` stranded in the heap by a previous tenant of this
+    /// slot can never collide with a live prediction.
     version: u64,
+    /// Under `Repricing::AtAdmission`, set once the admission price has
+    /// been fixed (by `repredict`, or directly when a reconcile rebuilds
+    /// an uncontended in-flight transfer): later network changes must not
+    /// reprice the task. Replaces the old `version > 0` test, which slot
+    /// reuse breaks (a recycled slot starts life with `version > 0`).
+    repriced: bool,
     done: bool,
 }
 
@@ -491,6 +516,103 @@ pub(crate) fn iter_bounds(
     (t1, t2, c)
 }
 
+/// Initial event-heap capacity from a trace-size hint. The seed sized the
+/// heap as `jobs.len() * 4`, which degenerates to zero for a streaming
+/// run (no pre-seeded jobs) and over-reserves for huge batch traces whose
+/// live event set is bounded by the jobs *in flight*, not the trace. Size
+/// from [`crate::source::JobSource::size_hint`] where one exists, with a
+/// sane clamp either way; an unknown horizon gets a fixed steady-state
+/// default.
+pub(crate) fn heap_capacity_hint(jobs_hint: Option<usize>) -> usize {
+    const MIN: usize = 64;
+    const MAX: usize = 1 << 20;
+    jobs_hint.map_or(1024, |n| n.saturating_mul(4)).clamp(MIN, MAX)
+}
+
+thread_local! {
+    /// Parallel reconcile batches run by engines on this thread — test
+    /// observability for the `workers > 1` path. Thread-local (not a
+    /// process-wide atomic) so concurrently running tests cannot race on
+    /// each other's counts.
+    pub(crate) static FF_PAR_BATCHES: std::cell::Cell<u64> =
+        const { std::cell::Cell::new(0) };
+}
+
+/// Pure inputs of one macro-event reconcile walk: everything the float
+/// chain depends on, copied out of the engine so the walk can run on a
+/// worker thread with no access to shared state.
+#[derive(Clone, Copy)]
+struct FfWalk {
+    start_t: f64,
+    iters: u64,
+    t_fwd: f64,
+    t_bwd: f64,
+    multi: bool,
+    lat: f64,
+    drain: f64,
+    /// Exact-tie heap order against the interrupter (see
+    /// [`Engine::reconcile_all_ffs`] for the derivation).
+    boundary_first: bool,
+}
+
+/// Outputs of a reconcile walk: iterations completed strictly before the
+/// interruption (tie-break included), the in-flight iteration's start
+/// `s`, its exact event times, and whether the chain ran to completion.
+#[derive(Clone, Copy, Default)]
+struct FfWalkOut {
+    done: u64,
+    s: f64,
+    t1: f64,
+    t2: f64,
+    c: f64,
+    finished: bool,
+}
+
+/// Replay a macro-event's iteration chain up to `t` — a pure function of
+/// the walk inputs, so the result is bit-identical whether it runs
+/// inline or on a worker thread. This is the only part of a reconcile
+/// that is O(iterations); mutating the engine from the result is O(gpus).
+fn ff_walk(w: &FfWalk, t: f64) -> FfWalkOut {
+    let mut done = 0u64;
+    let mut s = w.start_t;
+    let (mut t1, mut t2, mut c) = iter_bounds(s, w.t_fwd, w.t_bwd, w.multi, w.lat, w.drain);
+    // Both comparisons are false on a NaN chain (poisoned comm model),
+    // so this stops with wrong results, never a hang — the heap order's
+    // stance.
+    while c < t || (c == t && w.boundary_first) {
+        done += 1;
+        s = c;
+        if done == w.iters {
+            return FfWalkOut { done, s, t1, t2, c, finished: true };
+        }
+        let next = iter_bounds(s, w.t_fwd, w.t_bwd, w.multi, w.lat, w.drain);
+        t1 = next.0;
+        t2 = next.1;
+        c = next.2;
+    }
+    FfWalkOut { done, s, t1, t2, c, finished: false }
+}
+
+/// Fan the walks over up to `workers` scoped threads, each output landing
+/// in its input's slot. Deterministic by construction: chunk boundaries
+/// only decide *where* a walk runs, never what it computes ([`ff_walk`]
+/// is pure) nor the order the caller applies the results in.
+fn par_walk(workers: usize, walks: &[FfWalk], t: f64) -> Vec<FfWalkOut> {
+    let mut outs = vec![FfWalkOut::default(); walks.len()];
+    let n_workers = workers.min(walks.len()).max(1);
+    let chunk = walks.len().div_ceil(n_workers);
+    std::thread::scope(|scope| {
+        for (ws, os) in walks.chunks(chunk).zip(outs.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (w, o) in ws.iter().zip(os.iter_mut()) {
+                    *o = ff_walk(w, t);
+                }
+            });
+        }
+    });
+    outs
+}
+
 /// Stale heap entries (superseded `CommDone` / dissolved `FastForward`
 /// predictions) tolerated before the heap is rebuilt without them.
 /// Dynamic repricing supersedes every affected task's prediction on every
@@ -542,12 +664,24 @@ struct Engine<'a, 'o> {
     /// view visits; scanning the whole historical `comms` vec would be
     /// quadratic).
     active_comms: Vec<usize>,
-    /// Position of each comm id inside `active_comms` (usize::MAX once
+    /// Position of each comm slot inside `active_comms` (usize::MAX once
     /// inactive), so completion is an O(1) swap-remove instead of an O(n)
     /// retain scan over every in-flight transfer.
     active_pos: Vec<usize>,
-    /// Active comm-task ids per fabric link (NICs, then rack uplinks).
-    per_link: Vec<Vec<usize>>,
+    /// Recycled `comms` slots. A completed task returns its slot (with
+    /// its `links`/`link_pos` capacity) to this free list; the next
+    /// admission pops it instead of growing `comms` — steady state runs
+    /// with a bounded slab no matter how many transfers the trace makes.
+    free_slots: Vec<usize>,
+    /// Next logical transfer id (`CommTask::pub_id`) — monotone even
+    /// though slots recycle, reproducing the grow-only engine's observer
+    /// id sequence exactly.
+    next_comm_id: usize,
+    /// Active comm-task slots per fabric link (NICs, then rack uplinks),
+    /// as a flat stride-capped slab — one allocation for the whole
+    /// fabric instead of a `Vec<Vec<usize>>`'s row-per-link spine, and
+    /// row access without the double indirection.
+    per_link: LinkLists,
     /// Placement commits so far (feeds `JobRt::placed_seq`).
     placements: u64,
     /// Running (placed, unfinished) multi-server jobs — the set a
@@ -561,7 +695,7 @@ struct Engine<'a, 'o> {
     /// Always-empty per-link occupancy view lent to the policy by the
     /// steadiness check (allocated once, never mutated — the check runs
     /// at every iteration boundary of every uncontended multi job).
-    empty_view: Vec<Vec<usize>>,
+    empty_view: LinkLists,
     /// Jobs currently running under a macro-event (`JobRt::ff` set).
     ff_jobs: Vec<usize>,
     /// Per job: its position inside `ff_jobs` (`usize::MAX` when absent).
@@ -626,7 +760,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                 }
             })
             .collect();
-        let mut heap = BinaryHeap::with_capacity(jobs.len() * 4);
+        let mut heap = BinaryHeap::with_capacity(heap_capacity_hint(Some(jobs.len())));
         for (i, j) in jobs.iter().enumerate() {
             heap.push(Timed { t: j.arrival, seq: i as u64, ev: Ev::Arrive { job: i } });
         }
@@ -661,11 +795,13 @@ impl<'a, 'o> Engine<'a, 'o> {
             comms: Vec::new(),
             active_comms: Vec::new(),
             active_pos: Vec::new(),
-            per_link: vec![Vec::new(); n_links],
+            free_slots: Vec::new(),
+            next_comm_id: 0,
+            per_link: LinkLists::new(n_links),
             placements: 0,
             running_multi: Vec::new(),
             running_multi_pos: vec![usize::MAX; jobs.len()],
-            empty_view: vec![Vec::new(); n_links],
+            empty_view: LinkLists::new(n_links),
             ff_jobs: Vec::new(),
             ff_pos: vec![usize::MAX; jobs.len()],
             heap_stale: 0,
@@ -689,7 +825,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         source: &'a mut dyn JobSource,
         observers: &'a mut [&'o mut (dyn SimObserver + 'o)],
     ) -> Engine<'a, 'o> {
+        let hint = source.size_hint();
         let mut eng = Engine::new(cfg, &[], observers);
+        // The batch constructor saw zero jobs; resize the heap from the
+        // source's own estimate of the trace length (bounded — streaming
+        // exists precisely so memory does not scale with the trace).
+        eng.heap = BinaryHeap::with_capacity(heap_capacity_hint(hint));
         // The trace's memory demands are unknown up front; per-GPU demand
         // is a function of the model alone, so registering every zoo
         // model's footprint keeps the capacity gate exact for any
@@ -1034,12 +1175,16 @@ impl<'a, 'o> Engine<'a, 'o> {
     }
 
     fn start_iteration_exact(&mut self, t: f64, job: usize) {
-        let gpus = self.jobs[job].gpus.clone();
+        // Borrow the GPU set by take/restore instead of the per-iteration
+        // clone this replaced — the engine's #1 steady-state allocation
+        // site (`schedule_gpu` never touches `JobRt::gpus`).
+        let gpus = std::mem::take(&mut self.jobs[job].gpus);
         self.jobs[job].bwd_remaining = gpus.len();
-        for g in gpus {
+        for &g in &gpus {
             self.gpus[g].ready.push((job, Phase::Fwd));
             self.schedule_gpu(t, g);
         }
+        self.jobs[job].gpus = gpus;
     }
 
     fn schedule_gpu(&mut self, t: f64, gpu: GpuId) {
@@ -1111,11 +1256,12 @@ impl<'a, 'o> Engine<'a, 'o> {
 
     fn iteration_complete(&mut self, t: f64, job: usize, policy: &dyn CommPolicy) {
         self.jobs[job].iters_done += 1;
-        let gpus = self.jobs[job].gpus.clone();
+        let gpus = std::mem::take(&mut self.jobs[job].gpus);
         self.cluster.drain_load(&gpus, self.jobs[job].load_per_iter);
         if self.jobs[job].iters_done >= self.jobs[job].spec.iterations {
             self.finish_job(t, job, &gpus);
         } else {
+            self.jobs[job].gpus = gpus;
             self.start_iteration(t, job, policy);
         }
     }
@@ -1197,7 +1343,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                 return false;
             }
             for &l in &self.jobs[job].links {
-                if !self.per_link[l].is_empty() {
+                if !self.per_link.is_empty(l) {
                     return false;
                 }
             }
@@ -1266,7 +1412,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         debug_assert_eq!(t.to_bits(), ff.end_t.to_bits());
         self.apply_iterations(job, &ff, ff.iters, ff.end_t);
         debug_assert_eq!(self.jobs[job].iters_done, self.jobs[job].spec.iterations);
-        let gpus = self.jobs[job].gpus.clone();
+        let gpus = std::mem::take(&mut self.jobs[job].gpus);
         self.finish_job(t, job, &gpus);
     }
 
@@ -1298,8 +1444,9 @@ impl<'a, 'o> Engine<'a, 'o> {
                 msg_bytes: self.jobs[job].spec.message_bytes(),
             },
         );
-        let gpus = self.jobs[job].gpus.clone();
+        let gpus = std::mem::take(&mut self.jobs[job].gpus);
         self.cluster.drain_load_n(&gpus, self.jobs[job].load_per_iter, n);
+        self.jobs[job].gpus = gpus;
         self.jobs[job].iters_done += n;
     }
 
@@ -1307,6 +1454,19 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// micro-state at `t` — called before a placement pass reads cluster
     /// state. Iterations that completed before `t` are applied in batch;
     /// the in-flight one is reconstructed as real heap events.
+    ///
+    /// With `cfg.workers > 1` the O(iterations) walks — the whole cost of
+    /// a reconcile — fan out over a scoped worker pool. This is safe
+    /// precisely because these jobs are the ones steadiness proved
+    /// non-interacting: each walk is a pure function of its own job's
+    /// frozen chain constants, sharing nothing. The engine mutations then
+    /// apply serially in `ff_jobs` order — the same order the serial loop
+    /// used — so every emission, heap push (and thus `seq` assignment)
+    /// and float operation is bit-identical to `workers == 1`.
+    ///
+    /// A mid-macro arrival is already a serial barrier by construction:
+    /// the arrival pops, `try_place` calls this once, and no walk starts
+    /// until every input is frozen at the arrival's timestamp.
     fn reconcile_all_ffs(&mut self, t: f64, interrupter: Option<usize>) {
         if self.ff_jobs.is_empty() {
             return;
@@ -1315,14 +1475,46 @@ impl<'a, 'o> Engine<'a, 'o> {
         for &job in &jobs {
             self.ff_pos[job] = usize::MAX;
         }
-        for job in jobs {
-            self.reconcile_ff(t, job, interrupter);
+        if self.cfg.workers > 1 && jobs.len() > 1 {
+            let walks: Vec<FfWalk> =
+                jobs.iter().map(|&job| self.walk_inputs(job, interrupter)).collect();
+            let outs = par_walk(self.cfg.workers, &walks, t);
+            FF_PAR_BATCHES.with(|c| c.set(c.get() + 1));
+            for (i, &job) in jobs.iter().enumerate() {
+                self.reconcile_ff_apply(t, job, &outs[i]);
+            }
+        } else {
+            for &job in &jobs {
+                let out = ff_walk(&self.walk_inputs(job, interrupter), t);
+                self.reconcile_ff_apply(t, job, &out);
+            }
+        }
+    }
+
+    /// Snapshot the pure inputs of `job`'s reconcile walk (see
+    /// [`FfWalk`]). Walk inputs never depend on another job's reconcile
+    /// side-effects — chain constants were frozen at macro-event creation
+    /// and `placed_seq` at placement — which is what lets
+    /// `reconcile_all_ffs` collect every snapshot before applying any.
+    fn walk_inputs(&self, job: usize, interrupter: Option<usize>) -> FfWalk {
+        let j = &self.jobs[job];
+        let ff = j.ff.as_ref().expect("reconcile without a macro-event");
+        FfWalk {
+            start_t: ff.start_t,
+            iters: ff.iters,
+            t_fwd: j.t_fwd,
+            t_bwd: j.t_bwd,
+            multi: j.multi_server,
+            lat: ff.lat,
+            drain: j.spec.message_bytes() * ff.per_byte,
+            boundary_first: interrupter
+                .is_some_and(|f| j.placed_seq < self.jobs[f].placed_seq),
         }
     }
 
     /// Materialise a fast-forwarded job's exact micro-state at time `t`
-    /// (start ≤ t ≤ end): walk the iteration chain to the one in flight
-    /// at `t`, apply everything before it, and push the in-flight
+    /// (start ≤ t ≤ end) from a completed [`ff_walk`]: apply every
+    /// iteration that finished before `t`, and push the in-flight
     /// iteration's pending events — with timestamps bit-identical to the
     /// ones the event-exact engine would be holding in its heap.
     ///
@@ -1337,124 +1529,149 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// this job was placed before F. (A trace *crafted* so an arrival is
     /// bit-equal to an interior boundary can invert that order; see the
     /// caveat in docs/EXPERIMENTS.md §Perf.)
-    fn reconcile_ff(&mut self, t: f64, job: usize, interrupter: Option<usize>) {
+    fn reconcile_ff_apply(&mut self, t: f64, job: usize, out: &FfWalkOut) {
         let ff = self.jobs[job].ff.take().expect("reconcile without a macro-event");
         self.jobs[job].ff_version += 1; // the pending FastForward goes stale
         self.heap_stale += 1;
         emit(&mut *self.observers, SimEvent::FastForwardDissolved { t, job });
-        let boundary_first = interrupter
-            .is_some_and(|f| self.jobs[job].placed_seq < self.jobs[f].placed_seq);
         let t_fwd = self.jobs[job].t_fwd;
         let t_bwd = self.jobs[job].t_bwd;
         let multi = self.jobs[job].multi_server;
         let msg = self.jobs[job].spec.message_bytes();
-        let drain = msg * ff.per_byte;
-        let mut done = 0u64;
-        let mut s = ff.start_t;
-        let (mut t1, mut t2, mut c) = iter_bounds(s, t_fwd, t_bwd, multi, ff.lat, drain);
-        // Both comparisons are false on a NaN chain (poisoned comm model),
-        // so this stops with wrong results, never a hang — the heap
-        // order's stance.
-        while c < t || (c == t && boundary_first) {
-            done += 1;
-            s = c;
-            if done == ff.iters {
-                // The whole macro-event ran: the interrupter shares the
-                // final timestamp but sorts after the finish.
-                self.apply_iterations(job, &ff, done, s);
-                let gpus = self.jobs[job].gpus.clone();
-                self.finish_job(t, job, &gpus);
-                return;
-            }
-            let next = iter_bounds(s, t_fwd, t_bwd, multi, ff.lat, drain);
-            t1 = next.0;
-            t2 = next.1;
-            c = next.2;
+        if out.finished {
+            // The whole macro-event ran: the interrupter shares the
+            // final timestamp but sorts after the finish.
+            self.apply_iterations(job, &ff, out.done, out.s);
+            let gpus = std::mem::take(&mut self.jobs[job].gpus);
+            self.finish_job(t, job, &gpus);
+            return;
         }
-        self.apply_iterations(job, &ff, done, s);
-        // Rebuild the iteration in flight at `t` (it started at `s`).
+        self.apply_iterations(job, &ff, out.done, out.s);
+        // Rebuild the iteration in flight at `t` (it started at `out.s`).
         // The `ComputeStarted` emissions carry the in-flight tasks' real
         // (past) start times; per-GPU busy accumulation replays the same
         // per-accumulator addition order the event-exact engine used.
-        let gpus = self.jobs[job].gpus.clone();
-        if t <= t1 {
+        let gpus = std::mem::take(&mut self.jobs[job].gpus);
+        if t <= out.t1 {
             // Forward pass running on every GPU.
             self.jobs[job].bwd_remaining = gpus.len();
             for &g in &gpus {
                 self.gpus[g].busy = true;
                 emit(
                     &mut *self.observers,
-                    SimEvent::ComputeStarted { t: s, gpu: g, job, phase: Phase::Fwd, dur: t_fwd },
+                    SimEvent::ComputeStarted {
+                        t: out.s,
+                        gpu: g,
+                        job,
+                        phase: Phase::Fwd,
+                        dur: t_fwd,
+                    },
                 );
-                self.push(t1, Ev::ComputeDone { gpu: g, job, phase: Phase::Fwd });
+                self.push(out.t1, Ev::ComputeDone { gpu: g, job, phase: Phase::Fwd });
             }
-        } else if t <= t2 {
+        } else if t <= out.t2 {
             // Backward pass running on every GPU.
             self.jobs[job].bwd_remaining = gpus.len();
             for &g in &gpus {
                 self.gpus[g].busy = true;
                 emit(
                     &mut *self.observers,
-                    SimEvent::ComputeStarted { t: s, gpu: g, job, phase: Phase::Fwd, dur: t_fwd },
+                    SimEvent::ComputeStarted {
+                        t: out.s,
+                        gpu: g,
+                        job,
+                        phase: Phase::Fwd,
+                        dur: t_fwd,
+                    },
                 );
                 emit(
                     &mut *self.observers,
-                    SimEvent::ComputeStarted { t: t1, gpu: g, job, phase: Phase::Bwd, dur: t_bwd },
+                    SimEvent::ComputeStarted {
+                        t: out.t1,
+                        gpu: g,
+                        job,
+                        phase: Phase::Bwd,
+                        dur: t_bwd,
+                    },
                 );
-                self.push(t2, Ev::ComputeDone { gpu: g, job, phase: Phase::Bwd });
+                self.push(out.t2, Ev::ComputeDone { gpu: g, job, phase: Phase::Bwd });
             }
         } else {
             // All-Reduce in flight: admitted clean (k = 1) at t2,
             // completion predicted for `c` — the exact engine's comm task,
-            // reconstructed field-for-field.
+            // reconstructed field-for-field in a recycled slot.
             debug_assert!(multi);
             self.jobs[job].bwd_remaining = 0;
             for &g in &gpus {
                 emit(
                     &mut *self.observers,
-                    SimEvent::ComputeStarted { t: s, gpu: g, job, phase: Phase::Fwd, dur: t_fwd },
+                    SimEvent::ComputeStarted {
+                        t: out.s,
+                        gpu: g,
+                        job,
+                        phase: Phase::Fwd,
+                        dur: t_fwd,
+                    },
                 );
                 emit(
                     &mut *self.observers,
-                    SimEvent::ComputeStarted { t: t1, gpu: g, job, phase: Phase::Bwd, dur: t_bwd },
+                    SimEvent::ComputeStarted {
+                        t: out.t1,
+                        gpu: g,
+                        job,
+                        phase: Phase::Bwd,
+                        dur: t_bwd,
+                    },
                 );
             }
-            let links = self.jobs[job].links.clone();
-            let id = self.comms.len();
-            // Record where this id will land in each per-link list (the
-            // completion-time swap-remove positions).
-            let link_pos: Vec<usize> = links.iter().map(|&l| self.per_link[l].len()).collect();
-            self.comms.push(CommTask {
-                job,
-                links: links.clone(),
-                link_pos,
-                predicted: true,
-                latency_left: ff.lat,
-                remaining: msg,
-                k: 1,
-                per_byte: ff.per_byte,
-                anchor_t: t2,
-                version: 1,
-                done: false,
-            });
-            for &l in &links {
-                self.per_link[l].push(id);
+            let links = std::mem::take(&mut self.jobs[job].links);
+            let slot = self.alloc_comm_slot();
+            let pub_id = self.next_comm_id;
+            self.next_comm_id += 1;
+            {
+                let c = &mut self.comms[slot];
+                c.job = job;
+                c.pub_id = pub_id;
+                c.predicted = true;
+                c.latency_left = ff.lat;
+                c.remaining = msg;
+                c.k = 1;
+                c.per_byte = ff.per_byte;
+                c.anchor_t = out.t2;
+                c.version += 1;
+                c.repriced = true; // k = 1 price locked, as at a clean admission
+                c.done = false;
             }
-            self.active_pos.push(self.active_comms.len());
-            debug_assert_eq!(self.active_pos.len(), self.comms.len());
-            self.active_comms.push(id);
+            // Record where the slot lands in each per-link row (the
+            // completion-time swap-remove positions), then occupy.
+            for &l in &links {
+                self.comms[slot].link_pos.push(self.per_link.len(l));
+                self.per_link.push(l, slot);
+            }
+            self.comms[slot].links.extend_from_slice(&links);
+            self.active_pos[slot] = self.active_comms.len();
+            self.active_comms.push(slot);
             emit(
                 &mut *self.observers,
-                SimEvent::CommAdmitted { t: t2, job, comm: id, links: &links, contention: 1 },
+                SimEvent::CommAdmitted {
+                    t: out.t2,
+                    job,
+                    comm: pub_id,
+                    links: &links,
+                    contention: 1,
+                },
             );
             for &l in &links {
                 emit(
                     &mut *self.observers,
-                    SimEvent::ContentionChanged { t: t2, link: l, level: self.per_link[l].len() },
+                    SimEvent::ContentionChanged { t: out.t2, link: l, level: self.per_link.len(l) },
                 );
             }
-            self.push(c, Ev::CommDone { comm: id, version: 1 });
+            let version = self.comms[slot].version;
+            self.jobs[job].links = links;
+            self.push(out.c, Ev::CommDone { comm: slot, version });
         }
+        self.jobs[job].gpus = gpus;
     }
 
     // -- network ------------------------------------------------------------
@@ -1486,7 +1703,7 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// Contention level for a task crossing `links`: max |C_l| — Eq (5)
     /// generalised from server NICs to fabric links.
     fn contention_on(&self, links: &[LinkId]) -> usize {
-        links.iter().map(|&l| self.per_link[l].len()).max().unwrap_or(0)
+        links.iter().map(|&l| self.per_link.len(l)).max().unwrap_or(0)
     }
 
     /// Re-derive k, the bottleneck per-byte price and the predicted
@@ -1495,7 +1712,7 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// pricing, k and the price are computed only while the task has not
     /// started draining (i.e. at admission); afterwards they stay locked.
     fn repredict(&mut self, t: f64, id: usize) {
-        let locked = self.cfg.repricing == Repricing::AtAdmission && self.comms[id].version > 0;
+        let locked = self.cfg.repricing == Repricing::AtAdmission && self.comms[id].repriced;
         let (k, per_byte) = if locked {
             (self.comms[id].k, self.comms[id].per_byte)
         } else {
@@ -1509,7 +1726,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             let mut pb = 0.0f64;
             for i in 0..self.comms[id].links.len() {
                 let l = self.comms[id].links[i];
-                let occ = self.per_link[l].len().max(1);
+                let occ = self.per_link.len(l).max(1);
                 k = k.max(occ);
                 let p = self.topo.link_model(l).per_byte(occ);
                 if p > pb {
@@ -1528,6 +1745,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         c.anchor_t = t;
         c.k = k;
         c.per_byte = per_byte;
+        c.repriced = true;
         c.version += 1;
         // An unpopped prediction for the previous version is stranded in
         // the heap by this supersession (Dynamic repricing does this to
@@ -1558,7 +1776,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         let mut affected = std::mem::take(&mut self.scratch_affected);
         affected.clear();
         for &l in links {
-            affected.extend_from_slice(&self.per_link[l]);
+            affected.extend_from_slice(self.per_link.tasks(l));
         }
         affected.sort_unstable();
         affected.dedup();
@@ -1566,6 +1784,38 @@ impl<'a, 'o> Engine<'a, 'o> {
             self.repredict(t, id);
         }
         self.scratch_affected = affected;
+    }
+
+    /// Pop a recycled `comms` slot, or grow the slab by one. The returned
+    /// slot's `links`/`link_pos` are empty (capacity retained from the
+    /// previous tenant); every other field is stale and must be
+    /// overwritten by the caller — except `version`, which deliberately
+    /// survives reuse (see [`CommTask::version`]).
+    fn alloc_comm_slot(&mut self) -> usize {
+        if let Some(slot) = self.free_slots.pop() {
+            debug_assert!(self.comms[slot].done, "recycling a live comm slot");
+            debug_assert!(self.comms[slot].links.is_empty());
+            return slot;
+        }
+        let slot = self.comms.len();
+        self.comms.push(CommTask {
+            job: 0,
+            pub_id: 0,
+            links: Vec::new(),
+            link_pos: Vec::new(),
+            predicted: false,
+            latency_left: 0.0,
+            remaining: 0.0,
+            k: 1,
+            per_byte: 0.0,
+            anchor_t: 0.0,
+            version: 0,
+            repriced: false,
+            done: true,
+        });
+        self.active_pos.push(usize::MAX);
+        debug_assert_eq!(self.active_pos.len(), self.comms.len());
+        slot
     }
 
     fn try_admit(&mut self, t: f64, policy: &dyn CommPolicy) {
@@ -1616,42 +1866,53 @@ impl<'a, 'o> Engine<'a, 'o> {
             };
             if admit == Admission::Start {
                 let pre = self.contention_on(&links);
-                let id = self.comms.len();
-                let link_pos: Vec<usize> =
-                    links.iter().map(|&l| self.per_link[l].len()).collect();
-                self.comms.push(CommTask {
-                    job,
-                    links: links.clone(),
-                    link_pos,
-                    predicted: false,
-                    latency_left: self.topo.latency_over(&links),
-                    remaining: msg,
-                    k: 1,
-                    per_byte: self.cfg.comm.per_byte(1),
-                    anchor_t: t,
-                    version: 0,
-                    done: false,
-                });
-                for &l in &links {
-                    self.per_link[l].push(id);
+                let latency = self.topo.latency_over(&links);
+                let slot = self.alloc_comm_slot();
+                let pub_id = self.next_comm_id;
+                self.next_comm_id += 1;
+                {
+                    let c = &mut self.comms[slot];
+                    c.job = job;
+                    c.pub_id = pub_id;
+                    c.predicted = false;
+                    c.latency_left = latency;
+                    c.remaining = msg;
+                    c.k = 1;
+                    c.per_byte = self.cfg.comm.per_byte(1);
+                    c.anchor_t = t;
+                    // `version` continues from the slot's previous tenant
+                    // (see the field docs); `repredict` below bumps it and
+                    // pushes the first live prediction.
+                    c.repriced = false;
+                    c.done = false;
                 }
-                self.active_pos.push(self.active_comms.len());
-                debug_assert_eq!(self.active_pos.len(), self.comms.len());
-                self.active_comms.push(id);
+                for &l in &links {
+                    self.comms[slot].link_pos.push(self.per_link.len(l));
+                    self.per_link.push(l, slot);
+                }
+                self.comms[slot].links.extend_from_slice(&links);
+                self.active_pos[slot] = self.active_comms.len();
+                self.active_comms.push(slot);
                 self.jobs[job].comm_pending = false;
                 emit(
                     &mut *self.observers,
-                    SimEvent::CommAdmitted { t, job, comm: id, links: &links, contention: pre + 1 },
+                    SimEvent::CommAdmitted {
+                        t,
+                        job,
+                        comm: pub_id,
+                        links: &links,
+                        contention: pre + 1,
+                    },
                 );
                 for &l in &links {
                     emit(
                         &mut *self.observers,
-                        SimEvent::ContentionChanged { t, link: l, level: self.per_link[l].len() },
+                        SimEvent::ContentionChanged { t, link: l, level: self.per_link.len(l) },
                     );
                 }
                 // Price the new task; under Dynamic repricing also refresh
                 // everyone sharing its links.
-                self.repredict(t, id);
+                self.repredict(t, slot);
                 self.refresh_links(t, &links);
                 self.jobs[job].links = links;
             } else {
@@ -1669,7 +1930,11 @@ impl<'a, 'o> Engine<'a, 'o> {
         policy: &dyn CommPolicy,
     ) {
         let job = self.comms[id].job;
-        let links = self.comms[id].links.clone();
+        let pub_id = self.comms[id].pub_id;
+        // Borrow the task's link state by take/restore — the per-event
+        // `links.clone()` here was the #2 steady-state allocation site.
+        let links = std::mem::take(&mut self.comms[id].links);
+        let link_pos = std::mem::take(&mut self.comms[id].link_pos);
         self.comms[id].done = true;
         // O(1) swap-remove from the in-flight set.
         let pos = self.active_pos[id];
@@ -1683,24 +1948,33 @@ impl<'a, 'o> Engine<'a, 'o> {
         // scan per link). A displaced task finds which of its links this
         // is by binary search — its link set is sorted.
         for (i, &l) in links.iter().enumerate() {
-            let lp = self.comms[id].link_pos[i];
-            self.per_link[l].swap_remove(lp);
-            if let Some(&moved) = self.per_link[l].get(lp) {
-                let slot = self.comms[moved]
+            let lp = link_pos[i];
+            self.per_link.swap_remove(l, lp);
+            if let Some(moved) = self.per_link.get(l, lp) {
+                let li = self.comms[moved]
                     .links
                     .binary_search(&l)
                     .expect("displaced comm task not registered on link");
-                self.comms[moved].link_pos[slot] = lp;
+                self.comms[moved].link_pos[li] = lp;
             }
         }
-        emit(&mut *self.observers, SimEvent::CommFinished { t, job, comm: id, links: &links });
+        emit(&mut *self.observers, SimEvent::CommFinished { t, job, comm: pub_id, links: &links });
         for &l in &links {
             emit(
                 &mut *self.observers,
-                SimEvent::ContentionChanged { t, link: l, level: self.per_link[l].len() },
+                SimEvent::ContentionChanged { t, link: l, level: self.per_link.len(l) },
             );
         }
         self.refresh_links(t, &links);
+        // Recycle the slot — its cleared `links`/`link_pos` capacity goes
+        // with it, so the next admission allocates nothing.
+        let mut links = links;
+        let mut link_pos = link_pos;
+        links.clear();
+        link_pos.clear();
+        self.comms[id].links = links;
+        self.comms[id].link_pos = link_pos;
+        self.free_slots.push(id);
         self.iteration_complete(t, job, policy);
         self.try_admit(t, policy);
         if self.need_place {

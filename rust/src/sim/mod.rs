@@ -39,6 +39,17 @@
 //! §Perf). The equivalence guarantee assumes stateless admission policies
 //! that read only the links of the task under decision — true of every
 //! registry policy.
+//!
+//! Parallel advancement (`SimConfig::workers`, default 1): when a
+//! placement pass dissolves several macro-events at once, each job's
+//! O(iterations) reconcile walk is a pure function of its own frozen
+//! chain constants — the jobs were proven non-interacting to get a
+//! macro-event at all — so the walks fan out over a scoped worker pool
+//! and the results apply serially in the serial engine's order. Output
+//! is bit-identical for any worker count (property-tested across the
+//! generator grid); a mid-macro arrival is a serial barrier by
+//! construction, since every walk input is frozen at the arrival's
+//! timestamp before any walk starts (docs/EXPERIMENTS.md §Perf).
 
 //! Output layer ([`observe`]): the engine emits a stream of typed
 //! [`SimEvent`]s to a composable set of [`SimObserver`]s

@@ -20,6 +20,7 @@ fn cfg(n_servers: usize, gpus_per_server: usize) -> SimConfig {
         priority: JobPriority::Srsf,
         coalescing: true,
         log_events: false,
+        workers: 1,
     }
 }
 
@@ -1374,4 +1375,70 @@ fn two_tier_contention_meets_on_the_core_link() {
     let flat = simulate(&c_flat, &jobs, &mut p, &SrsfCap { cap: 2 });
     assert_eq!(flat.contended_admissions, 0);
     assert_eq!(flat.max_contention, 1);
+}
+
+// ---------------------------------------------------------------------------
+// parallel advancement (`SimConfig::workers`): fanning reconcile walks over
+// a worker pool must be invisible — results, event counts and the legacy
+// log all bit-identical to the serial engine.
+
+#[test]
+fn prop_parallel_advance_bit_identical_to_serial() {
+    // Random traces × topologies × priorities × repricing × policies ×
+    // 2..4 workers. Unlike coalescing, parallelism must not
+    // even change `n_events` — it reorders nothing, it only computes the
+    // same walks on more threads.
+    prop_check(30, |g| {
+        let (c, jobs, use_ada, cap) = random_setup(g);
+        let serial = run_policy(&c, &jobs, use_ada, cap);
+        let workers = g.usize(2, 4);
+        let par = run_policy(&SimConfig { workers, ..c.clone() }, &jobs, use_ada, cap);
+        check_equivalent(&par, &serial)?;
+        if par.n_events != serial.n_events {
+            return Err(format!(
+                "n_events diverged under workers={workers}: {} vs {}",
+                par.n_events, serial.n_events
+            ));
+        }
+        logs_eq("parallel-vs-serial log", &par.events, &serial.events)
+    });
+}
+
+#[test]
+fn ff_mid_macro_arrival_is_serial_barrier_then_parallel_batch() {
+    // Two steady jobs fast-forward on separate GPUs; a third arrives
+    // mid-macro. The arrival acts as a serial barrier by construction —
+    // both walk inputs are frozen at the arrival's timestamp before any
+    // walk starts — and under workers = 2 the two dissolutions run as
+    // exactly one parallel reconcile batch, bit-identical to serial.
+    let c = cfg(1, 3);
+    let j0 = job(0, 0.0, DnnModel::ResNet50, 1, 400);
+    let j1 = job(1, 0.0, DnnModel::ResNet50, 1, 300);
+    let t_iter = j0.t_iter(c.cluster.gpu_peak_gflops);
+    let j2 = job(2, 13.5 * t_iter, DnnModel::ResNet50, 1, 50);
+    let jobs = [j0, j1, j2];
+    let base = super::engine::FF_PAR_BATCHES.with(|x| x.get());
+    let serial = run(&c, &jobs);
+    assert_eq!(
+        super::engine::FF_PAR_BATCHES.with(|x| x.get()),
+        base,
+        "the serial engine must never run a parallel batch"
+    );
+    let par = run(&SimConfig { workers: 2, ..c.clone() }, &jobs);
+    let batches = super::engine::FF_PAR_BATCHES.with(|x| x.get()) - base;
+    assert!(batches >= 1, "mid-macro arrival did not trigger a parallel reconcile batch");
+    check_equivalent(&par, &serial).unwrap();
+    assert_eq!(par.n_events, serial.n_events, "worker fan-out changed the event count");
+}
+
+#[test]
+fn heap_capacity_hint_clamps_sanely() {
+    use super::engine::heap_capacity_hint;
+    // Known horizon: 4 events per job, clamped to [64, 1<<20].
+    assert_eq!(heap_capacity_hint(Some(0)), 64);
+    assert_eq!(heap_capacity_hint(Some(10)), 64);
+    assert_eq!(heap_capacity_hint(Some(100)), 400);
+    assert_eq!(heap_capacity_hint(Some(usize::MAX)), 1 << 20);
+    // Unknown horizon (streaming source without a hint): fixed default.
+    assert_eq!(heap_capacity_hint(None), 1024);
 }

@@ -149,6 +149,32 @@ impl BenchReport {
         self.rows.push(row);
     }
 
+    /// Full row plus a per-operation allocation count (from
+    /// [`crate::util::heap`] snapshot deltas around the workload). Only
+    /// meaningful under `--features dhat-heap` — callers pass the
+    /// measured delta and `ops`; without the feature the delta is zero
+    /// and the key is omitted so rows stay identical to default builds.
+    /// Like `peak_rss_mb`, the extra key is ignored by
+    /// [`BenchReport::delta_vs_committed`].
+    pub fn record_with_allocs(
+        &mut self,
+        workload: &str,
+        events: u64,
+        wall_s: f64,
+        allocs: u64,
+        ops: u64,
+    ) {
+        let mut row = Json::obj()
+            .set("workload", workload)
+            .set("events", events)
+            .set("wall_ms", wall_s * 1e3)
+            .set("events_per_s", events as f64 / wall_s);
+        if crate::util::heap::ENABLED && ops > 0 {
+            row = row.set("allocs_per_op", allocs as f64 / ops as f64);
+        }
+        self.rows.push(row);
+    }
+
     /// Write `results/BENCH_<name>.json` (creating the dir — the same
     /// convention as `write_csv`); returns the path written.
     pub fn write(&self) -> std::io::Result<String> {
@@ -287,6 +313,17 @@ mod tests {
         assert_eq!(row.req_f64("events_per_s").unwrap(), 2000.0);
         // On Linux the RSS key rides along; either way the delta keys stay.
         assert_eq!(row.req_str("workload").unwrap(), "w");
+    }
+
+    #[test]
+    fn allocs_row_keeps_delta_schema() {
+        let mut r = BenchReport::new("unit_test_allocs_report");
+        r.record_with_allocs("w", 1000, 0.5, 4200, 1000);
+        let row = &r.rows[0];
+        assert_eq!(row.req_f64("events_per_s").unwrap(), 2000.0);
+        assert_eq!(row.req_str("workload").unwrap(), "w");
+        // The allocation key appears only in dhat-heap builds.
+        assert_eq!(row.get("allocs_per_op").is_some(), crate::util::heap::ENABLED);
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Feature-gated heap profiling — in-repo substitute for `dhat` (offline
+//! registry; DESIGN.md §Substitutions). With `--features dhat-heap` a
+//! counting [`GlobalAlloc`] wraps the system allocator and every
+//! allocation/deallocation bumps process-wide atomic counters; benches
+//! read [`snapshot`] deltas around a workload to report allocations/op
+//! and allocations/event (the §Perf allocation-profile table in
+//! docs/EXPERIMENTS.md). Without the feature the counters compile away:
+//! [`snapshot`] returns zeros, [`ENABLED`] is `false`, and the default
+//! build pays nothing.
+//!
+//! The counters are *counts and bytes*, not call-site attribution — the
+//! real dhat's flamegraphs need a backtrace dependency the registry does
+//! not carry. Attribution here is by construction instead: the micro
+//! bench suite (`benches/micro/`) saturates one subsystem per workload,
+//! so a nonzero allocs/op localizes to that subsystem directly.
+
+/// True iff the crate was built with `--features dhat-heap` (the
+/// counting allocator is installed and [`snapshot`] is live).
+pub const ENABLED: bool = cfg!(feature = "dhat-heap");
+
+/// Point-in-time allocation counters. All zeros when the `dhat-heap`
+/// feature is off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// Allocations since process start (reallocs count as one).
+    pub allocs: u64,
+    /// Deallocations since process start.
+    pub frees: u64,
+    /// Bytes requested by those allocations, cumulatively.
+    pub bytes_allocated: u64,
+}
+
+impl AllocSnapshot {
+    /// Counter deltas since an `earlier` snapshot (saturating, so a
+    /// zeroed feature-off snapshot pair stays zero).
+    pub fn since(&self, earlier: &AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocs: self.allocs.saturating_sub(earlier.allocs),
+            frees: self.frees.saturating_sub(earlier.frees),
+            bytes_allocated: self.bytes_allocated.saturating_sub(earlier.bytes_allocated),
+        }
+    }
+}
+
+#[cfg(feature = "dhat-heap")]
+mod imp {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    pub static FREES: AtomicU64 = AtomicU64::new(0);
+    pub static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// System-allocator wrapper bumping the counters. Relaxed ordering:
+    /// the counters are statistics, not synchronization — bench readers
+    /// only ever look at quiescent deltas.
+    pub struct CountingAlloc;
+
+    // SAFETY: pure delegation to `System`; the counter updates are
+    // atomic and allocation-free.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            FREES.fetch_add(1, Ordering::Relaxed);
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+}
+
+/// Current process-wide allocation counters (zeros when the `dhat-heap`
+/// feature is off). Diff two snapshots with [`AllocSnapshot::since`].
+pub fn snapshot() -> AllocSnapshot {
+    #[cfg(feature = "dhat-heap")]
+    {
+        use std::sync::atomic::Ordering;
+        AllocSnapshot {
+            allocs: imp::ALLOCS.load(Ordering::Relaxed),
+            frees: imp::FREES.load(Ordering::Relaxed),
+            bytes_allocated: imp::BYTES.load(Ordering::Relaxed),
+        }
+    }
+    #[cfg(not(feature = "dhat-heap"))]
+    {
+        AllocSnapshot::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_counts_iff_enabled() {
+        let before = snapshot();
+        let v: Vec<u64> = std::hint::black_box((0..1024).collect());
+        std::hint::black_box(&v);
+        let after = snapshot();
+        let d = after.since(&before);
+        if ENABLED {
+            assert!(d.allocs >= 1, "counting allocator missed a Vec allocation");
+            assert!(d.bytes_allocated >= 1024 * 8, "byte counter undercounted: {d:?}");
+        } else {
+            assert_eq!(before, AllocSnapshot::default());
+            assert_eq!(d, AllocSnapshot::default());
+        }
+    }
+
+    #[test]
+    fn since_saturates() {
+        let a = AllocSnapshot { allocs: 5, frees: 5, bytes_allocated: 100 };
+        let b = AllocSnapshot { allocs: 3, frees: 9, bytes_allocated: 40 };
+        let d = b.since(&a);
+        assert_eq!(d.allocs, 0);
+        assert_eq!(d.frees, 4);
+        assert_eq!(d.bytes_allocated, 0);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod heap;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -140,6 +140,7 @@ fn motivation_contention_blowup() {
         priority: sim::JobPriority::Srsf,
         coalescing: true,
         log_events: false,
+        workers: 1,
     };
     let job = |id| JobSpec {
         id,
