@@ -53,6 +53,7 @@ fn main() {
         coalescing: true,
         log_events: false,
         workers: 1,
+        faults: FaultPlan::default(),
     };
     let iters = 2000;
 

@@ -108,6 +108,18 @@ impl ClusterSpec {
         if spec.n_servers == 0 || spec.gpus_per_server == 0 {
             return Err("cluster must have at least one server and one GPU".into());
         }
+        if !spec.gpu_mem_bytes.is_finite() || spec.gpu_mem_bytes <= 0.0 {
+            return Err(format!(
+                "gpu_mem_bytes must be finite and positive, got {}",
+                spec.gpu_mem_bytes
+            ));
+        }
+        if !spec.gpu_peak_gflops.is_finite() || spec.gpu_peak_gflops <= 0.0 {
+            return Err(format!(
+                "gpu_peak_gflops must be finite and positive, got {}",
+                spec.gpu_peak_gflops
+            ));
+        }
         Ok(spec)
     }
 }
@@ -171,6 +183,22 @@ impl ClusterState {
             self.gpus[g].load = (self.gpus[g].load - leftover_load).max(0.0);
             self.gpus[g].residents = self.gpus[g].residents.saturating_sub(1);
         }
+    }
+
+    /// Mark a GPU down by committing all of its free memory to a
+    /// synthetic hold: every placer's `fits` test fails while the hold is
+    /// in place, so no job can land on dead capacity without placers
+    /// having to learn about health at all. Returns the held amount for
+    /// the matching [`ClusterState::release_held`] at recovery.
+    pub fn hold_all(&mut self, gpu: GpuId) -> f64 {
+        let held = self.free_mem(gpu);
+        self.gpus[gpu].mem_used += held;
+        held
+    }
+
+    /// Undo a [`ClusterState::hold_all`] when the GPU recovers.
+    pub fn release_held(&mut self, gpu: GpuId, held: f64) {
+        self.gpus[gpu].mem_used = (self.gpus[gpu].mem_used - held).max(0.0);
     }
 
     /// Decay workload bookkeeping as jobs make progress.

@@ -1,0 +1,689 @@
+//! Deterministic fault injection (docs/EXPERIMENTS.md §Faults).
+//!
+//! A fault timeline is data, not chance: scenarios either list explicit
+//! [`FaultEvent`]s or ask for an MTBF/MTTR-generated schedule, and both
+//! compile — via [`FaultsSpec::compile`] — into the same flat, time-sorted
+//! [`FaultPlan`] of GPU/link primitives the engine consumes as first-class
+//! heap events. The generator draws from [`util::rng::Pcg`] on its own
+//! stream, so a (seed, spec) pair is byte-reproducible across runs,
+//! platforms and worker counts, exactly like trace generation.
+//!
+//! Server faults are sugar: a server failing takes down each of its GPUs
+//! plus its NIC link (NIC `LinkId` == `ServerId` in every fabric preset;
+//! rack uplinks survive a member server's death). Recovery reverses the
+//! same expansion.
+//!
+//! [`HealthView`] is the engine's live up/down bitmap; placement reaches
+//! it indirectly (a down GPU's free memory is held at zero so every
+//! placer's `fits` test fails) and admission consults it directly, so no
+//! work lands on dead capacity. The checkpoint model is coarse-grained:
+//! a preempted job rewinds to its last multiple of `checkpoint_iters`
+//! (0 = no checkpointing, restart from scratch) and a restart pays
+//! `warmup_s` seconds of dead time on its new GPUs before iterating.
+
+use crate::cluster::ClusterSpec;
+use crate::net::LinkId;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// Dedicated RNG stream for the MTBF/MTTR generator (trace generation
+/// uses 0x7ace / 0x57ea, RandomPlacer 0x91ac — distinct streams keep the
+/// draws independent under a shared scenario seed).
+pub const FAULT_STREAM: u64 = 0xfa17;
+
+/// Default checkpoint interval (iterations) when a scenario enables
+/// faults without choosing one.
+pub const DEFAULT_CHECKPOINT_ITERS: u64 = 100;
+
+/// A spec-level fault: what fails (or recovers) and which one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    GpuFail(usize),
+    GpuRecover(usize),
+    ServerFail(usize),
+    ServerRecover(usize),
+    LinkFail(LinkId),
+    LinkRecover(LinkId),
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::GpuFail(_) => "gpu-fail",
+            FaultKind::GpuRecover(_) => "gpu-recover",
+            FaultKind::ServerFail(_) => "server-fail",
+            FaultKind::ServerRecover(_) => "server-recover",
+            FaultKind::LinkFail(_) => "link-fail",
+            FaultKind::LinkRecover(_) => "link-recover",
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        match *self {
+            FaultKind::GpuFail(x)
+            | FaultKind::GpuRecover(x)
+            | FaultKind::ServerFail(x)
+            | FaultKind::ServerRecover(x)
+            | FaultKind::LinkFail(x)
+            | FaultKind::LinkRecover(x) => x,
+        }
+    }
+
+    pub fn parse(kind: &str, id: usize) -> Option<FaultKind> {
+        Some(match kind {
+            "gpu-fail" => FaultKind::GpuFail(id),
+            "gpu-recover" => FaultKind::GpuRecover(id),
+            "server-fail" => FaultKind::ServerFail(id),
+            "server-recover" => FaultKind::ServerRecover(id),
+            "link-fail" => FaultKind::LinkFail(id),
+            "link-recover" => FaultKind::LinkRecover(id),
+            _ => return None,
+        })
+    }
+}
+
+/// One timeline entry: `kind` happens at simulated time `t`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("t", self.t)
+            .set("kind", self.kind.name())
+            .set("id", self.kind.id())
+    }
+
+    pub fn from_json(v: &Json) -> Result<FaultEvent> {
+        if let Json::Obj(entries) = v {
+            for (key, _) in entries {
+                if !matches!(key.as_str(), "t" | "kind" | "id") {
+                    return Err(Error::msg(format!(
+                        "unknown fault event key '{key}' (t|kind|id)"
+                    )));
+                }
+            }
+        } else {
+            return Err(Error::msg("fault event must be an object"));
+        }
+        let t = v.req_f64("t").map_err(Error::msg)?;
+        let kind = v.req_str("kind").map_err(Error::msg)?;
+        let id = v.req_usize("id").map_err(Error::msg)?;
+        let kind = FaultKind::parse(kind, id).ok_or_else(|| {
+            Error::msg(format!(
+                "unknown fault kind '{kind}' \
+                 (gpu-fail|gpu-recover|server-fail|server-recover|link-fail|link-recover)"
+            ))
+        })?;
+        Ok(FaultEvent { t, kind })
+    }
+}
+
+/// What the MTBF/MTTR generator aims failures at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTargets {
+    Gpus,
+    Links,
+    Both,
+}
+
+impl FaultTargets {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultTargets::Gpus => "gpus",
+            FaultTargets::Links => "links",
+            FaultTargets::Both => "both",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultTargets> {
+        Some(match s {
+            "gpus" => FaultTargets::Gpus,
+            "links" => FaultTargets::Links,
+            "both" => FaultTargets::Both,
+            _ => return None,
+        })
+    }
+}
+
+/// MTBF/MTTR schedule generator parameters. The failure process is
+/// global: inter-failure gaps are Exp(mtbf_s) across the whole fleet,
+/// each failure picks a uniform target, and each failed target recovers
+/// after an independent Exp(mttr_s) — always, even past the horizon, so
+/// every generated schedule ends with full capacity restored.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenSpec {
+    pub mtbf_s: f64,
+    pub mttr_s: f64,
+    /// No new failures are generated at or past this time.
+    pub horizon_s: f64,
+    pub targets: FaultTargets,
+    /// `None` = derive from the scenario seed.
+    pub seed: Option<u64>,
+}
+
+impl GenSpec {
+    pub const DEFAULT_MTTR_S: f64 = 60.0;
+    pub const DEFAULT_HORIZON_S: f64 = 1200.0;
+
+    /// A generator spec with everything but the MTBF defaulted — what the
+    /// experiment `mtbf` axis materializes on a fault-less base scenario.
+    pub fn with_mtbf(mtbf_s: f64) -> GenSpec {
+        GenSpec {
+            mtbf_s,
+            mttr_s: Self::DEFAULT_MTTR_S,
+            horizon_s: Self::DEFAULT_HORIZON_S,
+            targets: FaultTargets::Gpus,
+            seed: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("mtbf_s", self.mtbf_s)
+            .set("mttr_s", self.mttr_s)
+            .set("horizon_s", self.horizon_s)
+            .set("targets", self.targets.name());
+        if let Some(seed) = self.seed {
+            o = o.set("seed", seed);
+        }
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<GenSpec> {
+        if let Json::Obj(entries) = v {
+            for (key, _) in entries {
+                if !matches!(key.as_str(), "mtbf_s" | "mttr_s" | "horizon_s" | "targets" | "seed")
+                {
+                    return Err(Error::msg(format!(
+                        "unknown fault generator key '{key}' \
+                         (mtbf_s|mttr_s|horizon_s|targets|seed)"
+                    )));
+                }
+            }
+        } else {
+            return Err(Error::msg("fault generator ('mtbf') must be an object"));
+        }
+        let mut g = GenSpec::with_mtbf(v.req_f64("mtbf_s").map_err(Error::msg)?);
+        if let Some(x) = v.get("mttr_s") {
+            g.mttr_s = x.as_f64().ok_or_else(|| Error::msg("mttr_s must be a number"))?;
+        }
+        if let Some(x) = v.get("horizon_s") {
+            g.horizon_s = x.as_f64().ok_or_else(|| Error::msg("horizon_s must be a number"))?;
+        }
+        if let Some(x) = v.get("targets") {
+            let s = x.as_str().ok_or_else(|| Error::msg("targets must be a string"))?;
+            g.targets = FaultTargets::parse(s)
+                .ok_or_else(|| Error::msg(format!("unknown targets '{s}' (gpus|links|both)")))?;
+        }
+        if let Some(x) = v.get("seed") {
+            g.seed =
+                Some(x.as_u64().ok_or_else(|| Error::msg("fault seed must be an integer"))?);
+        }
+        Ok(g)
+    }
+}
+
+/// The scenario-level `faults` section (docs/SCENARIOS.md §Faults):
+/// checkpoint/restart knobs plus an explicit timeline and/or a generator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsSpec {
+    /// A preempted job rewinds to its last multiple of this many
+    /// iterations; 0 = no checkpointing (restart from iteration 0).
+    pub checkpoint_iters: u64,
+    /// Dead time a restarted job pays on its new GPUs before iterating.
+    pub warmup_s: f64,
+    pub events: Vec<FaultEvent>,
+    pub gen: Option<GenSpec>,
+}
+
+impl Default for FaultsSpec {
+    fn default() -> FaultsSpec {
+        FaultsSpec {
+            checkpoint_iters: DEFAULT_CHECKPOINT_ITERS,
+            warmup_s: 0.0,
+            events: Vec::new(),
+            gen: None,
+        }
+    }
+}
+
+impl FaultsSpec {
+    /// Typed numeric-sanity + range validation, given the cluster shape
+    /// and the fabric's link count ([`TopologySpec::n_links`]).
+    pub fn validate(&self, cluster: &ClusterSpec, n_links: usize) -> Result<()> {
+        if !self.warmup_s.is_finite() || self.warmup_s < 0.0 {
+            return Err(Error::msg(format!(
+                "faults.warmup_s must be finite and non-negative, got {}",
+                self.warmup_s
+            )));
+        }
+        for e in &self.events {
+            if !e.t.is_finite() || e.t < 0.0 {
+                return Err(Error::msg(format!(
+                    "fault event time {} must be finite and non-negative",
+                    e.t
+                )));
+            }
+            let (id, max, what) = match e.kind {
+                FaultKind::GpuFail(g) | FaultKind::GpuRecover(g) => (g, cluster.n_gpus(), "gpu"),
+                FaultKind::ServerFail(s) | FaultKind::ServerRecover(s) => {
+                    (s, cluster.n_servers, "server")
+                }
+                FaultKind::LinkFail(l) | FaultKind::LinkRecover(l) => (l, n_links, "link"),
+            };
+            if id >= max {
+                return Err(Error::msg(format!(
+                    "fault event targets {what} {id} but the scenario has only {max}"
+                )));
+            }
+        }
+        if let Some(g) = &self.gen {
+            for (name, v) in [("mtbf_s", g.mtbf_s), ("mttr_s", g.mttr_s)] {
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(Error::msg(format!(
+                        "faults.mtbf.{name} must be finite and positive, got {v}"
+                    )));
+                }
+            }
+            if !g.horizon_s.is_finite() || g.horizon_s < 0.0 {
+                return Err(Error::msg(format!(
+                    "faults.mtbf.horizon_s must be finite and non-negative, got {}",
+                    g.horizon_s
+                )));
+            }
+            if g.targets != FaultTargets::Gpus && n_links == 0 {
+                return Err(Error::msg(
+                    "faults.mtbf targets links but the topology has no links",
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand server sugar, run the generator, and merge everything into
+    /// one time-sorted primitive plan. `default_seed` (the scenario seed)
+    /// feeds the generator unless the spec pins its own.
+    pub fn compile(
+        &self,
+        cluster: &ClusterSpec,
+        n_links: usize,
+        default_seed: u64,
+    ) -> Result<FaultPlan> {
+        self.validate(cluster, n_links)?;
+        let mut events: Vec<(f64, PrimFault)> = Vec::new();
+        for e in &self.events {
+            match e.kind {
+                FaultKind::GpuFail(g) => events.push((e.t, PrimFault::GpuFail(g))),
+                FaultKind::GpuRecover(g) => events.push((e.t, PrimFault::GpuRecover(g))),
+                FaultKind::LinkFail(l) => events.push((e.t, PrimFault::LinkFail(l))),
+                FaultKind::LinkRecover(l) => events.push((e.t, PrimFault::LinkRecover(l))),
+                FaultKind::ServerFail(s) => {
+                    for g in cluster.gpus_of(s) {
+                        events.push((e.t, PrimFault::GpuFail(g)));
+                    }
+                    // NIC LinkId == ServerId in every preset; the rack
+                    // uplink (two-tier) is shared and survives.
+                    if s < n_links {
+                        events.push((e.t, PrimFault::LinkFail(s)));
+                    }
+                }
+                FaultKind::ServerRecover(s) => {
+                    for g in cluster.gpus_of(s) {
+                        events.push((e.t, PrimFault::GpuRecover(g)));
+                    }
+                    if s < n_links {
+                        events.push((e.t, PrimFault::LinkRecover(s)));
+                    }
+                }
+            }
+        }
+        if let Some(g) = &self.gen {
+            generate(g, cluster.n_gpus(), n_links, default_seed, &mut events);
+        }
+        // Stable sort: simultaneous primitives keep spec/generator order
+        // (in particular a server's GPU fails stay grouped before its NIC).
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        Ok(FaultPlan {
+            events,
+            checkpoint_iters: self.checkpoint_iters,
+            warmup_s: self.warmup_s,
+        })
+    }
+
+    // ---- serialization (defaults elided; docs/SCENARIOS.md) ----------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        if self.checkpoint_iters != DEFAULT_CHECKPOINT_ITERS {
+            o = o.set("checkpoint_iters", self.checkpoint_iters);
+        }
+        if self.warmup_s != 0.0 {
+            o = o.set("warmup_s", self.warmup_s);
+        }
+        if !self.events.is_empty() {
+            o = o.set(
+                "events",
+                Json::Arr(self.events.iter().map(FaultEvent::to_json).collect()),
+            );
+        }
+        if let Some(g) = &self.gen {
+            o = o.set("mtbf", g.to_json());
+        }
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<FaultsSpec> {
+        if let Json::Obj(entries) = v {
+            for (key, _) in entries {
+                if !matches!(key.as_str(), "checkpoint_iters" | "warmup_s" | "events" | "mtbf") {
+                    return Err(Error::msg(format!(
+                        "unknown faults key '{key}' (checkpoint_iters|warmup_s|events|mtbf)"
+                    )));
+                }
+            }
+        } else {
+            return Err(Error::msg("'faults' must be an object"));
+        }
+        let mut spec = FaultsSpec::default();
+        if let Some(x) = v.get("checkpoint_iters") {
+            spec.checkpoint_iters = x
+                .as_u64()
+                .ok_or_else(|| Error::msg("checkpoint_iters must be a non-negative integer"))?;
+        }
+        if let Some(x) = v.get("warmup_s") {
+            spec.warmup_s = x.as_f64().ok_or_else(|| Error::msg("warmup_s must be a number"))?;
+        }
+        if let Some(x) = v.get("events") {
+            let arr = x.as_arr().ok_or_else(|| Error::msg("faults.events must be an array"))?;
+            spec.events = arr.iter().map(FaultEvent::from_json).collect::<Result<_>>()?;
+        }
+        if let Some(x) = v.get("mtbf") {
+            spec.gen = Some(GenSpec::from_json(x)?);
+        }
+        Ok(spec)
+    }
+}
+
+/// Exp(mean) draw. `next_f64` is in [0, 1), so `1 - u` is in (0, 1] and
+/// the result is finite and non-negative.
+fn exp_draw(rng: &mut Pcg, mean: f64) -> f64 {
+    -mean * (1.0 - rng.next_f64()).ln()
+}
+
+/// The MTBF/MTTR process (see [`GenSpec`]): appends (time, primitive)
+/// pairs. A failure aimed at a target that is still down is skipped —
+/// the global clock still advanced, matching a fleet whose failed unit
+/// cannot fail again until repaired.
+fn generate(
+    spec: &GenSpec,
+    n_gpus: usize,
+    n_links: usize,
+    default_seed: u64,
+    out: &mut Vec<(f64, PrimFault)>,
+) {
+    let n_targets = match spec.targets {
+        FaultTargets::Gpus => n_gpus,
+        FaultTargets::Links => n_links,
+        FaultTargets::Both => n_gpus + n_links,
+    };
+    if n_targets == 0 {
+        return;
+    }
+    let mut rng = Pcg::new(spec.seed.unwrap_or(default_seed), FAULT_STREAM);
+    let mut down_until = vec![0.0f64; n_targets];
+    let mut t = 0.0f64;
+    loop {
+        t += exp_draw(&mut rng, spec.mtbf_s);
+        if t >= spec.horizon_s {
+            break;
+        }
+        let target = rng.next_below(n_targets as u64) as usize;
+        if t < down_until[target] {
+            continue; // still being repaired; cannot fail again
+        }
+        let recover_at = t + exp_draw(&mut rng, spec.mttr_s);
+        down_until[target] = recover_at;
+        let gpu_target = match spec.targets {
+            FaultTargets::Gpus => true,
+            FaultTargets::Links => false,
+            FaultTargets::Both => target < n_gpus,
+        };
+        if gpu_target {
+            out.push((t, PrimFault::GpuFail(target)));
+            out.push((recover_at, PrimFault::GpuRecover(target)));
+        } else {
+            let link = if spec.targets == FaultTargets::Both { target - n_gpus } else { target };
+            out.push((t, PrimFault::LinkFail(link)));
+            out.push((recover_at, PrimFault::LinkRecover(link)));
+        }
+    }
+}
+
+/// A compiled, engine-level fault primitive: GPUs and links only (server
+/// sugar already expanded).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PrimFault {
+    GpuFail(usize),
+    GpuRecover(usize),
+    LinkFail(LinkId),
+    LinkRecover(LinkId),
+}
+
+/// The engine's fault input: a time-sorted primitive timeline plus the
+/// checkpoint/restart knobs. `Default` is the empty plan, under which the
+/// engine is bit-identical to a fault-less build (no heap pushes, no
+/// extra float ops, no RNG draws — see sim/engine.rs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<(f64, PrimFault)>,
+    pub checkpoint_iters: u64,
+    pub warmup_s: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            events: Vec::new(),
+            checkpoint_iters: DEFAULT_CHECKPOINT_ITERS,
+            warmup_s: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Live hardware up/down bitmap, driven by the engine as it processes the
+/// fault timeline. Admission reads it directly; placement reads it
+/// indirectly through the zero-free-memory hold on down GPUs.
+#[derive(Clone, Debug)]
+pub struct HealthView {
+    gpu: Vec<bool>,
+    link: Vec<bool>,
+}
+
+impl HealthView {
+    pub fn new(n_gpus: usize, n_links: usize) -> HealthView {
+        HealthView { gpu: vec![true; n_gpus], link: vec![true; n_links] }
+    }
+
+    pub fn gpu_up(&self, g: usize) -> bool {
+        self.gpu[g]
+    }
+
+    pub fn link_up(&self, l: LinkId) -> bool {
+        self.link[l]
+    }
+
+    pub fn links_up(&self, links: &[LinkId]) -> bool {
+        links.iter().all(|&l| self.link[l])
+    }
+
+    pub fn set_gpu(&mut self, g: usize, up: bool) {
+        self.gpu[g] = up;
+    }
+
+    pub fn set_link(&mut self, l: LinkId, up: bool) {
+        self.link[l] = up;
+    }
+
+    pub fn n_gpus_up(&self) -> usize {
+        self.gpu.iter().filter(|&&u| u).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::tiny(4, 2)
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_paired() {
+        let spec = GenSpec { seed: Some(7), ..GenSpec::with_mtbf(100.0) };
+        let faults = FaultsSpec { gen: Some(spec), ..FaultsSpec::default() };
+        let a = faults.compile(&cluster(), 4, 42).unwrap();
+        let b = faults.compile(&cluster(), 4, 42).unwrap();
+        assert_eq!(a, b, "same (seed, spec) must be byte-reproducible");
+        assert!(!a.is_empty(), "mtbf 100s over a 1200s horizon produced nothing");
+        // Every failure has exactly one recovery, even past the horizon.
+        let mut balance = std::collections::BTreeMap::new();
+        for &(t, p) in &a.events {
+            assert!(t.is_finite() && t >= 0.0);
+            match p {
+                PrimFault::GpuFail(g) => *balance.entry(g).or_insert(0i64) += 1,
+                PrimFault::GpuRecover(g) => *balance.entry(g).or_insert(0i64) -= 1,
+                other => panic!("gpus-only generator emitted {other:?}"),
+            }
+        }
+        assert!(balance.values().all(|&v| v == 0), "unbalanced fail/recover: {balance:?}");
+        // Sorted by time.
+        assert!(a.events.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn generator_seed_changes_schedule() {
+        let mk = |seed| {
+            let spec = GenSpec { seed: Some(seed), ..GenSpec::with_mtbf(100.0) };
+            FaultsSpec { gen: Some(spec), ..FaultsSpec::default() }
+                .compile(&cluster(), 4, 42)
+                .unwrap()
+        };
+        assert_ne!(mk(1), mk(2));
+        // And with seed: None, the scenario seed feeds the stream.
+        let spec = GenSpec { seed: None, ..GenSpec::with_mtbf(100.0) };
+        let faults = FaultsSpec { gen: Some(spec), ..FaultsSpec::default() };
+        assert_ne!(
+            faults.compile(&cluster(), 4, 1).unwrap(),
+            faults.compile(&cluster(), 4, 2).unwrap()
+        );
+    }
+
+    #[test]
+    fn server_fault_expands_to_gpus_and_nic() {
+        let faults = FaultsSpec {
+            events: vec![
+                FaultEvent { t: 10.0, kind: FaultKind::ServerFail(1) },
+                FaultEvent { t: 20.0, kind: FaultKind::ServerRecover(1) },
+            ],
+            ..FaultsSpec::default()
+        };
+        let plan = faults.compile(&cluster(), 4, 42).unwrap();
+        // Server 1 of a 4x2 cluster = GPUs {2, 3} + NIC link 1.
+        assert_eq!(
+            plan.events,
+            vec![
+                (10.0, PrimFault::GpuFail(2)),
+                (10.0, PrimFault::GpuFail(3)),
+                (10.0, PrimFault::LinkFail(1)),
+                (20.0, PrimFault::GpuRecover(2)),
+                (20.0, PrimFault::GpuRecover(3)),
+                (20.0, PrimFault::LinkRecover(1)),
+            ]
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_and_elision() {
+        let spec = FaultsSpec {
+            checkpoint_iters: 25,
+            warmup_s: 5.0,
+            events: vec![
+                FaultEvent { t: 100.0, kind: FaultKind::GpuFail(3) },
+                FaultEvent { t: 160.0, kind: FaultKind::GpuRecover(3) },
+            ],
+            gen: Some(GenSpec {
+                mtbf_s: 600.0,
+                mttr_s: 90.0,
+                horizon_s: 2000.0,
+                targets: FaultTargets::Both,
+                seed: Some(9),
+            }),
+        };
+        let back = FaultsSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        // Defaults serialize to an empty object and parse back.
+        let dflt = FaultsSpec::default();
+        let text = dflt.to_json().to_string();
+        assert_eq!(text, "{}", "defaults must be elided, got {text}");
+        assert_eq!(FaultsSpec::from_json(&dflt.to_json()).unwrap(), dflt);
+    }
+
+    #[test]
+    fn validation_rejects_bad_input() {
+        let c = cluster();
+        let bad_id = FaultsSpec {
+            events: vec![FaultEvent { t: 1.0, kind: FaultKind::GpuFail(99) }],
+            ..FaultsSpec::default()
+        };
+        assert!(bad_id.validate(&c, 4).unwrap_err().to_string().contains("gpu 99"));
+        let bad_t = FaultsSpec {
+            events: vec![FaultEvent { t: f64::NAN, kind: FaultKind::GpuFail(0) }],
+            ..FaultsSpec::default()
+        };
+        assert!(bad_t.validate(&c, 4).is_err());
+        let bad_mtbf = FaultsSpec {
+            gen: Some(GenSpec::with_mtbf(-1.0)),
+            ..FaultsSpec::default()
+        };
+        assert!(bad_mtbf.validate(&c, 4).unwrap_err().to_string().contains("mtbf_s"));
+        let bad_warm = FaultsSpec { warmup_s: f64::INFINITY, ..FaultsSpec::default() };
+        assert!(bad_warm.validate(&c, 4).unwrap_err().to_string().contains("warmup_s"));
+        let bad_kind = Json::parse(r#"{"events": [{"t": 1.0, "kind": "meteor", "id": 0}]}"#)
+            .unwrap();
+        assert!(FaultsSpec::from_json(&bad_kind)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown fault kind"));
+        let bad_key = Json::parse(r#"{"mtbf_hours": 1}"#).unwrap();
+        assert!(FaultsSpec::from_json(&bad_key)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown faults key"));
+    }
+
+    #[test]
+    fn health_view_tracks_state() {
+        let mut h = HealthView::new(4, 2);
+        assert!(h.gpu_up(3) && h.link_up(1));
+        assert_eq!(h.n_gpus_up(), 4);
+        h.set_gpu(3, false);
+        h.set_link(1, false);
+        assert!(!h.gpu_up(3));
+        assert!(!h.links_up(&[0, 1]));
+        assert!(h.links_up(&[0]));
+        assert_eq!(h.n_gpus_up(), 3);
+        h.set_gpu(3, true);
+        assert_eq!(h.n_gpus_up(), 4);
+    }
+}

@@ -42,6 +42,7 @@
 pub mod cluster;
 pub mod coordinator;
 pub mod dag;
+pub mod fault;
 pub mod metrics;
 pub mod model;
 pub mod net;
@@ -57,6 +58,9 @@ pub mod util;
 /// Convenient glob imports for examples and benches.
 pub mod prelude {
     pub use crate::cluster::{ClusterSpec, ClusterState};
+    pub use crate::fault::{
+        self, FaultEvent, FaultKind, FaultPlan, FaultTargets, FaultsSpec, GenSpec, HealthView,
+    };
     pub use crate::metrics::{self, Evaluation};
     pub use crate::model::{self, AllReduceAlgo, CommModel, DnnModel, PerfModel};
     pub use crate::net::{self, LinkId, Topology, TopologySpec};

@@ -71,16 +71,21 @@ fn print_help() {
          \x20            grid with --grid) as a starting-point JSON file\n\
          \x20 trace-gen  --jobs N --seed S [--out trace.json]   generate a workload\n\
          \x20 ingest     --csv trace.csv [--out trace.json] [--max-jobs N]\n\
+         \x20            [--skip-bad-rows]\n\
          \x20            convert an Alibaba/Philly-style cluster-trace CSV into a\n\
-         \x20            committed trace JSON (sorted, rebased to t=0, re-id'd)\n\
+         \x20            committed trace JSON (sorted, rebased to t=0, re-id'd);\n\
+         \x20            --skip-bad-rows drops malformed rows (counted) instead\n\
+         \x20            of erroring on the first one\n\
          \x20 simulate   [--scenario F] [--trace F] [--placer lwf|lwf-rack|ff|ls|rand]\n\
          \x20            [--kappa K] [--policy ada|srsf1|srsf2|srsf3]\n\
          \x20            [--priority srsf|fifo|las] [--repricing at-admission|dynamic]\n\
          \x20            [--oversub R] [--rack-size N] [--coalescing on|off]\n\
+         \x20            [--mtbf S [--mttr S] [--fault-horizon S]\n\
+         \x20            [--fault-targets gpus|links|both] [--ckpt-iters N] [--warmup S]]\n\
          \x20            [--events-out F.jsonl] [--timeline-out F] [--contention-out F]\n\
          \x20            [--no-events] [--seed S] [--jobs N]    run one scenario\n\
          \x20 simulate   --list        print registry placers/policies/topology presets\n\
-         \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority|oversub]\n\
+         \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority|oversub|mtbf]\n\
          \x20            [--grid] [--threads N] [--out-json F] [--out-csv F]\n\
          \x20            [--jobs N] [--seed S]                  run a scenario grid\n\
          \x20 e2e        [--jobs N] [--steps N] [--workers W] [--no-pallas]\n\
@@ -94,6 +99,8 @@ fn print_help() {
          \x20 ddl-sched sweep --scenario scenarios/oversub_sweep.json --threads 8\n\
          \x20 ddl-sched simulate --placer lwf --policy ada --jobs 160\n\
          \x20 ddl-sched simulate --placer lwf-rack --oversub 4 --rack-size 4\n\
+         \x20 ddl-sched simulate --jobs 40 --mtbf 600 --mttr 60 --ckpt-iters 50\n\
+         \x20 ddl-sched sweep --scenario scenarios/fault_sweep.json --threads 4\n\
          \x20 ddl-sched ingest --csv scenarios/sample_trace.csv --out trace.json\n\
          \x20 ddl-sched simulate --jobs 40 --events-out events.jsonl --timeline-out gantt.json"
     );
@@ -146,6 +153,33 @@ fn scenario_from_flags(args: &Args) -> Result<Scenario> {
         topo.validate(&s.cluster).map_err(ddl_sched::util::error::Error::msg)?;
         s.topology = topo;
     }
+    // --mtbf M attaches a seeded MTBF/MTTR failure generator (seconds);
+    // the companion knobs refine it and are rejected without it. Placed
+    // after the topology flags so link faults validate against the fabric
+    // the run will actually use.
+    for dep in ["mttr", "fault-horizon", "fault-targets", "ckpt-iters", "warmup"] {
+        if args.get(dep).is_some() && args.get("mtbf").is_none() {
+            bail!("--{dep} only applies to fault injection; add --mtbf SECONDS");
+        }
+    }
+    if args.get("mtbf").is_some() {
+        let mut gen = fault::GenSpec::with_mtbf(args.f64_or("mtbf", 0.0)?);
+        gen.mttr_s = args.f64_or("mttr", gen.mttr_s)?;
+        gen.horizon_s = args.f64_or("fault-horizon", gen.horizon_s)?;
+        if let Some(t) = args.get("fault-targets") {
+            gen.targets = FaultTargets::parse(t)
+                .ok_or_else(|| err!("unknown --fault-targets '{t}' (gpus|links|both)"))?;
+        }
+        let defaults = FaultsSpec::default();
+        let spec = FaultsSpec {
+            checkpoint_iters: args.u64_or("ckpt-iters", defaults.checkpoint_iters)?,
+            warmup_s: args.f64_or("warmup", defaults.warmup_s)?,
+            events: Vec::new(),
+            gen: Some(gen),
+        };
+        spec.validate(&s.cluster, s.topology.n_links(&s.cluster))?;
+        s.faults = Some(spec);
+    }
     s.trace = if let Some(path) = args.get("trace") {
         TraceSource::File(path.to_string())
     } else {
@@ -187,13 +221,16 @@ fn cmd_trace_gen(args: &Args) -> Result<()> {
 fn cmd_ingest(args: &Args) -> Result<()> {
     let csv = args.require("csv")?;
     let out = args.str_or("out", "trace.json");
-    let mut jobs = source::read_csv_jobs(csv)?;
+    let (mut jobs, skipped) = source::read_csv_jobs_counting(csv, args.flag("skip-bad-rows"))?;
     jobs.truncate(args.usize_or("max-jobs", usize::MAX)?);
     if jobs.is_empty() {
         bail!("{csv}: no data rows to ingest");
     }
     std::fs::write(out, trace::to_json(&jobs))?;
     println!("ingested {} jobs from {csv} into {out}", jobs.len());
+    if skipped > 0 {
+        println!("warning: skipped {skipped} malformed row(s) (--skip-bad-rows)");
+    }
     Ok(())
 }
 
@@ -308,8 +345,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 "kappa" => exp.kappas = vec![1, 2, 4, 8, 16],
                 "priority" => exp.priorities = sim::JobPriority::all().to_vec(),
                 "oversub" => exp.oversubs = vec![2.0, 4.0, 8.0],
+                "mtbf" => exp.mtbfs = vec![300.0, 600.0, 1200.0],
                 other => {
-                    bail!("unknown sweep '{other}' (placer|policy|kappa|priority|oversub)")
+                    bail!("unknown sweep '{other}' (placer|policy|kappa|priority|oversub|mtbf)")
                 }
             }
         }

@@ -86,17 +86,41 @@ impl CommModel {
         ideal / self.time_contended(m, k)
     }
 
+    /// Numeric sanity: latency and the contention penalty must be finite
+    /// and non-negative, the per-byte time finite and strictly positive
+    /// (`b == 0` would mean an infinite-bandwidth link and divides by
+    /// zero in [`rate`](Self::rate)). Run on every ingestion path so bad
+    /// constants surface as typed errors instead of NaNs deep in the
+    /// simulator's float chain.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.a.is_finite() || self.a < 0.0 {
+            return Err(format!("latency a must be finite and >= 0, got {}", self.a));
+        }
+        if !self.b.is_finite() || self.b <= 0.0 {
+            return Err(format!("per-byte time b must be finite and > 0, got {}", self.b));
+        }
+        if !self.eta.is_finite() || self.eta < 0.0 {
+            return Err(format!(
+                "contention penalty eta must be finite and >= 0, got {}",
+                self.eta
+            ));
+        }
+        Ok(())
+    }
+
     /// Scenario-file serialization (see docs/SCENARIOS.md).
     pub fn to_json(&self) -> Json {
         Json::obj().set("a", self.a).set("b", self.b).set("eta", self.eta)
     }
 
     pub fn from_json(v: &Json) -> Result<CommModel, String> {
-        Ok(CommModel {
+        let m = CommModel {
             a: v.req_f64("a")?,
             b: v.req_f64("b")?,
             eta: v.req_f64("eta")?,
-        })
+        };
+        m.validate().map_err(|e| format!("comm model: {e}"))?;
+        Ok(m)
     }
 }
 
@@ -186,6 +210,24 @@ mod tests {
             (1..=8).map(|k| (k, c.time_contended(m, k))).collect();
         let eta = fit_eta(c.a, c.b, m, &samples);
         assert!((eta - c.eta).abs() / c.eta < 1e-9);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_constants() {
+        for (a, b, eta) in [
+            (f64::NAN, 1e-9, 0.0),
+            (-1.0, 1e-9, 0.0),
+            (1e-4, 0.0, 0.0),
+            (1e-4, -1e-9, 0.0),
+            (1e-4, f64::INFINITY, 0.0),
+            (1e-4, 1e-9, -0.1),
+            (1e-4, 1e-9, f64::NAN),
+        ] {
+            let v = Json::obj().set("a", a).set("b", b).set("eta", eta);
+            let e = CommModel::from_json(&v).unwrap_err();
+            assert!(e.starts_with("comm model:"), "({a},{b},{eta}): {e}");
+        }
+        assert!(CommModel::paper_10gbe().validate().is_ok());
     }
 
     #[test]

@@ -82,6 +82,21 @@ impl TopologySpec {
         }
     }
 
+    /// Number of fabric links [`Topology::build`] will create over
+    /// `cluster` — NICs plus (for two-tier) one uplink per rack. Lets
+    /// fault timelines be validated against link ids before a topology
+    /// is actually built.
+    pub fn n_links(&self, cluster: &ClusterSpec) -> usize {
+        let n = cluster.n_servers;
+        match self {
+            TopologySpec::Flat | TopologySpec::Heterogeneous { .. } => n,
+            TopologySpec::TwoTier { rack_size, .. } => {
+                let rs = (*rack_size).clamp(1, n.max(1));
+                n + cluster.n_racks(rs)
+            }
+        }
+    }
+
     /// Method-label suffix for non-default fabrics (`None` for flat, so
     /// paper labels are untouched).
     pub fn label(&self) -> Option<String> {
@@ -117,6 +132,9 @@ impl TopologySpec {
                         nics.len(),
                         cluster.n_servers
                     ));
+                }
+                for (s, m) in nics.iter().enumerate() {
+                    m.validate().map_err(|e| format!("server {s} NIC model: {e}"))?;
                 }
                 Ok(())
             }
@@ -553,6 +571,19 @@ mod tests {
         let v = Json::obj().set("preset", "dragonfly");
         let e = TopologySpec::from_json(&v).unwrap_err();
         assert!(e.contains("unknown topology preset 'dragonfly'"), "{e}");
+    }
+
+    #[test]
+    fn spec_n_links_matches_build() {
+        let c = cluster(5);
+        for spec in [
+            TopologySpec::Flat,
+            TopologySpec::TwoTier { rack_size: 2, oversubscription: 2.0 },
+            TopologySpec::Heterogeneous { nics: vec![base(); 5] },
+        ] {
+            let t = Topology::build(&c, &base(), &spec).unwrap();
+            assert_eq!(spec.n_links(&c), t.n_links(), "{spec:?}");
+        }
     }
 
     #[test]

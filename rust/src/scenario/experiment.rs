@@ -117,6 +117,12 @@ pub struct Experiment {
     /// base topology with `TwoTier` at that ratio (keeping the base's
     /// rack size, or `net::DEFAULT_RACK_SIZE` if the base is rackless).
     pub oversubs: Vec<f64>,
+    /// Fault-injection MTBF values (seconds). Each value gives the cell a
+    /// `faults` section whose generator runs at that MTBF — overriding the
+    /// base generator's MTBF if one exists, otherwise a default generator
+    /// ([`crate::fault::GenSpec::with_mtbf`]) on the base's checkpoint
+    /// knobs. The base's explicit fault events are kept.
+    pub mtbfs: Vec<f64>,
     pub seeds: Vec<u64>,
 }
 
@@ -135,6 +141,7 @@ impl Experiment {
             policies: Vec::new(),
             priorities: Vec::new(),
             oversubs: Vec::new(),
+            mtbfs: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -185,6 +192,20 @@ impl Experiment {
         } else {
             self.oversubs.iter().map(|&r| Some(r)).collect()
         };
+        // `None` = keep the base faults section; `Some(m)` = generator at
+        // MTBF m seconds.
+        let mtbfs: Vec<Option<f64>> = if self.mtbfs.is_empty() {
+            vec![None]
+        } else {
+            self.mtbfs.iter().map(|&m| Some(m)).collect()
+        };
+        for &m in &self.mtbfs {
+            if !m.is_finite() || m <= 0.0 {
+                return Err(Error::msg(format!(
+                    "mtbf axis entries must be finite and positive seconds, got {m}"
+                )));
+            }
+        }
         for p in &placers {
             registry::make_placer(p, 1, 0, usize::MAX)?;
         }
@@ -202,6 +223,7 @@ impl Experiment {
             * policies.len()
             * priorities.len()
             * oversubs.len()
+            * mtbfs.len()
             * seeds.len();
         // Observer sinks are per-run files; every grid cell would clobber
         // the same paths. A degenerate single-cell grid is fine.
@@ -217,27 +239,41 @@ impl Experiment {
                 for policy in &policies {
                     for &priority in &priorities {
                         for &oversub in &oversubs {
-                            for &seed in &seeds {
-                                let mut s = Scenario {
-                                    placer: placer.clone(),
-                                    kappa,
-                                    policy: policy.clone(),
-                                    priority,
-                                    seed,
-                                    ..self.base.clone()
-                                };
-                                if let Some(r) = oversub {
-                                    s.topology = TopologySpec::TwoTier {
-                                        rack_size,
-                                        oversubscription: r,
+                            for &mtbf in &mtbfs {
+                                for &seed in &seeds {
+                                    let mut s = Scenario {
+                                        placer: placer.clone(),
+                                        kappa,
+                                        policy: policy.clone(),
+                                        priority,
+                                        seed,
+                                        ..self.base.clone()
                                     };
-                                    // The CSV record schema has no topology
-                                    // column (kept byte-stable for flat
-                                    // grids), so make the axis recoverable
-                                    // from the free-form name column.
-                                    s.name = format!("{}@{r}:1", s.name);
+                                    if let Some(r) = oversub {
+                                        s.topology = TopologySpec::TwoTier {
+                                            rack_size,
+                                            oversubscription: r,
+                                        };
+                                        // The CSV record schema has no
+                                        // topology column (kept byte-stable
+                                        // for flat grids), so make the axis
+                                        // recoverable from the free-form
+                                        // name column.
+                                        s.name = format!("{}@{r}:1", s.name);
+                                    }
+                                    if let Some(m) = mtbf {
+                                        let mut f = s.faults.take().unwrap_or_default();
+                                        f.gen = Some(match f.gen {
+                                            Some(g) => crate::fault::GenSpec { mtbf_s: m, ..g },
+                                            None => crate::fault::GenSpec::with_mtbf(m),
+                                        });
+                                        s.faults = Some(f);
+                                        // Same name-tag convention as the
+                                        // oversub axis.
+                                        s.name = format!("{}@mtbf{m}", s.name);
+                                    }
+                                    out.push(s);
                                 }
-                                out.push(s);
                             }
                         }
                     }
@@ -289,16 +325,24 @@ impl Experiment {
                         break;
                     }
                     let record = scenarios[i].run_with_jobs(&workloads[i]);
-                    *slots[i].lock().unwrap() = Some(record);
+                    // A poisoned slot means another worker panicked while
+                    // holding it; the recovered value is still the one we
+                    // just computed, so write it through either way.
+                    match slots[i].lock() {
+                        Ok(mut slot) => *slot = Some(record),
+                        Err(poisoned) => *poisoned.into_inner() = Some(record),
+                    }
                 });
             }
         });
         slots
             .into_iter()
             .map(|slot| {
-                slot.into_inner().unwrap().unwrap_or_else(|| {
-                    Err(Error::msg("experiment worker died before filling its slot"))
-                })
+                slot.into_inner()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .unwrap_or_else(|| {
+                        Err(Error::msg("experiment worker died before filling its slot"))
+                    })
             })
             .collect()
     }
@@ -323,6 +367,11 @@ impl Experiment {
                 Json::Arr(self.oversubs.iter().map(|&r| Json::from(r)).collect()),
             );
         }
+        // Elided when empty, like oversub: pre-fault artifacts stay stable.
+        if !self.mtbfs.is_empty() {
+            axes = axes
+                .set("mtbf", Json::Arr(self.mtbfs.iter().map(|&m| Json::from(m)).collect()));
+        }
         axes = axes.set("seed", Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect()));
         Json::obj().set("base", self.base.to_json()).set("axes", axes)
     }
@@ -343,11 +392,11 @@ impl Experiment {
             for (key, _) in entries {
                 if !matches!(
                     key.as_str(),
-                    "placer" | "kappa" | "policy" | "priority" | "oversub" | "seed"
+                    "placer" | "kappa" | "policy" | "priority" | "oversub" | "mtbf" | "seed"
                 ) {
                     return Err(Error::msg(format!(
                         "unknown experiment axis '{key}' \
-                         (placer|kappa|policy|priority|oversub|seed)"
+                         (placer|kappa|policy|priority|oversub|mtbf|seed)"
                     )));
                 }
             }
@@ -387,6 +436,14 @@ impl Experiment {
                 .map(|x| {
                     x.as_f64().ok_or_else(|| Error::msg("oversub entries must be numbers"))
                 })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(a) = axes.get("mtbf") {
+            exp.mtbfs = a
+                .as_arr()
+                .ok_or_else(|| Error::msg("axis 'mtbf' must be an array"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| Error::msg("mtbf entries must be numbers")))
                 .collect::<Result<_>>()?;
         }
         if let Some(a) = axes.get("seed") {
@@ -613,6 +670,82 @@ mod tests {
             assert_eq!(r.eval.jct.n, 10);
             assert!(r.eval.jct.mean.is_finite());
         }
+    }
+
+    #[test]
+    fn mtbf_axis_expands_to_fault_generators() {
+        let e = Experiment {
+            policies: vec!["srsf1".into(), "ada".into()],
+            mtbfs: vec![300.0, 600.0],
+            ..Experiment::single(Scenario::small("chaos", 2, 2, 8))
+        };
+        let g = e.grid().unwrap();
+        assert_eq!(g.len(), 4);
+        // Nesting: policy outer, mtbf inner; the axis is recoverable from
+        // the record name and the label marks the cells as faulted.
+        assert_eq!(g[0].name, "chaos@mtbf300");
+        assert_eq!(g[1].name, "chaos@mtbf600");
+        for s in &g {
+            let gen = s.faults.as_ref().unwrap().gen.unwrap();
+            assert!([300.0, 600.0].contains(&gen.mtbf_s));
+            assert!(s.label().ends_with("/faults"), "{}", s.label());
+        }
+    }
+
+    #[test]
+    fn mtbf_axis_overrides_base_generator_but_keeps_knobs() {
+        use crate::fault::{FaultsSpec, GenSpec};
+        let base = Scenario {
+            faults: Some(FaultsSpec {
+                checkpoint_iters: 7,
+                warmup_s: 2.0,
+                gen: Some(GenSpec { mttr_s: 30.0, ..GenSpec::with_mtbf(100.0) }),
+                ..FaultsSpec::default()
+            }),
+            ..Scenario::small("keep", 2, 2, 8)
+        };
+        let e = Experiment { mtbfs: vec![500.0], ..Experiment::single(base) };
+        let f = e.grid().unwrap()[0].faults.clone().unwrap();
+        assert_eq!(f.checkpoint_iters, 7);
+        assert_eq!(f.warmup_s, 2.0);
+        let gen = f.gen.unwrap();
+        assert_eq!(gen.mtbf_s, 500.0);
+        assert_eq!(gen.mttr_s, 30.0);
+    }
+
+    #[test]
+    fn mtbf_axis_rejects_invalid_values() {
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let e = Experiment {
+                mtbfs: vec![bad],
+                ..Experiment::single(Scenario::small("bad-mtbf", 2, 2, 6))
+            };
+            let err = e.grid().unwrap_err().to_string();
+            assert!(err.contains("mtbf axis"), "{err}");
+        }
+    }
+
+    #[test]
+    fn mtbf_axis_json_roundtrip_and_elision() {
+        let plain = small_grid();
+        assert!(!plain.to_json_text().contains("mtbf"), "empty axis must be elided");
+        let e = Experiment { mtbfs: vec![300.0, 1200.0], ..small_grid() };
+        let back = Experiment::from_text(&e.to_json_text()).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn mtbf_sweep_runs_end_to_end() {
+        let e = Experiment {
+            mtbfs: vec![200.0],
+            ..Experiment::single(Scenario::small("chaos-run", 2, 2, 8))
+        };
+        let recs = e.run(1).unwrap();
+        assert_eq!(recs.len(), 1);
+        // Every generated failure schedules its recovery, so the whole
+        // workload still completes.
+        assert_eq!(recs[0].eval.jct.n, 8);
+        assert!(recs[0].eval.jct.mean.is_finite());
     }
 
     #[test]

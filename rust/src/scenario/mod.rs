@@ -30,6 +30,7 @@ pub mod registry;
 pub use experiment::{records_to_csv, records_to_json, Experiment, RunRecord};
 
 use crate::cluster::ClusterSpec;
+use crate::fault::{FaultPlan, FaultsSpec};
 use crate::metrics::Evaluation;
 use crate::model::CommModel;
 use crate::net::TopologySpec;
@@ -189,7 +190,13 @@ pub struct Scenario {
     /// Optional observer sinks to attach to the run (elided-by-default;
     /// docs/SCENARIOS.md §Outputs).
     pub outputs: OutputSpec,
-    /// Seeds the RAND placer and any `Generated` trace without its own seed.
+    /// Optional fault-injection section: explicit failure timeline and/or
+    /// MTBF/MTTR generator plus checkpoint/restart knobs. `None` (the
+    /// default, elided from JSON) runs the classic healthy-fabric engine
+    /// bit-for-bit (docs/SCENARIOS.md §Faults).
+    pub faults: Option<FaultsSpec>,
+    /// Seeds the RAND placer, any `Generated` trace without its own seed,
+    /// and any fault generator without its own seed.
     pub seed: u64,
 }
 
@@ -210,6 +217,7 @@ impl Scenario {
             repricing: Repricing::AtAdmission,
             coalescing: true,
             outputs: OutputSpec::default(),
+            faults: None,
             seed: 42,
         }
     }
@@ -245,10 +253,16 @@ impl Scenario {
             label.push('/');
             label.push_str(&topo);
         }
+        if self.faults.is_some() {
+            label.push_str("/faults");
+        }
         label
     }
 
-    /// The engine configuration this scenario describes.
+    /// The engine configuration this scenario describes — minus the fault
+    /// timeline, which needs fallible compilation: `faults` is left empty
+    /// here and filled in by callers via [`Scenario::fault_plan`] (as
+    /// [`Scenario::run`] does).
     pub fn sim_config(&self) -> SimConfig {
         SimConfig {
             cluster: self.cluster,
@@ -259,6 +273,19 @@ impl Scenario {
             coalescing: self.coalescing,
             log_events: false,
             workers: 1,
+            faults: FaultPlan::default(),
+        }
+    }
+
+    /// Compile the `faults` section (if any) into the primitive timeline
+    /// the engine consumes. `None` compiles to the empty plan — the
+    /// engine's bit-identical healthy-fabric mode.
+    pub fn fault_plan(&self) -> Result<FaultPlan> {
+        match &self.faults {
+            None => Ok(FaultPlan::default()),
+            Some(spec) => spec
+                .compile(&self.cluster, self.topology.n_links(&self.cluster), self.seed)
+                .with_context(|| format!("scenario '{}' faults section", self.name)),
         }
     }
 
@@ -340,7 +367,8 @@ impl Scenario {
                 self.name
             )));
         }
-        let cfg = self.sim_config();
+        let mut cfg = self.sim_config();
+        cfg.faults = self.fault_plan()?;
         let mut placer = registry::make_placer(
             &self.placer,
             self.kappa,
@@ -452,6 +480,11 @@ impl Scenario {
         if !self.outputs.is_default() {
             v = v.set("outputs", self.outputs.to_json());
         }
+        // And for faults: an absent section means the healthy fabric, so
+        // the entire pre-fault scenario corpus stays byte-stable.
+        if let Some(f) = &self.faults {
+            v = v.set("faults", f.to_json());
+        }
         v.set("seed", self.seed)
     }
 
@@ -492,6 +525,17 @@ impl Scenario {
             None => OutputSpec::default(),
             Some(o) => OutputSpec::from_json(o).map_err(Error::msg)?,
         };
+        // Absent means the default: no faults, healthy fabric throughout.
+        // Present sections are validated against the cluster and fabric
+        // eagerly so bad ids fail at load time, not mid-experiment.
+        let faults = match v.get("faults") {
+            None => None,
+            Some(f) => {
+                let spec = FaultsSpec::from_json(f)?;
+                spec.validate(&cluster, topology.n_links(&cluster))?;
+                Some(spec)
+            }
+        };
         Ok(Scenario {
             name: v.req_str("name").map_err(Error::msg)?.to_string(),
             cluster,
@@ -515,6 +559,7 @@ impl Scenario {
             })?,
             coalescing,
             outputs,
+            faults,
             seed: v.req_u64("seed").map_err(Error::msg)?,
         })
     }
@@ -561,6 +606,7 @@ mod tests {
             repricing: Repricing::Dynamic,
             coalescing: false,
             outputs: OutputSpec::default(),
+            faults: None,
             seed: 7,
         };
         let back = Scenario::from_text(&s.to_json_text()).unwrap();
@@ -966,6 +1012,72 @@ mod tests {
     fn label_carries_topology() {
         assert_eq!(two_tier(4, 4.0).label(), "LWF-1/Ada-SRSF/2tier-4:1");
         assert_eq!(Scenario::paper().label(), "LWF-1/Ada-SRSF");
+    }
+
+    // ---- faults schema -----------------------------------------------------
+
+    fn faulted(events: Vec<crate::fault::FaultEvent>) -> Scenario {
+        Scenario {
+            faults: Some(crate::fault::FaultsSpec {
+                warmup_s: 1.0,
+                events,
+                ..crate::fault::FaultsSpec::default()
+            }),
+            ..Scenario::small("faulted", 2, 2, 8)
+        }
+    }
+
+    fn gpu_pair(g: usize, t_fail: f64, t_recover: f64) -> Vec<crate::fault::FaultEvent> {
+        use crate::fault::{FaultEvent, FaultKind};
+        vec![
+            FaultEvent { t: t_fail, kind: FaultKind::GpuFail(g) },
+            FaultEvent { t: t_recover, kind: FaultKind::GpuRecover(g) },
+        ]
+    }
+
+    #[test]
+    fn faults_default_elided_and_roundtrips() {
+        // No faults section in the default corpus: byte-stable files.
+        let text = Scenario::paper().to_json_text();
+        assert!(!text.contains("faults"), "default must be elided:\n{text}");
+        let s = faulted(gpu_pair(1, 50.0, 80.0));
+        let text = s.to_json_text();
+        assert!(text.contains("\"faults\""), "{text}");
+        let back = Scenario::from_text(&text).unwrap();
+        assert_eq!(back, s);
+        // A faulted scenario is a different experiment: the label says so.
+        assert!(s.label().ends_with("/faults"), "{}", s.label());
+        assert!(!Scenario::paper().label().contains("faults"));
+    }
+
+    #[test]
+    fn faults_rejects_out_of_range_ids() {
+        let s = faulted(gpu_pair(99, 10.0, 20.0)); // 2x2 cluster: gpus 0..4
+        let e = Scenario::from_text(&s.to_json_text()).unwrap_err().to_string();
+        assert!(e.contains("gpu"), "{e}");
+    }
+
+    #[test]
+    fn empty_faults_section_compiles_to_empty_plan() {
+        let s = Scenario {
+            faults: Some(crate::fault::FaultsSpec::default()),
+            ..Scenario::small("no-events", 2, 2, 6)
+        };
+        // `"faults": {}` — all knobs at defaults — survives the roundtrip
+        // and compiles to the engine's bit-identical empty plan.
+        let back = Scenario::from_text(&s.to_json_text()).unwrap();
+        assert_eq!(back, s);
+        assert!(s.fault_plan().unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_scenario_runs_end_to_end() {
+        let healthy = Scenario::small("faulted", 2, 2, 8);
+        let rec = faulted(gpu_pair(1, 5.0, 40.0)).run().unwrap();
+        // Every job still finishes once capacity recovers, and losing a
+        // GPU mid-run can only delay the workload.
+        assert_eq!(rec.eval.jct.n, 8);
+        assert!(rec.eval.makespan >= healthy.run().unwrap().eval.makespan);
     }
 
     #[test]

@@ -233,7 +233,7 @@ impl CommPolicy for AdaDual {
 /// service of a job is remaining time × occupied GPUs; smaller is served
 /// first. Ties break on job id for determinism.
 pub fn srsf_cmp(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
-    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
 }
 
 /// The placement queue: jobs held in the `(priority key, id)` total order,

@@ -5,6 +5,7 @@ use std::collections::BinaryHeap;
 
 use crate::bail;
 use crate::cluster::{ClusterSpec, ClusterState, FreeGpuIndex, GpuId};
+use crate::fault::{FaultPlan, HealthView, PrimFault};
 use crate::model::CommModel;
 use crate::net::{links_intersect, LinkId, LinkLists, Topology, TopologySpec};
 use crate::placement::Placer;
@@ -135,6 +136,11 @@ pub struct SimConfig {
     /// value (property-tested across the generator grid). Only the jobs
     /// steadiness already proved non-interacting ever run concurrently.
     pub workers: usize,
+    /// Compiled fault timeline (GPU/link failures and recoveries) plus
+    /// checkpoint/restart knobs. The default empty plan leaves the engine
+    /// bit-identical to a fault-less build: no heap pushes, no extra
+    /// float operations, no RNG draws (see docs/EXPERIMENTS.md §Faults).
+    pub faults: FaultPlan,
 }
 
 impl SimConfig {
@@ -149,6 +155,7 @@ impl SimConfig {
             coalescing: true,
             log_events: false,
             workers: 1,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -236,7 +243,11 @@ impl SimResult {
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum Ev {
     Arrive { job: usize },
-    ComputeDone { gpu: GpuId, job: usize, phase: Phase },
+    /// `epoch` stamps the job's run generation at push time: a preemption
+    /// bumps [`JobRt::run_epoch`], so compute completions from before the
+    /// preemption pop as stale instead of crediting a cancelled task.
+    /// Zero-fault runs never preempt, so the stamp is always 0 there.
+    ComputeDone { gpu: GpuId, job: usize, phase: Phase, epoch: u32 },
     CommDone { comm: usize, version: u64 },
     /// Macro-event: `job` runs its whole remaining steady-state iteration
     /// chain analytically and finishes when this fires. Version-stamped
@@ -244,6 +255,14 @@ enum Ev {
     /// (reconciling partial progress) and bumps the version, so the stale
     /// completion is skipped.
     FastForward { job: usize, version: u64 },
+    /// The fault timeline's entry `idx` fires. Exactly one fault event is
+    /// in the heap at a time (the next one is pushed when this pops), so
+    /// an empty timeline pushes nothing and perturbs nothing.
+    Fault { idx: usize },
+    /// A restarted job's warmup ends and its first iteration starts.
+    /// Epoch-stamped like `ComputeDone`: a second preemption during the
+    /// warmup strands this event as stale.
+    Warmup { job: usize, epoch: u32 },
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -323,6 +342,21 @@ struct JobRt {
     /// Stamp carried by `FastForward` events; reconciliation bumps it so
     /// a dissolved macro-event's completion is skipped as stale.
     ff_version: u64,
+    /// Run generation, bumped by every preemption: `ComputeDone` /
+    /// `Warmup` events carry the epoch they were pushed under and pop as
+    /// stale after a mismatch. Always 0 in a fault-less run.
+    run_epoch: u32,
+    /// Live (current-epoch) `ComputeDone` events in the heap — exactly
+    /// the predictions a preemption strands, so `heap_stale` stays an
+    /// exact count.
+    inflight_compute: usize,
+    /// Times this job has been preempted and re-queued.
+    restarts: u64,
+    /// Set by preemption, consumed by the next placement: emit
+    /// `JobRestarted` and charge the warmup cost.
+    pending_restart: bool,
+    /// A `Warmup` event for the current epoch is in the heap.
+    warmup_pending: bool,
 }
 
 impl JobRt {
@@ -381,6 +415,11 @@ struct CommTask {
     /// reprice the task. Replaces the old `version > 0` test, which slot
     /// reuse breaks (a recycled slot starts life with `version > 0`).
     repriced: bool,
+    /// How many of this task's links are currently failed. While > 0 the
+    /// residuals above are *frozen* (no drain progress, no prediction in
+    /// the heap); recovery of the last failed link re-anchors and
+    /// re-predicts. Always 0 in a fault-less run.
+    paused_links: usize,
     done: bool,
 }
 
@@ -389,6 +428,10 @@ struct CommTask {
 /// `ComputeStarted` / `JobPlaced` / `JobFinished` events.
 struct GpuRt {
     busy: bool,
+    /// Job whose compute task occupies this GPU (meaningful only while
+    /// `busy`) — lets a preemption identify its own in-flight task
+    /// without scanning the heap.
+    running: usize,
     ready: Vec<(usize, Phase)>, // compute-ready (job, phase) on this GPU
 }
 
@@ -727,6 +770,14 @@ struct Engine<'a, 'o> {
     /// Last pulled arrival time — enforces the source's nondecreasing
     /// contract.
     last_arrival: f64,
+    /// Live hardware up/down map, driven by the fault timeline. Admission
+    /// and fast-forwarding consult it directly; placement indirectly (a
+    /// down GPU's free memory is held at zero — see `on_gpu_failed`).
+    health: HealthView,
+    /// Free memory synthetically held per down GPU (restored at recovery).
+    health_hold: Vec<f64>,
+    /// Next unprocessed entry of `cfg.faults.events`.
+    fault_idx: usize,
 }
 
 impl<'a, 'o> Engine<'a, 'o> {
@@ -757,6 +808,11 @@ impl<'a, 'o> Engine<'a, 'o> {
                     placed_seq: 0,
                     ff: None,
                     ff_version: 0,
+                    run_epoch: 0,
+                    inflight_compute: 0,
+                    restarts: 0,
+                    pending_restart: false,
+                    warmup_pending: false,
                 }
             })
             .collect();
@@ -781,7 +837,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             topo,
             cluster,
             gpus: (0..cfg.cluster.n_gpus())
-                .map(|_| GpuRt { busy: false, ready: Vec::new() })
+                .map(|_| GpuRt { busy: false, running: usize::MAX, ready: Vec::new() })
                 .collect(),
             heap,
             seq: jobs.len() as u64,
@@ -815,6 +871,9 @@ impl<'a, 'o> Engine<'a, 'o> {
             source: None,
             drained: true,
             last_arrival: f64::NEG_INFINITY,
+            health: HealthView::new(cfg.cluster.n_gpus(), n_links),
+            health_hold: vec![0.0; cfg.cluster.n_gpus()],
+            fault_idx: 0,
         }
     }
 
@@ -883,6 +942,11 @@ impl<'a, 'o> Engine<'a, 'o> {
             placed_seq: 0,
             ff: None,
             ff_version: 0,
+            run_epoch: 0,
+            inflight_compute: 0,
+            restarts: 0,
+            pending_restart: false,
+            warmup_pending: false,
         });
         self.place_stamp.push(u64::MAX);
         self.running_multi_pos.push(usize::MAX);
@@ -916,9 +980,29 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.heap.push(Timed { t, seq: self.seq, ev });
     }
 
+    /// Push an epoch-stamped compute completion and count it as in
+    /// flight (the preemption-staleness bookkeeping; see [`Ev`]).
+    fn push_compute(&mut self, t: f64, gpu: GpuId, job: usize, phase: Phase) {
+        let epoch = self.jobs[job].run_epoch;
+        self.jobs[job].inflight_compute += 1;
+        self.push(t, Ev::ComputeDone { gpu, job, phase, epoch });
+    }
+
+    /// Schedule the next unprocessed fault timeline entry, if any. The
+    /// timeline is consumed one event at a time — an empty plan never
+    /// touches the heap, which is what keeps a zero-fault run
+    /// bit-identical to a fault-less build (seq numbers included).
+    fn push_next_fault(&mut self) {
+        if let Some(&(t, _)) = self.cfg.faults.events.get(self.fault_idx) {
+            let idx = self.fault_idx;
+            self.push(t, Ev::Fault { idx });
+        }
+    }
+
     fn run(mut self, placer: &mut dyn Placer, policy: &dyn CommPolicy) -> Result<()> {
         // Streaming mode: prime the first arrival (no-op in batch mode).
         self.pull_next()?;
+        self.push_next_fault();
         let mut t_end = 0.0;
         while let Some(Timed { t, ev, .. }) = self.heap.pop() {
             if self.unfinished == 0 && self.drained {
@@ -950,7 +1034,14 @@ impl<'a, 'o> Engine<'a, 'o> {
                     self.queue_eligible += 1;
                     self.try_place(t, placer, None);
                 }
-                Ev::ComputeDone { gpu, job, phase } => {
+                Ev::ComputeDone { gpu, job, phase, epoch } => {
+                    if self.jobs[job].run_epoch != epoch {
+                        // The task was cancelled by a preemption.
+                        debug_assert!(self.heap_stale > 0, "stale-entry counter underflow");
+                        self.heap_stale = self.heap_stale.saturating_sub(1);
+                        continue;
+                    }
+                    self.jobs[job].inflight_compute -= 1;
                     self.on_compute_done(t, gpu, job, phase, policy);
                     // Placement feasibility only changes when memory frees
                     // (a job finished); re-attempting on every compute event
@@ -995,6 +1086,28 @@ impl<'a, 'o> Engine<'a, 'o> {
                         self.need_place = false;
                         self.try_place(t, placer, Some(job));
                     }
+                }
+                Ev::Fault { idx } => {
+                    let (_, fault) = self.cfg.faults.events[idx];
+                    self.fault_idx = idx + 1;
+                    self.push_next_fault();
+                    self.process_fault(t, fault, policy);
+                    // Preemptions free memory and recoveries restore
+                    // capacity — either way queued jobs deserve a pass.
+                    if self.need_place {
+                        self.need_place = false;
+                        self.try_place(t, placer, None);
+                    }
+                }
+                Ev::Warmup { job, epoch } => {
+                    if self.jobs[job].run_epoch != epoch {
+                        // A second preemption cancelled the warmup.
+                        debug_assert!(self.heap_stale > 0, "stale-entry counter underflow");
+                        self.heap_stale = self.heap_stale.saturating_sub(1);
+                        continue;
+                    }
+                    self.jobs[job].warmup_pending = false;
+                    self.start_iteration(t, job, policy);
                 }
             }
             if self.heap_stale >= STALE_COMPACT_MIN && self.heap_stale * 2 >= self.heap.len() {
@@ -1118,7 +1231,17 @@ impl<'a, 'o> Engine<'a, 'o> {
         let e_j = self.jobs[job]
             .spec
             .comm_total(servers.len(), &self.cfg.comm);
-        let load = (c_j + e_j) * gpus.len() as f64;
+        let full = (c_j + e_j) * gpus.len() as f64;
+        // A restarted job resumes from its checkpoint: only the remaining
+        // iterations' load is committed. The fresh-placement arm keeps the
+        // original expression so fault-less runs stay bit-identical.
+        let done = self.jobs[job].iters_done;
+        let (load, load_per_iter) = if done == 0 {
+            (full, full / self.jobs[job].spec.iterations as f64)
+        } else {
+            let per = full / self.jobs[job].spec.iterations as f64;
+            (per * (self.jobs[job].spec.iterations - done) as f64, per)
+        };
         let mem = self.jobs[job].spec.mem_bytes();
         let mut frees = std::mem::take(&mut self.scratch_free);
         frees.clear();
@@ -1137,7 +1260,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         {
             let j = &mut self.jobs[job];
             j.load_total = load;
-            j.load_per_iter = load / j.spec.iterations as f64;
+            j.load_per_iter = load_per_iter;
             j.gpus = gpus;
             j.links = links;
             j.multi_server = multi;
@@ -1158,6 +1281,22 @@ impl<'a, 'o> Engine<'a, 'o> {
                 multi_server: multi,
             },
         );
+        if self.jobs[job].pending_restart {
+            self.jobs[job].pending_restart = false;
+            emit(
+                &mut *self.observers,
+                SimEvent::JobRestarted { t, job, restarts: self.jobs[job].restarts },
+            );
+            // Restart pays the warmup cost before iterating: the GPUs sit
+            // allocated-but-idle until the `Warmup` event fires.
+            let warmup = self.cfg.faults.warmup_s;
+            if warmup > 0.0 {
+                self.jobs[job].warmup_pending = true;
+                let epoch = self.jobs[job].run_epoch;
+                self.push(t + warmup, Ev::Warmup { job, epoch });
+                return;
+            }
+        }
         // The first iteration always runs event-exact (no macro-event):
         // we are inside a placement pass, and a *later* placement in this
         // same pass could still land on these GPUs. Steadiness is
@@ -1191,6 +1330,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         if self.gpus[gpu].busy || self.gpus[gpu].ready.is_empty() {
             return;
         }
+        if !self.health.gpu_up(gpu) {
+            // Defense in depth: a failed GPU's residents are preempted
+            // and its ready set cleared, so this should be unreachable.
+            debug_assert!(false, "scheduling on a failed GPU");
+            return;
+        }
         // Priority rule among the compute-ready tasks resident on this
         // GPU. Keys are computed once per candidate — deriving them
         // inside every `min` comparison cost O(ready²) evaluations per
@@ -1220,8 +1365,9 @@ impl<'a, 'o> Engine<'a, 'o> {
             Phase::Bwd => self.jobs[job].t_bwd,
         };
         self.gpus[gpu].busy = true;
+        self.gpus[gpu].running = job;
         emit(&mut *self.observers, SimEvent::ComputeStarted { t, gpu, job, phase, dur });
-        self.push(t + dur, Ev::ComputeDone { gpu, job, phase });
+        self.push_compute(t + dur, gpu, job, phase);
     }
 
     fn on_compute_done(
@@ -1301,6 +1447,250 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.jobs[job].links = Vec::new();
     }
 
+    // -- faults ---------------------------------------------------------------
+
+    fn process_fault(&mut self, t: f64, fault: PrimFault, policy: &dyn CommPolicy) {
+        match fault {
+            PrimFault::GpuFail(g) => self.on_gpu_failed(t, g),
+            PrimFault::GpuRecover(g) => self.on_gpu_recovered(t, g),
+            PrimFault::LinkFail(l) => self.on_link_failed(t, l),
+            PrimFault::LinkRecover(l) => self.on_link_recovered(t, l, policy),
+        }
+    }
+
+    /// A GPU died: preempt every resident job, then hold the GPU's free
+    /// memory at zero so every placer's `fits` test fails while it is
+    /// down (placers stay health-oblivious; the capacity index sees the
+    /// same transition, so its gate stays exact).
+    fn on_gpu_failed(&mut self, t: f64, g: GpuId) {
+        if !self.health.gpu_up(g) {
+            return; // scenario timelines may repeat a failure; idempotent
+        }
+        // A fault is an interaction steadiness never accounted for: fold
+        // every macro-event back to exact state before inspecting victims.
+        self.reconcile_all_ffs(t, None);
+        self.health.set_gpu(g, false);
+        emit(&mut *self.observers, SimEvent::GpuFailed { t, gpu: g });
+        let victims: Vec<usize> =
+            (0..self.jobs.len()).filter(|&j| self.jobs[j].gpus.contains(&g)).collect();
+        for job in victims {
+            self.preempt_job(t, job);
+        }
+        // Hold after preemption: the victims' releases restored their
+        // memory to `g` first, so the hold freezes the whole capacity.
+        let before = self.cluster.free_mem(g);
+        let held = self.cluster.hold_all(g);
+        self.health_hold[g] = held;
+        self.capacity.record(before, self.cluster.free_mem(g));
+    }
+
+    /// A GPU came back: restore its held memory and let queued jobs try
+    /// to place on it.
+    fn on_gpu_recovered(&mut self, t: f64, g: GpuId) {
+        if self.health.gpu_up(g) {
+            return;
+        }
+        self.health.set_gpu(g, true);
+        let before = self.cluster.free_mem(g);
+        self.cluster.release_held(g, self.health_hold[g]);
+        self.health_hold[g] = 0.0;
+        self.capacity.record(before, self.cluster.free_mem(g));
+        emit(&mut *self.observers, SimEvent::GpuRecovered { t, gpu: g });
+        self.release_gen += 1;
+        self.queue_eligible = self.queue.len();
+        self.need_place = true;
+    }
+
+    /// Preempt a running job with checkpoint/restart semantics: rewind to
+    /// the last checkpoint (iterations since it are lost), cancel its
+    /// in-flight compute and communication, release its GPUs and memory,
+    /// and re-queue it for placement.
+    fn preempt_job(&mut self, t: f64, job: usize) {
+        debug_assert!(self.jobs[job].ff.is_none(), "preempting a live macro-event");
+        let ckpt = self.cfg.faults.checkpoint_iters;
+        let done = self.jobs[job].iters_done;
+        let kept = if ckpt == 0 { 0 } else { done - done % ckpt };
+        let lost = done - kept;
+        // Cancel in-flight compute: clear this job's tasks from its GPUs'
+        // ready sets and busy slots; the epoch bump strands every pushed
+        // `ComputeDone` as stale.
+        let gpus = std::mem::take(&mut self.jobs[job].gpus);
+        for &g in &gpus {
+            self.gpus[g].ready.retain(|&(j, _)| j != job);
+            if self.gpus[g].busy && self.gpus[g].running == job {
+                self.gpus[g].busy = false;
+            }
+        }
+        self.heap_stale += self.jobs[job].inflight_compute;
+        self.jobs[job].inflight_compute = 0;
+        if self.jobs[job].warmup_pending {
+            self.jobs[job].warmup_pending = false;
+            self.heap_stale += 1; // its Warmup event goes stale
+        }
+        self.jobs[job].run_epoch += 1;
+        // Abort communication, pending or in flight.
+        if self.jobs[job].comm_pending {
+            self.pending_comm.retain(|&j| j != job);
+            self.jobs[job].comm_pending = false;
+        }
+        let active_comm =
+            self.active_comms.iter().copied().find(|&c| self.comms[c].job == job);
+        if let Some(id) = active_comm {
+            self.abort_comm(t, id);
+        }
+        // Release memory and the undrained share of the bookkeeping load
+        // (the drained share left with the completed iterations).
+        let mem = self.jobs[job].spec.mem_bytes();
+        let undrained =
+            self.jobs[job].load_per_iter * (self.jobs[job].spec.iterations - done) as f64;
+        let mut frees = std::mem::take(&mut self.scratch_free);
+        frees.clear();
+        frees.extend(gpus.iter().map(|&g| self.cluster.free_mem(g)));
+        self.cluster.release(&gpus, mem, undrained);
+        for (i, &g) in gpus.iter().enumerate() {
+            self.capacity.record(frees[i], self.cluster.free_mem(g));
+        }
+        self.scratch_free = frees;
+        if self.jobs[job].multi_server {
+            let pos = self.running_multi_pos[job];
+            self.running_multi.swap_remove(pos);
+            if let Some(&moved) = self.running_multi.get(pos) {
+                self.running_multi_pos[moved] = pos;
+            }
+            self.running_multi_pos[job] = usize::MAX;
+        }
+        emit(&mut *self.observers, SimEvent::CheckpointTaken { t, job, iters: kept });
+        emit(&mut *self.observers, SimEvent::JobPreempted { t, job, lost_iters: lost });
+        // Reset to queued state, resuming from the checkpoint.
+        {
+            let j = &mut self.jobs[job];
+            j.iters_done = kept;
+            j.bwd_remaining = 0;
+            j.multi_server = false;
+            j.t_comm_free = 0.0;
+            j.load_per_iter = 0.0;
+            j.load_total = 0.0;
+            j.links = Vec::new();
+            j.pending_restart = true;
+            j.restarts += 1;
+        }
+        let key = self.queue_key(job);
+        self.queue.insert(key, job);
+        // Memory freed: every queued job is worth a fresh attempt.
+        self.release_gen += 1;
+        self.queue_eligible = self.queue.len();
+        self.need_place = true;
+        // Freed healthy GPUs may have other residents' tasks waiting.
+        for &g in &gpus {
+            if self.health.gpu_up(g) {
+                self.schedule_gpu(t, g);
+            }
+        }
+    }
+
+    /// Abort an in-flight transfer (its job is being preempted): the
+    /// removal half of `complete_comm` without the iteration credit.
+    fn abort_comm(&mut self, t: f64, id: usize) {
+        let links = std::mem::take(&mut self.comms[id].links);
+        let link_pos = std::mem::take(&mut self.comms[id].link_pos);
+        {
+            let c = &mut self.comms[id];
+            c.done = true;
+            c.paused_links = 0;
+            if c.predicted {
+                c.predicted = false;
+                self.heap_stale += 1; // its CommDone prediction goes stale
+            }
+        }
+        let pos = self.active_pos[id];
+        let _ = self.active_comms.swap_remove(pos);
+        if let Some(&moved) = self.active_comms.get(pos) {
+            self.active_pos[moved] = pos;
+        }
+        self.active_pos[id] = usize::MAX;
+        for (i, &l) in links.iter().enumerate() {
+            let lp = link_pos[i];
+            self.per_link.swap_remove(l, lp);
+            if let Some(moved) = self.per_link.get(l, lp) {
+                let li = self.comms[moved]
+                    .links
+                    .binary_search(&l)
+                    .expect("displaced comm task not registered on link");
+                self.comms[moved].link_pos[li] = lp;
+            }
+        }
+        for &l in &links {
+            emit(
+                &mut *self.observers,
+                SimEvent::ContentionChanged { t, link: l, level: self.per_link.len(l) },
+            );
+        }
+        self.refresh_links(t, &links);
+        let mut links = links;
+        let mut link_pos = link_pos;
+        links.clear();
+        link_pos.clear();
+        self.comms[id].links = links;
+        self.comms[id].link_pos = link_pos;
+        self.free_slots.push(id);
+    }
+
+    /// A link died: freeze every in-flight transfer crossing it. Frozen
+    /// tasks keep their link occupancy (admission still sees the fabric
+    /// as busy — conservative) but make no drain progress and hold no
+    /// prediction until every crossed link is back up. Jobs are *not*
+    /// preempted by link faults: their compute proceeds and their next
+    /// All-Reduce waits in the pending set behind the health gate.
+    fn on_link_failed(&mut self, t: f64, l: LinkId) {
+        if !self.health.link_up(l) {
+            return;
+        }
+        // Macro-events assumed their comm proceeds undisturbed: dissolve
+        // them before freezing (a rebuilt in-flight transfer crossing `l`
+        // lands on the per-link row and is frozen right below).
+        self.reconcile_all_ffs(t, None);
+        self.health.set_link(l, false);
+        emit(&mut *self.observers, SimEvent::LinkFailed { t, link: l });
+        let ids: Vec<usize> = self.per_link.tasks(l).to_vec();
+        for id in ids {
+            if self.comms[id].paused_links == 0 {
+                let (lat_left, rem) = self.residual_at(id, t);
+                let c = &mut self.comms[id];
+                c.latency_left = lat_left;
+                c.remaining = rem;
+                c.anchor_t = t;
+                c.version += 1; // strand the prediction
+                let was_predicted = c.predicted;
+                c.predicted = false;
+                if was_predicted {
+                    self.heap_stale += 1;
+                }
+            }
+            self.comms[id].paused_links += 1;
+        }
+    }
+
+    /// A link recovered: unfreeze transfers whose last failed link this
+    /// was (re-anchor and re-predict from the frozen residuals), then
+    /// give the pending set a chance — something may have been waiting
+    /// for exactly this link.
+    fn on_link_recovered(&mut self, t: f64, l: LinkId, policy: &dyn CommPolicy) {
+        if self.health.link_up(l) {
+            return;
+        }
+        self.health.set_link(l, true);
+        emit(&mut *self.observers, SimEvent::LinkRecovered { t, link: l });
+        let ids: Vec<usize> = self.per_link.tasks(l).to_vec();
+        for id in ids {
+            self.comms[id].paused_links -= 1;
+            if self.comms[id].paused_links == 0 {
+                self.comms[id].anchor_t = t;
+                self.repredict(t, id);
+            }
+        }
+        self.try_admit(t, policy);
+    }
+
     // -- steady-state fast-forwarding -----------------------------------------
 
     /// Try to replace `job`'s remaining per-iteration event chain with one
@@ -1340,6 +1730,11 @@ impl<'a, 'o> Engine<'a, 'o> {
         let multi = self.jobs[job].multi_server;
         let (lat, per_byte) = if multi {
             if self.cfg.repricing != Repricing::AtAdmission {
+                return false;
+            }
+            // A failed link stalls the analytic chain's All-Reduces: stay
+            // event-exact so the pending-comm health gate applies.
+            if !self.health.links_up(&self.jobs[job].links) {
                 return false;
             }
             for &l in &self.jobs[job].links {
@@ -1557,6 +1952,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             self.jobs[job].bwd_remaining = gpus.len();
             for &g in &gpus {
                 self.gpus[g].busy = true;
+                self.gpus[g].running = job;
                 emit(
                     &mut *self.observers,
                     SimEvent::ComputeStarted {
@@ -1567,13 +1963,14 @@ impl<'a, 'o> Engine<'a, 'o> {
                         dur: t_fwd,
                     },
                 );
-                self.push(out.t1, Ev::ComputeDone { gpu: g, job, phase: Phase::Fwd });
+                self.push_compute(out.t1, g, job, Phase::Fwd);
             }
         } else if t <= out.t2 {
             // Backward pass running on every GPU.
             self.jobs[job].bwd_remaining = gpus.len();
             for &g in &gpus {
                 self.gpus[g].busy = true;
+                self.gpus[g].running = job;
                 emit(
                     &mut *self.observers,
                     SimEvent::ComputeStarted {
@@ -1594,7 +1991,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                         dur: t_bwd,
                     },
                 );
-                self.push(out.t2, Ev::ComputeDone { gpu: g, job, phase: Phase::Bwd });
+                self.push_compute(out.t2, g, job, Phase::Bwd);
             }
         } else {
             // All-Reduce in flight: admitted clean (k = 1) at t2,
@@ -1640,6 +2037,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                 c.anchor_t = out.t2;
                 c.version += 1;
                 c.repriced = true; // k = 1 price locked, as at a clean admission
+                c.paused_links = 0;
                 c.done = false;
             }
             // Record where the slot lands in each per-link row (the
@@ -1682,6 +2080,10 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// happened to look in between (fast-forwarding removes such events).
     fn residual_at(&self, id: usize, t: f64) -> (f64, f64) {
         let c = &self.comms[id];
+        if c.paused_links > 0 {
+            // Frozen by a link failure: no progress since the freeze.
+            return (c.latency_left, c.remaining);
+        }
         let mut dt = t - c.anchor_t;
         if dt <= 0.0 {
             return (c.latency_left, c.remaining);
@@ -1712,6 +2114,11 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// pricing, k and the price are computed only while the task has not
     /// started draining (i.e. at admission); afterwards they stay locked.
     fn repredict(&mut self, t: f64, id: usize) {
+        if self.comms[id].paused_links > 0 {
+            // Frozen by a link failure: no prediction until recovery
+            // re-anchors it (refresh_links may sweep past a frozen task).
+            return;
+        }
         let locked = self.cfg.repricing == Repricing::AtAdmission && self.comms[id].repriced;
         let (k, per_byte) = if locked {
             (self.comms[id].k, self.comms[id].per_byte)
@@ -1811,6 +2218,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             anchor_t: 0.0,
             version: 0,
             repriced: false,
+            paused_links: 0,
             done: true,
         });
         self.active_pos.push(usize::MAX);
@@ -1859,6 +2267,13 @@ impl<'a, 'o> Engine<'a, 'o> {
             // instead of the per-pass clone this replaced; only an actual
             // admission copies it, into the comm task it creates.
             let links = std::mem::take(&mut self.jobs[job].links);
+            // Health gate: never start a transfer over a failed link. The
+            // job stays pending; the link's recovery re-runs admission.
+            if !self.health.links_up(&links) {
+                self.jobs[job].links = links;
+                self.pending_comm.push(job);
+                continue;
+            }
             let admit = {
                 let remaining = |c: usize| self.residual_at(c, t).1;
                 let net = NetView::new(&self.per_link, &remaining);
@@ -1884,6 +2299,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                     // (see the field docs); `repredict` below bumps it and
                     // pushes the first live prediction.
                     c.repriced = false;
+                    c.paused_links = 0;
                     c.done = false;
                 }
                 for &l in &links {
@@ -1996,6 +2412,9 @@ impl<'a, 'o> Engine<'a, 'o> {
                 !self.comms[comm].done && self.comms[comm].version == version
             }
             Ev::FastForward { job, version } => self.jobs[job].ff_version == version,
+            Ev::ComputeDone { job, epoch, .. } | Ev::Warmup { job, epoch } => {
+                self.jobs[job].run_epoch == epoch
+            }
             _ => true,
         });
         debug_assert_eq!(

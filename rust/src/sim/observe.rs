@@ -129,6 +129,23 @@ pub enum SimEvent<'a> {
         per_byte: f64,
         msg_bytes: f64,
     },
+    /// A GPU failed; running jobs touching it are preempted.
+    GpuFailed { t: f64, gpu: GpuId },
+    /// A failed GPU came back; its capacity is placeable again.
+    GpuRecovered { t: f64, gpu: GpuId },
+    /// A fabric link failed; in-flight transfers crossing it freeze.
+    LinkFailed { t: f64, link: LinkId },
+    /// A failed link came back; frozen transfers resume draining.
+    LinkRecovered { t: f64, link: LinkId },
+    /// A running job was torn off failed hardware and re-queued, losing
+    /// `lost_iters` iterations of progress since its last checkpoint.
+    JobPreempted { t: f64, job: usize, lost_iters: u64 },
+    /// A preempted job was re-placed (its `restarts`-th restart); it
+    /// resumes from its checkpoint after any configured warmup cost.
+    JobRestarted { t: f64, job: usize, restarts: u64 },
+    /// Preemption rolled the job back to its last checkpoint boundary:
+    /// `iters` completed iterations survive.
+    CheckpointTaken { t: f64, job: usize, iters: u64 },
 }
 
 impl<'a> SimEvent<'a> {
@@ -143,7 +160,14 @@ impl<'a> SimEvent<'a> {
             | SimEvent::CommFinished { t, .. }
             | SimEvent::ContentionChanged { t, .. }
             | SimEvent::FastForwardApplied { t, .. }
-            | SimEvent::FastForwardDissolved { t, .. } => t,
+            | SimEvent::FastForwardDissolved { t, .. }
+            | SimEvent::GpuFailed { t, .. }
+            | SimEvent::GpuRecovered { t, .. }
+            | SimEvent::LinkFailed { t, .. }
+            | SimEvent::LinkRecovered { t, .. }
+            | SimEvent::JobPreempted { t, .. }
+            | SimEvent::JobRestarted { t, .. }
+            | SimEvent::CheckpointTaken { t, .. } => t,
             SimEvent::IterationsCoalesced { start_t, .. } => start_t,
         }
     }
@@ -161,6 +185,13 @@ impl<'a> SimEvent<'a> {
             SimEvent::FastForwardApplied { .. } => "fast-forward-applied",
             SimEvent::FastForwardDissolved { .. } => "fast-forward-dissolved",
             SimEvent::IterationsCoalesced { .. } => "iterations-coalesced",
+            SimEvent::GpuFailed { .. } => "gpu-failed",
+            SimEvent::GpuRecovered { .. } => "gpu-recovered",
+            SimEvent::LinkFailed { .. } => "link-failed",
+            SimEvent::LinkRecovered { .. } => "link-recovered",
+            SimEvent::JobPreempted { .. } => "job-preempted",
+            SimEvent::JobRestarted { .. } => "job-restarted",
+            SimEvent::CheckpointTaken { .. } => "checkpoint-taken",
         }
     }
 
@@ -226,6 +257,21 @@ impl<'a> SimEvent<'a> {
                 .set("lat", lat)
                 .set("per_byte", per_byte)
                 .set("msg_bytes", msg_bytes),
+            SimEvent::GpuFailed { gpu, .. } | SimEvent::GpuRecovered { gpu, .. } => {
+                v.set("gpu", gpu)
+            }
+            SimEvent::LinkFailed { link, .. } | SimEvent::LinkRecovered { link, .. } => {
+                v.set("link", link)
+            }
+            SimEvent::JobPreempted { job, lost_iters, .. } => {
+                v.set("job", job).set("lost_iters", lost_iters)
+            }
+            SimEvent::JobRestarted { job, restarts, .. } => {
+                v.set("job", job).set("restarts", restarts)
+            }
+            SimEvent::CheckpointTaken { job, iters, .. } => {
+                v.set("job", job).set("iters", iters)
+            }
         }
     }
 }
@@ -399,6 +445,14 @@ impl SimObserver for MetricsObserver {
                     self.max_contention = self.max_contention.max(1);
                 }
             }
+            SimEvent::JobPreempted { t, job, .. } => {
+                // The job's allocation window on these GPUs closes here;
+                // a restart opens a fresh one via its new JobPlaced.
+                for &g in &self.job_gpus[job] {
+                    self.last_release[g] = self.last_release[g].max(t);
+                }
+                self.job_gpus[job] = Vec::new();
+            }
             _ => {}
         }
     }
@@ -476,6 +530,26 @@ impl SimObserver for LegacyLog {
                     self.push(c, format!("comm-done job{job}"));
                     s = c;
                 }
+            }
+            // Fault lines only ever appear in faulted runs, so the
+            // zero-fault log stays byte-identical to the pre-fault
+            // engine's.
+            SimEvent::GpuFailed { t, gpu } => self.push(t, format!("gpu-fail gpu{gpu}")),
+            SimEvent::GpuRecovered { t, gpu } => {
+                self.push(t, format!("gpu-recover gpu{gpu}"));
+            }
+            SimEvent::LinkFailed { t, link } => self.push(t, format!("link-fail link{link}")),
+            SimEvent::LinkRecovered { t, link } => {
+                self.push(t, format!("link-recover link{link}"));
+            }
+            SimEvent::JobPreempted { t, job, lost_iters } => {
+                self.push(t, format!("preempt job{job} lost={lost_iters}"));
+            }
+            SimEvent::JobRestarted { t, job, restarts } => {
+                self.push(t, format!("restart job{job} n={restarts}"));
+            }
+            SimEvent::CheckpointTaken { t, job, iters } => {
+                self.push(t, format!("checkpoint job{job} iters={iters}"));
             }
             _ => {}
         }
@@ -596,7 +670,7 @@ impl SimObserver for TimelineObserver {
                 }
                 self.placed[job] = Some((t, gpus.to_vec()));
             }
-            SimEvent::JobFinished { t, job } => {
+            SimEvent::JobFinished { t, job } | SimEvent::JobPreempted { t, job, .. } => {
                 if let Some((start, gpus)) = self.placed.get_mut(job).and_then(Option::take) {
                     for gpu in gpus {
                         self.spans.push(TimelineSpan { gpu, job, start, end: t });

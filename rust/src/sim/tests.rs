@@ -21,6 +21,7 @@ fn cfg(n_servers: usize, gpus_per_server: usize) -> SimConfig {
         coalescing: true,
         log_events: false,
         workers: 1,
+        faults: FaultPlan::default(),
     }
 }
 
@@ -1116,6 +1117,65 @@ fn jsonl_sink_streams_parseable_lines() {
     }
 }
 
+/// `io::Write` double: accepts the first `good` write calls, then fails
+/// every call; `flush` fails iff `flush_fails`.
+struct FailingWriter {
+    good: usize,
+    writes: usize,
+    flush_fails: bool,
+}
+
+impl std::io::Write for FailingWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.writes += 1;
+        if self.writes > self.good {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk full (test double)"))
+        } else {
+            Ok(buf.len())
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.flush_fails {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "flush failed (test double)"))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[test]
+fn jsonl_sink_defers_write_errors_to_finish() {
+    let c = cfg(2, 1);
+    let jobs = [job(0, 0.0, DnnModel::ResNet50, 2, 5)];
+
+    // Each event is two write calls (line + newline), so `good: 4` lets
+    // exactly two events through before the disk "fills". The first
+    // failure must stop writing — written() freezes — and surface from
+    // finish(), not panic mid-run.
+    let mut sink = JsonlSink::new(FailingWriter { good: 4, writes: 0, flush_fails: false });
+    {
+        let mut obs: [&mut dyn SimObserver; 1] = [&mut sink];
+        let mut p = LwfPlacer::new(1);
+        simulate_observed(&c, &jobs, &mut p, &AdaDual { model: c.comm }, &mut obs);
+    }
+    assert_eq!(sink.written(), 2, "writing must stop at the first error");
+    let err = sink.finish().expect_err("write failure must surface from finish()");
+    assert!(err.to_string().contains("disk full"), "{err}");
+
+    // Flush-only failure: every write lands, but the end-of-run flush
+    // fails — still deferred to finish().
+    let mut sink = JsonlSink::new(FailingWriter { good: usize::MAX, writes: 0, flush_fails: true });
+    {
+        let mut obs: [&mut dyn SimObserver; 1] = [&mut sink];
+        let mut p = LwfPlacer::new(1);
+        simulate_observed(&c, &jobs, &mut p, &AdaDual { model: c.comm }, &mut obs);
+    }
+    assert!(sink.written() > 0);
+    let err = sink.finish().expect_err("flush failure must surface from finish()");
+    assert!(err.to_string().contains("flush failed"), "{err}");
+}
+
 #[test]
 fn timeline_observer_records_allocation_spans() {
     let c = cfg(1, 2);
@@ -1441,4 +1501,432 @@ fn heap_capacity_hint_clamps_sanely() {
     assert_eq!(heap_capacity_hint(Some(usize::MAX)), 1 << 20);
     // Unknown horizon (streaming source without a hint): fixed default.
     assert_eq!(heap_capacity_hint(None), 1024);
+}
+
+// ---------------------------------------------------------------------------
+// fault injection: deterministic failure timelines, checkpoint/restart
+// recovery, health-gated placement and the chaos invariants the engine must
+// hold under any schedule of failures (docs/EXPERIMENTS.md §Faults).
+
+use crate::fault::{FaultEvent, FaultKind, FaultPlan, FaultsSpec};
+
+/// Tracks hardware health from the typed fault events and records every
+/// invariant violation: placements landing on dead GPUs, unbalanced
+/// fail/recover transitions, or fault-lifecycle events running backwards
+/// in time. Fault events are popped straight off the heap (never
+/// synthesised retroactively like coalesced compute/comm events), so
+/// their timestamps must be monotone even with coalescing on.
+struct ChaosWatch {
+    gpu_up: Vec<bool>,
+    link_up: Vec<bool>,
+    job_gpus: Vec<Vec<usize>>,
+    last_fault_t: f64,
+    preemptions: u64,
+    restarts: u64,
+    bad: Vec<String>,
+}
+
+impl ChaosWatch {
+    fn new(n_gpus: usize, n_links: usize) -> ChaosWatch {
+        ChaosWatch {
+            gpu_up: vec![true; n_gpus],
+            link_up: vec![true; n_links],
+            job_gpus: Vec::new(),
+            last_fault_t: f64::NEG_INFINITY,
+            preemptions: 0,
+            restarts: 0,
+            bad: Vec::new(),
+        }
+    }
+
+    fn fault_tick(&mut self, t: f64, what: &str) {
+        if t < self.last_fault_t {
+            self.bad.push(format!("{what} at t={t} ran before t={}", self.last_fault_t));
+        }
+        self.last_fault_t = t;
+    }
+
+    /// End-of-run checks for a paired timeline (every failure recovers):
+    /// all hardware back up, and fails/recoveries balanced exactly.
+    fn into_verdict(self) -> Result<(), String> {
+        let mut bad = self.bad;
+        if let Some(g) = self.gpu_up.iter().position(|&up| !up) {
+            bad.push(format!("gpu {g} still down after a paired timeline"));
+        }
+        if let Some(l) = self.link_up.iter().position(|&up| !up) {
+            bad.push(format!("link {l} still down after a paired timeline"));
+        }
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            Err(bad.join("\n"))
+        }
+    }
+}
+
+impl SimObserver for ChaosWatch {
+    fn on_event(&mut self, ev: &SimEvent<'_>) {
+        match *ev {
+            SimEvent::JobPlaced { t, job, gpus, .. } => {
+                for &g in gpus {
+                    if !self.gpu_up[g] {
+                        self.bad.push(format!("job {job} placed on dead gpu {g} at t={t}"));
+                    }
+                }
+                if self.job_gpus.len() <= job {
+                    self.job_gpus.resize(job + 1, Vec::new());
+                }
+                self.job_gpus[job] = gpus.to_vec();
+            }
+            SimEvent::JobFinished { job, .. } | SimEvent::JobPreempted { job, .. } => {
+                if let SimEvent::JobPreempted { t, .. } = *ev {
+                    self.preemptions += 1;
+                    self.fault_tick(t, "preempt");
+                    // A preemption must only follow a failure that touched
+                    // the job: a dead GPU under it or a dead link. The
+                    // cheap necessary condition: some hardware is down.
+                    if self.gpu_up.iter().all(|&u| u) && self.link_up.iter().all(|&u| u) {
+                        self.bad.push(format!("job {job} preempted with all hardware up"));
+                    }
+                }
+                if let Some(gpus) = self.job_gpus.get_mut(job) {
+                    gpus.clear();
+                }
+            }
+            SimEvent::JobRestarted { t, .. } => {
+                self.restarts += 1;
+                self.fault_tick(t, "restart");
+            }
+            SimEvent::CheckpointTaken { t, .. } => self.fault_tick(t, "checkpoint"),
+            SimEvent::GpuFailed { t, gpu } => {
+                self.fault_tick(t, "gpu-fail");
+                if !self.gpu_up[gpu] {
+                    self.bad.push(format!("gpu {gpu} failed twice without recovery"));
+                }
+                self.gpu_up[gpu] = false;
+            }
+            SimEvent::GpuRecovered { t, gpu } => {
+                self.fault_tick(t, "gpu-recover");
+                if self.gpu_up[gpu] {
+                    self.bad.push(format!("gpu {gpu} recovered while up"));
+                }
+                self.gpu_up[gpu] = true;
+            }
+            SimEvent::LinkFailed { t, link } => {
+                self.fault_tick(t, "link-fail");
+                if !self.link_up[link] {
+                    self.bad.push(format!("link {link} failed twice without recovery"));
+                }
+                self.link_up[link] = false;
+            }
+            SimEvent::LinkRecovered { t, link } => {
+                self.fault_tick(t, "link-recover");
+                if self.link_up[link] {
+                    self.bad.push(format!("link {link} recovered while up"));
+                }
+                self.link_up[link] = true;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Random paired failure/recovery timeline: 1–3 fail/recover pairs over
+/// the cluster's GPUs and links, every failure recovering by t = 70 so
+/// the workload can always drain afterwards. Duplicate targets are fine:
+/// the engine is idempotent and the emitted transitions stay alternating.
+fn random_fault_spec(
+    g: &mut crate::util::prop::Gen,
+    n_gpus: usize,
+    n_links: usize,
+) -> FaultsSpec {
+    let mut events = Vec::new();
+    for _ in 0..g.usize(1, 3) {
+        let t_fail = g.f64(0.0, 40.0);
+        let t_rec = t_fail + g.f64(1.0, 30.0);
+        if g.bool() {
+            let gpu = g.usize(0, n_gpus - 1);
+            events.push(FaultEvent { t: t_fail, kind: FaultKind::GpuFail(gpu) });
+            events.push(FaultEvent { t: t_rec, kind: FaultKind::GpuRecover(gpu) });
+        } else {
+            let link = g.usize(0, n_links - 1);
+            events.push(FaultEvent { t: t_fail, kind: FaultKind::LinkFail(link) });
+            events.push(FaultEvent { t: t_rec, kind: FaultKind::LinkRecover(link) });
+        }
+    }
+    FaultsSpec {
+        checkpoint_iters: g.u64(0, 25),
+        warmup_s: g.f64(0.0, 1.0),
+        events,
+        gen: None,
+    }
+}
+
+#[test]
+fn prop_chaos_fault_invariants() {
+    // Random fault schedules × {flat, two-tier} × {srsf, fifo, las} ×
+    // both policy families × coalescing on/off: no placement on dead
+    // hardware, alternating fail/recover transitions that balance out,
+    // monotone fault-lifecycle time, and every job finishes once the
+    // hardware comes back.
+    prop_check(30, |g| {
+        let n_servers = g.usize(2, 4);
+        let gps = g.usize(1, 3);
+        let mut c = cfg(n_servers, gps);
+        c.priority = *g.pick(&JobPriority::all());
+        c.coalescing = g.bool();
+        if g.bool() {
+            c.topology = TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 };
+        }
+        let n_links = c.topology.n_links(&c.cluster);
+        let spec = random_fault_spec(g, c.cluster.n_gpus(), n_links);
+        c.faults =
+            spec.compile(&c.cluster, n_links, c.cluster.n_gpus() as u64).map_err(|e| e.to_string())?;
+        let total = c.cluster.n_gpus();
+        let models = crate::model::ALL_MODELS;
+        let jobs: Vec<JobSpec> = (0..g.usize(1, 6))
+            .map(|i| JobSpec {
+                id: i,
+                arrival: g.f64(0.0, 30.0),
+                model: *g.pick(&models),
+                n_gpus: g.usize(1, total),
+                iterations: g.u64(1, 80),
+            })
+            .collect();
+        let use_ada = g.bool();
+        let cap = g.usize(1, 3);
+        let mut watch = ChaosWatch::new(c.cluster.n_gpus(), n_links);
+        let mut metrics = MetricsObserver::new();
+        {
+            let mut obs: [&mut dyn SimObserver; 2] = [&mut metrics, &mut watch];
+            let mut p = LwfPlacer::new(1);
+            if use_ada {
+                simulate_observed(&c, &jobs, &mut p, &AdaDual { model: c.comm }, &mut obs);
+            } else {
+                simulate_observed(&c, &jobs, &mut p, &SrsfCap { cap }, &mut obs);
+            }
+        }
+        let res = metrics.into_result();
+        for (i, t) in res.jct.iter().enumerate() {
+            if !t.is_finite() {
+                return Err(format!("job {i} never finished after recovery"));
+            }
+            let lb = jobs[i].compute_total(c.cluster.gpu_peak_gflops);
+            if res.jct[i] < lb - 1e-6 {
+                return Err(format!("job {i} jct {t} beat its compute lower bound {lb}"));
+            }
+        }
+        watch.into_verdict()
+    });
+}
+
+#[test]
+fn prop_coalescing_equivalent_under_faults() {
+    // The fast-forward engine must stay a pure event-count optimisation
+    // when the timeline dissolves its macro-events mid-flight: every
+    // metric bit-identical to the event-exact engine under random faults.
+    prop_check(20, |g| {
+        let n_servers = g.usize(2, 4);
+        let gps = g.usize(1, 3);
+        let mut c = cfg(n_servers, gps);
+        c.log_events = true;
+        c.priority = *g.pick(&JobPriority::all());
+        c.repricing = if g.bool() { Repricing::Dynamic } else { Repricing::AtAdmission };
+        if g.bool() {
+            c.topology = TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 };
+        }
+        let n_links = c.topology.n_links(&c.cluster);
+        let spec = random_fault_spec(g, c.cluster.n_gpus(), n_links);
+        c.faults = spec.compile(&c.cluster, n_links, 7).map_err(|e| e.to_string())?;
+        let total = c.cluster.n_gpus();
+        let models = crate::model::ALL_MODELS;
+        let jobs: Vec<JobSpec> = (0..g.usize(1, 5))
+            .map(|i| JobSpec {
+                id: i,
+                arrival: g.f64(0.0, 30.0),
+                model: *g.pick(&models),
+                n_gpus: g.usize(1, total),
+                iterations: g.u64(1, 100),
+            })
+            .collect();
+        let use_ada = g.bool();
+        let cap = g.usize(1, 3);
+        let on = run_policy(&SimConfig { coalescing: true, ..c.clone() }, &jobs, use_ada, cap);
+        let off = run_policy(&SimConfig { coalescing: false, ..c.clone() }, &jobs, use_ada, cap);
+        check_equivalent(&on, &off)?;
+        let canon = |events: &[EventLog]| -> Vec<EventLog> {
+            let mut v = events.to_vec();
+            v.sort_by(|a, b| a.t.total_cmp(&b.t).then_with(|| a.what.cmp(&b.what)));
+            v
+        };
+        logs_eq("faulted coalescing on vs off", &canon(&on.events), &canon(&off.events))
+    });
+}
+
+#[test]
+fn trailing_faults_after_makespan_are_bit_invisible() {
+    // Faults strictly after the last finish never pop off the heap: the
+    // run must be byte-identical to the zero-fault run — metrics, event
+    // count and legacy log alike. This is the boundary case of the
+    // empty-plan bit-identity contract.
+    let mut c = cfg(2, 2);
+    c.log_events = true;
+    let jobs = [
+        job(0, 0.0, DnnModel::Vgg16, 4, 30),
+        job(1, 2.0, DnnModel::ResNet50, 2, 40),
+    ];
+    let clean = run(&c, &jobs);
+    assert!(clean.makespan > 0.0);
+    let spec = FaultsSpec {
+        events: vec![
+            FaultEvent { t: clean.makespan + 10.0, kind: FaultKind::GpuFail(0) },
+            FaultEvent { t: clean.makespan + 20.0, kind: FaultKind::GpuRecover(0) },
+        ],
+        ..FaultsSpec::default()
+    };
+    let mut faulted_cfg = c.clone();
+    faulted_cfg.faults =
+        spec.compile(&c.cluster, c.topology.n_links(&c.cluster), c.cluster.n_gpus() as u64).unwrap();
+    let faulted = run(&faulted_cfg, &jobs);
+    check_equivalent(&faulted, &clean).unwrap();
+    assert_eq!(faulted.n_events, clean.n_events, "trailing faults changed the event count");
+    logs_eq("trailing faults vs clean", &faulted.events, &clean.events).unwrap();
+}
+
+#[test]
+fn gpu_failure_preempts_and_checkpoint_limits_lost_work() {
+    // One job, one GPU, a mid-run failure: the job is preempted, the GPU
+    // recovers, the job restarts from its checkpoint and still finishes.
+    // A tighter checkpoint interval loses fewer iterations and can only
+    // finish earlier (or at the same instant).
+    let c = cfg(1, 1);
+    let j = job(0, 0.0, DnnModel::ResNet50, 1, 200);
+    let clean = run(&c, &[j.clone()]);
+    let t_fail = clean.makespan * 0.5;
+    let t_rec = clean.makespan * 0.75;
+    let run_ckpt = |ckpt: u64| {
+        let spec = FaultsSpec {
+            checkpoint_iters: ckpt,
+            events: vec![
+                FaultEvent { t: t_fail, kind: FaultKind::GpuFail(0) },
+                FaultEvent { t: t_rec, kind: FaultKind::GpuRecover(0) },
+            ],
+            ..FaultsSpec::default()
+        };
+        let mut cc = c.clone();
+        cc.log_events = true;
+        cc.faults =
+            spec.compile(&cc.cluster, cc.topology.n_links(&cc.cluster), 1).unwrap();
+        run(&cc, &[j.clone()])
+    };
+    let scratch = run_ckpt(0); // checkpoint disabled: restart from zero
+    let tight = run_ckpt(10);
+    for r in [&scratch, &tight] {
+        assert!(r.jct[0].is_finite(), "job never finished after recovery");
+        assert!(r.finish[0] > t_rec, "finish {} before recovery {t_rec}", r.finish[0]);
+        assert!(r.finish[0] > clean.finish[0], "failure cost nothing");
+        let text: Vec<&str> = r.events.iter().map(|e| e.what.as_str()).collect();
+        assert!(text.iter().any(|s| s.starts_with("gpu-fail gpu0")), "{text:?}");
+        assert!(text.iter().any(|s| s.starts_with("preempt job0")), "{text:?}");
+        assert!(text.iter().any(|s| s.starts_with("checkpoint job0")), "{text:?}");
+        assert!(text.iter().any(|s| s.starts_with("gpu-recover gpu0")), "{text:?}");
+        assert!(text.iter().any(|s| s.starts_with("restart job0")), "{text:?}");
+    }
+    assert!(
+        tight.finish[0] <= scratch.finish[0] + 1e-9,
+        "checkpointing lost more work than restarting from scratch: {} vs {}",
+        tight.finish[0],
+        scratch.finish[0]
+    );
+}
+
+#[test]
+fn link_failure_freezes_comm_until_recovery() {
+    // A 2-server job All-Reduces across server NICs; killing one NIC
+    // mid-run freezes its transfers (no progress while down) but does not
+    // preempt the job. It finishes after the link recovers, strictly
+    // later than the healthy run.
+    let c = cfg(2, 1);
+    let j = job(0, 0.0, DnnModel::Vgg16, 2, 50);
+    let clean = run(&c, &[j.clone()]);
+    let t_fail = clean.makespan * 0.4;
+    let down_for = clean.makespan * 0.5;
+    let spec = FaultsSpec {
+        events: vec![
+            FaultEvent { t: t_fail, kind: FaultKind::LinkFail(0) },
+            FaultEvent { t: t_fail + down_for, kind: FaultKind::LinkRecover(0) },
+        ],
+        ..FaultsSpec::default()
+    };
+    let mut cc = c.clone();
+    cc.log_events = true;
+    cc.faults = spec.compile(&cc.cluster, cc.topology.n_links(&cc.cluster), 1).unwrap();
+    let faulted = run(&cc, &[j.clone()]);
+    assert!(faulted.jct[0].is_finite());
+    assert!(
+        faulted.finish[0] > clean.finish[0] + down_for * 0.5,
+        "link outage barely cost anything: {} vs clean {}",
+        faulted.finish[0],
+        clean.finish[0]
+    );
+    let text: Vec<&str> = faulted.events.iter().map(|e| e.what.as_str()).collect();
+    assert!(text.iter().any(|s| s.starts_with("link-fail link0")), "{text:?}");
+    assert!(text.iter().any(|s| s.starts_with("link-recover link0")), "{text:?}");
+    // No preemption: link outages stall communication, they don't kill
+    // placements.
+    assert!(!text.iter().any(|s| s.starts_with("preempt")), "{text:?}");
+}
+
+#[test]
+fn mtbf_generator_is_deterministic_and_gated_by_seed() {
+    // The MTBF/MTTR-generated timeline is a pure function of the seed:
+    // byte-identical across compiles, different under a different seed.
+    let cluster = ClusterSpec::tiny(2, 2);
+    let spec = FaultsSpec {
+        gen: Some(crate::fault::GenSpec::with_mtbf(120.0)),
+        ..FaultsSpec::default()
+    };
+    let a = spec.compile(&cluster, 2, 9).unwrap();
+    let b = spec.compile(&cluster, 2, 9).unwrap();
+    assert_eq!(a.events.len(), b.events.len());
+    for (x, y) in a.events.iter().zip(&b.events) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits());
+        assert_eq!(x.1, y.1);
+    }
+    assert!(!a.is_empty(), "a 120s-MTBF generator over a 1200s horizon produced nothing");
+    let other = spec.compile(&cluster, 2, 10).unwrap();
+    let same = a.events.len() == other.events.len()
+        && a.events.iter().zip(&other.events).all(|(x, y)| x.0.to_bits() == y.0.to_bits());
+    assert!(!same, "fault timeline ignored the seed");
+}
+
+#[test]
+fn mtbf_generated_run_completes_all_jobs() {
+    // End-to-end: a generated timeline over a small cluster still lets
+    // every job finish (each failure recovers after MTTR), and the run is
+    // deterministic — two simulations agree bit-for-bit.
+    let mut c = cfg(2, 2);
+    let spec = FaultsSpec {
+        checkpoint_iters: 20,
+        warmup_s: 0.5,
+        gen: Some(crate::fault::GenSpec {
+            mtbf_s: 60.0,
+            mttr_s: 10.0,
+            horizon_s: 300.0,
+            targets: crate::fault::FaultTargets::Both,
+            seed: None,
+        }),
+        ..FaultsSpec::default()
+    };
+    c.faults = spec.compile(&c.cluster, c.topology.n_links(&c.cluster), 5).unwrap();
+    let jobs = [
+        job(0, 0.0, DnnModel::ResNet50, 2, 60),
+        job(1, 5.0, DnnModel::Vgg16, 4, 40),
+        job(2, 12.0, DnnModel::LstmPtb, 1, 80),
+    ];
+    let r1 = run(&c, &jobs);
+    let r2 = run(&c, &jobs);
+    assert!(r1.jct.iter().all(|t| t.is_finite()), "job lost to the generated timeline");
+    check_equivalent(&r1, &r2).unwrap();
+    assert_eq!(r1.n_events, r2.n_events);
 }

@@ -175,12 +175,10 @@ impl JobSource for GeneratedSource {
         }
         self.t += self.rng.range_f64(0.0, 2.0 * self.mean_gap);
         let w = self.rng.next_below(self.total_weight);
-        let n_gpus = self
-            .cum_hist
-            .iter()
-            .find(|&&(_, cum)| w < cum)
-            .map(|&(g, _)| g)
-            .expect("w < total_weight by construction");
+        let n_gpus = match self.cum_hist.iter().find(|&&(_, cum)| w < cum) {
+            Some(&(g, _)) => g,
+            None => unreachable!("w < total_weight by construction"),
+        };
         let iterations = self.rng.range_u64(self.iter_range.0, self.iter_range.1);
         let model = *self.rng.choose(&ALL_MODELS);
         let id = self.count;
@@ -277,6 +275,10 @@ pub struct CsvTraceSource<R: BufRead> {
     /// Last raw submit time seen (ordering check).
     last_submit: f64,
     count: usize,
+    /// Tolerate malformed data rows instead of erroring (see
+    /// [`skip_bad_rows`](Self::skip_bad_rows)).
+    skip_bad: bool,
+    skipped: usize,
 }
 
 impl CsvTraceSource<BufReader<File>> {
@@ -315,7 +317,24 @@ impl<R: BufRead> CsvTraceSource<R> {
             t0: None,
             last_submit: f64::NEG_INFINITY,
             count: 0,
+            skip_bad: false,
+            skipped: 0,
         })
+    }
+
+    /// Skip malformed data rows instead of erroring on the first one.
+    /// Real cluster dumps routinely contain truncated or sentinel rows;
+    /// with this set, each bad row is counted (see [`skipped`](Self::skipped))
+    /// and the stream continues at the next line. Header problems still
+    /// error — a bad header means every row would be misread.
+    pub fn skip_bad_rows(mut self, yes: bool) -> Self {
+        self.skip_bad = yes;
+        self
+    }
+
+    /// Malformed rows tolerated so far under [`skip_bad_rows`](Self::skip_bad_rows).
+    pub fn skipped(&self) -> usize {
+        self.skipped
     }
 
     /// Parse the next data row into a `JobSpec` whose `arrival` is the raw
@@ -332,61 +351,80 @@ impl<R: BufRead> CsvTraceSource<R> {
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
-            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
-            let (name, ln) = (&self.name, self.line_no);
-            if fields.len() != self.cols.n_cols {
-                bail!(
-                    "{name}: line {ln}: expected {} comma-separated fields, got {}",
-                    self.cols.n_cols,
-                    fields.len()
-                );
-            }
-            let submit: f64 = fields[self.cols.submit].parse().map_err(|_| {
-                crate::err!("{name}: line {ln}: bad submit time '{}'", fields[self.cols.submit])
-            })?;
-            if !submit.is_finite() {
-                bail!("{name}: line {ln}: submit time must be finite, got '{submit}'");
-            }
-            let n_gpus: usize = fields[self.cols.gpus].parse().map_err(|_| {
-                crate::err!("{name}: line {ln}: bad GPU count '{}'", fields[self.cols.gpus])
-            })?;
-            if n_gpus == 0 {
-                bail!("{name}: line {ln}: GPU count must be >= 1");
-            }
-            let model = match self.cols.model {
-                Some(i) => model_from_loose_name(fields[i]).ok_or_else(|| {
-                    let known: Vec<&str> = ALL_MODELS.iter().map(|m| m.spec().name).collect();
-                    crate::err!("{name}: line {ln}: unknown model '{}' ({known:?})", fields[i])
-                })?,
-                // No model column: assign round-robin so the mix stays even.
-                None => ALL_MODELS[self.count % ALL_MODELS.len()],
-            };
-            let iterations = match (self.cols.iterations, self.cols.duration) {
-                (Some(i), _) => {
-                    let it: u64 = fields[i].parse().map_err(|_| {
-                        crate::err!("{name}: line {ln}: bad iteration count '{}'", fields[i])
-                    })?;
-                    if it == 0 {
-                        bail!("{name}: line {ln}: iterations must be >= 1");
-                    }
-                    it
+            match parse_row(line, &self.cols, &self.name, self.line_no, self.count) {
+                Ok(job) => {
+                    self.count += 1;
+                    return Ok(Some(job));
                 }
-                (None, Some(i)) => {
-                    let dur: f64 = fields[i].parse().map_err(|_| {
-                        crate::err!("{name}: line {ln}: bad duration '{}'", fields[i])
-                    })?;
-                    if !dur.is_finite() || dur <= 0.0 {
-                        bail!("{name}: line {ln}: duration must be positive, got '{}'", fields[i]);
-                    }
-                    duration_to_iterations(dur, model)
+                Err(_) if self.skip_bad => {
+                    self.skipped += 1;
                 }
-                (None, None) => unreachable!("ColumnMap::from_header requires one"),
-            };
-            let id = self.count;
-            self.count += 1;
-            return Ok(Some(JobSpec { id, arrival: submit, model, n_gpus, iterations }));
+                Err(e) => return Err(e),
+            }
         }
     }
+}
+
+/// Parse one data row into a `JobSpec` with the raw submit time as
+/// `arrival` and `row_idx` as the id. Every rejection is a line-numbered
+/// diagnostic naming the offending field.
+fn parse_row(
+    line: &str,
+    cols: &ColumnMap,
+    name: &str,
+    ln: usize,
+    row_idx: usize,
+) -> Result<JobSpec> {
+    let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+    if fields.len() != cols.n_cols {
+        bail!(
+            "{name}: line {ln}: expected {} comma-separated fields, got {}",
+            cols.n_cols,
+            fields.len()
+        );
+    }
+    let submit: f64 = fields[cols.submit].parse().map_err(|_| {
+        crate::err!("{name}: line {ln}: bad submit time '{}'", fields[cols.submit])
+    })?;
+    if !submit.is_finite() || submit < 0.0 {
+        bail!("{name}: line {ln}: submit time must be finite and >= 0, got '{submit}'");
+    }
+    let n_gpus: usize = fields[cols.gpus].parse().map_err(|_| {
+        crate::err!("{name}: line {ln}: bad GPU count '{}'", fields[cols.gpus])
+    })?;
+    if n_gpus == 0 {
+        bail!("{name}: line {ln}: GPU count must be >= 1");
+    }
+    let model = match cols.model {
+        Some(i) => model_from_loose_name(fields[i]).ok_or_else(|| {
+            let known: Vec<&str> = ALL_MODELS.iter().map(|m| m.spec().name).collect();
+            crate::err!("{name}: line {ln}: unknown model '{}' ({known:?})", fields[i])
+        })?,
+        // No model column: assign round-robin so the mix stays even.
+        None => ALL_MODELS[row_idx % ALL_MODELS.len()],
+    };
+    let iterations = match (cols.iterations, cols.duration) {
+        (Some(i), _) => {
+            let it: u64 = fields[i].parse().map_err(|_| {
+                crate::err!("{name}: line {ln}: bad iteration count '{}'", fields[i])
+            })?;
+            if it == 0 {
+                bail!("{name}: line {ln}: iterations must be >= 1");
+            }
+            it
+        }
+        (None, Some(i)) => {
+            let dur: f64 = fields[i].parse().map_err(|_| {
+                crate::err!("{name}: line {ln}: bad duration '{}'", fields[i])
+            })?;
+            if !dur.is_finite() || dur <= 0.0 {
+                bail!("{name}: line {ln}: duration must be positive, got '{}'", fields[i]);
+            }
+            duration_to_iterations(dur, model)
+        }
+        (None, None) => unreachable!("ColumnMap::from_header requires one"),
+    };
+    Ok(JobSpec { id: row_idx, arrival: submit, model, n_gpus, iterations })
 }
 
 /// Convert a wall-clock duration (seconds) into an iteration count using
@@ -426,21 +464,40 @@ impl<R: BufRead> JobSource for CsvTraceSource<R> {
 /// allowed here), then normalize — stable sort by arrival, rebase to
 /// t = 0, sequential ids. This is what `ingest` commits to JSON.
 pub fn read_csv_jobs<P: AsRef<Path>>(path: P) -> Result<Vec<JobSpec>> {
+    Ok(read_csv_jobs_counting(path, false)?.0)
+}
+
+/// [`read_csv_jobs`] with malformed-row policy: when `skip_bad_rows` is
+/// set, bad data rows are dropped instead of erroring, and the second
+/// element reports how many were dropped (always 0 in strict mode).
+pub fn read_csv_jobs_counting<P: AsRef<Path>>(
+    path: P,
+    skip_bad_rows: bool,
+) -> Result<(Vec<JobSpec>, usize)> {
     let path = path.as_ref();
     let name = path.display().to_string();
     let file = File::open(path).with_context(|| format!("opening trace CSV {name}"))?;
-    read_csv_from(BufReader::new(file), &name)
+    read_csv_from_counting(BufReader::new(file), &name, skip_bad_rows)
 }
 
 /// [`read_csv_jobs`] over any buffered reader.
 pub fn read_csv_from<R: BufRead>(reader: R, name: &str) -> Result<Vec<JobSpec>> {
-    let mut src = CsvTraceSource::from_reader(reader, name)?;
+    Ok(read_csv_from_counting(reader, name, false)?.0)
+}
+
+/// [`read_csv_jobs_counting`] over any buffered reader.
+pub fn read_csv_from_counting<R: BufRead>(
+    reader: R,
+    name: &str,
+    skip_bad_rows: bool,
+) -> Result<(Vec<JobSpec>, usize)> {
+    let mut src = CsvTraceSource::from_reader(reader, name)?.skip_bad_rows(skip_bad_rows);
     let mut jobs = Vec::new();
     while let Some(j) = src.next_raw()? {
         jobs.push(j);
     }
     normalize(&mut jobs);
-    Ok(jobs)
+    Ok((jobs, src.skipped()))
 }
 
 #[cfg(test)]
@@ -587,6 +644,41 @@ mod tests {
         assert_eq!(jobs[0].arrival, 0.0);
         assert!((jobs[1].arrival - 6.0).abs() < 1e-12);
         assert_eq!((jobs[0].id, jobs[1].id), (0, 1));
+    }
+
+    #[test]
+    fn csv_skip_bad_rows_counts_and_continues() {
+        // Four data rows, two malformed (short row, bad GPU count).
+        let text = "submit_time,n_gpus,iterations\n\
+                    0,1,5\n\
+                    1,2\n\
+                    2,two,5\n\
+                    3,1,9\n";
+        // Strict mode still errors with the line number.
+        let e = read_csv_from(text.as_bytes(), "t").unwrap_err().to_string();
+        assert!(e.contains("line 3"), "{e}");
+        // Tolerant mode keeps the good rows and counts the drops.
+        let (jobs, skipped) = read_csv_from_counting(text.as_bytes(), "t", true).unwrap();
+        assert_eq!(skipped, 2);
+        assert_eq!(jobs.len(), 2);
+        assert_eq!((jobs[0].iterations, jobs[1].iterations), (5, 9));
+        // Ids stay sequential over the surviving rows.
+        assert_eq!((jobs[0].id, jobs[1].id), (0, 1));
+        // The streaming path honors the same toggle.
+        let mut src = csv_source(text).skip_bad_rows(true);
+        let got = drain(&mut src).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(src.skipped(), 2);
+    }
+
+    #[test]
+    fn csv_rejects_negative_and_nonfinite_submit() {
+        for bad in ["-1.0", "nan", "inf"] {
+            let text = format!("submit_time,n_gpus,iterations\n{bad},1,5\n");
+            let e = read_csv_from(text.as_bytes(), "t").unwrap_err().to_string();
+            assert!(e.contains("submit time"), "{bad}: {e}");
+            assert!(e.contains("line 2"), "{bad}: {e}");
+        }
     }
 
     #[test]

@@ -71,13 +71,26 @@ impl JobSpec {
     }
 
     pub fn from_json(v: &Json) -> Result<JobSpec, String> {
+        let name = v.req_str("model")?;
+        let model = DnnModel::from_name(name).ok_or_else(|| format!("unknown model '{name}'"))?;
+        let arrival = v.req_f64("arrival")?;
+        if !arrival.is_finite() || arrival < 0.0 {
+            return Err(format!("job arrival must be finite and >= 0, got {arrival}"));
+        }
+        let iterations = v.req_f64("iterations")?;
+        if !iterations.is_finite() || iterations < 1.0 {
+            return Err(format!("job iterations must be >= 1, got {iterations}"));
+        }
+        let n_gpus = v.req_usize("n_gpus")?;
+        if n_gpus == 0 {
+            return Err("job n_gpus must be >= 1".to_string());
+        }
         Ok(JobSpec {
             id: v.req_usize("id")?,
-            arrival: v.req_f64("arrival")?,
-            model: DnnModel::from_name(v.req_str("model")?)
-                .ok_or_else(|| format!("unknown model '{}'", v.req_str("model").unwrap()))?,
-            n_gpus: v.req_usize("n_gpus")?,
-            iterations: v.req_f64("iterations")? as u64,
+            arrival,
+            model,
+            n_gpus,
+            iterations: iterations as u64,
         })
     }
 }
@@ -212,7 +225,7 @@ impl Iterator for JobStream {
 /// lazy view omits.
 pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
     let mut jobs: Vec<JobSpec> = JobStream::new(cfg).collect();
-    jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    jobs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     for (i, j) in jobs.iter_mut().enumerate() {
         j.id = i;
     }
@@ -309,6 +322,30 @@ mod tests {
         let text = to_json(&jobs);
         let parsed = from_json(&text).unwrap();
         assert_eq!(jobs, parsed);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_fields() {
+        let base = |arrival: f64, n_gpus: usize, iterations: f64| {
+            Json::obj()
+                .set("id", 0usize)
+                .set("arrival", arrival)
+                .set("model", "VGG-16")
+                .set("n_gpus", n_gpus)
+                .set("iterations", iterations)
+        };
+        assert!(JobSpec::from_json(&base(0.0, 1, 100.0)).is_ok());
+        for (v, want) in [
+            (base(-1.0, 1, 100.0), "arrival"),
+            (base(f64::NAN, 1, 100.0), "arrival"),
+            (base(f64::INFINITY, 1, 100.0), "arrival"),
+            (base(0.0, 0, 100.0), "n_gpus"),
+            (base(0.0, 1, 0.0), "iterations"),
+            (base(0.0, 1, f64::NAN), "iterations"),
+        ] {
+            let e = JobSpec::from_json(&v).unwrap_err();
+            assert!(e.contains(want), "{want}: {e}");
+        }
     }
 
     #[test]

@@ -56,8 +56,7 @@ impl Args {
                 // `--key=value` or `--key value` or bare flag
                 if let Some((k, v)) = key.split_once('=') {
                     args.opts.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let val = it.next().unwrap();
+                } else if let Some(val) = it.next_if(|n| !n.starts_with("--")) {
                     args.opts.insert(key.to_string(), val);
                 } else {
                     args.flags.push(key.to_string());

@@ -141,6 +141,7 @@ fn motivation_contention_blowup() {
         coalescing: true,
         log_events: false,
         workers: 1,
+        faults: FaultPlan::default(),
     };
     let job = |id| JobSpec {
         id,
