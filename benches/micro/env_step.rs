@@ -1,0 +1,68 @@
+//! Decision-step throughput of the gym-style env: the saturated
+//! sim_hotpath workload (320 jobs on the paper cluster) driven one
+//! decision at a time through `SimEnv::step`. Two rows: a seeded
+//! `RandomAgent` (pure env overhead plus whatever chaos random actions
+//! cause) and the `BuiltinAgent` wrapping the paper's LWF-1 + AdaDUAL
+//! (the env re-running the exact monolithic schedule, so the row is
+//! directly comparable to the "engine steady state" row next to it).
+//!
+//! The random row carries an absolute floor (the SimEnv acceptance bar:
+//! >100k decision steps/s; release builds clear it by an order of
+//! magnitude), per the scale_smoke convention: only catastrophic
+//! regressions — an O(jobs) observation capture, a debug-profile CI
+//! misconfiguration — can fail the build, and finer tracking stays with
+//! the non-fatal delta-vs-committed print.
+
+use ddl_sched::prelude::*;
+use ddl_sched::util::bench::{bench, BenchReport};
+use ddl_sched::util::heap as heap_prof;
+
+pub fn run(t: &mut Table, report: &mut BenchReport) {
+    let cfg = SimConfig::paper();
+    let mut tc = TraceConfig::scaled(320, 17);
+    tc.horizon = 600.0;
+    let jobs = trace::generate(&tc);
+
+    // ---- random agent ------------------------------------------------------
+    const CAP: u64 = 100_000;
+    let mut steps = 0u64;
+    let a0 = heap_prof::snapshot();
+    let timing = bench("env decision steps (random agent)", 1, 3, || {
+        let mut env = SimEnv::new(&cfg, &jobs);
+        let mut agent = RandomAgent::new(23);
+        let mut no_obs: [&mut dyn SimObserver; 0] = [];
+        steps = env
+            .run_agent(&mut agent, Some(CAP), &mut no_obs)
+            .expect("batch rollout cannot fail");
+    });
+    let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+    crate::push_row(t, report, "env decision steps (random agent)", steps, timing.mean_s, allocs);
+    let rate = steps as f64 / timing.mean_s;
+    assert!(
+        rate > 100_000.0,
+        "random agent fell to {:.0} env steps/s — decision loop catastrophically slower",
+        rate
+    );
+
+    // ---- builtin agent -----------------------------------------------------
+    let mut steps = 0u64;
+    let a0 = heap_prof::snapshot();
+    let timing = bench("env decision steps (builtin LWF-1/AdaDUAL)", 1, 3, || {
+        let mut env = SimEnv::new(&cfg, &jobs);
+        let mut agent = BuiltinAgent::new(
+            Box::new(LwfPlacer::new(1)),
+            Box::new(AdaDual { model: cfg.comm }),
+        );
+        let mut no_obs: [&mut dyn SimObserver; 0] = [];
+        steps = env.run_agent(&mut agent, None, &mut no_obs).expect("batch rollout cannot fail");
+    });
+    let allocs = heap_prof::snapshot().since(&a0).allocs / 4;
+    crate::push_row(
+        t,
+        report,
+        "env decision steps (builtin LWF-1/AdaDUAL)",
+        steps,
+        timing.mean_s,
+        allocs,
+    );
+}

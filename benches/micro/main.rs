@@ -4,7 +4,9 @@
 //! counter-proposal the JobQueue docs reference), the free-GPU capacity
 //! index, and per-link membership churn — plus one end-to-end
 //! steady-state engine row that reports allocations/event when built
-//! with `--features dhat-heap`.
+//! with `--features dhat-heap`, and the gym-style env decision-stepping
+//! rows (`env_step`), whose random-agent row carries the SimEnv
+//! throughput floor.
 //!
 //! Attribution convention (docs/EXPERIMENTS.md §Perf): the in-repo heap
 //! profiler counts process-wide allocations, not call sites, so each
@@ -23,6 +25,8 @@ use ddl_sched::sched::JobQueue;
 use ddl_sched::util::bench::{bench, BenchReport};
 use ddl_sched::util::heap as heap_prof;
 use ddl_sched::util::rng::Pcg;
+
+mod env_step;
 
 /// Mirror of the engine's heap entry — (t, seq)-ordered min-heap via
 /// reversed comparison — so heap churn is measured on the real ordering
@@ -370,6 +374,11 @@ fn main() {
             allocs,
         );
     }
+
+    // ---- gym-style env decision stepping -----------------------------------
+    // Random-agent and builtin-agent decision-steps/sec over the same
+    // saturated workload, with the SimEnv acceptance floor (module docs).
+    env_step::run(&mut t, &mut report);
 
     t.print();
     print!("{}", report.delta_vs_committed());

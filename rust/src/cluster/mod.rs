@@ -293,6 +293,13 @@ impl FreeGpuIndex {
             std::cmp::Ordering::Equal => {}
         }
     }
+
+    /// The live `(threshold, feasible count)` rows — a constant-size
+    /// free-capacity summary (one row per distinct memory demand), used
+    /// as the env observation's cluster feature.
+    pub fn histogram(&self) -> Vec<(f64, usize)> {
+        self.thresholds.iter().copied().zip(self.counts.iter().copied()).collect()
+    }
 }
 
 #[cfg(test)]

@@ -538,6 +538,10 @@ impl HealthView {
     pub fn n_gpus_up(&self) -> usize {
         self.gpu.iter().filter(|&&u| u).count()
     }
+
+    pub fn n_links_up(&self) -> usize {
+        self.link.iter().filter(|&&u| u).count()
+    }
 }
 
 #[cfg(test)]

@@ -42,6 +42,7 @@
 pub mod cluster;
 pub mod coordinator;
 pub mod dag;
+pub mod env;
 pub mod fault;
 pub mod metrics;
 pub mod model;
@@ -58,6 +59,9 @@ pub mod util;
 /// Convenient glob imports for examples and benches.
 pub mod prelude {
     pub use crate::cluster::{ClusterSpec, ClusterState};
+    pub use crate::env::{
+        self, BacklogReward, BuiltinAgent, EnvAgent, Obs, RandomAgent, RewardHook, SimEnv,
+    };
     pub use crate::fault::{
         self, FaultEvent, FaultKind, FaultPlan, FaultTargets, FaultsSpec, GenSpec, HealthView,
     };
@@ -74,9 +78,9 @@ pub mod prelude {
     };
     pub use crate::sched::{self, AdaDual, Admission, CommPolicy, SrsfCap};
     pub use crate::sim::{
-        self, ContentionProfiler, JobPriority, JsonlSink, LegacyLog, MetricsObserver,
-        PercentilesObserver, Repricing, SimConfig, SimEvent, SimObserver, SimResult,
-        StreamStats, TimelineObserver,
+        self, Action, ContentionProfiler, DecisionPoint, JobPriority, JsonlSink, LegacyLog,
+        MetricsObserver, PercentilesObserver, Repricing, SimConfig, SimEvent, SimObserver,
+        SimResult, SimState, Step, StreamStats, TimelineObserver,
     };
     pub use crate::source::{
         self, CsvTraceSource, GeneratedSource, JobSource, VecSource,

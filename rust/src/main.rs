@@ -6,6 +6,7 @@
 //!   trace-gen     --jobs N --seed S --out FILE         generate a workload trace
 //!   ingest        --csv FILE [--out FILE]              CSV trace -> trace JSON
 //!   simulate      [--scenario FILE | flags]            run one scenario
+//!   rollout       --agent random|builtin[:P/Q] ...     gym-style env rollout
 //!   sweep         [--what AXIS | --grid] [--threads N] run a scenario grid
 //!   e2e           --jobs N --steps N [--no-pallas]     live coordinator run
 //!   fit           [--mb-max MB]                        Fig 2 model fit demo
@@ -19,6 +20,7 @@ use ddl_sched::prelude::*;
 use ddl_sched::runtime::default_artifacts_dir;
 use ddl_sched::util::cli::Args;
 use ddl_sched::util::error::Result;
+use ddl_sched::util::json::Json;
 use ddl_sched::{bail, err};
 
 fn main() -> ExitCode {
@@ -34,6 +36,7 @@ fn main() -> ExitCode {
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("ingest") => cmd_ingest(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("rollout") => cmd_rollout(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("fit") => cmd_fit(&args),
@@ -85,7 +88,12 @@ fn print_help() {
          \x20            [--events-out F.jsonl] [--timeline-out F] [--contention-out F]\n\
          \x20            [--no-events] [--seed S] [--jobs N]    run one scenario\n\
          \x20 simulate   --list        print registry placers/policies/topology presets\n\
-         \x20 sweep      [--scenario F] [--what placer|policy|kappa|priority|oversub|mtbf]\n\
+         \x20 rollout    [--scenario F | simulate flags] [--agent random|builtin[:P/Q]]\n\
+         \x20            [--steps N] [--agent-seed S] [--out steps.jsonl]\n\
+         \x20            [--events-out F.jsonl]\n\
+         \x20            drive the gym-style SimEnv one decision at a time\n\
+         \x20            (placement / admission / coalescing probes), writing a\n\
+         \x20            JSONL step log; builtin:P/Q names registry algorithms\n\
          \x20            [--grid] [--threads N] [--out-json F] [--out-csv F]\n\
          \x20            [--jobs N] [--seed S]                  run a scenario grid\n\
          \x20 e2e        [--jobs N] [--steps N] [--workers W] [--no-pallas]\n\
@@ -102,7 +110,8 @@ fn print_help() {
          \x20 ddl-sched simulate --jobs 40 --mtbf 600 --mttr 60 --ckpt-iters 50\n\
          \x20 ddl-sched sweep --scenario scenarios/fault_sweep.json --threads 4\n\
          \x20 ddl-sched ingest --csv scenarios/sample_trace.csv --out trace.json\n\
-         \x20 ddl-sched simulate --jobs 40 --events-out events.jsonl --timeline-out gantt.json"
+         \x20 ddl-sched simulate --jobs 40 --events-out events.jsonl --timeline-out gantt.json\n\
+         \x20 ddl-sched rollout --jobs 24 --agent builtin --steps 500 --out steps.jsonl"
     );
 }
 
@@ -307,6 +316,135 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ("timeline", &record.scenario.outputs.timeline),
         ("contention profile", &record.scenario.outputs.contention),
     ] {
+        if let Some(path) = path {
+            println!("wrote {what} to {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Resolve a `rollout` agent spec: `random` (seeded uniform baseline),
+/// `builtin` (the scenario's own placer/policy pair) or
+/// `builtin:<placer>/<policy>` (any registry pair).
+fn make_agent(spec: &str, scenario: &Scenario, seed: u64) -> Result<Box<dyn EnvAgent>> {
+    if spec == "random" {
+        return Ok(Box::new(RandomAgent::new(seed)));
+    }
+    let (placer_name, policy_name) = if spec == "builtin" {
+        (scenario.placer.clone(), scenario.policy.clone())
+    } else if let Some(rest) = spec.strip_prefix("builtin:") {
+        match rest.split_once('/') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => bail!("--agent builtin takes <placer>/<policy> (got '{spec}')"),
+        }
+    } else {
+        bail!("unknown --agent '{spec}' (random | builtin | builtin:<placer>/<policy>)");
+    };
+    let placer = registry::make_placer(
+        &placer_name,
+        scenario.kappa,
+        scenario.seed,
+        scenario.topology.rack_size(),
+    )?;
+    let policy = registry::make_policy(&policy_name, scenario.comm)?;
+    Ok(Box::new(BuiltinAgent::new(placer, policy)))
+}
+
+/// One step-log line: the observation the agent saw, what it did, and
+/// what it earned (schema: docs/SCENARIOS.md §Rollout).
+fn action_json(action: &Action) -> Json {
+    match action {
+        Action::Place(None) => Json::obj().set("kind", "decline"),
+        Action::Place(Some(gpus)) => {
+            let ids = gpus.iter().map(|&g| Json::from(g)).collect();
+            Json::obj().set("kind", "place").set("gpus", Json::Arr(ids))
+        }
+        Action::Admit(Admission::Start) => Json::obj().set("kind", "start"),
+        Action::Admit(Admission::Wait) => Json::obj().set("kind", "wait"),
+    }
+}
+
+/// `rollout`: drive the gym-style [`SimEnv`] with an agent, one decision
+/// point at a time — the training-loop substrate, exposed for inspection.
+/// `--out` writes a JSONL step log (one line per decision); `--events-out`
+/// additionally attaches the standard engine-event JSONL sink.
+fn cmd_rollout(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    let scenario = match args.get("scenario") {
+        Some(path) => Scenario::from_file(path)?,
+        None => scenario_from_flags(args)?,
+    };
+    let cfg = scenario.engine_config()?;
+    let jobs = scenario.jobs()?;
+    let agent_spec = args.str_or("agent", "random").to_string();
+    let mut agent = make_agent(&agent_spec, &scenario, args.u64_or("agent-seed", scenario.seed)?)?;
+    let max_steps = args.u64_or("steps", u64::MAX)?;
+    let mut env = SimEnv::new(&cfg, &jobs);
+    let mut step_log = match args.get("out") {
+        Some(p) => Some(std::io::BufWriter::new(std::fs::File::create(p)?)),
+        None => None,
+    };
+    let mut sink = match args.get("events-out") {
+        Some(p) => {
+            let f = std::fs::File::create(p)?;
+            Some(JsonlSink::new(std::io::BufWriter::new(f)))
+        }
+        None => None,
+    };
+    let t0 = Instant::now();
+    let steps = {
+        let mut obs: Vec<&mut dyn SimObserver> = Vec::new();
+        if let Some(s) = sink.as_mut() {
+            obs.push(s);
+        }
+        let mut o = env.reset(obs.as_mut_slice())?;
+        let mut n = 0u64;
+        while !o.done && n < max_steps {
+            let d = env
+                .state()
+                .pending()
+                .ok_or_else(|| err!("engine paused without a pending decision"))?;
+            let action = agent.act(env.state(), &d, &o);
+            let aj = action_json(&action);
+            let (next, reward, _done) = env.step(action, obs.as_mut_slice())?;
+            if let Some(w) = step_log.as_mut() {
+                let line = Json::obj()
+                    .set("step", n)
+                    .set("obs", o.to_json())
+                    .set("action", aj)
+                    .set("reward", reward)
+                    .set("return", env.episode_return());
+                writeln!(w, "{line}")?;
+            }
+            o = next;
+            n += 1;
+        }
+        n
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(w) = step_log.as_mut() {
+        w.flush()?;
+    }
+    if let Some(s) = sink {
+        s.finish()?;
+    }
+    println!(
+        "rollout '{}': agent={} steps={} sim_t={:.1}s return={:.3e}",
+        scenario.name,
+        agent_spec,
+        steps,
+        env.state().now(),
+        env.episode_return()
+    );
+    println!(
+        "jobs: arrived={} finished={} in_system={}; wall {:.2}s ({:.0} steps/s)",
+        env.state().arrived_jobs(),
+        env.state().finished_jobs(),
+        env.state().jobs_in_system(),
+        wall,
+        steps as f64 / wall.max(1e-9)
+    );
+    for (what, path) in [("step log", args.get("out")), ("events", args.get("events-out"))] {
         if let Some(path) = path {
             println!("wrote {what} to {path}");
         }

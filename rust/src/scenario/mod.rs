@@ -289,6 +289,16 @@ impl Scenario {
         }
     }
 
+    /// The complete engine configuration: [`Scenario::sim_config`] with
+    /// the fault timeline compiled in — what `run` assembles internally,
+    /// exposed for direct [`sim::SimState`] / env construction (the
+    /// `rollout` CLI subcommand).
+    pub fn engine_config(&self) -> Result<SimConfig> {
+        let mut cfg = self.sim_config();
+        cfg.faults = self.fault_plan()?;
+        Ok(cfg)
+    }
+
     /// Resolve the trace source into concrete jobs.
     pub fn jobs(&self) -> Result<Vec<JobSpec>> {
         match &self.trace {

@@ -264,7 +264,7 @@ pub fn srsf_cmp(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
 /// E_J = 0 before placement), FIFO's is its arrival time, and LAS's is 0
 /// (no service attained yet) — so the order can never drift between
 /// passes (the engine debug-asserts this invariant on every walk).
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct JobQueue {
     /// Sorted ascending by `srsf_cmp` on `(key, job id)`.
     entries: Vec<(f64, usize)>,

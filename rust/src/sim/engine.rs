@@ -295,7 +295,8 @@ impl PartialOrd for Timed {
 }
 
 /// Active macro-event: the analytic stand-in for a steady-state job's
-/// remaining per-iteration event chain (see `try_fast_forward`).
+/// remaining per-iteration event chain (see `ff_commit`).
+#[derive(Clone)]
 struct FfState {
     /// Start of the first coalesced iteration (an exact event time).
     start_t: f64,
@@ -312,6 +313,7 @@ struct FfState {
 }
 
 /// Per-job runtime state.
+#[derive(Clone)]
 struct JobRt {
     spec: JobSpec,
     gpus: Vec<GpuId>,
@@ -373,14 +375,15 @@ impl JobRt {
 
 /// One active All-Reduce transfer. `latency_left`/`remaining` are the
 /// residuals *at* `anchor_t` (admission, or the last repricing); state at
-/// any later time is derived in closed form by `Engine::residual_at`
+/// any later time is derived in closed form by `SimState::residual_at`
 /// rather than advanced incrementally — so the values are independent of
 /// when intermediate events happened to look, which is what lets
 /// fast-forwarding skip events without perturbing other transfers.
+#[derive(Clone)]
 struct CommTask {
     job: usize,
     /// Logical transfer id reported to observers. Comm *slots* are
-    /// recycled (`Engine::free_slots`) so steady-state admission reuses a
+    /// recycled (`SimState::free_slots`) so steady-state admission reuses a
     /// dead task's storage, but the ids observers see keep counting
     /// monotonically — event streams stay byte-identical to the
     /// grow-only engine this replaced.
@@ -426,6 +429,7 @@ struct CommTask {
 /// Per-GPU runtime state. Busy time, allocation windows and release
 /// times are no longer accumulated here — observers derive them from
 /// `ComputeStarted` / `JobPlaced` / `JobFinished` events.
+#[derive(Clone)]
 struct GpuRt {
     busy: bool,
     /// Job whose compute task occupies this GPU (meaningful only while
@@ -477,9 +481,9 @@ pub fn simulate_observed(
     for o in observers.iter_mut() {
         o.on_start(cfg, jobs);
     }
-    Engine::new(cfg, jobs, observers)
-        .run(placer, policy)
-        .expect("batch simulation cannot fail: no job source to error");
+    let mut state = SimState::new(cfg, jobs);
+    drive(&mut state, placer, policy, observers, None)
+        .expect("batch simulation with builtin agents cannot fail: no job source to error");
 }
 
 /// Run one simulation fed by a streaming [`JobSource`] instead of a
@@ -528,7 +532,30 @@ pub fn simulate_stream_observed(
     for o in observers.iter_mut() {
         o.on_start(cfg, &[]);
     }
-    Engine::new_streaming(cfg, source, observers).run(placer, policy)
+    let mut state = SimState::new_streaming(cfg, source.size_hint());
+    drive(&mut state, placer, policy, observers, Some(source))
+}
+
+/// Drive a [`SimState`] to completion with the builtin placer/policy
+/// answering every decision point — the monolithic facades' engine loop.
+/// One code path serves both the facades and an env-hosted builtin
+/// agent, which is what pins their bit-identity.
+fn drive(
+    state: &mut SimState,
+    placer: &mut dyn Placer,
+    policy: &dyn CommPolicy,
+    obs: &mut [&mut dyn SimObserver],
+    mut source: Option<&mut dyn JobSource>,
+) -> Result<()> {
+    loop {
+        match state.advance(obs, source.as_mut().map(|s| &mut **s))? {
+            Step::Decision(d) => {
+                let action = state.decide_builtin(&d, placer, policy);
+                state.resolve(action, obs)?;
+            }
+            Step::Done(_) => return Ok(()),
+        }
+    }
 }
 
 /// Fan one event out to every attached observer.
@@ -594,7 +621,7 @@ struct FfWalk {
     lat: f64,
     drain: f64,
     /// Exact-tie heap order against the interrupter (see
-    /// [`Engine::reconcile_all_ffs`] for the derivation).
+    /// [`SimState::reconcile_all_ffs`] for the derivation).
     boundary_first: bool,
 }
 
@@ -665,12 +692,115 @@ fn par_walk(workers: usize, walks: &[FfWalk], t: f64) -> Vec<FfWalkOut> {
 /// amortized O(1) per processed event.
 const STALE_COMPACT_MIN: usize = 1024;
 
-struct Engine<'a, 'o> {
-    cfg: &'a SimConfig,
-    /// Attached observers — the engine's only output channel. Every
-    /// state change that used to feed `SimResult` accumulators or the
-    /// string log is a typed `SimEvent` emission now.
-    observers: &'a mut [&'o mut (dyn SimObserver + 'o)],
+/// A unit of deferred engine work. The old engine nested pausable calls
+/// (placement passes, admission passes, iteration starts) inside event
+/// handlers; the resumable engine queues them on a LIFO stack instead —
+/// popping in exactly the old call order — so [`SimState::advance`] can
+/// return to the caller mid-event when an op pauses at a decision point.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// Credit a finished iteration (and maybe finish the job).
+    IterComplete { t: f64, job: usize },
+    /// Begin the job's next iteration (may reach the coalescing probe).
+    StartIteration { t: f64, job: usize },
+    /// Run an admission pass over the pending-communication set.
+    AdmitPass { t: f64 },
+    /// Start the highest-priority ready task on a GPU.
+    ScheduleGpu { t: f64, gpu: GpuId },
+    /// Run a placement pass unconditionally (arrivals).
+    PlacePass { t: f64, interrupter: Option<usize> },
+    /// Run a placement pass iff `need_place` was raised (completions).
+    PlaceIfNeeded { t: f64, interrupter: Option<usize> },
+}
+
+/// Where a paused pass stopped: the walk's frozen cursor, consumed by
+/// [`SimState::resolve`] to continue from the exact element it paused at.
+#[derive(Clone)]
+enum Paused {
+    /// Placement walk paused at `entries[idx]` — a placer candidate.
+    Place { t: f64, entries: Vec<(f64, usize)>, idx: usize, kept: Vec<(f64, usize)> },
+    /// Admission walk paused at `order[idx]` — its links are all up.
+    Admit { t: f64, order: Vec<usize>, idx: usize },
+    /// Coalescing probe for a provably steady `job`: Start fast-forwards
+    /// it, Wait runs the next iteration event-exact.
+    Ff { t: f64, job: usize },
+}
+
+/// A decision the engine needs before it can continue.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DecisionPoint {
+    /// Choose GPUs for `job`, or decline. The capacity gate has already
+    /// proven enough feasible GPUs exist for a contract-abiding placer.
+    Place { t: f64, job: usize },
+    /// Admit `job`'s ready All-Reduce now, or leave it pending.
+    Admit { t: f64, job: usize },
+    /// `job` is provably steady: admit its (uncontended) per-iteration
+    /// All-Reduce — committing to the analytic fast-forward — or keep it
+    /// event-exact. Builtin policies see idle links here, so for them
+    /// this is the same pure call the monolithic engine made.
+    FfProbe { t: f64, job: usize },
+}
+
+impl DecisionPoint {
+    /// The decision's timestamp.
+    pub fn t(&self) -> f64 {
+        match *self {
+            DecisionPoint::Place { t, .. }
+            | DecisionPoint::Admit { t, .. }
+            | DecisionPoint::FfProbe { t, .. } => t,
+        }
+    }
+
+    /// The job the decision concerns.
+    pub fn job(&self) -> usize {
+        match *self {
+            DecisionPoint::Place { job, .. }
+            | DecisionPoint::Admit { job, .. }
+            | DecisionPoint::FfProbe { job, .. } => job,
+        }
+    }
+
+    /// Stable kind label (step logs, observations).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DecisionPoint::Place { .. } => "place",
+            DecisionPoint::Admit { .. } => "admit",
+            DecisionPoint::FfProbe { .. } => "ff-probe",
+        }
+    }
+}
+
+/// An external answer to a [`DecisionPoint`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// For [`DecisionPoint::Place`]: the chosen GPUs, or `None` to leave
+    /// the job queued until more memory frees.
+    Place(Option<Vec<GpuId>>),
+    /// For [`DecisionPoint::Admit`] and [`DecisionPoint::FfProbe`].
+    Admit(Admission),
+}
+
+/// What [`SimState::advance`] ran into.
+#[derive(Debug)]
+pub enum Step {
+    /// Paused at a decision point; answer with [`SimState::resolve`].
+    Decision(DecisionPoint),
+    /// The run completed (idempotent: further calls return this again).
+    Done(RunStats),
+}
+
+/// The complete simulation state — the old monolithic engine with its
+/// run-to-completion loop inverted into a resumable state machine.
+/// [`SimState::advance`] runs the event loop until the next decision
+/// point (placement candidate, admission gate or coalescing probe) and
+/// returns it; [`SimState::resolve`] applies an external [`Action`] and
+/// the next `advance` resumes exactly where the walk paused. Observers
+/// and the streaming job source stay *outside* the state — passed to
+/// each call — so `SimState` is `Clone`: [`SimState::save`] and
+/// [`SimState::restore`] checkpoint the full deterministic state.
+#[derive(Clone)]
+pub struct SimState {
+    cfg: SimConfig,
     topo: Topology,
     cluster: ClusterState,
     jobs: Vec<JobRt>,
@@ -736,7 +866,7 @@ struct Engine<'a, 'o> {
     /// absent) — finish is an O(1) swap-remove, not an O(n) retain.
     running_multi_pos: Vec<usize>,
     /// Always-empty per-link occupancy view lent to the policy by the
-    /// steadiness check (allocated once, never mutated — the check runs
+    /// steadiness probe (allocated once, never mutated — the probe runs
     /// at every iteration boundary of every uncontended multi job).
     empty_view: LinkLists,
     /// Jobs currently running under a macro-event (`JobRt::ff` set).
@@ -761,9 +891,10 @@ struct Engine<'a, 'o> {
     /// Set when a job finished (memory freed) so the event loop re-attempts
     /// placement of queued jobs.
     need_place: bool,
-    /// Streaming mode: the job source polled at arrival boundaries.
-    /// `None` in batch mode, where every arrival is pre-seeded.
-    source: Option<&'a mut (dyn JobSource + 'a)>,
+    /// Streaming mode: arrivals are pulled from the `JobSource` handed to
+    /// [`SimState::advance`] (batch mode pre-seeds every arrival and
+    /// never pulls).
+    streaming: bool,
     /// True once the source reported exhaustion (always true in batch
     /// mode): together with `unfinished == 0` this ends the run.
     drained: bool,
@@ -778,14 +909,29 @@ struct Engine<'a, 'o> {
     health_hold: Vec<f64>,
     /// Next unprocessed entry of `cfg.faults.events`.
     fault_idx: usize,
+    /// Deferred engine work, popped LIFO by `advance` (see [`Op`]).
+    ops: Vec<Op>,
+    /// The pass currently paused at a decision point, if any.
+    paused: Option<Paused>,
+    /// The first `advance` call primed the streaming source and the fault
+    /// timeline.
+    primed: bool,
+    /// The event loop ran to completion.
+    finished: bool,
+    /// A live event was dispatched since the last compaction check (the
+    /// stale arms `continue` past arming it, as the old loop's did).
+    compact_pending: bool,
+    /// Timestamp of the last processed event (the final `RunStats::t_end`).
+    t_end: f64,
+    /// Arrivals processed (drives the env's jobs-in-system signal).
+    arrived: u64,
+    /// Jobs finished (ditto).
+    done_jobs: u64,
 }
 
-impl<'a, 'o> Engine<'a, 'o> {
-    fn new(
-        cfg: &'a SimConfig,
-        jobs: &[JobSpec],
-        observers: &'a mut [&'o mut (dyn SimObserver + 'o)],
-    ) -> Engine<'a, 'o> {
+impl SimState {
+    /// Batch-mode constructor: every arrival pre-seeded in the heap.
+    pub fn new(cfg: &SimConfig, jobs: &[JobSpec]) -> SimState {
         let peak = cfg.cluster.gpu_peak_gflops;
         let rt: Vec<JobRt> = jobs
             .iter()
@@ -831,9 +977,8 @@ impl<'a, 'o> Engine<'a, 'o> {
         // exact `fits` count for any job without scanning GPUs.
         let capacity =
             FreeGpuIndex::new(jobs.iter().map(JobSpec::mem_bytes).collect(), &cluster);
-        Engine {
-            cfg,
-            observers,
+        SimState {
+            cfg: cfg.clone(),
             topo,
             cluster,
             gpus: (0..cfg.cluster.n_gpus())
@@ -868,28 +1013,32 @@ impl<'a, 'o> Engine<'a, 'o> {
             unfinished: jobs.len(),
             need_place: false,
             jobs: rt,
-            source: None,
+            streaming: false,
             drained: true,
             last_arrival: f64::NEG_INFINITY,
             health: HealthView::new(cfg.cluster.n_gpus(), n_links),
             health_hold: vec![0.0; cfg.cluster.n_gpus()],
             fault_idx: 0,
+            ops: Vec::new(),
+            paused: None,
+            primed: false,
+            finished: false,
+            compact_pending: false,
+            t_end: 0.0,
+            arrived: 0,
+            done_jobs: 0,
         }
     }
 
-    /// Streaming-mode constructor: no pre-seeded jobs; arrivals are pulled
-    /// from `source` one at a time (see [`simulate_stream_observed`]).
-    fn new_streaming(
-        cfg: &'a SimConfig,
-        source: &'a mut dyn JobSource,
-        observers: &'a mut [&'o mut (dyn SimObserver + 'o)],
-    ) -> Engine<'a, 'o> {
-        let hint = source.size_hint();
-        let mut eng = Engine::new(cfg, &[], observers);
+    /// Streaming-mode constructor: no pre-seeded jobs; arrivals are
+    /// pulled one at a time from the `JobSource` handed to every
+    /// [`SimState::advance`] call (see [`simulate_stream_observed`]).
+    pub fn new_streaming(cfg: &SimConfig, size_hint: Option<usize>) -> SimState {
+        let mut eng = SimState::new(cfg, &[]);
         // The batch constructor saw zero jobs; resize the heap from the
         // source's own estimate of the trace length (bounded — streaming
         // exists precisely so memory does not scale with the trace).
-        eng.heap = BinaryHeap::with_capacity(heap_capacity_hint(hint));
+        eng.heap = BinaryHeap::with_capacity(heap_capacity_hint(size_hint));
         // The trace's memory demands are unknown up front; per-GPU demand
         // is a function of the model alone, so registering every zoo
         // model's footprint keeps the capacity gate exact for any
@@ -899,7 +1048,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             &eng.cluster,
         );
         eng.seq = RUNTIME_BASE;
-        eng.source = Some(source);
+        eng.streaming = true;
         eng.drained = false;
         eng
     }
@@ -958,9 +1107,12 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// Streaming mode: pull the next job from the source and schedule its
     /// arrival. Called once at run start and once per processed arrival,
     /// so the heap holds at most one pending arrival at any time.
-    fn pull_next(&mut self) -> Result<()> {
-        let Some(src) = self.source.as_mut() else {
+    fn pull_next(&mut self, source: &mut Option<&mut dyn JobSource>) -> Result<()> {
+        if !self.streaming {
             return Ok(());
+        }
+        let Some(src) = source.as_mut() else {
+            bail!("streaming simulation advanced without its job source");
         };
         match src.next_job()? {
             Some(spec) => {
@@ -999,16 +1151,64 @@ impl<'a, 'o> Engine<'a, 'o> {
         }
     }
 
-    fn run(mut self, placer: &mut dyn Placer, policy: &dyn CommPolicy) -> Result<()> {
-        // Streaming mode: prime the first arrival (no-op in batch mode).
-        self.pull_next()?;
-        self.push_next_fault();
-        let mut t_end = 0.0;
-        while let Some(Timed { t, ev, .. }) = self.heap.pop() {
+    /// Run the event loop until the next decision point or completion.
+    ///
+    /// This is the old run-to-completion loop inverted: instead of
+    /// consulting the placer/policy inline, pausable work is queued as
+    /// micro-ops ([`Op`] — a LIFO stack replaying the old call nesting
+    /// exactly) and the loop returns [`Step::Decision`] whenever an op
+    /// reaches a placement candidate, an admission gate or a coalescing
+    /// probe. The caller answers with [`SimState::resolve`] and calls
+    /// `advance` again. Calling `advance` with a decision still pending
+    /// (or after completion) is idempotent.
+    ///
+    /// `source` must be `Some` — the *same* source across calls — for a
+    /// state built by [`SimState::new_streaming`]; batch mode ignores it.
+    pub fn advance(
+        &mut self,
+        obs: &mut [&mut dyn SimObserver],
+        mut source: Option<&mut dyn JobSource>,
+    ) -> Result<Step> {
+        if self.paused.is_some() {
+            return Ok(Step::Decision(self.decision()));
+        }
+        if self.finished {
+            return Ok(Step::Done(RunStats { n_events: self.n_events, t_end: self.t_end }));
+        }
+        if !self.primed {
+            // Streaming mode: prime the first arrival (no-op in batch
+            // mode), then the first fault timeline entry.
+            self.primed = true;
+            self.pull_next(&mut source)?;
+            self.push_next_fault();
+        }
+        loop {
+            // Drain deferred work from the last dispatched event first —
+            // it may pause at a decision point mid-drain.
+            while let Some(op) = self.ops.pop() {
+                self.run_op(op, obs);
+                if self.paused.is_some() {
+                    return Ok(Step::Decision(self.decision()));
+                }
+            }
+            // Compaction runs where the old loop ran it: after an event's
+            // nested work completed, before the next pop. The stale arms
+            // `continue` past arming it, exactly as they skipped the old
+            // end-of-iteration check.
+            if self.compact_pending {
+                self.compact_pending = false;
+                let stale = self.heap_stale;
+                if stale >= STALE_COMPACT_MIN && stale * 2 >= self.heap.len() {
+                    self.compact_heap();
+                }
+            }
+            let Some(Timed { t, ev, .. }) = self.heap.pop() else {
+                break;
+            };
             if self.unfinished == 0 && self.drained {
                 break;
             }
-            t_end = t;
+            self.t_end = t;
             self.n_events += 1;
             if self.n_events % 1_000_000 == 0 && self.debug {
                 eprintln!(
@@ -1027,12 +1227,13 @@ impl<'a, 'o> Engine<'a, 'o> {
                     // Streaming: replace the consumed pending arrival
                     // before processing, so same-timestamp arrivals keep
                     // the batch path's pop order.
-                    self.pull_next()?;
-                    emit(&mut *self.observers, SimEvent::JobArrived { t, job });
+                    self.pull_next(&mut source)?;
+                    self.arrived += 1;
+                    emit(&mut *obs, SimEvent::JobArrived { t, job });
                     let key = self.queue_key(job);
                     self.queue.insert(key, job);
                     self.queue_eligible += 1;
-                    self.try_place(t, placer, None);
+                    self.ops.push(Op::PlacePass { t, interrupter: None });
                 }
                 Ev::ComputeDone { gpu, job, phase, epoch } => {
                     if self.jobs[job].run_epoch != epoch {
@@ -1042,14 +1243,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                         continue;
                     }
                     self.jobs[job].inflight_compute -= 1;
-                    self.on_compute_done(t, gpu, job, phase, policy);
-                    // Placement feasibility only changes when memory frees
-                    // (a job finished); re-attempting on every compute event
-                    // would dominate the run time.
-                    if self.need_place {
-                        self.need_place = false;
-                        self.try_place(t, placer, Some(job));
-                    }
+                    self.on_compute_done(t, gpu, job, phase);
                 }
                 Ev::CommDone { comm, version } => {
                     if self.comms[comm].done || self.comms[comm].version != version {
@@ -1072,7 +1266,13 @@ impl<'a, 'o> Engine<'a, 'o> {
                         self.repredict(t, comm);
                         continue;
                     }
-                    self.complete_comm(t, comm, placer, policy);
+                    let job = self.complete_comm_flat(t, comm, obs);
+                    // Queued in reverse of the old `complete_comm` tail:
+                    // iteration credit, then the admission pass, then a
+                    // placement pass iff the credit finished the job.
+                    self.ops.push(Op::PlaceIfNeeded { t, interrupter: Some(job) });
+                    self.ops.push(Op::AdmitPass { t });
+                    self.ops.push(Op::IterComplete { t, job });
                 }
                 Ev::FastForward { job, version } => {
                     if self.jobs[job].ff_version != version {
@@ -1081,23 +1281,20 @@ impl<'a, 'o> Engine<'a, 'o> {
                         self.heap_stale = self.heap_stale.saturating_sub(1);
                         continue;
                     }
-                    self.complete_fast_forward(t, job);
-                    if self.need_place {
-                        self.need_place = false;
-                        self.try_place(t, placer, Some(job));
-                    }
+                    self.complete_fast_forward(t, job, obs);
+                    self.ops.push(Op::PlaceIfNeeded { t, interrupter: Some(job) });
                 }
                 Ev::Fault { idx } => {
                     let (_, fault) = self.cfg.faults.events[idx];
                     self.fault_idx = idx + 1;
                     self.push_next_fault();
-                    self.process_fault(t, fault, policy);
                     // Preemptions free memory and recoveries restore
                     // capacity — either way queued jobs deserve a pass.
-                    if self.need_place {
-                        self.need_place = false;
-                        self.try_place(t, placer, None);
-                    }
+                    // Pushed *before* `process_fault` so the admission
+                    // pass a link recovery queues pops first, as the old
+                    // inline order had it.
+                    self.ops.push(Op::PlaceIfNeeded { t, interrupter: None });
+                    self.process_fault(t, fault, obs);
                 }
                 Ev::Warmup { job, epoch } => {
                     if self.jobs[job].run_epoch != epoch {
@@ -1107,18 +1304,275 @@ impl<'a, 'o> Engine<'a, 'o> {
                         continue;
                     }
                     self.jobs[job].warmup_pending = false;
-                    self.start_iteration(t, job, policy);
+                    // Dispatch never pauses inline — queue the iteration
+                    // start (it may reach the coalescing probe).
+                    self.ops.push(Op::StartIteration { t, job });
                 }
             }
-            if self.heap_stale >= STALE_COMPACT_MIN && self.heap_stale * 2 >= self.heap.len() {
-                self.compact_heap();
-            }
+            self.compact_pending = true;
         }
-        let stats = RunStats { n_events: self.n_events, t_end };
-        for o in self.observers.iter_mut() {
+        self.finished = true;
+        let stats = RunStats { n_events: self.n_events, t_end: self.t_end };
+        for o in obs.iter_mut() {
             o.on_end(&stats);
         }
+        Ok(Step::Done(stats))
+    }
+
+    /// Execute one queued micro-op. Ops are the only place `paused` can
+    /// be set — event dispatch itself never pauses.
+    fn run_op(&mut self, op: Op, obs: &mut [&mut dyn SimObserver]) {
+        match op {
+            Op::IterComplete { t, job } => self.op_iteration_complete(t, job, obs),
+            Op::StartIteration { t, job } => self.op_start_iteration(t, job, obs),
+            Op::AdmitPass { t } => self.op_admit_pass(t),
+            Op::ScheduleGpu { t, gpu } => self.schedule_gpu(t, gpu, obs),
+            Op::PlacePass { t, interrupter } => self.op_place_pass(t, interrupter, obs),
+            Op::PlaceIfNeeded { t, interrupter } => {
+                if self.need_place {
+                    self.need_place = false;
+                    self.op_place_pass(t, interrupter, obs);
+                }
+            }
+        }
+    }
+
+    /// The pending decision point (`paused` must be set).
+    fn decision(&self) -> DecisionPoint {
+        match self.paused.as_ref().expect("no pending decision") {
+            Paused::Place { t, entries, idx, .. } => {
+                DecisionPoint::Place { t: *t, job: entries[*idx].1 }
+            }
+            Paused::Admit { t, order, idx } => DecisionPoint::Admit { t: *t, job: order[*idx] },
+            Paused::Ff { t, job } => DecisionPoint::FfProbe { t: *t, job: *job },
+        }
+    }
+
+    /// The pending decision point, if the engine is paused at one.
+    pub fn pending(&self) -> Option<DecisionPoint> {
+        self.paused.as_ref().map(|_| self.decision())
+    }
+
+    /// Apply an external decision to the pending decision point and let
+    /// the paused pass continue — it may immediately pause at its next
+    /// candidate, so call [`SimState::advance`] to find out. A mismatched
+    /// action kind or an invalid placement is rejected *without*
+    /// consuming the decision, so a driver can retry.
+    pub fn resolve(&mut self, action: Action, obs: &mut [&mut dyn SimObserver]) -> Result<()> {
+        let Some(paused) = self.paused.take() else {
+            bail!("resolve called with no pending decision");
+        };
+        match paused {
+            Paused::Place { t, entries, idx, mut kept } => {
+                let (key, job) = entries[idx];
+                let Action::Place(choice) = action else {
+                    self.paused = Some(Paused::Place { t, entries, idx, kept });
+                    bail!("pending decision is a placement; got an admission action");
+                };
+                match choice {
+                    Some(gpus) => {
+                        if let Err(e) = self.validate_placement(job, &gpus) {
+                            self.paused = Some(Paused::Place { t, entries, idx, kept });
+                            return Err(e);
+                        }
+                        self.queue_eligible -= 1;
+                        self.commit_placement(t, job, gpus, obs);
+                    }
+                    None => {
+                        self.place_stamp[job] = self.release_gen;
+                        self.queue_eligible -= 1;
+                        kept.push((key, job));
+                    }
+                }
+                self.place_cont(t, entries, idx + 1, kept);
+            }
+            Paused::Admit { t, order, idx } => {
+                let job = order[idx];
+                let Action::Admit(admission) = action else {
+                    self.paused = Some(Paused::Admit { t, order, idx });
+                    bail!("pending decision is an admission; got a placement action");
+                };
+                match admission {
+                    Admission::Start => self.admit_start(t, job, obs),
+                    Admission::Wait => self.pending_comm.push(job),
+                }
+                self.admit_cont(t, order, idx + 1);
+            }
+            Paused::Ff { t, job } => {
+                let Action::Admit(admission) = action else {
+                    self.paused = Some(Paused::Ff { t, job });
+                    bail!("pending decision is an admission probe; got a placement action");
+                };
+                match admission {
+                    Admission::Start => self.ff_commit(t, job, obs),
+                    Admission::Wait => self.start_iteration_exact(t, job, obs),
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Answer a decision point the way the monolithic engine did: ask the
+    /// placer for placements, the admission policy — over the same lazy
+    /// [`NetView`] — for admissions and coalescing probes. [`drive`] plus
+    /// this method is the single code path behind [`simulate_observed`],
+    /// which is what pins env-driven builtin-agent runs bit-identical to
+    /// the facades.
+    pub fn decide_builtin(
+        &self,
+        d: &DecisionPoint,
+        placer: &mut dyn Placer,
+        policy: &dyn CommPolicy,
+    ) -> Action {
+        match *d {
+            DecisionPoint::Place { job, .. } => {
+                Action::Place(placer.place(&self.jobs[job].spec, &self.cluster))
+            }
+            DecisionPoint::Admit { t, job } => {
+                let msg = self.jobs[job].spec.message_bytes();
+                let remaining = |c: usize| self.residual_at(c, t).1;
+                let net = NetView::new(&self.per_link, &remaining);
+                Action::Admit(policy.admit(msg, &self.jobs[job].links, &net))
+            }
+            DecisionPoint::FfProbe { job, .. } => {
+                // The per-iteration admission decision on (provably) idle
+                // links: builtin policies see the always-empty view, so
+                // this is the same pure call the old steadiness check made.
+                let msg = self.jobs[job].spec.message_bytes();
+                let view = NetView::occupancy_only(&self.empty_view);
+                Action::Admit(policy.admit(msg, &self.jobs[job].links, &view))
+            }
+        }
+    }
+
+    /// Sanity-check an externally supplied placement: right GPU count, no
+    /// duplicates, every GPU exists and fits the job's memory demand. A
+    /// down GPU's free memory is held at zero (see `on_gpu_failed`), so
+    /// the fit test covers health too.
+    fn validate_placement(&self, job: usize, gpus: &[GpuId]) -> Result<()> {
+        let spec = &self.jobs[job].spec;
+        if gpus.len() != spec.n_gpus {
+            bail!("placement for job {} names {} GPUs, not {}", job, gpus.len(), spec.n_gpus);
+        }
+        let mem = spec.mem_bytes();
+        for (i, &g) in gpus.iter().enumerate() {
+            if g >= self.cluster.gpus.len() {
+                bail!("placement for job {job} names GPU {g}, which does not exist");
+            }
+            if gpus[..i].contains(&g) {
+                bail!("placement for job {job} names GPU {g} twice");
+            }
+            if !self.cluster.fits(g, mem) {
+                bail!("placement for job {job} names GPU {g}, which cannot fit it");
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot the full deterministic simulation state. Everything the
+    /// event loop reads lives in `self` — observers and the streaming job
+    /// source are external, passed to each [`SimState::advance`] call —
+    /// so a deep clone is a complete checkpoint.
+    pub fn save(&self) -> SimState {
+        self.clone()
+    }
+
+    /// Rewind to a snapshot taken by [`SimState::save`].
+    pub fn restore(&mut self, snap: &SimState) {
+        *self = snap.clone();
+    }
+
+    // -- read-only state (observation surface) --------------------------------
+
+    /// Current simulation clock: the last processed event's timestamp.
+    pub fn now(&self) -> f64 {
+        self.t_end
+    }
+
+    /// True once the event loop has run to completion.
+    pub fn is_done(&self) -> bool {
+        self.finished
+    }
+
+    /// Events processed so far.
+    pub fn events_processed(&self) -> u64 {
+        self.n_events
+    }
+
+    /// Jobs waiting for placement.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Jobs with a ready-but-unadmitted All-Reduce.
+    pub fn pending_comms(&self) -> usize {
+        self.pending_comm.len()
+    }
+
+    /// Arrivals processed so far.
+    pub fn arrived_jobs(&self) -> u64 {
+        self.arrived
+    }
+
+    /// Jobs finished so far.
+    pub fn finished_jobs(&self) -> u64 {
+        self.done_jobs
+    }
+
+    /// Jobs arrived and not yet finished.
+    pub fn jobs_in_system(&self) -> u64 {
+        self.arrived - self.done_jobs
+    }
+
+    /// Fabric links in the topology.
+    pub fn n_links(&self) -> usize {
+        self.per_link.n_links()
+    }
+
+    /// Active transfers crossing link `l`.
+    pub fn link_occupancy(&self, l: LinkId) -> usize {
+        self.per_link.len(l)
+    }
+
+    /// GPUs currently up.
+    pub fn gpus_up(&self) -> usize {
+        self.health.n_gpus_up()
+    }
+
+    /// Links currently up.
+    pub fn links_up(&self) -> usize {
+        self.health.n_links_up()
+    }
+
+    /// Free-GPU counts per registered memory demand: `(mem_bytes, count)`
+    /// rows from the live capacity index.
+    pub fn free_gpu_histogram(&self) -> Vec<(f64, usize)> {
+        self.capacity.histogram()
+    }
+
+    /// A job's immutable spec.
+    pub fn job_spec(&self, job: usize) -> &JobSpec {
+        &self.jobs[job].spec
+    }
+
+    /// Fabric links a job's All-Reduce crosses (empty before placement).
+    pub fn job_links(&self, job: usize) -> &[LinkId] {
+        &self.jobs[job].links
+    }
+
+    /// Iterations a job still has to run.
+    pub fn iters_left(&self, job: usize) -> u64 {
+        self.jobs[job].spec.iterations - self.jobs[job].iters_done
+    }
+
+    /// The live cluster state (what placers read).
+    pub fn cluster(&self) -> &ClusterState {
+        &self.cluster
+    }
+
+    /// The run's configuration.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
     }
 
     // -- priorities -----------------------------------------------------------
@@ -1151,10 +1605,20 @@ impl<'a, 'o> Engine<'a, 'o> {
 
     // -- placement ----------------------------------------------------------
 
-    /// `interrupter` is the job whose finish triggered this pass (`None`
-    /// for arrivals) — the tie-break reconciliation needs when a
-    /// macro-event boundary coincides bit-exactly with this timestamp.
-    fn try_place(&mut self, t: f64, placer: &mut dyn Placer, interrupter: Option<usize>) {
+    /// One placement pass. `interrupter` is the job whose finish
+    /// triggered it (`None` for arrivals) — the tie-break reconciliation
+    /// needs when a macro-event boundary coincides bit-exactly with this
+    /// timestamp. Each job the capacity gate cannot prove hopeless is a
+    /// placement *decision point*: the walk pauses there and
+    /// [`SimState::resolve`] (or the builtin placer via
+    /// [`SimState::decide_builtin`]) supplies the GPU set (or a decline)
+    /// before `place_cont` resumes.
+    fn op_place_pass(
+        &mut self,
+        t: f64,
+        interrupter: Option<usize>,
+        obs: &mut [&mut dyn SimObserver],
+    ) {
         // Every queued job already failed at the current release
         // generation → free memory can only have shrunk since, so the
         // placer would return None for all of them. The pass — including
@@ -1167,9 +1631,9 @@ impl<'a, 'o> Engine<'a, 'o> {
         // a newcomer on a fast-forwarded job's GPUs: fold every
         // macro-event's progress back into real state first. (This is the
         // single invalidation point — everything that can perturb a
-        // steady job goes through a placement pass; see
-        // `try_fast_forward` for why admissions can't touch one.)
-        self.reconcile_all_ffs(t, interrupter);
+        // steady job goes through a placement pass; see `ff_ready` for
+        // why admissions can't touch one.)
+        self.reconcile_all_ffs(t, interrupter, obs);
         // A macro-event that ran to completion during reconciliation
         // finished its job through `finish_job`, which raises
         // `need_place` — but this very pass is the placement attempt that
@@ -1182,8 +1646,23 @@ impl<'a, 'o> Engine<'a, 'o> {
         // index cannot prove hopeless. Dropping placed entries while
         // walking keeps the remainder sorted for `restore`.
         let entries = self.queue.take_all();
-        let mut kept: Vec<(f64, usize)> = Vec::with_capacity(entries.len());
-        for (key, job) in entries {
+        let kept: Vec<(f64, usize)> = Vec::with_capacity(entries.len());
+        self.place_cont(t, entries, 0, kept);
+    }
+
+    /// Resume the placement walk at `entries[idx]`, pausing at the next
+    /// decision point — a job the capacity gate cannot prove hopeless, so
+    /// a placer must be consulted. `kept` carries the entries to restore
+    /// to the queue, still in sorted order.
+    fn place_cont(
+        &mut self,
+        t: f64,
+        entries: Vec<(f64, usize)>,
+        mut idx: usize,
+        mut kept: Vec<(f64, usize)>,
+    ) {
+        while idx < entries.len() {
+            let (key, job) = entries[idx];
             debug_assert_eq!(
                 key.to_bits(),
                 self.queue_key(job).to_bits(),
@@ -1193,35 +1672,32 @@ impl<'a, 'o> Engine<'a, 'o> {
                 // Failed already at this generation; nothing has been
                 // released since.
                 kept.push((key, job));
+                idx += 1;
                 continue;
             }
-            let spec = self.jobs[job].spec.clone();
-            if self.capacity.feasible(spec.mem_bytes()) < spec.n_gpus {
+            let n_gpus = self.jobs[job].spec.n_gpus;
+            if self.capacity.feasible(self.jobs[job].spec.mem_bytes()) < n_gpus {
                 // Fewer feasible GPUs than the job needs: any
-                // contract-abiding placer returns None (checked against
-                // the real placer in debug builds).
-                debug_assert!(
-                    placer.place(&spec, &self.cluster).is_none(),
-                    "capacity gate disagreed with placer for job {job}"
-                );
+                // contract-abiding placer returns None.
                 self.place_stamp[job] = self.release_gen;
                 self.queue_eligible -= 1;
                 kept.push((key, job));
+                idx += 1;
                 continue;
             }
-            if let Some(gpus) = placer.place(&spec, &self.cluster) {
-                self.queue_eligible -= 1;
-                self.commit_placement(t, job, gpus);
-            } else {
-                self.place_stamp[job] = self.release_gen;
-                self.queue_eligible -= 1;
-                kept.push((key, job));
-            }
+            self.paused = Some(Paused::Place { t, entries, idx, kept });
+            return;
         }
         self.queue.restore(kept);
     }
 
-    fn commit_placement(&mut self, t: f64, job: usize, gpus: Vec<GpuId>) {
+    fn commit_placement(
+        &mut self,
+        t: f64,
+        job: usize,
+        gpus: Vec<GpuId>,
+        obs: &mut [&mut dyn SimObserver],
+    ) {
         let servers = self.cfg.cluster.servers_of(&gpus);
         let links = self.topo.links_between(&servers);
         let multi = servers.len() > 1;
@@ -1272,7 +1748,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             self.running_multi.push(job);
         }
         emit(
-            &mut *self.observers,
+            &mut *obs,
             SimEvent::JobPlaced {
                 t,
                 job,
@@ -1284,7 +1760,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         if self.jobs[job].pending_restart {
             self.jobs[job].pending_restart = false;
             emit(
-                &mut *self.observers,
+                &mut *obs,
                 SimEvent::JobRestarted { t, job, restarts: self.jobs[job].restarts },
             );
             // Restart pays the warmup cost before iterating: the GPUs sit
@@ -1301,19 +1777,31 @@ impl<'a, 'o> Engine<'a, 'o> {
         // we are inside a placement pass, and a *later* placement in this
         // same pass could still land on these GPUs. Steadiness is
         // re-checked at every subsequent iteration boundary.
-        self.start_iteration_exact(t, job);
+        self.start_iteration_exact(t, job, obs);
     }
 
     // -- compute ------------------------------------------------------------
 
-    fn start_iteration(&mut self, t: f64, job: usize, policy: &dyn CommPolicy) {
-        if self.cfg.coalescing && self.try_fast_forward(t, job, policy) {
-            return;
+    /// Begin `job`'s next iteration. With coalescing on and the job
+    /// provably steady this is a decision point: single-server jobs
+    /// fast-forward unconditionally (no admission involved, exactly the
+    /// old behaviour), multi-server jobs pause at the admission probe
+    /// ([`DecisionPoint::FfProbe`]) whose Start commits the macro-event.
+    fn op_start_iteration(&mut self, t: f64, job: usize, obs: &mut [&mut dyn SimObserver]) {
+        if self.cfg.coalescing && self.ff_ready(job) {
+            if !self.jobs[job].multi_server {
+                self.ff_commit(t, job, obs);
+                return;
+            }
+            if self.ff_multi_ready(job) {
+                self.paused = Some(Paused::Ff { t, job });
+                return;
+            }
         }
-        self.start_iteration_exact(t, job);
+        self.start_iteration_exact(t, job, obs);
     }
 
-    fn start_iteration_exact(&mut self, t: f64, job: usize) {
+    fn start_iteration_exact(&mut self, t: f64, job: usize, obs: &mut [&mut dyn SimObserver]) {
         // Borrow the GPU set by take/restore instead of the per-iteration
         // clone this replaced — the engine's #1 steady-state allocation
         // site (`schedule_gpu` never touches `JobRt::gpus`).
@@ -1321,12 +1809,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.jobs[job].bwd_remaining = gpus.len();
         for &g in &gpus {
             self.gpus[g].ready.push((job, Phase::Fwd));
-            self.schedule_gpu(t, g);
+            self.schedule_gpu(t, g, obs);
         }
         self.jobs[job].gpus = gpus;
     }
 
-    fn schedule_gpu(&mut self, t: f64, gpu: GpuId) {
+    fn schedule_gpu(&mut self, t: f64, gpu: GpuId, obs: &mut [&mut dyn SimObserver]) {
         if self.gpus[gpu].busy || self.gpus[gpu].ready.is_empty() {
             return;
         }
@@ -1366,19 +1854,20 @@ impl<'a, 'o> Engine<'a, 'o> {
         };
         self.gpus[gpu].busy = true;
         self.gpus[gpu].running = job;
-        emit(&mut *self.observers, SimEvent::ComputeStarted { t, gpu, job, phase, dur });
+        emit(&mut *obs, SimEvent::ComputeStarted { t, gpu, job, phase, dur });
         self.push_compute(t + dur, gpu, job, phase);
     }
 
-    fn on_compute_done(
-        &mut self,
-        t: f64,
-        gpu: GpuId,
-        job: usize,
-        phase: Phase,
-        policy: &dyn CommPolicy,
-    ) {
+    fn on_compute_done(&mut self, t: f64, gpu: GpuId, job: usize, phase: Phase) {
         self.gpus[gpu].busy = false;
+        // Queued in reverse (the op stack is LIFO): the phase op — pushed
+        // last, inside the match — runs first, then the GPU's next task,
+        // then, exactly where the old event loop re-attempted placement
+        // after this handler returned, a pass iff a finish raised
+        // `need_place` (feasibility only changes when memory frees;
+        // re-attempting on every compute event would dominate the run).
+        self.ops.push(Op::PlaceIfNeeded { t, interrupter: Some(job) });
+        self.ops.push(Op::ScheduleGpu { t, gpu });
         match phase {
             Phase::Fwd => {
                 // Backward on the same worker immediately becomes ready.
@@ -1390,33 +1879,39 @@ impl<'a, 'o> Engine<'a, 'o> {
                     if self.jobs[job].multi_server {
                         self.jobs[job].comm_pending = true;
                         self.pending_comm.push(job);
-                        self.try_admit(t, policy);
+                        self.ops.push(Op::AdmitPass { t });
                     } else {
-                        self.iteration_complete(t, job, policy);
+                        self.ops.push(Op::IterComplete { t, job });
                     }
                 }
             }
         }
-        self.schedule_gpu(t, gpu);
     }
 
-    fn iteration_complete(&mut self, t: f64, job: usize, policy: &dyn CommPolicy) {
+    fn op_iteration_complete(&mut self, t: f64, job: usize, obs: &mut [&mut dyn SimObserver]) {
         self.jobs[job].iters_done += 1;
         let gpus = std::mem::take(&mut self.jobs[job].gpus);
         self.cluster.drain_load(&gpus, self.jobs[job].load_per_iter);
         if self.jobs[job].iters_done >= self.jobs[job].spec.iterations {
-            self.finish_job(t, job, &gpus);
+            self.finish_job(t, job, &gpus, obs);
         } else {
             self.jobs[job].gpus = gpus;
-            self.start_iteration(t, job, policy);
+            self.op_start_iteration(t, job, obs);
         }
     }
 
     /// Final-iteration bookkeeping, shared by the event-exact path and
     /// macro-event completion: release memory, free the GPUs, let queued
     /// jobs try to place.
-    fn finish_job(&mut self, t: f64, job: usize, gpus: &[GpuId]) {
+    fn finish_job(
+        &mut self,
+        t: f64,
+        job: usize,
+        gpus: &[GpuId],
+        obs: &mut [&mut dyn SimObserver],
+    ) {
         self.unfinished -= 1;
+        self.done_jobs += 1;
         if self.jobs[job].multi_server {
             let pos = self.running_multi_pos[job];
             self.running_multi.swap_remove(pos);
@@ -1439,7 +1934,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.release_gen += 1;
         self.queue_eligible = self.queue.len();
         self.need_place = true;
-        emit(&mut *self.observers, SimEvent::JobFinished { t, job });
+        emit(&mut *obs, SimEvent::JobFinished { t, job });
         // A finished job is never scheduled, priced or placed again:
         // drop its heap-allocated placement state so a streamed run's
         // per-finished-job footprint is the flat JobRt alone.
@@ -1449,12 +1944,12 @@ impl<'a, 'o> Engine<'a, 'o> {
 
     // -- faults ---------------------------------------------------------------
 
-    fn process_fault(&mut self, t: f64, fault: PrimFault, policy: &dyn CommPolicy) {
+    fn process_fault(&mut self, t: f64, fault: PrimFault, obs: &mut [&mut dyn SimObserver]) {
         match fault {
-            PrimFault::GpuFail(g) => self.on_gpu_failed(t, g),
-            PrimFault::GpuRecover(g) => self.on_gpu_recovered(t, g),
-            PrimFault::LinkFail(l) => self.on_link_failed(t, l),
-            PrimFault::LinkRecover(l) => self.on_link_recovered(t, l, policy),
+            PrimFault::GpuFail(g) => self.on_gpu_failed(t, g, obs),
+            PrimFault::GpuRecover(g) => self.on_gpu_recovered(t, g, obs),
+            PrimFault::LinkFail(l) => self.on_link_failed(t, l, obs),
+            PrimFault::LinkRecover(l) => self.on_link_recovered(t, l, obs),
         }
     }
 
@@ -1462,19 +1957,19 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// memory at zero so every placer's `fits` test fails while it is
     /// down (placers stay health-oblivious; the capacity index sees the
     /// same transition, so its gate stays exact).
-    fn on_gpu_failed(&mut self, t: f64, g: GpuId) {
+    fn on_gpu_failed(&mut self, t: f64, g: GpuId, obs: &mut [&mut dyn SimObserver]) {
         if !self.health.gpu_up(g) {
             return; // scenario timelines may repeat a failure; idempotent
         }
         // A fault is an interaction steadiness never accounted for: fold
         // every macro-event back to exact state before inspecting victims.
-        self.reconcile_all_ffs(t, None);
+        self.reconcile_all_ffs(t, None, obs);
         self.health.set_gpu(g, false);
-        emit(&mut *self.observers, SimEvent::GpuFailed { t, gpu: g });
+        emit(&mut *obs, SimEvent::GpuFailed { t, gpu: g });
         let victims: Vec<usize> =
             (0..self.jobs.len()).filter(|&j| self.jobs[j].gpus.contains(&g)).collect();
         for job in victims {
-            self.preempt_job(t, job);
+            self.preempt_job(t, job, obs);
         }
         // Hold after preemption: the victims' releases restored their
         // memory to `g` first, so the hold freezes the whole capacity.
@@ -1486,7 +1981,7 @@ impl<'a, 'o> Engine<'a, 'o> {
 
     /// A GPU came back: restore its held memory and let queued jobs try
     /// to place on it.
-    fn on_gpu_recovered(&mut self, t: f64, g: GpuId) {
+    fn on_gpu_recovered(&mut self, t: f64, g: GpuId, obs: &mut [&mut dyn SimObserver]) {
         if self.health.gpu_up(g) {
             return;
         }
@@ -1495,7 +1990,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.cluster.release_held(g, self.health_hold[g]);
         self.health_hold[g] = 0.0;
         self.capacity.record(before, self.cluster.free_mem(g));
-        emit(&mut *self.observers, SimEvent::GpuRecovered { t, gpu: g });
+        emit(&mut *obs, SimEvent::GpuRecovered { t, gpu: g });
         self.release_gen += 1;
         self.queue_eligible = self.queue.len();
         self.need_place = true;
@@ -1505,7 +2000,7 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// the last checkpoint (iterations since it are lost), cancel its
     /// in-flight compute and communication, release its GPUs and memory,
     /// and re-queue it for placement.
-    fn preempt_job(&mut self, t: f64, job: usize) {
+    fn preempt_job(&mut self, t: f64, job: usize, obs: &mut [&mut dyn SimObserver]) {
         debug_assert!(self.jobs[job].ff.is_none(), "preempting a live macro-event");
         let ckpt = self.cfg.faults.checkpoint_iters;
         let done = self.jobs[job].iters_done;
@@ -1536,7 +2031,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         let active_comm =
             self.active_comms.iter().copied().find(|&c| self.comms[c].job == job);
         if let Some(id) = active_comm {
-            self.abort_comm(t, id);
+            self.abort_comm(t, id, obs);
         }
         // Release memory and the undrained share of the bookkeeping load
         // (the drained share left with the completed iterations).
@@ -1559,8 +2054,8 @@ impl<'a, 'o> Engine<'a, 'o> {
             }
             self.running_multi_pos[job] = usize::MAX;
         }
-        emit(&mut *self.observers, SimEvent::CheckpointTaken { t, job, iters: kept });
-        emit(&mut *self.observers, SimEvent::JobPreempted { t, job, lost_iters: lost });
+        emit(&mut *obs, SimEvent::CheckpointTaken { t, job, iters: kept });
+        emit(&mut *obs, SimEvent::JobPreempted { t, job, lost_iters: lost });
         // Reset to queued state, resuming from the checkpoint.
         {
             let j = &mut self.jobs[job];
@@ -1583,14 +2078,14 @@ impl<'a, 'o> Engine<'a, 'o> {
         // Freed healthy GPUs may have other residents' tasks waiting.
         for &g in &gpus {
             if self.health.gpu_up(g) {
-                self.schedule_gpu(t, g);
+                self.schedule_gpu(t, g, obs);
             }
         }
     }
 
     /// Abort an in-flight transfer (its job is being preempted): the
     /// removal half of `complete_comm` without the iteration credit.
-    fn abort_comm(&mut self, t: f64, id: usize) {
+    fn abort_comm(&mut self, t: f64, id: usize, obs: &mut [&mut dyn SimObserver]) {
         let links = std::mem::take(&mut self.comms[id].links);
         let link_pos = std::mem::take(&mut self.comms[id].link_pos);
         {
@@ -1621,7 +2116,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         }
         for &l in &links {
             emit(
-                &mut *self.observers,
+                &mut *obs,
                 SimEvent::ContentionChanged { t, link: l, level: self.per_link.len(l) },
             );
         }
@@ -1641,16 +2136,16 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// prediction until every crossed link is back up. Jobs are *not*
     /// preempted by link faults: their compute proceeds and their next
     /// All-Reduce waits in the pending set behind the health gate.
-    fn on_link_failed(&mut self, t: f64, l: LinkId) {
+    fn on_link_failed(&mut self, t: f64, l: LinkId, obs: &mut [&mut dyn SimObserver]) {
         if !self.health.link_up(l) {
             return;
         }
         // Macro-events assumed their comm proceeds undisturbed: dissolve
         // them before freezing (a rebuilt in-flight transfer crossing `l`
         // lands on the per-link row and is frozen right below).
-        self.reconcile_all_ffs(t, None);
+        self.reconcile_all_ffs(t, None, obs);
         self.health.set_link(l, false);
-        emit(&mut *self.observers, SimEvent::LinkFailed { t, link: l });
+        emit(&mut *obs, SimEvent::LinkFailed { t, link: l });
         let ids: Vec<usize> = self.per_link.tasks(l).to_vec();
         for id in ids {
             if self.comms[id].paused_links == 0 {
@@ -1674,12 +2169,12 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// was (re-anchor and re-predict from the frozen residuals), then
     /// give the pending set a chance — something may have been waiting
     /// for exactly this link.
-    fn on_link_recovered(&mut self, t: f64, l: LinkId, policy: &dyn CommPolicy) {
+    fn on_link_recovered(&mut self, t: f64, l: LinkId, obs: &mut [&mut dyn SimObserver]) {
         if self.health.link_up(l) {
             return;
         }
         self.health.set_link(l, true);
-        emit(&mut *self.observers, SimEvent::LinkRecovered { t, link: l });
+        emit(&mut *obs, SimEvent::LinkRecovered { t, link: l });
         let ids: Vec<usize> = self.per_link.tasks(l).to_vec();
         for id in ids {
             self.comms[id].paused_links -= 1;
@@ -1688,33 +2183,28 @@ impl<'a, 'o> Engine<'a, 'o> {
                 self.repredict(t, id);
             }
         }
-        self.try_admit(t, policy);
+        self.ops.push(Op::AdmitPass { t });
     }
 
     // -- steady-state fast-forwarding -----------------------------------------
 
-    /// Try to replace `job`'s remaining per-iteration event chain with one
-    /// analytic macro-event (docs/EXPERIMENTS.md §Perf). Steadiness — the
-    /// regime in which nothing can observe or perturb the job, so its
-    /// chain is a closed-form recurrence — requires:
+    /// GPU-side steadiness for `job` (docs/EXPERIMENTS.md §Perf): it has
+    /// iterations left and every GPU it occupies hosts it exclusively (no
+    /// other resident job, so no ready-queue contention and no priority
+    /// preemption). The old `try_fast_forward` is split three ways —
+    /// `ff_ready` / [`Self::ff_multi_ready`] / [`Self::ff_commit`] — so
+    /// the per-iteration admission decision between the checks and the
+    /// commit can surface as an env decision point
+    /// ([`DecisionPoint::FfProbe`]).
     ///
-    /// * every GPU it occupies hosts it exclusively (no other resident
-    ///   job, so no ready-queue contention and no priority preemption);
-    /// * single-server (no network at all), **or** — under `AtAdmission`
-    ///   pricing, where an uncontended transfer's rate is locked at
-    ///   k = 1 — its links are idle, no other *running* multi-server job
-    ///   shares them (such a job's future admissions would contend
-    ///   without generating an event we could hook), and the admission
-    ///   policy starts an uncontended transfer (asked once: on idle
-    ///   links the decision is the same pure call every iteration).
-    ///
-    /// Invalidation: the only way steadiness can break afterwards is a
-    /// placement (a newcomer onto the job's GPUs, or a new multi-server
-    /// job overlapping its links), and `try_place` reconciles every
-    /// macro-event before the placer runs. Admissions never interact:
-    /// while a macro-event is live, no pending job's links intersect its
-    /// links (debug-asserted in `try_admit`).
-    fn try_fast_forward(&mut self, t: f64, job: usize, policy: &dyn CommPolicy) -> bool {
+    /// Invalidation is unchanged: the only way steadiness can break
+    /// afterwards is a placement (a newcomer onto the job's GPUs, or a
+    /// new multi-server job overlapping its links), and every placement
+    /// pass reconciles every macro-event before its first decision.
+    /// Admissions never interact: while a macro-event is live, no pending
+    /// job's links intersect its links (debug-asserted in
+    /// `op_admit_pass`).
+    fn ff_ready(&self, job: usize) -> bool {
         let iters_left = self.jobs[job].spec.iterations - self.jobs[job].iters_done;
         if iters_left == 0 {
             return false;
@@ -1727,34 +2217,48 @@ impl<'a, 'o> Engine<'a, 'o> {
                 return false;
             }
         }
+        true
+    }
+
+    /// Network-side steadiness for a multi-server job: `AtAdmission`
+    /// pricing (an uncontended transfer's rate is locked at k = 1),
+    /// healthy idle links, and no other *running* multi-server job
+    /// sharing them (such a job's future admissions would contend
+    /// without generating an event we could hook). The admission
+    /// policy's per-iteration decision on those idle links is *not*
+    /// checked here — it is the decision point between this and
+    /// [`Self::ff_commit`].
+    fn ff_multi_ready(&self, job: usize) -> bool {
+        if self.cfg.repricing != Repricing::AtAdmission {
+            return false;
+        }
+        // A failed link stalls the analytic chain's All-Reduces: stay
+        // event-exact so the pending-comm health gate applies.
+        if !self.health.links_up(&self.jobs[job].links) {
+            return false;
+        }
+        for &l in &self.jobs[job].links {
+            if !self.per_link.is_empty(l) {
+                return false;
+            }
+        }
+        for &other in &self.running_multi {
+            if other != job && links_intersect(&self.jobs[other].links, &self.jobs[job].links) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Replace `job`'s remaining per-iteration event chain with one
+    /// analytic macro-event: replay the exact engine's float-operation
+    /// chain to the finish and push a single `FastForward` event.
+    /// Steadiness ([`Self::ff_ready`], and [`Self::ff_multi_ready`] plus
+    /// an admission Start for multi-server jobs) must already hold.
+    fn ff_commit(&mut self, t: f64, job: usize, obs: &mut [&mut dyn SimObserver]) {
+        let iters_left = self.jobs[job].spec.iterations - self.jobs[job].iters_done;
         let multi = self.jobs[job].multi_server;
         let (lat, per_byte) = if multi {
-            if self.cfg.repricing != Repricing::AtAdmission {
-                return false;
-            }
-            // A failed link stalls the analytic chain's All-Reduces: stay
-            // event-exact so the pending-comm health gate applies.
-            if !self.health.links_up(&self.jobs[job].links) {
-                return false;
-            }
-            for &l in &self.jobs[job].links {
-                if !self.per_link.is_empty(l) {
-                    return false;
-                }
-            }
-            for &other in &self.running_multi {
-                if other != job
-                    && links_intersect(&self.jobs[other].links, &self.jobs[job].links)
-                {
-                    return false;
-                }
-            }
-            // The per-iteration admission decision on idle links.
-            let msg = self.jobs[job].spec.message_bytes();
-            let view = NetView::occupancy_only(&self.empty_view);
-            if policy.admit(msg, &self.jobs[job].links, &view) != Admission::Start {
-                return false;
-            }
             // Exactly `repredict`'s unlocked k = 1 bottleneck price.
             let mut pb = 0.0f64;
             for &l in &self.jobs[job].links {
@@ -1785,16 +2289,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.ff_pos[job] = self.ff_jobs.len();
         self.ff_jobs.push(job);
         self.push(s, Ev::FastForward { job, version: v });
-        emit(
-            &mut *self.observers,
-            SimEvent::FastForwardApplied { t, job, iters: iters_left, end_t: s },
-        );
-        true
+        emit(&mut *obs, SimEvent::FastForwardApplied { t, job, iters: iters_left, end_t: s });
     }
 
     /// The macro-event fired: the job ran its whole remaining iteration
     /// chain undisturbed. Apply the batched side-effects and finish it.
-    fn complete_fast_forward(&mut self, t: f64, job: usize) {
+    fn complete_fast_forward(&mut self, t: f64, job: usize, obs: &mut [&mut dyn SimObserver]) {
         let Some(ff) = self.jobs[job].ff.take() else {
             return; // defensive: version matched but state already gone
         };
@@ -1805,10 +2305,10 @@ impl<'a, 'o> Engine<'a, 'o> {
         }
         self.ff_pos[job] = usize::MAX;
         debug_assert_eq!(t.to_bits(), ff.end_t.to_bits());
-        self.apply_iterations(job, &ff, ff.iters, ff.end_t);
+        self.apply_iterations(job, &ff, ff.iters, ff.end_t, obs);
         debug_assert_eq!(self.jobs[job].iters_done, self.jobs[job].spec.iterations);
         let gpus = std::mem::take(&mut self.jobs[job].gpus);
-        self.finish_job(t, job, &gpus);
+        self.finish_job(t, job, &gpus, obs);
     }
 
     /// Batched side-effects of `n` coalesced iterations ending at
@@ -1818,12 +2318,19 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// rides on the single `IterationsCoalesced` event, whose constants
     /// let observers replay the exact per-iteration float chains
     /// (bit-identity matters; see `MetricsObserver` / `LegacyLog`).
-    fn apply_iterations(&mut self, job: usize, ff: &FfState, n: u64, end_t: f64) {
+    fn apply_iterations(
+        &mut self,
+        job: usize,
+        ff: &FfState,
+        n: u64,
+        end_t: f64,
+        obs: &mut [&mut dyn SimObserver],
+    ) {
         if n == 0 {
             return;
         }
         emit(
-            &mut *self.observers,
+            &mut *obs,
             SimEvent::IterationsCoalesced {
                 job,
                 gpus: &self.jobs[job].gpus,
@@ -1860,9 +2367,14 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// and float operation is bit-identical to `workers == 1`.
     ///
     /// A mid-macro arrival is already a serial barrier by construction:
-    /// the arrival pops, `try_place` calls this once, and no walk starts
+    /// the arrival pops, the placement pass calls this once, and no walk
     /// until every input is frozen at the arrival's timestamp.
-    fn reconcile_all_ffs(&mut self, t: f64, interrupter: Option<usize>) {
+    fn reconcile_all_ffs(
+        &mut self,
+        t: f64,
+        interrupter: Option<usize>,
+        obs: &mut [&mut dyn SimObserver],
+    ) {
         if self.ff_jobs.is_empty() {
             return;
         }
@@ -1876,12 +2388,12 @@ impl<'a, 'o> Engine<'a, 'o> {
             let outs = par_walk(self.cfg.workers, &walks, t);
             FF_PAR_BATCHES.with(|c| c.set(c.get() + 1));
             for (i, &job) in jobs.iter().enumerate() {
-                self.reconcile_ff_apply(t, job, &outs[i]);
+                self.reconcile_ff_apply(t, job, &outs[i], obs);
             }
         } else {
             for &job in &jobs {
                 let out = ff_walk(&self.walk_inputs(job, interrupter), t);
-                self.reconcile_ff_apply(t, job, &out);
+                self.reconcile_ff_apply(t, job, &out, obs);
             }
         }
     }
@@ -1924,11 +2436,17 @@ impl<'a, 'o> Engine<'a, 'o> {
     /// this job was placed before F. (A trace *crafted* so an arrival is
     /// bit-equal to an interior boundary can invert that order; see the
     /// caveat in docs/EXPERIMENTS.md §Perf.)
-    fn reconcile_ff_apply(&mut self, t: f64, job: usize, out: &FfWalkOut) {
+    fn reconcile_ff_apply(
+        &mut self,
+        t: f64,
+        job: usize,
+        out: &FfWalkOut,
+        obs: &mut [&mut dyn SimObserver],
+    ) {
         let ff = self.jobs[job].ff.take().expect("reconcile without a macro-event");
         self.jobs[job].ff_version += 1; // the pending FastForward goes stale
         self.heap_stale += 1;
-        emit(&mut *self.observers, SimEvent::FastForwardDissolved { t, job });
+        emit(&mut *obs, SimEvent::FastForwardDissolved { t, job });
         let t_fwd = self.jobs[job].t_fwd;
         let t_bwd = self.jobs[job].t_bwd;
         let multi = self.jobs[job].multi_server;
@@ -1936,12 +2454,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         if out.finished {
             // The whole macro-event ran: the interrupter shares the
             // final timestamp but sorts after the finish.
-            self.apply_iterations(job, &ff, out.done, out.s);
+            self.apply_iterations(job, &ff, out.done, out.s, obs);
             let gpus = std::mem::take(&mut self.jobs[job].gpus);
-            self.finish_job(t, job, &gpus);
+            self.finish_job(t, job, &gpus, obs);
             return;
         }
-        self.apply_iterations(job, &ff, out.done, out.s);
+        self.apply_iterations(job, &ff, out.done, out.s, obs);
         // Rebuild the iteration in flight at `t` (it started at `out.s`).
         // The `ComputeStarted` emissions carry the in-flight tasks' real
         // (past) start times; per-GPU busy accumulation replays the same
@@ -1954,7 +2472,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                 self.gpus[g].busy = true;
                 self.gpus[g].running = job;
                 emit(
-                    &mut *self.observers,
+                    &mut *obs,
                     SimEvent::ComputeStarted {
                         t: out.s,
                         gpu: g,
@@ -1972,7 +2490,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                 self.gpus[g].busy = true;
                 self.gpus[g].running = job;
                 emit(
-                    &mut *self.observers,
+                    &mut *obs,
                     SimEvent::ComputeStarted {
                         t: out.s,
                         gpu: g,
@@ -1982,7 +2500,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                     },
                 );
                 emit(
-                    &mut *self.observers,
+                    &mut *obs,
                     SimEvent::ComputeStarted {
                         t: out.t1,
                         gpu: g,
@@ -2001,7 +2519,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             self.jobs[job].bwd_remaining = 0;
             for &g in &gpus {
                 emit(
-                    &mut *self.observers,
+                    &mut *obs,
                     SimEvent::ComputeStarted {
                         t: out.s,
                         gpu: g,
@@ -2011,7 +2529,7 @@ impl<'a, 'o> Engine<'a, 'o> {
                     },
                 );
                 emit(
-                    &mut *self.observers,
+                    &mut *obs,
                     SimEvent::ComputeStarted {
                         t: out.t1,
                         gpu: g,
@@ -2050,7 +2568,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             self.active_pos[slot] = self.active_comms.len();
             self.active_comms.push(slot);
             emit(
-                &mut *self.observers,
+                &mut *obs,
                 SimEvent::CommAdmitted {
                     t: out.t2,
                     job,
@@ -2061,7 +2579,7 @@ impl<'a, 'o> Engine<'a, 'o> {
             );
             for &l in &links {
                 emit(
-                    &mut *self.observers,
+                    &mut *obs,
                     SimEvent::ContentionChanged { t: out.t2, link: l, level: self.per_link.len(l) },
                 );
             }
@@ -2226,7 +2744,12 @@ impl<'a, 'o> Engine<'a, 'o> {
         slot
     }
 
-    fn try_admit(&mut self, t: f64, policy: &dyn CommPolicy) {
+    /// Sort the pending-communication set and walk it in priority order.
+    /// Each pending job whose links are all healthy is an admission
+    /// *decision point*: the walk pauses there and [`SimState::resolve`]
+    /// (or the builtin policy via [`SimState::decide_builtin`]) supplies
+    /// Start/Wait before `admit_cont` resumes.
+    fn op_admit_pass(&mut self, t: f64) {
         if self.pending_comm.is_empty() {
             return;
         }
@@ -2251,100 +2774,95 @@ impl<'a, 'o> Engine<'a, 'o> {
                 debug_assert!(clear, "macro-event job {mj} shares links with a pending admission");
             }
         }
-        // The admission view is *lazy*: it reads the live per-link id
-        // lists (maintained O(Δ) at admit/complete) and prices a task's
-        // residual only when the policy inspects a link carrying it.
-        // This replaced a per-pass O(links × active) materialized
-        // snapshot — which itself replaced the per-pending-job rebuild
-        // that was the #1 hot spot at paper scale (§Perf). Admissions
-        // inside the pass need no view patching: the live lists already
-        // reflect them, and a freshly admitted/repriced task re-anchors
-        // at `t`, so its lazily derived residual matches what the
-        // patched snapshot used to carry, bit for bit.
-        for job in order {
-            let msg = self.jobs[job].spec.message_bytes();
-            // Borrow the job's link set for the decision (restored below)
-            // instead of the per-pass clone this replaced; only an actual
-            // admission copies it, into the comm task it creates.
-            let links = std::mem::take(&mut self.jobs[job].links);
+        self.admit_cont(t, order, 0);
+    }
+
+    /// Resume the admission walk at `order[idx]`, pausing at the next
+    /// decision point (a pending job whose links are all up).
+    fn admit_cont(&mut self, t: f64, order: Vec<usize>, mut idx: usize) {
+        while idx < order.len() {
+            let job = order[idx];
             // Health gate: never start a transfer over a failed link. The
             // job stays pending; the link's recovery re-runs admission.
-            if !self.health.links_up(&links) {
-                self.jobs[job].links = links;
+            if !self.health.links_up(&self.jobs[job].links) {
                 self.pending_comm.push(job);
+                idx += 1;
                 continue;
             }
-            let admit = {
-                let remaining = |c: usize| self.residual_at(c, t).1;
-                let net = NetView::new(&self.per_link, &remaining);
-                policy.admit(msg, &links, &net)
-            };
-            if admit == Admission::Start {
-                let pre = self.contention_on(&links);
-                let latency = self.topo.latency_over(&links);
-                let slot = self.alloc_comm_slot();
-                let pub_id = self.next_comm_id;
-                self.next_comm_id += 1;
-                {
-                    let c = &mut self.comms[slot];
-                    c.job = job;
-                    c.pub_id = pub_id;
-                    c.predicted = false;
-                    c.latency_left = latency;
-                    c.remaining = msg;
-                    c.k = 1;
-                    c.per_byte = self.cfg.comm.per_byte(1);
-                    c.anchor_t = t;
-                    // `version` continues from the slot's previous tenant
-                    // (see the field docs); `repredict` below bumps it and
-                    // pushes the first live prediction.
-                    c.repriced = false;
-                    c.paused_links = 0;
-                    c.done = false;
-                }
-                for &l in &links {
-                    self.comms[slot].link_pos.push(self.per_link.len(l));
-                    self.per_link.push(l, slot);
-                }
-                self.comms[slot].links.extend_from_slice(&links);
-                self.active_pos[slot] = self.active_comms.len();
-                self.active_comms.push(slot);
-                self.jobs[job].comm_pending = false;
-                emit(
-                    &mut *self.observers,
-                    SimEvent::CommAdmitted {
-                        t,
-                        job,
-                        comm: pub_id,
-                        links: &links,
-                        contention: pre + 1,
-                    },
-                );
-                for &l in &links {
-                    emit(
-                        &mut *self.observers,
-                        SimEvent::ContentionChanged { t, link: l, level: self.per_link.len(l) },
-                    );
-                }
-                // Price the new task; under Dynamic repricing also refresh
-                // everyone sharing its links.
-                self.repredict(t, slot);
-                self.refresh_links(t, &links);
-                self.jobs[job].links = links;
-            } else {
-                self.jobs[job].links = links;
-                self.pending_comm.push(job);
-            }
+            self.paused = Some(Paused::Admit { t, order, idx });
+            return;
         }
     }
 
-    fn complete_comm(
+    /// Start `job`'s pending All-Reduce at `t` — the old `try_admit`
+    /// admission arm, verbatim. The admission view the *decision* read is
+    /// lazy (live per-link id lists, residuals priced on inspection — see
+    /// [`SimState::decide_builtin`]); by the time this runs the decision
+    /// is made, so only the bookkeeping side remains.
+    fn admit_start(&mut self, t: f64, job: usize, obs: &mut [&mut dyn SimObserver]) {
+        let msg = self.jobs[job].spec.message_bytes();
+        // Borrow the job's link set for the setup (restored below)
+        // instead of the per-pass clone this replaced; only the comm
+        // task it creates copies it.
+        let links = std::mem::take(&mut self.jobs[job].links);
+        let pre = self.contention_on(&links);
+        let latency = self.topo.latency_over(&links);
+        let slot = self.alloc_comm_slot();
+        let pub_id = self.next_comm_id;
+        self.next_comm_id += 1;
+        {
+            let c = &mut self.comms[slot];
+            c.job = job;
+            c.pub_id = pub_id;
+            c.predicted = false;
+            c.latency_left = latency;
+            c.remaining = msg;
+            c.k = 1;
+            c.per_byte = self.cfg.comm.per_byte(1);
+            c.anchor_t = t;
+            // `version` continues from the slot's previous tenant
+            // (see the field docs); `repredict` below bumps it and
+            // pushes the first live prediction.
+            c.repriced = false;
+            c.paused_links = 0;
+            c.done = false;
+        }
+        for &l in &links {
+            self.comms[slot].link_pos.push(self.per_link.len(l));
+            self.per_link.push(l, slot);
+        }
+        self.comms[slot].links.extend_from_slice(&links);
+        self.active_pos[slot] = self.active_comms.len();
+        self.active_comms.push(slot);
+        self.jobs[job].comm_pending = false;
+        emit(
+            &mut *obs,
+            SimEvent::CommAdmitted { t, job, comm: pub_id, links: &links, contention: pre + 1 },
+        );
+        for &l in &links {
+            emit(
+                &mut *obs,
+                SimEvent::ContentionChanged { t, link: l, level: self.per_link.len(l) },
+            );
+        }
+        // Price the new task; under Dynamic repricing also refresh
+        // everyone sharing its links.
+        self.repredict(t, slot);
+        self.refresh_links(t, &links);
+        self.jobs[job].links = links;
+    }
+
+    /// Tear down a finished transfer — the removal half of the old
+    /// `complete_comm`. The iteration credit, admission pass and
+    /// placement pass that used to follow inline now run as queued
+    /// micro-ops, so the event loop can pause at the decisions they
+    /// contain. Returns the owning job for those ops.
+    fn complete_comm_flat(
         &mut self,
         t: f64,
         id: usize,
-        placer: &mut dyn Placer,
-        policy: &dyn CommPolicy,
-    ) {
+        obs: &mut [&mut dyn SimObserver],
+    ) -> usize {
         let job = self.comms[id].job;
         let pub_id = self.comms[id].pub_id;
         // Borrow the task's link state by take/restore — the per-event
@@ -2374,10 +2892,10 @@ impl<'a, 'o> Engine<'a, 'o> {
                 self.comms[moved].link_pos[li] = lp;
             }
         }
-        emit(&mut *self.observers, SimEvent::CommFinished { t, job, comm: pub_id, links: &links });
+        emit(&mut *obs, SimEvent::CommFinished { t, job, comm: pub_id, links: &links });
         for &l in &links {
             emit(
-                &mut *self.observers,
+                &mut *obs,
                 SimEvent::ContentionChanged { t, link: l, level: self.per_link.len(l) },
             );
         }
@@ -2391,12 +2909,7 @@ impl<'a, 'o> Engine<'a, 'o> {
         self.comms[id].links = links;
         self.comms[id].link_pos = link_pos;
         self.free_slots.push(id);
-        self.iteration_complete(t, job, policy);
-        self.try_admit(t, policy);
-        if self.need_place {
-            self.need_place = false;
-            self.try_place(t, placer, Some(job));
-        }
+        job
     }
 
     /// Rebuild the heap without its stale entries (superseded `CommDone`

@@ -73,12 +73,25 @@
 //! Pair with [`observe::PercentilesObserver`] for constant-memory tail
 //! metrics over million-job replays (docs/EXPERIMENTS.md §Streaming).
 
+//! Resumable state machine ([`SimState`]): the engine underneath every
+//! facade above. [`SimState::advance`] runs the event loop to the next
+//! *decision point* — a placement candidate, an admission gate or a
+//! coalescing probe — and returns it as a [`Step::Decision`];
+//! [`SimState::resolve`] applies an external [`Action`] and the walk
+//! resumes exactly where it paused. The builtin placers/policies answer
+//! decisions through [`SimState::decide_builtin`] — the same code path
+//! the facades use — so externally-driven runs with builtin agents are
+//! bit-identical to [`simulate_observed`] (property-tested in `tests`).
+//! `SimState` is `Clone`; [`SimState::save`] / [`SimState::restore`]
+//! checkpoint mid-run. The gym-style wrapper lives in
+//! [`env`](crate::env) (docs/EXPERIMENTS.md §SimEnv).
+
 mod engine;
 pub mod observe;
 
 pub use engine::{
-    simulate, simulate_observed, simulate_stream, simulate_stream_observed, EventLog,
-    JobPriority, Repricing, SimConfig, SimResult,
+    simulate, simulate_observed, simulate_stream, simulate_stream_observed, Action,
+    DecisionPoint, EventLog, JobPriority, Repricing, SimConfig, SimResult, SimState, Step,
 };
 pub use observe::{
     ContentionProfiler, JsonlSink, LegacyLog, MetricsObserver, PercentilesObserver, RunStats,

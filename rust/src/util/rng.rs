@@ -12,6 +12,19 @@ pub struct Pcg {
     inc: u128,
 }
 
+/// A serializable [`Pcg`] snapshot: the full 256 bits of generator state
+/// split into `u64` halves (no `u128` in serialized surfaces — JSON
+/// readers and the hand-rolled writers in this crate handle 64-bit
+/// integers only). [`Pcg::save`] / [`Pcg::restore`] round-trip exactly:
+/// a restored generator continues the stream bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PcgState {
+    pub state_lo: u64,
+    pub state_hi: u64,
+    pub inc_lo: u64,
+    pub inc_hi: u64,
+}
+
 const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
 
 impl Pcg {
@@ -92,6 +105,24 @@ impl Pcg {
             items.swap(i, j);
         }
     }
+
+    /// Snapshot the generator (see [`PcgState`]).
+    pub fn save(&self) -> PcgState {
+        PcgState {
+            state_lo: self.state as u64,
+            state_hi: (self.state >> 64) as u64,
+            inc_lo: self.inc as u64,
+            inc_hi: (self.inc >> 64) as u64,
+        }
+    }
+
+    /// Rebuild a generator from a snapshot taken by [`Pcg::save`].
+    pub fn restore(snap: &PcgState) -> Pcg {
+        Pcg {
+            state: (snap.state_lo as u128) | ((snap.state_hi as u128) << 64),
+            inc: (snap.inc_lo as u128) | ((snap.inc_hi as u128) << 64),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +183,21 @@ mod tests {
         let mut s = v.clone();
         s.sort_unstable();
         assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn save_restore_round_trips_mid_stream() {
+        let mut r = Pcg::new(99, 7);
+        for _ in 0..13 {
+            r.next_u64(); // advance off the seed point
+        }
+        let snap = r.save();
+        let ahead: Vec<u64> = (0..32).map(|_| r.next_u64()).collect();
+        let mut resumed = Pcg::restore(&snap);
+        let replay: Vec<u64> = (0..32).map(|_| resumed.next_u64()).collect();
+        assert_eq!(ahead, replay);
+        // The snapshot itself round-trips exactly.
+        assert_eq!(Pcg::restore(&snap).save(), snap);
     }
 
     #[test]
