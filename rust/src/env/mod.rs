@@ -59,6 +59,10 @@ pub struct Obs {
     pub gpus_up: usize,
     /// Links currently up (fault timeline).
     pub links_up: usize,
+    /// Mean device health across all GPUs and links: 1.0 on a fully
+    /// healthy fleet, dropping with every gray-degraded factor and every
+    /// hard-down device (which counts as 0.0).
+    pub mean_health: f64,
     /// Active transfers crossing each fabric link, indexed by `LinkId`.
     pub link_occupancy: Vec<usize>,
     /// `(mem_bytes, count)` rows of the live free-GPU capacity index.
@@ -125,6 +129,7 @@ impl Obs {
             in_system: state.jobs_in_system(),
             gpus_up: state.gpus_up(),
             links_up: state.links_up(),
+            mean_health: state.mean_health(),
             link_occupancy: (0..state.n_links()).map(|l| state.link_occupancy(l)).collect(),
             free_gpus: state.free_gpu_histogram(),
         }
@@ -154,6 +159,7 @@ impl Obs {
             .set("in_system", self.in_system)
             .set("gpus_up", self.gpus_up)
             .set("links_up", self.links_up)
+            .set("mean_health", self.mean_health)
             .set("link_occupancy", Json::Arr(occ))
             .set("free_gpus", Json::Arr(free))
     }
@@ -512,6 +518,7 @@ mod tests {
         assert!(!o.done);
         assert_eq!(o.arrived, 1, "first decision pauses at the first arrival");
         assert_eq!(o.gpus_up, 4);
+        assert_eq!(o.mean_health, 1.0, "healthy fleet observes mean health 1.0");
         assert_eq!(o.link_occupancy.len(), o.links_up);
         assert!(!o.free_gpus.is_empty());
         // Every registered demand starts fully feasible on an empty tiny

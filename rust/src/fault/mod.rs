@@ -13,13 +13,24 @@
 //! rack uplinks survive a member server's death). Recovery reverses the
 //! same expansion.
 //!
-//! [`HealthView`] is the engine's live up/down bitmap; placement reaches
+//! [`HealthView`] is the engine's live health map; placement reaches
 //! it indirectly (a down GPU's free memory is held at zero so every
 //! placer's `fits` test fails) and admission consults it directly, so no
 //! work lands on dead capacity. The checkpoint model is coarse-grained:
 //! a preempted job rewinds to its last multiple of `checkpoint_iters`
 //! (0 = no checkpointing, restart from scratch) and a restart pays
 //! `warmup_s` seconds of dead time on its new GPUs before iterating.
+//!
+//! Beyond fail-stop, the model covers *gray* failures: a link can degrade
+//! to a fraction of its nominal bandwidth ([`FaultKind::LinkDegrade`])
+//! and a GPU can slow down ([`FaultKind::GpuSlow`]), each with a health
+//! factor in (0, 1] and a paired restore back to 1.0. [`HealthView`]
+//! therefore stores per-device f64 factors (1.0 = healthy, 0.0 = down);
+//! the binary up/down API is preserved as `factor > 0`. Degradations come
+//! from explicit timeline events or from the seeded [`DegradeSpec`]
+//! generator (Exp-distributed onset, uniform factor in a configured
+//! range, Exp recovery) on its own RNG stream — adding a degradation
+//! section never perturbs an existing (seed, spec) failure schedule.
 
 use crate::cluster::ClusterSpec;
 use crate::net::LinkId;
@@ -31,6 +42,11 @@ use crate::util::rng::Pcg;
 /// uses 0x7ace / 0x57ea, RandomPlacer 0x91ac — distinct streams keep the
 /// draws independent under a shared scenario seed).
 pub const FAULT_STREAM: u64 = 0xfa17;
+
+/// Dedicated RNG stream for the degradation generator. Distinct from
+/// [`FAULT_STREAM`] so adding a `degraded` section to a scenario leaves
+/// the fail-stop schedule of the same (seed, spec) byte-identical.
+pub const DEGRADE_STREAM: u64 = 0xdeca;
 
 /// Default checkpoint interval (iterations) when a scenario enables
 /// faults without choosing one.
@@ -45,6 +61,16 @@ pub enum FaultKind {
     ServerRecover(usize),
     LinkFail(LinkId),
     LinkRecover(LinkId),
+    /// Gray failure: the GPU keeps running but every compute phase takes
+    /// `1/factor` as long (factor in (0, 1]).
+    GpuSlow(usize, f64),
+    /// Recovery from [`FaultKind::GpuSlow`]: health factor back to 1.0.
+    GpuRestore(usize),
+    /// Gray failure: the link carries traffic at `factor` of nominal
+    /// bandwidth, i.e. per-byte cost scales by `1/factor`.
+    LinkDegrade(LinkId, f64),
+    /// Recovery from [`FaultKind::LinkDegrade`]: factor back to 1.0.
+    LinkRestore(LinkId),
 }
 
 impl FaultKind {
@@ -56,6 +82,10 @@ impl FaultKind {
             FaultKind::ServerRecover(_) => "server-recover",
             FaultKind::LinkFail(_) => "link-fail",
             FaultKind::LinkRecover(_) => "link-recover",
+            FaultKind::GpuSlow(..) => "gpu-slow",
+            FaultKind::GpuRestore(_) => "gpu-restore",
+            FaultKind::LinkDegrade(..) => "link-degrade",
+            FaultKind::LinkRestore(_) => "link-restore",
         }
     }
 
@@ -66,20 +96,39 @@ impl FaultKind {
             | FaultKind::ServerFail(x)
             | FaultKind::ServerRecover(x)
             | FaultKind::LinkFail(x)
-            | FaultKind::LinkRecover(x) => x,
+            | FaultKind::LinkRecover(x)
+            | FaultKind::GpuSlow(x, _)
+            | FaultKind::GpuRestore(x)
+            | FaultKind::LinkDegrade(x, _)
+            | FaultKind::LinkRestore(x) => x,
         }
     }
 
-    pub fn parse(kind: &str, id: usize) -> Option<FaultKind> {
-        Some(match kind {
-            "gpu-fail" => FaultKind::GpuFail(id),
-            "gpu-recover" => FaultKind::GpuRecover(id),
-            "server-fail" => FaultKind::ServerFail(id),
-            "server-recover" => FaultKind::ServerRecover(id),
-            "link-fail" => FaultKind::LinkFail(id),
-            "link-recover" => FaultKind::LinkRecover(id),
+    /// The health factor carried by degradation kinds; `None` otherwise.
+    pub fn factor(&self) -> Option<f64> {
+        match *self {
+            FaultKind::GpuSlow(_, f) | FaultKind::LinkDegrade(_, f) => Some(f),
+            _ => None,
+        }
+    }
+
+    /// `factor` is required for (and only allowed on) the degradation
+    /// kinds `gpu-slow` / `link-degrade`.
+    pub fn parse(kind: &str, id: usize, factor: Option<f64>) -> Option<FaultKind> {
+        let k = match (kind, factor) {
+            ("gpu-fail", None) => FaultKind::GpuFail(id),
+            ("gpu-recover", None) => FaultKind::GpuRecover(id),
+            ("server-fail", None) => FaultKind::ServerFail(id),
+            ("server-recover", None) => FaultKind::ServerRecover(id),
+            ("link-fail", None) => FaultKind::LinkFail(id),
+            ("link-recover", None) => FaultKind::LinkRecover(id),
+            ("gpu-slow", Some(f)) => FaultKind::GpuSlow(id, f),
+            ("link-degrade", Some(f)) => FaultKind::LinkDegrade(id, f),
+            ("gpu-restore", None) => FaultKind::GpuRestore(id),
+            ("link-restore", None) => FaultKind::LinkRestore(id),
             _ => return None,
-        })
+        };
+        Some(k)
     }
 }
 
@@ -92,18 +141,22 @@ pub struct FaultEvent {
 
 impl FaultEvent {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut o = Json::obj()
             .set("t", self.t)
             .set("kind", self.kind.name())
-            .set("id", self.kind.id())
+            .set("id", self.kind.id());
+        if let Some(f) = self.kind.factor() {
+            o = o.set("factor", f);
+        }
+        o
     }
 
     pub fn from_json(v: &Json) -> Result<FaultEvent> {
         if let Json::Obj(entries) = v {
             for (key, _) in entries {
-                if !matches!(key.as_str(), "t" | "kind" | "id") {
+                if !matches!(key.as_str(), "t" | "kind" | "id" | "factor") {
                     return Err(Error::msg(format!(
-                        "unknown fault event key '{key}' (t|kind|id)"
+                        "unknown fault event key '{key}' (t|kind|id|factor)"
                     )));
                 }
             }
@@ -113,11 +166,27 @@ impl FaultEvent {
         let t = v.req_f64("t").map_err(Error::msg)?;
         let kind = v.req_str("kind").map_err(Error::msg)?;
         let id = v.req_usize("id").map_err(Error::msg)?;
-        let kind = FaultKind::parse(kind, id).ok_or_else(|| {
-            Error::msg(format!(
-                "unknown fault kind '{kind}' \
-                 (gpu-fail|gpu-recover|server-fail|server-recover|link-fail|link-recover)"
-            ))
+        let factor = match v.get("factor") {
+            Some(x) => {
+                Some(x.as_f64().ok_or_else(|| Error::msg("fault 'factor' must be a number"))?)
+            }
+            None => None,
+        };
+        let kind = FaultKind::parse(kind, id, factor).ok_or_else(|| {
+            if matches!(kind, "gpu-slow" | "link-degrade") && factor.is_none() {
+                Error::msg(format!("fault kind '{kind}' requires a 'factor' in (0, 1]"))
+            } else if factor.is_some() && FaultKind::parse(kind, id, None).is_some() {
+                Error::msg(format!(
+                    "fault kind '{kind}' does not take a 'factor' \
+                     (only gpu-slow|link-degrade do)"
+                ))
+            } else {
+                Error::msg(format!(
+                    "unknown fault kind '{kind}' \
+                     (gpu-fail|gpu-recover|server-fail|server-recover|link-fail|link-recover\
+                     |gpu-slow|gpu-restore|link-degrade|link-restore)"
+                ))
+            }
         })?;
         Ok(FaultEvent { t, kind })
     }
@@ -228,6 +297,118 @@ impl GenSpec {
     }
 }
 
+/// Degradation (gray-failure) schedule generator parameters, mirroring
+/// [`GenSpec`]: onset gaps are Exp(mtbd_s) across the fleet, each onset
+/// picks a uniform target and a uniform health factor in
+/// `[factor_min, factor_max]`, and each degraded target restores to full
+/// health after an independent Exp(mttr_s). Draws come from
+/// [`DEGRADE_STREAM`], so the schedule is a pure function of (spec, seed)
+/// and independent of any fail-stop generator sharing the scenario seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegradeSpec {
+    /// Mean time between degradation onsets (fleet-global).
+    pub mtbd_s: f64,
+    /// Mean time to restore a degraded target to factor 1.0.
+    pub mttr_s: f64,
+    /// No new degradations are generated at or past this time.
+    pub horizon_s: f64,
+    /// Drawn health factors are uniform in `[factor_min, factor_max]`;
+    /// both must lie in (0, 1] (smaller = more severe).
+    pub factor_min: f64,
+    pub factor_max: f64,
+    pub targets: FaultTargets,
+    /// `None` = derive from the scenario seed.
+    pub seed: Option<u64>,
+}
+
+impl DegradeSpec {
+    pub const DEFAULT_MTTR_S: f64 = 120.0;
+    pub const DEFAULT_HORIZON_S: f64 = 1200.0;
+    pub const DEFAULT_MTBD_S: f64 = 180.0;
+    pub const DEFAULT_FACTOR_MIN: f64 = 0.25;
+    pub const DEFAULT_FACTOR_MAX: f64 = 0.75;
+
+    /// A generator spec with everything but the onset rate defaulted.
+    pub fn with_mtbd(mtbd_s: f64) -> DegradeSpec {
+        DegradeSpec {
+            mtbd_s,
+            mttr_s: Self::DEFAULT_MTTR_S,
+            horizon_s: Self::DEFAULT_HORIZON_S,
+            factor_min: Self::DEFAULT_FACTOR_MIN,
+            factor_max: Self::DEFAULT_FACTOR_MAX,
+            targets: FaultTargets::Both,
+            seed: None,
+        }
+    }
+
+    /// What the experiment `degrade` axis materializes: every drawn
+    /// degradation pins the health factor to exactly `factor` (severity),
+    /// everything else defaulted.
+    pub fn with_severity(factor: f64) -> DegradeSpec {
+        DegradeSpec {
+            factor_min: factor,
+            factor_max: factor,
+            ..Self::with_mtbd(Self::DEFAULT_MTBD_S)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("mtbd_s", self.mtbd_s)
+            .set("mttr_s", self.mttr_s)
+            .set("horizon_s", self.horizon_s)
+            .set("factor_min", self.factor_min)
+            .set("factor_max", self.factor_max)
+            .set("targets", self.targets.name());
+        if let Some(seed) = self.seed {
+            o = o.set("seed", seed);
+        }
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<DegradeSpec> {
+        if let Json::Obj(entries) = v {
+            for (key, _) in entries {
+                if !matches!(
+                    key.as_str(),
+                    "mtbd_s" | "mttr_s" | "horizon_s" | "factor_min" | "factor_max" | "targets"
+                        | "seed"
+                ) {
+                    return Err(Error::msg(format!(
+                        "unknown degradation generator key '{key}' \
+                         (mtbd_s|mttr_s|horizon_s|factor_min|factor_max|targets|seed)"
+                    )));
+                }
+            }
+        } else {
+            return Err(Error::msg("fault degradation ('degraded') must be an object"));
+        }
+        let mut d = DegradeSpec::with_mtbd(v.req_f64("mtbd_s").map_err(Error::msg)?);
+        if let Some(x) = v.get("mttr_s") {
+            d.mttr_s = x.as_f64().ok_or_else(|| Error::msg("mttr_s must be a number"))?;
+        }
+        if let Some(x) = v.get("horizon_s") {
+            d.horizon_s = x.as_f64().ok_or_else(|| Error::msg("horizon_s must be a number"))?;
+        }
+        if let Some(x) = v.get("factor_min") {
+            d.factor_min = x.as_f64().ok_or_else(|| Error::msg("factor_min must be a number"))?;
+        }
+        if let Some(x) = v.get("factor_max") {
+            d.factor_max = x.as_f64().ok_or_else(|| Error::msg("factor_max must be a number"))?;
+        }
+        if let Some(x) = v.get("targets") {
+            let s = x.as_str().ok_or_else(|| Error::msg("targets must be a string"))?;
+            d.targets = FaultTargets::parse(s)
+                .ok_or_else(|| Error::msg(format!("unknown targets '{s}' (gpus|links|both)")))?;
+        }
+        if let Some(x) = v.get("seed") {
+            d.seed =
+                Some(x.as_u64().ok_or_else(|| Error::msg("degrade seed must be an integer"))?);
+        }
+        Ok(d)
+    }
+}
+
 /// The scenario-level `faults` section (docs/SCENARIOS.md §Faults):
 /// checkpoint/restart knobs plus an explicit timeline and/or a generator.
 #[derive(Clone, Debug, PartialEq)]
@@ -239,7 +420,24 @@ pub struct FaultsSpec {
     pub warmup_s: f64,
     pub events: Vec<FaultEvent>,
     pub gen: Option<GenSpec>,
+    pub degraded: Option<DegradeSpec>,
+    /// Exponential restart backoff base: a job's n-th preemption keeps it
+    /// out of the queue for `min(cap, base * 2^(n-1))` seconds. 0 = off
+    /// (preempted jobs requeue immediately, the pre-gray-failure path).
+    pub backoff_base_s: f64,
+    pub backoff_cap_s: f64,
+    /// A GPU that fails `blacklist_k` times within `blacklist_window_s`
+    /// stays excluded from placement after recovery until the window
+    /// drains. 0 = off.
+    pub blacklist_k: u64,
+    pub blacklist_window_s: f64,
 }
+
+/// Default cap on the exponential restart backoff delay.
+pub const DEFAULT_BACKOFF_CAP_S: f64 = 300.0;
+
+/// Default sliding window for the failure-count blacklist.
+pub const DEFAULT_BLACKLIST_WINDOW_S: f64 = 600.0;
 
 impl Default for FaultsSpec {
     fn default() -> FaultsSpec {
@@ -248,6 +446,11 @@ impl Default for FaultsSpec {
             warmup_s: 0.0,
             events: Vec::new(),
             gen: None,
+            degraded: None,
+            backoff_base_s: 0.0,
+            backoff_cap_s: DEFAULT_BACKOFF_CAP_S,
+            blacklist_k: 0,
+            blacklist_window_s: DEFAULT_BLACKLIST_WINDOW_S,
         }
     }
 }
@@ -270,16 +473,30 @@ impl FaultsSpec {
                 )));
             }
             let (id, max, what) = match e.kind {
-                FaultKind::GpuFail(g) | FaultKind::GpuRecover(g) => (g, cluster.n_gpus(), "gpu"),
+                FaultKind::GpuFail(g)
+                | FaultKind::GpuRecover(g)
+                | FaultKind::GpuSlow(g, _)
+                | FaultKind::GpuRestore(g) => (g, cluster.n_gpus(), "gpu"),
                 FaultKind::ServerFail(s) | FaultKind::ServerRecover(s) => {
                     (s, cluster.n_servers, "server")
                 }
-                FaultKind::LinkFail(l) | FaultKind::LinkRecover(l) => (l, n_links, "link"),
+                FaultKind::LinkFail(l)
+                | FaultKind::LinkRecover(l)
+                | FaultKind::LinkDegrade(l, _)
+                | FaultKind::LinkRestore(l) => (l, n_links, "link"),
             };
             if id >= max {
                 return Err(Error::msg(format!(
                     "fault event targets {what} {id} but the scenario has only {max}"
                 )));
+            }
+            if let Some(f) = e.kind.factor() {
+                if !f.is_finite() || f <= 0.0 || f > 1.0 {
+                    return Err(Error::msg(format!(
+                        "fault event '{}' factor must be in (0, 1], got {f}",
+                        e.kind.name()
+                    )));
+                }
             }
         }
         if let Some(g) = &self.gen {
@@ -302,6 +519,57 @@ impl FaultsSpec {
                 ));
             }
         }
+        if let Some(d) = &self.degraded {
+            for (name, v) in [("mtbd_s", d.mtbd_s), ("mttr_s", d.mttr_s)] {
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(Error::msg(format!(
+                        "faults.degraded.{name} must be finite and positive, got {v}"
+                    )));
+                }
+            }
+            if !d.horizon_s.is_finite() || d.horizon_s < 0.0 {
+                return Err(Error::msg(format!(
+                    "faults.degraded.horizon_s must be finite and non-negative, got {}",
+                    d.horizon_s
+                )));
+            }
+            for (name, v) in [("factor_min", d.factor_min), ("factor_max", d.factor_max)] {
+                if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                    return Err(Error::msg(format!(
+                        "faults.degraded.{name} must be in (0, 1], got {v}"
+                    )));
+                }
+            }
+            if d.factor_min > d.factor_max {
+                return Err(Error::msg(format!(
+                    "faults.degraded.factor_min ({}) exceeds factor_max ({})",
+                    d.factor_min, d.factor_max
+                )));
+            }
+            if d.targets != FaultTargets::Gpus && n_links == 0 {
+                return Err(Error::msg(
+                    "faults.degraded targets links but the topology has no links",
+                ));
+            }
+        }
+        if !self.backoff_base_s.is_finite() || self.backoff_base_s < 0.0 {
+            return Err(Error::msg(format!(
+                "faults.backoff_base_s must be finite and non-negative, got {}",
+                self.backoff_base_s
+            )));
+        }
+        if !self.backoff_cap_s.is_finite() || self.backoff_cap_s < 0.0 {
+            return Err(Error::msg(format!(
+                "faults.backoff_cap_s must be finite and non-negative, got {}",
+                self.backoff_cap_s
+            )));
+        }
+        if !self.blacklist_window_s.is_finite() || self.blacklist_window_s <= 0.0 {
+            return Err(Error::msg(format!(
+                "faults.blacklist_window_s must be finite and positive, got {}",
+                self.blacklist_window_s
+            )));
+        }
         Ok(())
     }
 
@@ -322,6 +590,10 @@ impl FaultsSpec {
                 FaultKind::GpuRecover(g) => events.push((e.t, PrimFault::GpuRecover(g))),
                 FaultKind::LinkFail(l) => events.push((e.t, PrimFault::LinkFail(l))),
                 FaultKind::LinkRecover(l) => events.push((e.t, PrimFault::LinkRecover(l))),
+                FaultKind::GpuSlow(g, f) => events.push((e.t, PrimFault::GpuSlow(g, f))),
+                FaultKind::GpuRestore(g) => events.push((e.t, PrimFault::GpuRestore(g))),
+                FaultKind::LinkDegrade(l, f) => events.push((e.t, PrimFault::LinkDegrade(l, f))),
+                FaultKind::LinkRestore(l) => events.push((e.t, PrimFault::LinkRestore(l))),
                 FaultKind::ServerFail(s) => {
                     for g in cluster.gpus_of(s) {
                         events.push((e.t, PrimFault::GpuFail(g)));
@@ -345,6 +617,9 @@ impl FaultsSpec {
         if let Some(g) = &self.gen {
             generate(g, cluster.n_gpus(), n_links, default_seed, &mut events);
         }
+        if let Some(d) = &self.degraded {
+            generate_degrade(d, cluster.n_gpus(), n_links, default_seed, &mut events);
+        }
         // Stable sort: simultaneous primitives keep spec/generator order
         // (in particular a server's GPU fails stay grouped before its NIC).
         events.sort_by(|a, b| a.0.total_cmp(&b.0));
@@ -352,6 +627,10 @@ impl FaultsSpec {
             events,
             checkpoint_iters: self.checkpoint_iters,
             warmup_s: self.warmup_s,
+            backoff_base_s: self.backoff_base_s,
+            backoff_cap_s: self.backoff_cap_s,
+            blacklist_k: self.blacklist_k as usize,
+            blacklist_window_s: self.blacklist_window_s,
         })
     }
 
@@ -374,15 +653,37 @@ impl FaultsSpec {
         if let Some(g) = &self.gen {
             o = o.set("mtbf", g.to_json());
         }
+        if let Some(d) = &self.degraded {
+            o = o.set("degraded", d.to_json());
+        }
+        if self.backoff_base_s != 0.0 {
+            o = o.set("backoff_base_s", self.backoff_base_s);
+        }
+        if self.backoff_cap_s != DEFAULT_BACKOFF_CAP_S {
+            o = o.set("backoff_cap_s", self.backoff_cap_s);
+        }
+        if self.blacklist_k != 0 {
+            o = o.set("blacklist_k", self.blacklist_k);
+        }
+        if self.blacklist_window_s != DEFAULT_BLACKLIST_WINDOW_S {
+            o = o.set("blacklist_window_s", self.blacklist_window_s);
+        }
         o
     }
 
     pub fn from_json(v: &Json) -> Result<FaultsSpec> {
         if let Json::Obj(entries) = v {
             for (key, _) in entries {
-                if !matches!(key.as_str(), "checkpoint_iters" | "warmup_s" | "events" | "mtbf") {
+                if !matches!(
+                    key.as_str(),
+                    "checkpoint_iters" | "warmup_s" | "events" | "mtbf" | "degraded"
+                        | "backoff_base_s" | "backoff_cap_s" | "blacklist_k"
+                        | "blacklist_window_s"
+                ) {
                     return Err(Error::msg(format!(
-                        "unknown faults key '{key}' (checkpoint_iters|warmup_s|events|mtbf)"
+                        "unknown faults key '{key}' \
+                         (checkpoint_iters|warmup_s|events|mtbf|degraded|backoff_base_s\
+                         |backoff_cap_s|blacklist_k|blacklist_window_s)"
                     )));
                 }
             }
@@ -404,6 +705,26 @@ impl FaultsSpec {
         }
         if let Some(x) = v.get("mtbf") {
             spec.gen = Some(GenSpec::from_json(x)?);
+        }
+        if let Some(x) = v.get("degraded") {
+            spec.degraded = Some(DegradeSpec::from_json(x)?);
+        }
+        if let Some(x) = v.get("backoff_base_s") {
+            spec.backoff_base_s =
+                x.as_f64().ok_or_else(|| Error::msg("backoff_base_s must be a number"))?;
+        }
+        if let Some(x) = v.get("backoff_cap_s") {
+            spec.backoff_cap_s =
+                x.as_f64().ok_or_else(|| Error::msg("backoff_cap_s must be a number"))?;
+        }
+        if let Some(x) = v.get("blacklist_k") {
+            spec.blacklist_k = x
+                .as_u64()
+                .ok_or_else(|| Error::msg("blacklist_k must be a non-negative integer"))?;
+        }
+        if let Some(x) = v.get("blacklist_window_s") {
+            spec.blacklist_window_s =
+                x.as_f64().ok_or_else(|| Error::msg("blacklist_window_s must be a number"))?;
         }
         Ok(spec)
     }
@@ -464,6 +785,56 @@ fn generate(
     }
 }
 
+/// The degradation process (see [`DegradeSpec`]): appends (time,
+/// primitive) pairs. Structure mirrors [`generate`], with a per-onset
+/// uniform factor draw, on [`DEGRADE_STREAM`]. A degradation aimed at a
+/// still-degraded target is skipped (the global clock still advanced).
+fn generate_degrade(
+    spec: &DegradeSpec,
+    n_gpus: usize,
+    n_links: usize,
+    default_seed: u64,
+    out: &mut Vec<(f64, PrimFault)>,
+) {
+    let n_targets = match spec.targets {
+        FaultTargets::Gpus => n_gpus,
+        FaultTargets::Links => n_links,
+        FaultTargets::Both => n_gpus + n_links,
+    };
+    if n_targets == 0 {
+        return;
+    }
+    let mut rng = Pcg::new(spec.seed.unwrap_or(default_seed), DEGRADE_STREAM);
+    let mut degraded_until = vec![0.0f64; n_targets];
+    let mut t = 0.0f64;
+    loop {
+        t += exp_draw(&mut rng, spec.mtbd_s);
+        if t >= spec.horizon_s {
+            break;
+        }
+        let target = rng.next_below(n_targets as u64) as usize;
+        if t < degraded_until[target] {
+            continue; // still degraded; no compounding
+        }
+        let factor = spec.factor_min + (spec.factor_max - spec.factor_min) * rng.next_f64();
+        let restore_at = t + exp_draw(&mut rng, spec.mttr_s);
+        degraded_until[target] = restore_at;
+        let gpu_target = match spec.targets {
+            FaultTargets::Gpus => true,
+            FaultTargets::Links => false,
+            FaultTargets::Both => target < n_gpus,
+        };
+        if gpu_target {
+            out.push((t, PrimFault::GpuSlow(target, factor)));
+            out.push((restore_at, PrimFault::GpuRestore(target)));
+        } else {
+            let link = if spec.targets == FaultTargets::Both { target - n_gpus } else { target };
+            out.push((t, PrimFault::LinkDegrade(link, factor)));
+            out.push((restore_at, PrimFault::LinkRestore(link)));
+        }
+    }
+}
+
 /// A compiled, engine-level fault primitive: GPUs and links only (server
 /// sugar already expanded).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -472,6 +843,10 @@ pub enum PrimFault {
     GpuRecover(usize),
     LinkFail(LinkId),
     LinkRecover(LinkId),
+    GpuSlow(usize, f64),
+    GpuRestore(usize),
+    LinkDegrade(LinkId, f64),
+    LinkRestore(LinkId),
 }
 
 /// The engine's fault input: a time-sorted primitive timeline plus the
@@ -483,6 +858,12 @@ pub struct FaultPlan {
     pub events: Vec<(f64, PrimFault)>,
     pub checkpoint_iters: u64,
     pub warmup_s: f64,
+    /// See [`FaultsSpec::backoff_base_s`]; 0 = requeue immediately.
+    pub backoff_base_s: f64,
+    pub backoff_cap_s: f64,
+    /// See [`FaultsSpec::blacklist_k`]; 0 = blacklisting off.
+    pub blacklist_k: usize,
+    pub blacklist_window_s: f64,
 }
 
 impl Default for FaultPlan {
@@ -491,6 +872,10 @@ impl Default for FaultPlan {
             events: Vec::new(),
             checkpoint_iters: DEFAULT_CHECKPOINT_ITERS,
             warmup_s: 0.0,
+            backoff_base_s: 0.0,
+            backoff_cap_s: DEFAULT_BACKOFF_CAP_S,
+            blacklist_k: 0,
+            blacklist_window_s: DEFAULT_BLACKLIST_WINDOW_S,
         }
     }
 }
@@ -501,46 +886,98 @@ impl FaultPlan {
     }
 }
 
-/// Live hardware up/down bitmap, driven by the engine as it processes the
-/// fault timeline. Admission reads it directly; placement reads it
+/// Live per-device health factors, driven by the engine as it processes
+/// the fault timeline: 1.0 = healthy, 0.0 = down, anything between is a
+/// gray failure (a link's factor scales its effective bandwidth, a GPU's
+/// factor scales its compute speed). The binary API (`gpu_up` etc.) is
+/// `factor > 0`. Admission reads it directly; placement reads it
 /// indirectly through the zero-free-memory hold on down GPUs.
 #[derive(Clone, Debug)]
 pub struct HealthView {
-    gpu: Vec<bool>,
-    link: Vec<bool>,
+    gpu: Vec<f64>,
+    link: Vec<f64>,
 }
 
 impl HealthView {
     pub fn new(n_gpus: usize, n_links: usize) -> HealthView {
-        HealthView { gpu: vec![true; n_gpus], link: vec![true; n_links] }
+        HealthView { gpu: vec![1.0; n_gpus], link: vec![1.0; n_links] }
     }
 
     pub fn gpu_up(&self, g: usize) -> bool {
-        self.gpu[g]
+        self.gpu[g] > 0.0
     }
 
     pub fn link_up(&self, l: LinkId) -> bool {
-        self.link[l]
+        self.link[l] > 0.0
     }
 
     pub fn links_up(&self, links: &[LinkId]) -> bool {
-        links.iter().all(|&l| self.link[l])
+        links.iter().all(|&l| self.link[l] > 0.0)
     }
 
+    pub fn gpu_factor(&self, g: usize) -> f64 {
+        self.gpu[g]
+    }
+
+    pub fn link_factor(&self, l: LinkId) -> f64 {
+        self.link[l]
+    }
+
+    /// Up/down transitions snap the factor to 1.0 / 0.0: a recovered
+    /// device comes back at full health.
     pub fn set_gpu(&mut self, g: usize, up: bool) {
-        self.gpu[g] = up;
+        self.gpu[g] = if up { 1.0 } else { 0.0 };
     }
 
     pub fn set_link(&mut self, l: LinkId, up: bool) {
-        self.link[l] = up;
+        self.link[l] = if up { 1.0 } else { 0.0 };
+    }
+
+    pub fn set_gpu_factor(&mut self, g: usize, factor: f64) {
+        self.gpu[g] = factor;
+    }
+
+    pub fn set_link_factor(&mut self, l: LinkId, factor: f64) {
+        self.link[l] = factor;
+    }
+
+    /// The raw per-GPU factor slice (index = GpuId) — what the
+    /// health-aware placer folds into its EWMA each decision.
+    pub fn gpu_factors(&self) -> &[f64] {
+        &self.gpu
+    }
+
+    /// The raw per-link factor slice (index = LinkId).
+    pub fn link_factors(&self) -> &[f64] {
+        &self.link
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpu.len()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.link.len()
     }
 
     pub fn n_gpus_up(&self) -> usize {
-        self.gpu.iter().filter(|&&u| u).count()
+        self.gpu.iter().filter(|&&f| f > 0.0).count()
     }
 
     pub fn n_links_up(&self) -> usize {
-        self.link.iter().filter(|&&u| u).count()
+        self.link.iter().filter(|&&f| f > 0.0).count()
+    }
+
+    /// Mean health factor over every GPU and link — the `Obs` feature a
+    /// learned scheduler watches to sense gray failures. 1.0 when the
+    /// fleet is fully healthy (or empty).
+    pub fn mean_health(&self) -> f64 {
+        let n = self.gpu.len() + self.link.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let sum: f64 = self.gpu.iter().chain(self.link.iter()).sum();
+        sum / n as f64
     }
 }
 
@@ -633,6 +1070,7 @@ mod tests {
                 targets: FaultTargets::Both,
                 seed: Some(9),
             }),
+            ..FaultsSpec::default()
         };
         let back = FaultsSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(spec, back);
@@ -674,6 +1112,163 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("unknown faults key"));
+    }
+
+    #[test]
+    fn degrade_generator_is_deterministic_paired_and_in_range() {
+        let spec = DegradeSpec { seed: Some(11), ..DegradeSpec::with_mtbd(60.0) };
+        let faults = FaultsSpec { degraded: Some(spec), ..FaultsSpec::default() };
+        let a = faults.compile(&cluster(), 4, 42).unwrap();
+        let b = faults.compile(&cluster(), 4, 42).unwrap();
+        assert_eq!(a, b, "same (seed, spec) must be byte-reproducible");
+        assert!(!a.is_empty(), "mtbd 60s over a 1200s horizon produced nothing");
+        let mut balance = std::collections::BTreeMap::new();
+        for &(t, p) in &a.events {
+            assert!(t.is_finite() && t >= 0.0);
+            match p {
+                PrimFault::GpuSlow(g, f) => {
+                    assert!(
+                        (DegradeSpec::DEFAULT_FACTOR_MIN..=DegradeSpec::DEFAULT_FACTOR_MAX)
+                            .contains(&f),
+                        "factor {f} outside configured range"
+                    );
+                    *balance.entry(("g", g)).or_insert(0i64) += 1;
+                }
+                PrimFault::GpuRestore(g) => *balance.entry(("g", g)).or_insert(0i64) -= 1,
+                PrimFault::LinkDegrade(l, f) => {
+                    assert!(f > 0.0 && f <= 1.0);
+                    *balance.entry(("l", l)).or_insert(0i64) += 1;
+                }
+                PrimFault::LinkRestore(l) => *balance.entry(("l", l)).or_insert(0i64) -= 1,
+                other => panic!("degradation generator emitted {other:?}"),
+            }
+        }
+        assert!(balance.values().all(|&v| v == 0), "unpaired slow/restore: {balance:?}");
+        assert!(a.events.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn degrade_stream_is_independent_of_failure_stream() {
+        // Adding a degraded section must not perturb the fail-stop
+        // schedule generated from the same scenario seed.
+        let gen = GenSpec::with_mtbf(100.0);
+        let plain = FaultsSpec { gen: Some(gen), ..FaultsSpec::default() };
+        let mixed = FaultsSpec {
+            gen: Some(gen),
+            degraded: Some(DegradeSpec::with_mtbd(90.0)),
+            ..FaultsSpec::default()
+        };
+        let failstop_of = |p: &FaultPlan| {
+            p.events
+                .iter()
+                .filter(|(_, f)| {
+                    matches!(
+                        f,
+                        PrimFault::GpuFail(_)
+                            | PrimFault::GpuRecover(_)
+                            | PrimFault::LinkFail(_)
+                            | PrimFault::LinkRecover(_)
+                    )
+                })
+                .copied()
+                .collect::<Vec<_>>()
+        };
+        let a = plain.compile(&cluster(), 4, 42).unwrap();
+        let b = mixed.compile(&cluster(), 4, 42).unwrap();
+        assert_eq!(failstop_of(&a), failstop_of(&b));
+        assert!(b.events.len() > a.events.len(), "degradations were generated");
+    }
+
+    #[test]
+    fn degrade_json_roundtrip_and_knobs() {
+        let spec = FaultsSpec {
+            events: vec![
+                FaultEvent { t: 5.0, kind: FaultKind::LinkDegrade(1, 0.5) },
+                FaultEvent { t: 9.0, kind: FaultKind::LinkRestore(1) },
+                FaultEvent { t: 6.0, kind: FaultKind::GpuSlow(2, 0.25) },
+                FaultEvent { t: 8.0, kind: FaultKind::GpuRestore(2) },
+            ],
+            degraded: Some(DegradeSpec {
+                mtbd_s: 300.0,
+                mttr_s: 45.0,
+                horizon_s: 900.0,
+                factor_min: 0.1,
+                factor_max: 0.9,
+                targets: FaultTargets::Links,
+                seed: Some(3),
+            }),
+            backoff_base_s: 2.0,
+            backoff_cap_s: 64.0,
+            blacklist_k: 3,
+            blacklist_window_s: 120.0,
+            ..FaultsSpec::default()
+        };
+        let back = FaultsSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        // Defaults (including the new knobs) still elide to "{}".
+        assert_eq!(FaultsSpec::default().to_json().to_string(), "{}");
+    }
+
+    #[test]
+    fn degrade_validation_rejects_bad_input() {
+        let c = cluster();
+        for f in [0.0, -0.5, 1.5, f64::NAN] {
+            let bad = FaultsSpec {
+                events: vec![FaultEvent { t: 1.0, kind: FaultKind::GpuSlow(0, f) }],
+                ..FaultsSpec::default()
+            };
+            assert!(
+                bad.validate(&c, 4).unwrap_err().to_string().contains("factor"),
+                "factor {f} must be rejected"
+            );
+        }
+        let bad_range = FaultsSpec {
+            degraded: Some(DegradeSpec {
+                factor_min: 0.8,
+                factor_max: 0.2,
+                ..DegradeSpec::with_mtbd(100.0)
+            }),
+            ..FaultsSpec::default()
+        };
+        assert!(bad_range.validate(&c, 4).unwrap_err().to_string().contains("factor_min"));
+        let bad_backoff = FaultsSpec { backoff_base_s: -1.0, ..FaultsSpec::default() };
+        assert!(bad_backoff.validate(&c, 4).unwrap_err().to_string().contains("backoff_base_s"));
+        let bad_window = FaultsSpec {
+            blacklist_window_s: 0.0,
+            ..FaultsSpec::default()
+        };
+        assert!(bad_window.validate(&c, 4).unwrap_err().to_string().contains("blacklist_window"));
+        // JSON-level factor rules.
+        let missing = Json::parse(r#"{"events": [{"t": 1.0, "kind": "gpu-slow", "id": 0}]}"#)
+            .unwrap();
+        assert!(FaultsSpec::from_json(&missing)
+            .unwrap_err()
+            .to_string()
+            .contains("requires a 'factor'"));
+        let extra =
+            Json::parse(r#"{"events": [{"t": 1.0, "kind": "gpu-fail", "id": 0, "factor": 0.5}]}"#)
+                .unwrap();
+        assert!(FaultsSpec::from_json(&extra)
+            .unwrap_err()
+            .to_string()
+            .contains("does not take a 'factor'"));
+    }
+
+    #[test]
+    fn health_view_tracks_factors() {
+        let mut h = HealthView::new(4, 2);
+        assert_eq!(h.gpu_factor(0), 1.0);
+        assert_eq!(h.mean_health(), 1.0);
+        h.set_gpu_factor(0, 0.5);
+        h.set_link_factor(1, 0.25);
+        assert!(h.gpu_up(0), "a slowed GPU is still up");
+        assert!(h.link_up(1), "a degraded link is still up");
+        assert_eq!(h.n_gpus_up(), 4);
+        assert_eq!(h.mean_health(), (0.5 + 3.0 + 1.0 + 0.25) / 6.0);
+        h.set_gpu(0, false);
+        assert_eq!(h.gpu_factor(0), 0.0);
+        h.set_gpu(0, true);
+        assert_eq!(h.gpu_factor(0), 1.0, "recovery restores full health");
     }
 
     #[test]

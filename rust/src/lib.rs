@@ -63,20 +63,25 @@ pub mod prelude {
         self, BacklogReward, BuiltinAgent, EnvAgent, Obs, RandomAgent, RewardHook, SimEnv,
     };
     pub use crate::fault::{
-        self, FaultEvent, FaultKind, FaultPlan, FaultTargets, FaultsSpec, GenSpec, HealthView,
+        self, DegradeSpec, FaultEvent, FaultKind, FaultPlan, FaultTargets, FaultsSpec, GenSpec,
+        HealthView,
     };
     pub use crate::metrics::{self, Evaluation};
     pub use crate::model::{self, AllReduceAlgo, CommModel, DnnModel, PerfModel};
     pub use crate::net::{self, LinkId, Topology, TopologySpec};
     pub use crate::placement::{
-        self, FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RackLwfPlacer,
-        RandomPlacer,
+        self, FirstFitPlacer, HealthAwarePlacer, ListSchedulingPlacer, LwfPlacer, Placer,
+        RackLwfPlacer, RandomPlacer,
     };
     pub use crate::scenario::{
         self, records_to_csv, records_to_json, registry, Experiment, OutputSpec, RunRecord,
         Scenario, TraceSource,
     };
-    pub use crate::sched::{self, AdaDual, Admission, CommPolicy, SrsfCap};
+    pub use crate::sched::{
+        self,
+        health::{backoff_delay, Blacklist, HealthScore},
+        AdaDual, Admission, CommPolicy, SrsfCap,
+    };
     pub use crate::sim::{
         self, Action, ContentionProfiler, DecisionPoint, JobPriority, JsonlSink, LegacyLog,
         MetricsObserver, PercentilesObserver, Repricing, SimConfig, SimEvent, SimObserver,

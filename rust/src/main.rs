@@ -79,12 +79,16 @@ fn print_help() {
          \x20            committed trace JSON (sorted, rebased to t=0, re-id'd);\n\
          \x20            --skip-bad-rows drops malformed rows (counted) instead\n\
          \x20            of erroring on the first one\n\
-         \x20 simulate   [--scenario F] [--trace F] [--placer lwf|lwf-rack|ff|ls|rand]\n\
+         \x20 simulate   [--scenario F] [--trace F] [--placer lwf|lwf-rack|ff|ls|rand|health]\n\
          \x20            [--kappa K] [--policy ada|srsf1|srsf2|srsf3]\n\
          \x20            [--priority srsf|fifo|las] [--repricing at-admission|dynamic]\n\
          \x20            [--oversub R] [--rack-size N] [--coalescing on|off]\n\
          \x20            [--mtbf S [--mttr S] [--fault-horizon S]\n\
          \x20            [--fault-targets gpus|links|both] [--ckpt-iters N] [--warmup S]]\n\
+         \x20            (--mttr defaults to 60s when omitted)\n\
+         \x20            [--degrade-mtbd S [--degrade-mttr S] [--degrade-factor F]]\n\
+         \x20            [--backoff-base S] [--backoff-cap S]\n\
+         \x20            [--blacklist-k N] [--blacklist-window S]\n\
          \x20            [--events-out F.jsonl] [--timeline-out F] [--contention-out F]\n\
          \x20            [--no-events] [--seed S] [--jobs N]    run one scenario\n\
          \x20 simulate   --list        print registry placers/policies/topology presets\n\
@@ -108,6 +112,8 @@ fn print_help() {
          \x20 ddl-sched simulate --placer lwf --policy ada --jobs 160\n\
          \x20 ddl-sched simulate --placer lwf-rack --oversub 4 --rack-size 4\n\
          \x20 ddl-sched simulate --jobs 40 --mtbf 600 --mttr 60 --ckpt-iters 50\n\
+         \x20 ddl-sched simulate --jobs 40 --placer health --mtbf 600 \\\n\
+         \x20            --degrade-mtbd 120 --blacklist-k 2 --backoff-base 10\n\
          \x20 ddl-sched sweep --scenario scenarios/fault_sweep.json --threads 4\n\
          \x20 ddl-sched ingest --csv scenarios/sample_trace.csv --out trace.json\n\
          \x20 ddl-sched simulate --jobs 40 --events-out events.jsonl --timeline-out gantt.json\n\
@@ -162,29 +168,74 @@ fn scenario_from_flags(args: &Args) -> Result<Scenario> {
         topo.validate(&s.cluster).map_err(ddl_sched::util::error::Error::msg)?;
         s.topology = topo;
     }
-    // --mtbf M attaches a seeded MTBF/MTTR failure generator (seconds);
-    // the companion knobs refine it and are rejected without it. Placed
-    // after the topology flags so link faults validate against the fabric
-    // the run will actually use.
+    // --mtbf M attaches a seeded MTBF/MTTR failure generator and
+    // --degrade-mtbd M a gray-failure (degradation) generator (seconds);
+    // the companion knobs refine them and are rejected without them.
+    // Placed after the topology flags so link faults validate against the
+    // fabric the run will actually use.
     for dep in ["mttr", "fault-horizon", "fault-targets", "ckpt-iters", "warmup"] {
         if args.get(dep).is_some() && args.get("mtbf").is_none() {
             bail!("--{dep} only applies to fault injection; add --mtbf SECONDS");
         }
     }
-    if args.get("mtbf").is_some() {
-        let mut gen = fault::GenSpec::with_mtbf(args.f64_or("mtbf", 0.0)?);
-        gen.mttr_s = args.f64_or("mttr", gen.mttr_s)?;
-        gen.horizon_s = args.f64_or("fault-horizon", gen.horizon_s)?;
-        if let Some(t) = args.get("fault-targets") {
-            gen.targets = FaultTargets::parse(t)
-                .ok_or_else(|| err!("unknown --fault-targets '{t}' (gpus|links|both)"))?;
+    for dep in ["degrade-mttr", "degrade-factor"] {
+        if args.get(dep).is_some() && args.get("degrade-mtbd").is_none() {
+            bail!("--{dep} only applies to gray-failure injection; add --degrade-mtbd SECONDS");
         }
+    }
+    let faulted = args.get("mtbf").is_some() || args.get("degrade-mtbd").is_some();
+    for dep in ["backoff-base", "backoff-cap", "blacklist-k", "blacklist-window"] {
+        if args.get(dep).is_some() && !faulted {
+            bail!("--{dep} only applies to faulted runs; add --mtbf or --degrade-mtbd SECONDS");
+        }
+    }
+    if faulted {
+        let gen = if args.get("mtbf").is_some() {
+            let mut gen = fault::GenSpec::with_mtbf(args.f64_or("mtbf", 0.0)?);
+            // --mttr is optional: omitted, repairs follow the documented
+            // default of GenSpec::DEFAULT_MTTR_S seconds.
+            gen.mttr_s = args.f64_or("mttr", gen.mttr_s)?;
+            gen.horizon_s = args.f64_or("fault-horizon", gen.horizon_s)?;
+            if gen.horizon_s <= 0.0 {
+                bail!(
+                    "--fault-horizon must be positive, got {}: no fault can be generated \
+                     before t=0, so this run would be fault-free — drop --mtbf instead",
+                    gen.horizon_s
+                );
+            }
+            if let Some(t) = args.get("fault-targets") {
+                gen.targets = FaultTargets::parse(t)
+                    .ok_or_else(|| err!("unknown --fault-targets '{t}' (gpus|links|both)"))?;
+            }
+            Some(gen)
+        } else {
+            None
+        };
+        let degraded = if args.get("degrade-mtbd").is_some() {
+            let mut d = fault::DegradeSpec::with_mtbd(args.f64_or("degrade-mtbd", 0.0)?);
+            d.mttr_s = args.f64_or("degrade-mttr", d.mttr_s)?;
+            if args.get("degrade-factor").is_some() {
+                // A single severity pins the drawn factor exactly
+                // (factor_min == factor_max), like the sweep's degrade axis.
+                let f = args.f64_or("degrade-factor", 0.0)?;
+                d.factor_min = f;
+                d.factor_max = f;
+            }
+            Some(d)
+        } else {
+            None
+        };
         let defaults = FaultsSpec::default();
         let spec = FaultsSpec {
             checkpoint_iters: args.u64_or("ckpt-iters", defaults.checkpoint_iters)?,
             warmup_s: args.f64_or("warmup", defaults.warmup_s)?,
             events: Vec::new(),
-            gen: Some(gen),
+            gen,
+            degraded,
+            backoff_base_s: args.f64_or("backoff-base", defaults.backoff_base_s)?,
+            backoff_cap_s: args.f64_or("backoff-cap", defaults.backoff_cap_s)?,
+            blacklist_k: args.u64_or("blacklist-k", defaults.blacklist_k)?,
+            blacklist_window_s: args.f64_or("blacklist-window", defaults.blacklist_window_s)?,
         };
         spec.validate(&s.cluster, s.topology.n_links(&s.cluster))?;
         s.faults = Some(spec);
@@ -484,8 +535,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 "priority" => exp.priorities = sim::JobPriority::all().to_vec(),
                 "oversub" => exp.oversubs = vec![2.0, 4.0, 8.0],
                 "mtbf" => exp.mtbfs = vec![300.0, 600.0, 1200.0],
+                "degrade" => exp.degrades = vec![0.25, 0.5, 0.75],
                 other => {
-                    bail!("unknown sweep '{other}' (placer|policy|kappa|priority|oversub|mtbf)")
+                    bail!(
+                        "unknown sweep '{other}' \
+                         (placer|policy|kappa|priority|oversub|mtbf|degrade)"
+                    )
                 }
             }
         }

@@ -102,6 +102,9 @@ mod tests {
             contended_admissions: 3,
             clean_admissions: 7,
             max_contention: 2,
+            preempted: 0,
+            restarted: 0,
+            lost_iters: 0,
             events: vec![],
         }
     }

@@ -1,0 +1,153 @@
+//! Health-aware placement: rank candidate GPUs by live + historical
+//! device health under gray failures (docs/EXPERIMENTS.md §Faults).
+//!
+//! Each decision folds the engine's live [`HealthView`] factors into a
+//! per-device [`HealthScore`] EWMA, then scores every feasible GPU as
+//!
+//! ```text
+//! eff(g) = min(now_gpu(g), ewma_gpu(g)) * min(now_nic(g), ewma_nic(g))
+//! ```
+//!
+//! — the live factor catches what is degraded *right now*, the EWMA
+//! remembers what keeps flapping, and the NIC term steers multi-server
+//! jobs away from degraded uplinks (NIC `LinkId` == `ServerId` in every
+//! fabric preset; GPUs on fabrics without a matching link score on GPU
+//! health alone). Candidates are taken best-eff-first, load ascending and
+//! GPU id as deterministic tie-breaks, so on a fully healthy fleet the
+//! placer degenerates to List-Scheduling's least-loaded choice.
+//!
+//! This file is on the CI unwrap/expect gate: no panicking shortcuts.
+
+use crate::cluster::{ClusterState, GpuId};
+use crate::fault::HealthView;
+use crate::sched::health::HealthScore;
+use crate::trace::JobSpec;
+
+use super::{ListSchedulingPlacer, Placer};
+
+pub struct HealthAwarePlacer {
+    score: HealthScore,
+}
+
+impl HealthAwarePlacer {
+    pub fn new() -> HealthAwarePlacer {
+        HealthAwarePlacer { score: HealthScore::new(HealthScore::DEFAULT_ALPHA) }
+    }
+}
+
+impl Default for HealthAwarePlacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Placer for HealthAwarePlacer {
+    fn name(&self) -> &'static str {
+        "HEALTH"
+    }
+
+    /// Without a health view (legacy call path) there is nothing to rank
+    /// by; behave like List-Scheduling.
+    fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>> {
+        ListSchedulingPlacer.place(job, state)
+    }
+
+    fn place_with_health(
+        &mut self,
+        job: &JobSpec,
+        state: &ClusterState,
+        health: &HealthView,
+    ) -> Option<Vec<GpuId>> {
+        self.score.observe(health.gpu_factors(), health.link_factors());
+        let spec = state.spec;
+        let eff = |g: GpuId| -> f64 {
+            let gpu = health.gpu_factor(g).min(self.score.gpu(g));
+            let s = spec.server_of(g);
+            let nic = if s < health.n_links() {
+                health.link_factor(s).min(self.score.link(s))
+            } else {
+                1.0
+            };
+            gpu * nic
+        };
+        let mut avail: Vec<(f64, f64, GpuId)> = (0..spec.n_gpus())
+            .filter(|&g| state.fits(g, job.mem_bytes()))
+            .map(|g| (eff(g), state.gpus[g].load, g))
+            .collect();
+        if avail.len() < job.n_gpus {
+            return None;
+        }
+        // Best health first; load then id break ties deterministically.
+        avail.sort_by(|a, b| {
+            b.0.total_cmp(&a.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2))
+        });
+        Some(avail[..job.n_gpus].iter().map(|&(_, _, g)| g).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::model::DnnModel;
+
+    fn job(n_gpus: usize) -> JobSpec {
+        JobSpec { id: 0, arrival: 0.0, model: DnnModel::ResNet50, n_gpus, iterations: 100 }
+    }
+
+    fn state() -> ClusterState {
+        ClusterState::new(ClusterSpec::tiny(4, 4))
+    }
+
+    #[test]
+    fn healthy_fleet_matches_list_scheduling() {
+        let mut st = state();
+        st.allocate(&[0, 1, 2], 1e9, 25.0);
+        let h = HealthView::new(st.spec.n_gpus(), st.spec.n_servers);
+        let got = HealthAwarePlacer::new().place_with_health(&job(3), &st, &h);
+        let ls = ListSchedulingPlacer.place(&job(3), &st);
+        assert_eq!(got, ls, "no degradation => least-loaded choice");
+    }
+
+    #[test]
+    fn avoids_slowed_gpus_and_degraded_nics() {
+        let st = state();
+        let mut h = HealthView::new(st.spec.n_gpus(), st.spec.n_servers);
+        // GPUs 0..4 slowed badly, server 1's NIC degraded.
+        for g in 0..4 {
+            h.set_gpu_factor(g, 0.2);
+        }
+        h.set_link_factor(1, 0.5);
+        let got = HealthAwarePlacer::new().place_with_health(&job(8), &st, &h).unwrap();
+        assert!(
+            got.iter().all(|&g| g >= 8),
+            "chose a slowed GPU or a degraded server: {got:?}"
+        );
+    }
+
+    #[test]
+    fn ewma_remembers_flapping_devices() {
+        let st = state();
+        let mut p = HealthAwarePlacer::new();
+        let mut h = HealthView::new(st.spec.n_gpus(), st.spec.n_servers);
+        // GPU 0 observed degraded for a few decisions, then restored.
+        h.set_gpu_factor(0, 0.1);
+        for _ in 0..3 {
+            p.place_with_health(&job(1), &st, &h);
+        }
+        h.set_gpu_factor(0, 1.0);
+        let got = p.place_with_health(&job(1), &st, &h).unwrap();
+        assert_ne!(got, vec![0], "freshly-restored flapper must rank below steady GPUs");
+    }
+
+    #[test]
+    fn respects_memory_feasibility() {
+        let mut st = state();
+        let all: Vec<GpuId> = (0..st.spec.n_gpus()).collect();
+        for _ in 0..4 {
+            st.allocate(&all, 3.5e9, 1.0);
+        }
+        let h = HealthView::new(st.spec.n_gpus(), st.spec.n_servers);
+        assert!(HealthAwarePlacer::new().place_with_health(&job(1), &st, &h).is_none());
+    }
+}

@@ -12,7 +12,12 @@
 //! All placers see the same `ClusterState` (per-GPU load `L_g`, free
 //! memory) and must return exactly `n_gpus` distinct feasible GPUs or None.
 
+pub mod health;
+
+pub use health::HealthAwarePlacer;
+
 use crate::cluster::{ClusterState, GpuId, ServerId};
+use crate::fault::HealthView;
 use crate::trace::JobSpec;
 use crate::util::rng::Pcg;
 
@@ -21,6 +26,21 @@ use crate::util::rng::Pcg;
 pub trait Placer {
     fn name(&self) -> &'static str;
     fn place(&mut self, job: &JobSpec, state: &ClusterState) -> Option<Vec<GpuId>>;
+
+    /// Placement with the live device-health view (gray failures: per-GPU
+    /// / per-link factors in [0, 1]). The engine always calls this; the
+    /// default delegates to [`Placer::place`], so classic placers stay
+    /// health-oblivious (down GPUs are already excluded for them by the
+    /// engine's zero-free-memory hold). Only placers that *want* health
+    /// (e.g. [`HealthAwarePlacer`]) override it.
+    fn place_with_health(
+        &mut self,
+        job: &JobSpec,
+        state: &ClusterState,
+        _health: &HealthView,
+    ) -> Option<Vec<GpuId>> {
+        self.place(job, state)
+    }
 }
 
 /// Feasible = enough free device memory for this job's model.

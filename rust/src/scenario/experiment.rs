@@ -123,6 +123,13 @@ pub struct Experiment {
     /// ([`crate::fault::GenSpec::with_mtbf`]) on the base's checkpoint
     /// knobs. The base's explicit fault events are kept.
     pub mtbfs: Vec<f64>,
+    /// Gray-failure severity values (health factors in (0, 1); smaller =
+    /// more severe). Each value gives the cell a degradation generator
+    /// whose drawn factor is pinned to exactly that severity
+    /// ([`crate::fault::DegradeSpec::with_severity`]) — overriding the
+    /// base degradation spec's factor range if one exists, otherwise a
+    /// default generator. The base's other fault knobs are kept.
+    pub degrades: Vec<f64>,
     pub seeds: Vec<u64>,
 }
 
@@ -142,6 +149,7 @@ impl Experiment {
             priorities: Vec::new(),
             oversubs: Vec::new(),
             mtbfs: Vec::new(),
+            degrades: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -206,6 +214,20 @@ impl Experiment {
                 )));
             }
         }
+        // `None` = keep the base degradation spec; `Some(x)` = generator
+        // pinned to severity x.
+        let degrades: Vec<Option<f64>> = if self.degrades.is_empty() {
+            vec![None]
+        } else {
+            self.degrades.iter().map(|&x| Some(x)).collect()
+        };
+        for &x in &self.degrades {
+            if !x.is_finite() || x <= 0.0 || x >= 1.0 {
+                return Err(Error::msg(format!(
+                    "degrade axis entries are health factors and must lie in (0, 1), got {x}"
+                )));
+            }
+        }
         for p in &placers {
             registry::make_placer(p, 1, 0, usize::MAX)?;
         }
@@ -224,6 +246,7 @@ impl Experiment {
             * priorities.len()
             * oversubs.len()
             * mtbfs.len()
+            * degrades.len()
             * seeds.len();
         // Observer sinks are per-run files; every grid cell would clobber
         // the same paths. A degenerate single-cell grid is fine.
@@ -240,6 +263,7 @@ impl Experiment {
                     for &priority in &priorities {
                         for &oversub in &oversubs {
                             for &mtbf in &mtbfs {
+                              for &degrade in &degrades {
                                 for &seed in &seeds {
                                     let mut s = Scenario {
                                         placer: placer.clone(),
@@ -272,8 +296,22 @@ impl Experiment {
                                         // oversub axis.
                                         s.name = format!("{}@mtbf{m}", s.name);
                                     }
+                                    if let Some(x) = degrade {
+                                        let mut f = s.faults.take().unwrap_or_default();
+                                        f.degraded = Some(match f.degraded {
+                                            Some(d) => crate::fault::DegradeSpec {
+                                                factor_min: x,
+                                                factor_max: x,
+                                                ..d
+                                            },
+                                            None => crate::fault::DegradeSpec::with_severity(x),
+                                        });
+                                        s.faults = Some(f);
+                                        s.name = format!("{}@deg{x}", s.name);
+                                    }
                                     out.push(s);
                                 }
+                              }
                             }
                         }
                     }
@@ -372,6 +410,12 @@ impl Experiment {
             axes = axes
                 .set("mtbf", Json::Arr(self.mtbfs.iter().map(|&m| Json::from(m)).collect()));
         }
+        if !self.degrades.is_empty() {
+            axes = axes.set(
+                "degrade",
+                Json::Arr(self.degrades.iter().map(|&x| Json::from(x)).collect()),
+            );
+        }
         axes = axes.set("seed", Json::Arr(self.seeds.iter().map(|&s| Json::from(s)).collect()));
         Json::obj().set("base", self.base.to_json()).set("axes", axes)
     }
@@ -392,11 +436,12 @@ impl Experiment {
             for (key, _) in entries {
                 if !matches!(
                     key.as_str(),
-                    "placer" | "kappa" | "policy" | "priority" | "oversub" | "mtbf" | "seed"
+                    "placer" | "kappa" | "policy" | "priority" | "oversub" | "mtbf" | "degrade"
+                        | "seed"
                 ) {
                     return Err(Error::msg(format!(
                         "unknown experiment axis '{key}' \
-                         (placer|kappa|policy|priority|oversub|mtbf|seed)"
+                         (placer|kappa|policy|priority|oversub|mtbf|degrade|seed)"
                     )));
                 }
             }
@@ -444,6 +489,14 @@ impl Experiment {
                 .ok_or_else(|| Error::msg("axis 'mtbf' must be an array"))?
                 .iter()
                 .map(|x| x.as_f64().ok_or_else(|| Error::msg("mtbf entries must be numbers")))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(a) = axes.get("degrade") {
+            exp.degrades = a
+                .as_arr()
+                .ok_or_else(|| Error::msg("axis 'degrade' must be an array"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| Error::msg("degrade entries must be numbers")))
                 .collect::<Result<_>>()?;
         }
         if let Some(a) = axes.get("seed") {

@@ -6,15 +6,18 @@
 
 use crate::model::CommModel;
 use crate::placement::{
-    FirstFitPlacer, ListSchedulingPlacer, LwfPlacer, Placer, RackLwfPlacer, RandomPlacer,
+    FirstFitPlacer, HealthAwarePlacer, ListSchedulingPlacer, LwfPlacer, Placer, RackLwfPlacer,
+    RandomPlacer,
 };
 use crate::sched::{AdaDual, CommPolicy, SrsfCap};
 use crate::util::error::{Error, Result};
 
 /// Canonical placer names: the paper's Table IV four, then our
 /// rack-locality extension (which needs a racked `net` topology to
-/// differ from LWF — on a flat fabric it degenerates to LWF exactly).
-pub const PLACERS: [&str; 5] = ["rand", "ff", "ls", "lwf", "lwf-rack"];
+/// differ from LWF — on a flat fabric it degenerates to LWF exactly),
+/// then the gray-failure-aware placer (ranks GPUs by live + EWMA device
+/// health; degenerates to LS on a healthy fleet).
+pub const PLACERS: [&str; 6] = ["rand", "ff", "ls", "lwf", "lwf-rack", "health"];
 
 /// The paper's Table IV placer axis (what `Experiment::paper_grid` and
 /// the committed `scenarios/paper_grid.json` sweep).
@@ -36,6 +39,7 @@ pub fn canonical_placer(name: &str) -> Option<&'static str> {
         "ls" | "LS" | "list-scheduling" => Some("ls"),
         "lwf" | "LWF" | "LWF-k" => Some("lwf"),
         "lwf-rack" | "LWF-rack" | "lwf_rack" | "rack" => Some("lwf-rack"),
+        "health" | "HEALTH" | "health-aware" => Some("health"),
         _ => None,
     }
 }
@@ -68,6 +72,7 @@ pub fn make_placer(
         Some("ls") => Ok(Box::new(ListSchedulingPlacer)),
         Some("lwf") => Ok(Box::new(LwfPlacer::new(kappa))),
         Some("lwf-rack") => Ok(Box::new(RackLwfPlacer::new(kappa, rack_size))),
+        Some("health") => Ok(Box::new(HealthAwarePlacer::new())),
         _ => Err(unknown("placer", name, &PLACERS)),
     }
 }
@@ -153,6 +158,7 @@ mod tests {
 
     #[test]
     fn aliases_resolve_to_canonical() {
+        assert_eq!(canonical_placer("health-aware"), Some("health"));
         assert_eq!(canonical_placer("LWF-k"), Some("lwf"));
         assert_eq!(canonical_placer("RAND"), Some("rand"));
         assert_eq!(canonical_placer("rack"), Some("lwf-rack"));

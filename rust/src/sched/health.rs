@@ -1,0 +1,212 @@
+//! Failure-aware scheduling primitives (docs/EXPERIMENTS.md §Faults):
+//! the deterministic, side-effect-free pieces the engine and the
+//! health-aware placer compose under gray failures.
+//!
+//! * [`backoff_delay`] — capped exponential restart backoff: a job's
+//!   n-th preemption waits `min(cap, base * 2^(n-1))` seconds before
+//!   requeueing. Pure arithmetic on (base, cap, n), so the schedule is
+//!   reproducible and the delay sequence is monotone non-decreasing in n
+//!   until it saturates at the cap; a fresh placement resets n.
+//! * [`Blacklist`] — sliding-window failure counting per device: after
+//!   `k` failures within `window_s`, the device is excluded until the
+//!   window drains. The expiry instant is closed-form (k-th most recent
+//!   failure + window), so the engine can schedule the un-blacklist as a
+//!   plain timeline event.
+//! * [`HealthScore`] — per-device EWMA of observed health factors. The
+//!   health-aware placer feeds it the live [`HealthView`] factors each
+//!   decision and ranks candidate GPUs by blended history, so a device
+//!   that keeps flapping scores worse than one that just recovered.
+//!
+//! [`HealthView`]: crate::fault::HealthView
+
+/// Capped exponential backoff for the `n`-th restart (n >= 1): 0 for
+/// n = 0 (never preempted), else `min(cap, base * 2^(n-1))`. The shift
+/// saturates at 2^63 before the cap applies, keeping the arithmetic
+/// finite for any restart count.
+pub fn backoff_delay(base_s: f64, cap_s: f64, restarts: u64) -> f64 {
+    if restarts == 0 || base_s <= 0.0 {
+        return 0.0;
+    }
+    let pow = restarts.saturating_sub(1).min(63);
+    let delay = base_s * (1u64 << pow) as f64;
+    if delay > cap_s { cap_s } else { delay }
+}
+
+/// Sliding-window failure counter with closed-form expiry. One instance
+/// covers one device class (the engine keeps one sized to its GPU count).
+#[derive(Clone, Debug)]
+pub struct Blacklist {
+    k: usize,
+    window_s: f64,
+    /// Failure timestamps per device, ascending; pruned lazily to the
+    /// window on every touch so memory stays O(k) per device.
+    times: Vec<Vec<f64>>,
+    active: Vec<bool>,
+}
+
+impl Blacklist {
+    /// `k` must be >= 1 (0 means "blacklisting off" and the engine never
+    /// constructs a Blacklist for it); `window_s` must be positive.
+    pub fn new(n_devices: usize, k: usize, window_s: f64) -> Blacklist {
+        Blacklist {
+            k: k.max(1),
+            window_s,
+            times: vec![Vec::new(); n_devices],
+            active: vec![false; n_devices],
+        }
+    }
+
+    fn prune(&mut self, dev: usize, now: f64) {
+        let cutoff = now - self.window_s;
+        let drop = self.times[dev].iter().take_while(|&&t| t <= cutoff).count();
+        self.times[dev].drain(..drop);
+    }
+
+    /// Record a failure of `dev` at `now`.
+    pub fn record_failure(&mut self, dev: usize, now: f64) {
+        self.prune(dev, now);
+        self.times[dev].push(now);
+    }
+
+    /// Number of failures of `dev` still inside the window at `now`.
+    pub fn count(&mut self, dev: usize, now: f64) -> usize {
+        self.prune(dev, now);
+        self.times[dev].len()
+    }
+
+    /// Whether the window currently holds >= k failures (the blacklist
+    /// condition), independent of the `active` marker.
+    pub fn over_threshold(&mut self, dev: usize, now: f64) -> bool {
+        self.count(dev, now) >= self.k
+    }
+
+    /// The instant the in-window count drops below k if no further
+    /// failures occur: the k-th most recent failure leaves the window.
+    /// Only meaningful while `over_threshold`.
+    pub fn expiry(&mut self, dev: usize, now: f64) -> f64 {
+        self.prune(dev, now);
+        let n = self.times[dev].len();
+        debug_assert!(n >= self.k, "expiry queried below threshold");
+        self.times[dev][n - self.k] + self.window_s
+    }
+
+    /// The engine's marker for "this device is currently excluded from
+    /// placement" — set/cleared by the engine alongside its memory hold.
+    pub fn is_active(&self, dev: usize) -> bool {
+        self.active[dev]
+    }
+
+    pub fn set_active(&mut self, dev: usize, on: bool) {
+        self.active[dev] = on;
+    }
+}
+
+/// Per-device exponentially-weighted moving average of health factors:
+/// `score = alpha * sample + (1 - alpha) * score`, seeded at 1.0 (assume
+/// healthy until observed otherwise). Scores live in [0, 1] as long as
+/// samples do.
+#[derive(Clone, Debug)]
+pub struct HealthScore {
+    alpha: f64,
+    gpu: Vec<f64>,
+    link: Vec<f64>,
+}
+
+impl HealthScore {
+    pub const DEFAULT_ALPHA: f64 = 0.3;
+
+    pub fn new(alpha: f64) -> HealthScore {
+        HealthScore { alpha, gpu: Vec::new(), link: Vec::new() }
+    }
+
+    fn blend(alpha: f64, score: &mut f64, sample: f64) {
+        *score = alpha * sample + (1.0 - alpha) * *score;
+    }
+
+    /// Fold one observation of every device's current factor into the
+    /// running scores, growing the vectors on first sight of a device.
+    pub fn observe(&mut self, gpu_factors: &[f64], link_factors: &[f64]) {
+        self.gpu.resize(gpu_factors.len().max(self.gpu.len()), 1.0);
+        self.link.resize(link_factors.len().max(self.link.len()), 1.0);
+        for (score, &f) in self.gpu.iter_mut().zip(gpu_factors) {
+            Self::blend(self.alpha, score, f);
+        }
+        for (score, &f) in self.link.iter_mut().zip(link_factors) {
+            Self::blend(self.alpha, score, f);
+        }
+    }
+
+    /// Blended history for a GPU; 1.0 for a device never observed.
+    pub fn gpu(&self, g: usize) -> f64 {
+        self.gpu.get(g).copied().unwrap_or(1.0)
+    }
+
+    /// Blended history for a link; 1.0 for a link never observed.
+    pub fn link(&self, l: usize) -> f64 {
+        self.link.get(l).copied().unwrap_or(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_monotone_capped_and_resets() {
+        let base = 2.0;
+        let cap = 50.0;
+        assert_eq!(backoff_delay(base, cap, 0), 0.0, "never-preempted job waits nothing");
+        let delays: Vec<f64> = (1..12).map(|n| backoff_delay(base, cap, n)).collect();
+        assert_eq!(&delays[..5], &[2.0, 4.0, 8.0, 16.0, 32.0]);
+        assert!(delays.windows(2).all(|w| w[0] <= w[1]), "monotone: {delays:?}");
+        assert!(delays[5..].iter().all(|&d| d == cap), "saturates at cap: {delays:?}");
+        // "Reset" is the caller passing restarts = 1 again after a clean
+        // stretch: the delay returns to the base.
+        assert_eq!(backoff_delay(base, cap, 1), 2.0);
+        // Off switch and overflow safety.
+        assert_eq!(backoff_delay(0.0, cap, 9), 0.0);
+        assert_eq!(backoff_delay(base, cap, u64::MAX), cap);
+    }
+
+    #[test]
+    fn blacklist_window_counts_and_expires() {
+        let mut bl = Blacklist::new(2, 3, 10.0);
+        bl.record_failure(0, 1.0);
+        bl.record_failure(0, 4.0);
+        assert!(!bl.over_threshold(0, 4.0));
+        bl.record_failure(0, 6.0);
+        assert!(bl.over_threshold(0, 6.0));
+        // k-th most recent failure is at t=1; it leaves the window at 11.
+        assert_eq!(bl.expiry(0, 6.0), 11.0);
+        // At t=11 the count is 2 again (failure at t=1 aged out).
+        assert!(!bl.over_threshold(0, 11.0));
+        assert_eq!(bl.count(0, 11.0), 2);
+        // A later failure re-arms with a later expiry.
+        bl.record_failure(0, 12.0);
+        assert!(bl.over_threshold(0, 12.0));
+        assert_eq!(bl.expiry(0, 12.0), 14.0, "k-th most recent is now t=4");
+        // Device 1 is independent.
+        assert!(!bl.over_threshold(1, 12.0));
+        // Active marker is engine-owned state.
+        assert!(!bl.is_active(0));
+        bl.set_active(0, true);
+        assert!(bl.is_active(0));
+    }
+
+    #[test]
+    fn health_score_blends_toward_observations() {
+        let mut hs = HealthScore::new(0.5);
+        assert_eq!(hs.gpu(0), 1.0, "unseen devices assumed healthy");
+        hs.observe(&[1.0, 0.0], &[0.5]);
+        assert_eq!(hs.gpu(0), 1.0);
+        assert_eq!(hs.gpu(1), 0.5);
+        assert_eq!(hs.link(0), 0.75);
+        hs.observe(&[1.0, 0.0], &[0.5]);
+        assert_eq!(hs.gpu(1), 0.25, "repeated failure keeps dragging the score down");
+        assert_eq!(hs.link(0), 0.625);
+        // Recovery pulls it back up, but history lingers.
+        hs.observe(&[1.0, 1.0], &[1.0]);
+        assert_eq!(hs.gpu(1), 0.625);
+        assert!(hs.gpu(1) < hs.gpu(0), "flapping device scores below steady one");
+    }
+}

@@ -14,6 +14,7 @@
 //! `two_tasks` contains a continuous-time micro-simulator of Problem 1
 //! used by the property tests to verify Theorems 1–2 against brute force.
 
+pub mod health;
 pub mod two_tasks;
 
 use crate::model::CommModel;

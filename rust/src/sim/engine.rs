@@ -9,6 +9,7 @@ use crate::fault::{FaultPlan, HealthView, PrimFault};
 use crate::model::CommModel;
 use crate::net::{links_intersect, LinkId, LinkLists, Topology, TopologySpec};
 use crate::placement::Placer;
+use crate::sched::health::{backoff_delay, Blacklist};
 use crate::sched::{srsf_cmp, Admission, CommPolicy, JobQueue, NetView};
 use crate::source::JobSource;
 use crate::trace::JobSpec;
@@ -197,6 +198,12 @@ pub struct SimResult {
     pub clean_admissions: u64,
     /// Highest contention level any task experienced.
     pub max_contention: usize,
+    /// Fault-induced preemptions over the run.
+    pub preempted: u64,
+    /// Restart commits (a preempted job re-placed and resumed).
+    pub restarted: u64,
+    /// Iterations of progress rolled back across all preemptions.
+    pub lost_iters: u64,
     pub events: Vec<EventLog>,
 }
 
@@ -263,6 +270,16 @@ enum Ev {
     /// Epoch-stamped like `ComputeDone`: a second preemption during the
     /// warmup strands this event as stale.
     Warmup { job: usize, epoch: u32 },
+    /// A preempted job's restart backoff elapsed: re-queue it for
+    /// placement. Epoch-stamped defensively — a job waiting out its
+    /// backoff holds no GPUs, so nothing can preempt it and bump the
+    /// epoch; the stamp documents and checks that invariant. Never
+    /// pushed while `faults.backoff_base_s == 0` (the default).
+    Retry { job: usize, epoch: u32 },
+    /// A blacklisted GPU's failure window drained: release the memory
+    /// hold and let placements land on it again (see `on_unblacklist`).
+    /// Never pushed while `faults.blacklist_k == 0` (the default).
+    Unblacklist { gpu: GpuId },
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -437,6 +454,12 @@ struct GpuRt {
     /// without scanning the heap.
     running: usize,
     ready: Vec<(usize, Phase)>, // compute-ready (job, phase) on this GPU
+    /// Predicted completion of the in-flight task (meaningful only while
+    /// `busy`) — lets a gray-failure slowdown rebase the remaining work
+    /// in closed form without scanning the heap.
+    done_at: f64,
+    /// Phase of the in-flight task (meaningful only while `busy`).
+    phase: Phase,
 }
 
 /// Run one simulation: `jobs` through `placer` + `policy` on
@@ -907,6 +930,15 @@ pub struct SimState {
     health: HealthView,
     /// Free memory synthetically held per down GPU (restored at recovery).
     health_hold: Vec<f64>,
+    /// Sliding-window failure blacklist over GPUs. `None` while
+    /// `faults.blacklist_k == 0` (the default): the recovery path takes
+    /// its original branch untouched.
+    blacklist: Option<Blacklist>,
+    /// The compiled fault timeline contains at least one `GpuSlow`:
+    /// placement commits must derate compute durations by the chosen
+    /// GPUs' health factors. False (the default) skips that work, so
+    /// degradation-free runs stay bit-identical by construction.
+    has_gpu_degrade: bool,
     /// Next unprocessed entry of `cfg.faults.events`.
     fault_idx: usize,
     /// Deferred engine work, popped LIFO by `advance` (see [`Op`]).
@@ -982,7 +1014,13 @@ impl SimState {
             topo,
             cluster,
             gpus: (0..cfg.cluster.n_gpus())
-                .map(|_| GpuRt { busy: false, running: usize::MAX, ready: Vec::new() })
+                .map(|_| GpuRt {
+                    busy: false,
+                    running: usize::MAX,
+                    ready: Vec::new(),
+                    done_at: 0.0,
+                    phase: Phase::Fwd,
+                })
                 .collect(),
             heap,
             seq: jobs.len() as u64,
@@ -1018,6 +1056,18 @@ impl SimState {
             last_arrival: f64::NEG_INFINITY,
             health: HealthView::new(cfg.cluster.n_gpus(), n_links),
             health_hold: vec![0.0; cfg.cluster.n_gpus()],
+            blacklist: (cfg.faults.blacklist_k > 0).then(|| {
+                Blacklist::new(
+                    cfg.cluster.n_gpus(),
+                    cfg.faults.blacklist_k,
+                    cfg.faults.blacklist_window_s,
+                )
+            }),
+            has_gpu_degrade: cfg
+                .faults
+                .events
+                .iter()
+                .any(|&(_, f)| matches!(f, PrimFault::GpuSlow(..))),
             fault_idx: 0,
             ops: Vec::new(),
             paused: None,
@@ -1308,6 +1358,25 @@ impl SimState {
                     // start (it may reach the coalescing probe).
                     self.ops.push(Op::StartIteration { t, job });
                 }
+                Ev::Retry { job, epoch } => {
+                    if self.jobs[job].run_epoch != epoch {
+                        // A job waiting out its backoff holds no GPUs, so
+                        // nothing should bump its epoch.
+                        debug_assert!(false, "stale backoff retry for job {job}");
+                        continue;
+                    }
+                    let key = self.queue_key(job);
+                    self.queue.insert(key, job);
+                    // The job sat out release generations; mark it
+                    // always-eligible so the next pass consults a placer.
+                    self.place_stamp[job] = u64::MAX;
+                    self.queue_eligible += 1;
+                    self.need_place = true;
+                    self.ops.push(Op::PlaceIfNeeded { t, interrupter: None });
+                }
+                Ev::Unblacklist { gpu } => {
+                    self.on_unblacklist(t, gpu, obs);
+                }
             }
             self.compact_pending = true;
         }
@@ -1425,9 +1494,11 @@ impl SimState {
         policy: &dyn CommPolicy,
     ) -> Action {
         match *d {
-            DecisionPoint::Place { job, .. } => {
-                Action::Place(placer.place(&self.jobs[job].spec, &self.cluster))
-            }
+            DecisionPoint::Place { job, .. } => Action::Place(placer.place_with_health(
+                &self.jobs[job].spec,
+                &self.cluster,
+                &self.health,
+            )),
             DecisionPoint::Admit { t, job } => {
                 let msg = self.jobs[job].spec.message_bytes();
                 let remaining = |c: usize| self.residual_at(c, t).1;
@@ -1542,6 +1613,12 @@ impl SimState {
     /// Links currently up.
     pub fn links_up(&self) -> usize {
         self.health.n_links_up()
+    }
+
+    /// Mean gray-failure health factor over every GPU and link
+    /// (1.0 = fully healthy fleet; a down device contributes 0.0).
+    pub fn mean_health(&self) -> f64 {
+        self.health.mean_health()
     }
 
     /// Free-GPU counts per registered memory demand: `(mem_bytes, count)`
@@ -1743,6 +1820,14 @@ impl SimState {
             j.t_comm_free = t_comm_free;
             j.placed_seq = self.placements;
         }
+        if self.has_gpu_degrade {
+            // The chosen GPUs may be slowed right now — or the job may
+            // carry durations scaled for its *previous* placement's
+            // factors: re-derive them from the live health view. No
+            // in-flight compute exists at commit time, so this only
+            // rewrites `t_fwd`/`t_bwd`.
+            self.rebase_job_speed(t, job);
+        }
         if multi {
             self.running_multi_pos[job] = self.running_multi.len();
             self.running_multi.push(job);
@@ -1852,10 +1937,13 @@ impl SimState {
             Phase::Fwd => self.jobs[job].t_fwd,
             Phase::Bwd => self.jobs[job].t_bwd,
         };
+        let done_at = t + dur;
         self.gpus[gpu].busy = true;
         self.gpus[gpu].running = job;
+        self.gpus[gpu].done_at = done_at;
+        self.gpus[gpu].phase = phase;
         emit(&mut *obs, SimEvent::ComputeStarted { t, gpu, job, phase, dur });
-        self.push_compute(t + dur, gpu, job, phase);
+        self.push_compute(done_at, gpu, job, phase);
     }
 
     fn on_compute_done(&mut self, t: f64, gpu: GpuId, job: usize, phase: Phase) {
@@ -1950,6 +2038,10 @@ impl SimState {
             PrimFault::GpuRecover(g) => self.on_gpu_recovered(t, g, obs),
             PrimFault::LinkFail(l) => self.on_link_failed(t, l, obs),
             PrimFault::LinkRecover(l) => self.on_link_recovered(t, l, obs),
+            PrimFault::GpuSlow(g, f) => self.on_gpu_slowed(t, g, f, obs),
+            PrimFault::GpuRestore(g) => self.on_gpu_restored(t, g, obs),
+            PrimFault::LinkDegrade(l, f) => self.on_link_degraded(t, l, f, obs),
+            PrimFault::LinkRestore(l) => self.on_link_restored(t, l, obs),
         }
     }
 
@@ -1966,6 +2058,9 @@ impl SimState {
         self.reconcile_all_ffs(t, None, obs);
         self.health.set_gpu(g, false);
         emit(&mut *obs, SimEvent::GpuFailed { t, gpu: g });
+        if let Some(bl) = &mut self.blacklist {
+            bl.record_failure(g, t);
+        }
         let victims: Vec<usize> =
             (0..self.jobs.len()).filter(|&j| self.jobs[j].gpus.contains(&g)).collect();
         for job in victims {
@@ -1973,27 +2068,95 @@ impl SimState {
         }
         // Hold after preemption: the victims' releases restored their
         // memory to `g` first, so the hold freezes the whole capacity.
+        // `+=`: a blacklisted GPU (up, hold kept) can fail again, and
+        // overwriting would leak the original hold.
         let before = self.cluster.free_mem(g);
         let held = self.cluster.hold_all(g);
-        self.health_hold[g] = held;
+        self.health_hold[g] += held;
         self.capacity.record(before, self.cluster.free_mem(g));
     }
 
     /// A GPU came back: restore its held memory and let queued jobs try
-    /// to place on it.
+    /// to place on it — unless its failure window holds `blacklist_k`
+    /// failures, in which case the device comes back *up* but stays
+    /// excluded (the memory hold is kept) until the window drains.
     fn on_gpu_recovered(&mut self, t: f64, g: GpuId, obs: &mut [&mut dyn SimObserver]) {
         if self.health.gpu_up(g) {
             return;
         }
         self.health.set_gpu(g, true);
+        let (was_active, until) = match &mut self.blacklist {
+            Some(bl) => {
+                let active = bl.is_active(g);
+                let until =
+                    if bl.over_threshold(g, t) { Some(bl.expiry(g, t)) } else { None };
+                (active, until)
+            }
+            None => (false, None),
+        };
+        if let Some(until) = until {
+            if let Some(bl) = &mut self.blacklist {
+                bl.set_active(g, true);
+            }
+            emit(&mut *obs, SimEvent::GpuRecovered { t, gpu: g });
+            if !was_active {
+                emit(&mut *obs, SimEvent::GpuBlacklisted { t, gpu: g, until });
+            }
+            self.push(until, Ev::Unblacklist { gpu: g });
+            return;
+        }
         let before = self.cluster.free_mem(g);
         self.cluster.release_held(g, self.health_hold[g]);
         self.health_hold[g] = 0.0;
         self.capacity.record(before, self.cluster.free_mem(g));
         emit(&mut *obs, SimEvent::GpuRecovered { t, gpu: g });
+        if was_active {
+            // Window drained while the GPU was down: clear the marker.
+            if let Some(bl) = &mut self.blacklist {
+                bl.set_active(g, false);
+            }
+            emit(&mut *obs, SimEvent::GpuUnblacklisted { t, gpu: g });
+        }
         self.release_gen += 1;
         self.queue_eligible = self.queue.len();
         self.need_place = true;
+    }
+
+    /// A blacklisted GPU's window expiry fired: re-check (the window may
+    /// have been re-armed by later failures) and, if it really drained,
+    /// release the hold and reopen the device for placement.
+    fn on_unblacklist(&mut self, t: f64, g: GpuId, obs: &mut [&mut dyn SimObserver]) {
+        let rearmed = match &mut self.blacklist {
+            Some(bl) if bl.is_active(g) => {
+                if bl.over_threshold(g, t) {
+                    Some(bl.expiry(g, t))
+                } else {
+                    None
+                }
+            }
+            _ => return, // stale: already released (or blacklisting off)
+        };
+        if !self.health.gpu_up(g) {
+            // Failed again while blacklisted: the next recovery re-arms
+            // the expiry; this event has nothing to release.
+            return;
+        }
+        if let Some(until) = rearmed {
+            self.push(until, Ev::Unblacklist { gpu: g });
+            return;
+        }
+        if let Some(bl) = &mut self.blacklist {
+            bl.set_active(g, false);
+        }
+        let before = self.cluster.free_mem(g);
+        self.cluster.release_held(g, self.health_hold[g]);
+        self.health_hold[g] = 0.0;
+        self.capacity.record(before, self.cluster.free_mem(g));
+        emit(&mut *obs, SimEvent::GpuUnblacklisted { t, gpu: g });
+        self.release_gen += 1;
+        self.queue_eligible = self.queue.len();
+        self.need_place = true;
+        self.ops.push(Op::PlaceIfNeeded { t, interrupter: None });
     }
 
     /// Preempt a running job with checkpoint/restart semantics: rewind to
@@ -2069,8 +2232,23 @@ impl SimState {
             j.pending_restart = true;
             j.restarts += 1;
         }
-        let key = self.queue_key(job);
-        self.queue.insert(key, job);
+        let backoff = backoff_delay(
+            self.cfg.faults.backoff_base_s,
+            self.cfg.faults.backoff_cap_s,
+            self.jobs[job].restarts,
+        );
+        if backoff > 0.0 {
+            // Capped exponential restart backoff: the job sits out the
+            // delay before re-entering the queue (`Ev::Retry` re-inserts
+            // it). A zero base — the default — takes the immediate path.
+            let until = t + backoff;
+            let epoch = self.jobs[job].run_epoch;
+            self.push(until, Ev::Retry { job, epoch });
+            emit(&mut *obs, SimEvent::RestartDeferred { t, job, until });
+        } else {
+            let key = self.queue_key(job);
+            self.queue.insert(key, job);
+        }
         // Memory freed: every queued job is worth a fresh attempt.
         self.release_gen += 1;
         self.queue_eligible = self.queue.len();
@@ -2186,6 +2364,160 @@ impl SimState {
         self.ops.push(Op::AdmitPass { t });
     }
 
+    // -- gray failures (degraded performance; docs/EXPERIMENTS.md §Faults) ----
+
+    /// A link degraded: every byte now takes `1/factor` as long to move.
+    /// In-flight transfers crossing it are repriced: residuals fixed at
+    /// `t` in closed form, then re-predicted at the derated bottleneck
+    /// price. The repricing is *forced* — even `AtAdmission`-locked tasks
+    /// reprice, because the physical link changed under them, which is
+    /// precisely the case the admission-time lock does not model.
+    fn on_link_degraded(&mut self, t: f64, l: LinkId, f: f64, obs: &mut [&mut dyn SimObserver]) {
+        if !self.health.link_up(l) {
+            return; // a down link has no rate to derate
+        }
+        if self.health.link_factor(l) == f {
+            return; // idempotent under timeline repeats
+        }
+        // Macro-events replayed their comm at the old price: dissolve
+        // them before it changes.
+        self.reconcile_all_ffs(t, None, obs);
+        self.health.set_link_factor(l, f);
+        emit(&mut *obs, SimEvent::LinkDegraded { t, link: l, factor: f });
+        self.reprice_link(t, l);
+    }
+
+    /// A degraded link recovered to full health: restore the factor and
+    /// reprice survivors at the healthy rate.
+    fn on_link_restored(&mut self, t: f64, l: LinkId, obs: &mut [&mut dyn SimObserver]) {
+        if !self.health.link_up(l) || self.health.link_factor(l) == 1.0 {
+            return;
+        }
+        self.reconcile_all_ffs(t, None, obs);
+        self.health.set_link_factor(l, 1.0);
+        emit(&mut *obs, SimEvent::LinkRestored { t, link: l });
+        self.reprice_link(t, l);
+    }
+
+    /// Force-reprice every in-flight transfer crossing `l` after its
+    /// health factor changed. Frozen tasks (a *failed* link elsewhere in
+    /// their path) are skipped — `repredict_inner` leaves them to their
+    /// recovery re-anchor, which prices at the then-current factors.
+    fn reprice_link(&mut self, t: f64, l: LinkId) {
+        let ids: Vec<usize> = self.per_link.tasks(l).to_vec();
+        for id in ids {
+            self.repredict_inner(t, id, true);
+        }
+    }
+
+    /// A GPU slowed (gray failure): stretch the compute phases of every
+    /// job running on it. Restores and multi-GPU overlaps all funnel
+    /// through [`Self::rebase_job_speed`], which rebases in-flight work
+    /// in closed form.
+    fn on_gpu_slowed(&mut self, t: f64, g: GpuId, f: f64, obs: &mut [&mut dyn SimObserver]) {
+        if !self.health.gpu_up(g) {
+            return; // a down GPU has no speed to derate
+        }
+        if self.health.gpu_factor(g) == f {
+            return; // idempotent under timeline repeats
+        }
+        // Reconcile walks read `t_fwd`/`t_bwd` live: dissolve every
+        // macro-event before any duration changes under it.
+        self.reconcile_all_ffs(t, None, obs);
+        self.health.set_gpu_factor(g, f);
+        emit(&mut *obs, SimEvent::GpuSlowed { t, gpu: g, factor: f });
+        self.rebase_gpu_jobs(t, g);
+    }
+
+    /// A slowed GPU recovered to full speed.
+    fn on_gpu_restored(&mut self, t: f64, g: GpuId, obs: &mut [&mut dyn SimObserver]) {
+        if !self.health.gpu_up(g) || self.health.gpu_factor(g) == 1.0 {
+            return;
+        }
+        self.reconcile_all_ffs(t, None, obs);
+        self.health.set_gpu_factor(g, 1.0);
+        emit(&mut *obs, SimEvent::GpuRestored { t, gpu: g });
+        self.rebase_gpu_jobs(t, g);
+    }
+
+    /// Rebase every job occupying GPU `g` after its factor changed.
+    fn rebase_gpu_jobs(&mut self, t: f64, g: GpuId) {
+        let victims: Vec<usize> =
+            (0..self.jobs.len()).filter(|&j| self.jobs[j].gpus.contains(&g)).collect();
+        for job in victims {
+            self.rebase_job_speed(t, job);
+        }
+    }
+
+    /// Healthy per-phase compute durations for `job` — the exact
+    /// expressions constructor/`add_job` initialization uses, re-derived
+    /// so the healthy path stays bit-identical without storing them.
+    fn base_durations(&self, job: usize) -> (f64, f64) {
+        let spec = &self.jobs[job].spec;
+        let m = crate::model::PerfModel::for_model(spec.model);
+        let b = spec.model.spec().batch_size;
+        let peak = self.cfg.cluster.gpu_peak_gflops;
+        (m.t_fwd(b, peak), m.t_bwd(b, peak))
+    }
+
+    /// The speed factor `job`'s compute runs at: the worst health factor
+    /// over its GPUs (data-parallel phases end at the slowest worker).
+    fn job_speed_factor(&self, job: usize) -> f64 {
+        let mut f = 1.0f64;
+        for &g in &self.jobs[job].gpus {
+            let gf = self.health.gpu_factor(g);
+            if gf < f {
+                f = gf;
+            }
+        }
+        f
+    }
+
+    /// Re-derive `job`'s phase durations from the live health factors and
+    /// rebase its in-flight compute in closed form: a task that would
+    /// finish at `done_at` under the old duration has the same *fraction*
+    /// of its phase left under the new one, so the new completion is
+    /// `t + (done_at - t) * new/old`. The epoch bump strands the old
+    /// `ComputeDone` predictions exactly as a preemption does; a job with
+    /// no compute in flight (queued, warming up, or mid-All-Reduce) only
+    /// has its durations rewritten — bumping its epoch would strand a
+    /// pending `Warmup`.
+    fn rebase_job_speed(&mut self, t: f64, job: usize) {
+        let (base_fwd, base_bwd) = self.base_durations(job);
+        let f = self.job_speed_factor(job);
+        // The healthy path (f == 1.0) keeps the original expressions
+        // bit-exactly; only genuine slowdowns divide.
+        let (new_fwd, new_bwd) =
+            if f < 1.0 { (base_fwd / f, base_bwd / f) } else { (base_fwd, base_bwd) };
+        let old_fwd = self.jobs[job].t_fwd;
+        let old_bwd = self.jobs[job].t_bwd;
+        if new_fwd.to_bits() == old_fwd.to_bits() && new_bwd.to_bits() == old_bwd.to_bits() {
+            return;
+        }
+        if self.jobs[job].inflight_compute > 0 {
+            self.heap_stale += self.jobs[job].inflight_compute;
+            self.jobs[job].inflight_compute = 0;
+            self.jobs[job].run_epoch += 1;
+            let gpus = std::mem::take(&mut self.jobs[job].gpus);
+            for &g in &gpus {
+                if !(self.gpus[g].busy && self.gpus[g].running == job) {
+                    continue;
+                }
+                let phase = self.gpus[g].phase;
+                let (old_d, new_d) = match phase {
+                    Phase::Fwd => (old_fwd, new_fwd),
+                    Phase::Bwd => (old_bwd, new_bwd),
+                };
+                let done = t + (self.gpus[g].done_at - t) * (new_d / old_d);
+                self.gpus[g].done_at = done;
+                self.push_compute(done, g, job, phase);
+            }
+            self.jobs[job].gpus = gpus;
+        }
+        self.jobs[job].t_fwd = new_fwd;
+        self.jobs[job].t_bwd = new_bwd;
+    }
+
     // -- steady-state fast-forwarding -----------------------------------------
 
     /// GPU-side steadiness for `job` (docs/EXPERIMENTS.md §Perf): it has
@@ -2259,10 +2591,12 @@ impl SimState {
         let iters_left = self.jobs[job].spec.iterations - self.jobs[job].iters_done;
         let multi = self.jobs[job].multi_server;
         let (lat, per_byte) = if multi {
-            // Exactly `repredict`'s unlocked k = 1 bottleneck price.
+            // Exactly `repredict`'s unlocked k = 1 bottleneck price
+            // (health-derated like it; degradation transitions dissolve
+            // live macro-events before the factor changes).
             let mut pb = 0.0f64;
             for &l in &self.jobs[job].links {
-                let p = self.topo.link_model(l).per_byte(1);
+                let p = self.link_price(l, 1);
                 if p > pb {
                     pb = p;
                 }
@@ -2471,6 +2805,8 @@ impl SimState {
             for &g in &gpus {
                 self.gpus[g].busy = true;
                 self.gpus[g].running = job;
+                self.gpus[g].done_at = out.t1;
+                self.gpus[g].phase = Phase::Fwd;
                 emit(
                     &mut *obs,
                     SimEvent::ComputeStarted {
@@ -2489,6 +2825,8 @@ impl SimState {
             for &g in &gpus {
                 self.gpus[g].busy = true;
                 self.gpus[g].running = job;
+                self.gpus[g].done_at = out.t2;
+                self.gpus[g].phase = Phase::Bwd;
                 emit(
                     &mut *obs,
                     SimEvent::ComputeStarted {
@@ -2626,18 +2964,44 @@ impl SimState {
         links.iter().map(|&l| self.per_link.len(l)).max().unwrap_or(0)
     }
 
+    /// Eq (5) per-byte price of link `l` at occupancy `occ`, derated by
+    /// the link's gray-failure health factor: a link at factor `f` moves
+    /// bytes at `f` times its healthy rate, so the per-byte time divides
+    /// by `f`. The healthy branch executes the original pricing
+    /// expression untouched — degradation-free runs stay bit-identical
+    /// by construction.
+    fn link_price(&self, l: LinkId, occ: usize) -> f64 {
+        let p = self.topo.link_model(l).per_byte(occ);
+        let f = self.health.link_factor(l);
+        if f < 1.0 {
+            p / f
+        } else {
+            p
+        }
+    }
+
     /// Re-derive k, the bottleneck per-byte price and the predicted
     /// completion of comm task `id` at time t, re-anchoring its residual
     /// so the new price applies strictly forward. Under AtAdmission
     /// pricing, k and the price are computed only while the task has not
     /// started draining (i.e. at admission); afterwards they stay locked.
     fn repredict(&mut self, t: f64, id: usize) {
+        self.repredict_inner(t, id, false);
+    }
+
+    /// [`Self::repredict`] with an escape hatch: `force_unlock` reprices
+    /// even an `AtAdmission`-locked task — used only by gray-failure
+    /// transitions (`reprice_link`), where the physical link rate changed
+    /// underneath the locked price. The task re-locks at the new price.
+    fn repredict_inner(&mut self, t: f64, id: usize, force_unlock: bool) {
         if self.comms[id].paused_links > 0 {
             // Frozen by a link failure: no prediction until recovery
             // re-anchors it (refresh_links may sweep past a frozen task).
             return;
         }
-        let locked = self.cfg.repricing == Repricing::AtAdmission && self.comms[id].repriced;
+        let locked = !force_unlock
+            && self.cfg.repricing == Repricing::AtAdmission
+            && self.comms[id].repriced;
         let (k, per_byte) = if locked {
             (self.comms[id].k, self.comms[id].per_byte)
         } else {
@@ -2653,7 +3017,7 @@ impl SimState {
                 let l = self.comms[id].links[i];
                 let occ = self.per_link.len(l).max(1);
                 k = k.max(occ);
-                let p = self.topo.link_model(l).per_byte(occ);
+                let p = self.link_price(l, occ);
                 if p > pb {
                     pb = p;
                 }

@@ -146,6 +146,24 @@ pub enum SimEvent<'a> {
     /// Preemption rolled the job back to its last checkpoint boundary:
     /// `iters` completed iterations survive.
     CheckpointTaken { t: f64, job: usize, iters: u64 },
+    /// A GPU entered gray-failure slowdown: its compute runs at `factor`
+    /// times healthy speed until the matching `GpuRestored`.
+    GpuSlowed { t: f64, gpu: GpuId, factor: f64 },
+    /// A slowed GPU recovered to full speed.
+    GpuRestored { t: f64, gpu: GpuId },
+    /// A link entered gray-failure degradation: it moves bytes at
+    /// `factor` times its healthy rate until the matching `LinkRestored`.
+    LinkDegraded { t: f64, link: LinkId, factor: f64 },
+    /// A degraded link recovered to its healthy rate.
+    LinkRestored { t: f64, link: LinkId },
+    /// A recovered GPU was kept out of placement (its failure window
+    /// holds `blacklist_k` failures) until `until`.
+    GpuBlacklisted { t: f64, gpu: GpuId, until: f64 },
+    /// A blacklisted GPU's failure window drained; it is placeable again.
+    GpuUnblacklisted { t: f64, gpu: GpuId },
+    /// A preempted job's re-queue was deferred to `until` by restart
+    /// backoff.
+    RestartDeferred { t: f64, job: usize, until: f64 },
 }
 
 impl<'a> SimEvent<'a> {
@@ -167,7 +185,14 @@ impl<'a> SimEvent<'a> {
             | SimEvent::LinkRecovered { t, .. }
             | SimEvent::JobPreempted { t, .. }
             | SimEvent::JobRestarted { t, .. }
-            | SimEvent::CheckpointTaken { t, .. } => t,
+            | SimEvent::CheckpointTaken { t, .. }
+            | SimEvent::GpuSlowed { t, .. }
+            | SimEvent::GpuRestored { t, .. }
+            | SimEvent::LinkDegraded { t, .. }
+            | SimEvent::LinkRestored { t, .. }
+            | SimEvent::GpuBlacklisted { t, .. }
+            | SimEvent::GpuUnblacklisted { t, .. }
+            | SimEvent::RestartDeferred { t, .. } => t,
             SimEvent::IterationsCoalesced { start_t, .. } => start_t,
         }
     }
@@ -192,6 +217,13 @@ impl<'a> SimEvent<'a> {
             SimEvent::JobPreempted { .. } => "job-preempted",
             SimEvent::JobRestarted { .. } => "job-restarted",
             SimEvent::CheckpointTaken { .. } => "checkpoint-taken",
+            SimEvent::GpuSlowed { .. } => "gpu-slowed",
+            SimEvent::GpuRestored { .. } => "gpu-restored",
+            SimEvent::LinkDegraded { .. } => "link-degraded",
+            SimEvent::LinkRestored { .. } => "link-restored",
+            SimEvent::GpuBlacklisted { .. } => "gpu-blacklisted",
+            SimEvent::GpuUnblacklisted { .. } => "gpu-unblacklisted",
+            SimEvent::RestartDeferred { .. } => "restart-deferred",
         }
     }
 
@@ -272,6 +304,22 @@ impl<'a> SimEvent<'a> {
             SimEvent::CheckpointTaken { job, iters, .. } => {
                 v.set("job", job).set("iters", iters)
             }
+            SimEvent::GpuSlowed { gpu, factor, .. } => {
+                v.set("gpu", gpu).set("factor", factor)
+            }
+            SimEvent::GpuRestored { gpu, .. } | SimEvent::GpuUnblacklisted { gpu, .. } => {
+                v.set("gpu", gpu)
+            }
+            SimEvent::LinkDegraded { link, factor, .. } => {
+                v.set("link", link).set("factor", factor)
+            }
+            SimEvent::LinkRestored { link, .. } => v.set("link", link),
+            SimEvent::GpuBlacklisted { gpu, until, .. } => {
+                v.set("gpu", gpu).set("until", until)
+            }
+            SimEvent::RestartDeferred { job, until, .. } => {
+                v.set("job", job).set("until", until)
+            }
         }
     }
 }
@@ -318,6 +366,9 @@ pub struct MetricsObserver {
     contended_admissions: u64,
     clean_admissions: u64,
     max_contention: usize,
+    preempted: u64,
+    restarted: u64,
+    lost_iters: u64,
 }
 
 impl MetricsObserver {
@@ -362,6 +413,9 @@ impl MetricsObserver {
             contended_admissions: self.contended_admissions,
             clean_admissions: self.clean_admissions,
             max_contention: self.max_contention,
+            preempted: self.preempted,
+            restarted: self.restarted,
+            lost_iters: self.lost_iters,
             events: Vec::new(),
         }
     }
@@ -383,6 +437,9 @@ impl SimObserver for MetricsObserver {
         self.contended_admissions = 0;
         self.clean_admissions = 0;
         self.max_contention = 0;
+        self.preempted = 0;
+        self.restarted = 0;
+        self.lost_iters = 0;
     }
 
     fn on_event(&mut self, ev: &SimEvent<'_>) {
@@ -445,13 +502,18 @@ impl SimObserver for MetricsObserver {
                     self.max_contention = self.max_contention.max(1);
                 }
             }
-            SimEvent::JobPreempted { t, job, .. } => {
+            SimEvent::JobPreempted { t, job, lost_iters } => {
                 // The job's allocation window on these GPUs closes here;
                 // a restart opens a fresh one via its new JobPlaced.
                 for &g in &self.job_gpus[job] {
                     self.last_release[g] = self.last_release[g].max(t);
                 }
                 self.job_gpus[job] = Vec::new();
+                self.preempted += 1;
+                self.lost_iters += lost_iters;
+            }
+            SimEvent::JobRestarted { .. } => {
+                self.restarted += 1;
             }
             _ => {}
         }
@@ -550,6 +612,29 @@ impl SimObserver for LegacyLog {
             }
             SimEvent::CheckpointTaken { t, job, iters } => {
                 self.push(t, format!("checkpoint job{job} iters={iters}"));
+            }
+            // Gray-failure lines: same convention as the hard-fault ones
+            // above — absent entirely from degradation-free runs.
+            SimEvent::GpuSlowed { t, gpu, factor } => {
+                self.push(t, format!("gpu-slow gpu{gpu} factor={factor}"));
+            }
+            SimEvent::GpuRestored { t, gpu } => {
+                self.push(t, format!("gpu-restore gpu{gpu}"));
+            }
+            SimEvent::LinkDegraded { t, link, factor } => {
+                self.push(t, format!("link-degrade link{link} factor={factor}"));
+            }
+            SimEvent::LinkRestored { t, link } => {
+                self.push(t, format!("link-restore link{link}"));
+            }
+            SimEvent::GpuBlacklisted { t, gpu, until } => {
+                self.push(t, format!("blacklist gpu{gpu} until={until}"));
+            }
+            SimEvent::GpuUnblacklisted { t, gpu } => {
+                self.push(t, format!("unblacklist gpu{gpu}"));
+            }
+            SimEvent::RestartDeferred { t, job, until } => {
+                self.push(t, format!("backoff job{job} until={until}"));
             }
             _ => {}
         }
@@ -880,6 +965,18 @@ pub struct PercentilesObserver {
     arrived: u64,
     makespan: f64,
     n_events: u64,
+    /// Fault-free compute lower bound per batch job (`iterations *
+    /// (t_fwd + t_bwd)` on a healthy GPU), captured from `on_start`'s
+    /// job slice. Streaming runs pass an empty slice there, so the map
+    /// stays empty and restart inflation is elided rather than guessed.
+    compute_bound: HashMap<usize, f64>,
+    /// Restart-inflation accumulators: sums of finished jobs' JCTs and
+    /// of those same jobs' compute bounds.
+    jct_bound_sum: f64,
+    bound_sum: f64,
+    preempted: u64,
+    restarted: u64,
+    lost_iters: u64,
 }
 
 impl Default for PercentilesObserver {
@@ -897,6 +994,12 @@ impl PercentilesObserver {
             arrived: 0,
             makespan: 0.0,
             n_events: 0,
+            compute_bound: HashMap::new(),
+            jct_bound_sum: 0.0,
+            bound_sum: 0.0,
+            preempted: 0,
+            restarted: 0,
+            lost_iters: 0,
         }
     }
 
@@ -933,6 +1036,31 @@ impl PercentilesObserver {
         self.n_events
     }
 
+    /// Fault-induced preemptions observed.
+    pub fn preempted(&self) -> u64 {
+        self.preempted
+    }
+
+    /// Restart commits observed.
+    pub fn restarted(&self) -> u64 {
+        self.restarted
+    }
+
+    /// Iterations rolled back across all preemptions.
+    pub fn lost_iters(&self) -> u64 {
+        self.lost_iters
+    }
+
+    /// Mean JCT inflation over the fault-free compute bound: the ratio
+    /// Σ JCT / Σ (iterations · (t_fwd + t_bwd)) over finished jobs. 1.0
+    /// means every finished job ran at its healthy single-allocation
+    /// compute bound (no queueing, no contention, no faults); faults,
+    /// backoff and lost iterations push it up. `None` when no bounded
+    /// job finished — streaming runs (unknown horizon) always elide it.
+    pub fn restart_inflation(&self) -> Option<f64> {
+        (self.bound_sum > 0.0).then(|| self.jct_bound_sum / self.bound_sum)
+    }
+
     pub fn to_json(&self) -> Json {
         fn dist(s: StreamStats) -> Json {
             Json::obj()
@@ -944,20 +1072,38 @@ impl PercentilesObserver {
                 .set("p95", s.p95)
                 .set("p99", s.p99)
         }
-        Json::obj()
+        let mut v = Json::obj()
             .set("arrived", self.arrived)
             .set("finished", self.finished())
             .set("in_flight", self.in_flight())
             .set("makespan", self.makespan)
             .set("n_events", self.n_events)
+            .set("preempted", self.preempted)
+            .set("restarted", self.restarted)
+            .set("lost_iters", self.lost_iters)
             .set("jct", dist(self.jct_stats()))
-            .set("queue_delay", dist(self.queue_delay_stats()))
+            .set("queue_delay", dist(self.queue_delay_stats()));
+        if let Some(r) = self.restart_inflation() {
+            v = v.set("restart_inflation", r);
+        }
+        v
     }
 }
 
 impl SimObserver for PercentilesObserver {
-    fn on_start(&mut self, _cfg: &SimConfig, _jobs: &[JobSpec]) {
+    fn on_start(&mut self, cfg: &SimConfig, jobs: &[JobSpec]) {
         *self = PercentilesObserver::new();
+        // Known-horizon (batch) runs declare every job up front; record
+        // each one's healthy compute bound for the restart-inflation
+        // ratio. Streaming runs pass an empty slice — the map stays
+        // empty and the ratio is elided.
+        let peak = cfg.cluster.gpu_peak_gflops;
+        for j in jobs {
+            let m = crate::model::PerfModel::for_model(j.model);
+            let b = j.model.spec().batch_size;
+            let bound = j.iterations as f64 * (m.t_fwd(b, peak) + m.t_bwd(b, peak));
+            self.compute_bound.insert(j.id, bound);
+        }
     }
 
     fn on_event(&mut self, ev: &SimEvent<'_>) {
@@ -973,9 +1119,21 @@ impl SimObserver for PercentilesObserver {
             }
             SimEvent::JobFinished { t, job } => {
                 if let Some(a) = self.arrival.remove(&job) {
-                    self.jct.observe(t - a);
+                    let jct = t - a;
+                    self.jct.observe(jct);
+                    if let Some(bound) = self.compute_bound.remove(&job) {
+                        self.jct_bound_sum += jct;
+                        self.bound_sum += bound;
+                    }
                 }
                 self.makespan = self.makespan.max(t);
+            }
+            SimEvent::JobPreempted { lost_iters, .. } => {
+                self.preempted += 1;
+                self.lost_iters += lost_iters;
+            }
+            SimEvent::JobRestarted { .. } => {
+                self.restarted += 1;
             }
             _ => {}
         }

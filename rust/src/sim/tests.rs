@@ -6,7 +6,7 @@ use crate::sim::Repricing;
 use crate::cluster::ClusterSpec;
 use crate::model::{CommModel, DnnModel};
 use crate::net::{LinkId, TopologySpec};
-use crate::placement::{FirstFitPlacer, LwfPlacer, Placer};
+use crate::placement::{FirstFitPlacer, HealthAwarePlacer, LwfPlacer, Placer};
 use crate::sched::{AdaDual, Admission, CommPolicy, MaterializedNet, NetView, SrsfCap};
 use crate::trace::{self, JobSpec, TraceConfig};
 use crate::util::prop::prop_check;
@@ -760,6 +760,9 @@ fn gpu_utils_zero_makespan_matches_avg() {
         contended_admissions: 0,
         clean_admissions: 0,
         max_contention: 0,
+        preempted: 0,
+        restarted: 0,
+        lost_iters: 0,
         events: vec![],
     };
     assert_eq!(res.avg_gpu_util(), 0.0);
@@ -1519,6 +1522,9 @@ use crate::fault::{FaultEvent, FaultKind, FaultPlan, FaultsSpec};
 struct ChaosWatch {
     gpu_up: Vec<bool>,
     link_up: Vec<bool>,
+    gpu_factor: Vec<f64>,
+    link_factor: Vec<f64>,
+    blacklisted: Vec<bool>,
     job_gpus: Vec<Vec<usize>>,
     last_fault_t: f64,
     preemptions: u64,
@@ -1531,6 +1537,9 @@ impl ChaosWatch {
         ChaosWatch {
             gpu_up: vec![true; n_gpus],
             link_up: vec![true; n_links],
+            gpu_factor: vec![1.0; n_gpus],
+            link_factor: vec![1.0; n_links],
+            blacklisted: vec![false; n_gpus],
             job_gpus: Vec::new(),
             last_fault_t: f64::NEG_INFINITY,
             preemptions: 0,
@@ -1546,8 +1555,11 @@ impl ChaosWatch {
         self.last_fault_t = t;
     }
 
-    /// End-of-run checks for a paired timeline (every failure recovers):
-    /// all hardware back up, and fails/recoveries balanced exactly.
+    /// End-of-run checks for a paired timeline (every failure recovers,
+    /// every degradation restores): all hardware back up at full health,
+    /// and fail/recover + degrade/restore transitions balanced exactly.
+    /// Blacklists are deliberately NOT required to have drained: an
+    /// expiry past the last finish never pops off the heap.
     fn into_verdict(self) -> Result<(), String> {
         let mut bad = self.bad;
         if let Some(g) = self.gpu_up.iter().position(|&up| !up) {
@@ -1555,6 +1567,12 @@ impl ChaosWatch {
         }
         if let Some(l) = self.link_up.iter().position(|&up| !up) {
             bad.push(format!("link {l} still down after a paired timeline"));
+        }
+        if let Some(g) = self.gpu_factor.iter().position(|&f| f != 1.0) {
+            bad.push(format!("gpu {g} still degraded after a paired timeline"));
+        }
+        if let Some(l) = self.link_factor.iter().position(|&f| f != 1.0) {
+            bad.push(format!("link {l} still degraded after a paired timeline"));
         }
         if bad.is_empty() {
             Ok(())
@@ -1571,6 +1589,11 @@ impl SimObserver for ChaosWatch {
                 for &g in gpus {
                     if !self.gpu_up[g] {
                         self.bad.push(format!("job {job} placed on dead gpu {g} at t={t}"));
+                    }
+                    if self.blacklisted[g] {
+                        self.bad.push(format!(
+                            "job {job} placed on blacklisted gpu {g} at t={t}"
+                        ));
                     }
                 }
                 if self.job_gpus.len() <= job {
@@ -1626,6 +1649,62 @@ impl SimObserver for ChaosWatch {
                 }
                 self.link_up[link] = true;
             }
+            SimEvent::GpuSlowed { t, gpu, factor } => {
+                self.fault_tick(t, "gpu-slow");
+                if !(factor > 0.0 && factor < 1.0) {
+                    self.bad.push(format!("gpu {gpu} slowed by factor {factor} outside (0,1)"));
+                }
+                if !self.gpu_up[gpu] {
+                    self.bad.push(format!("gpu {gpu} slowed while hard-down"));
+                }
+                self.gpu_factor[gpu] = factor;
+            }
+            SimEvent::GpuRestored { t, gpu } => {
+                self.fault_tick(t, "gpu-restore");
+                if self.gpu_factor[gpu] >= 1.0 {
+                    self.bad.push(format!("gpu {gpu} restored while already healthy"));
+                }
+                self.gpu_factor[gpu] = 1.0;
+            }
+            SimEvent::LinkDegraded { t, link, factor } => {
+                self.fault_tick(t, "link-degrade");
+                if !(factor > 0.0 && factor < 1.0) {
+                    self.bad.push(format!(
+                        "link {link} degraded by factor {factor} outside (0,1)"
+                    ));
+                }
+                if !self.link_up[link] {
+                    self.bad.push(format!("link {link} degraded while hard-down"));
+                }
+                self.link_factor[link] = factor;
+            }
+            SimEvent::LinkRestored { t, link } => {
+                self.fault_tick(t, "link-restore");
+                if self.link_factor[link] >= 1.0 {
+                    self.bad.push(format!("link {link} restored while already healthy"));
+                }
+                self.link_factor[link] = 1.0;
+            }
+            SimEvent::GpuBlacklisted { t, gpu, until } => {
+                self.fault_tick(t, "blacklist");
+                if until <= t {
+                    self.bad.push(format!("gpu {gpu} blacklisted until {until} <= t={t}"));
+                }
+                self.blacklisted[gpu] = true;
+            }
+            SimEvent::GpuUnblacklisted { t, gpu } => {
+                self.fault_tick(t, "unblacklist");
+                if !self.blacklisted[gpu] {
+                    self.bad.push(format!("gpu {gpu} unblacklisted while not blacklisted"));
+                }
+                self.blacklisted[gpu] = false;
+            }
+            SimEvent::RestartDeferred { t, job, until } => {
+                self.fault_tick(t, "backoff");
+                if until <= t {
+                    self.bad.push(format!("job {job} backoff until {until} <= t={t}"));
+                }
+            }
             _ => {}
         }
     }
@@ -1658,8 +1737,60 @@ fn random_fault_spec(
         checkpoint_iters: g.u64(0, 25),
         warmup_s: g.f64(0.0, 1.0),
         events,
-        gen: None,
+        ..FaultsSpec::default()
     }
+}
+
+/// Gray-failure extension of [`random_fault_spec`]: adds 1–3 paired
+/// degradation/restore transitions on devices the hard-fault timeline
+/// leaves alone (a restore landing while its target is hard-down is
+/// skipped by the engine, which would unbalance the pairing the watcher
+/// checks), plus random restart-backoff and blacklist knobs.
+fn random_gray_spec(
+    g: &mut crate::util::prop::Gen,
+    n_gpus: usize,
+    n_links: usize,
+) -> FaultsSpec {
+    let mut spec = random_fault_spec(g, n_gpus, n_links);
+    let mut used_gpus = vec![false; n_gpus];
+    let mut used_links = vec![false; n_links];
+    for e in &spec.events {
+        match e.kind {
+            FaultKind::GpuFail(x) | FaultKind::GpuRecover(x) => used_gpus[x] = true,
+            FaultKind::LinkFail(x) | FaultKind::LinkRecover(x) => used_links[x] = true,
+            _ => {}
+        }
+    }
+    for _ in 0..g.usize(1, 3) {
+        let t_on = g.f64(0.0, 40.0);
+        let t_off = t_on + g.f64(1.0, 30.0);
+        let f = g.f64(0.2, 0.9);
+        if g.bool() {
+            let gpu = g.usize(0, n_gpus - 1);
+            if used_gpus[gpu] {
+                continue;
+            }
+            used_gpus[gpu] = true;
+            spec.events.push(FaultEvent { t: t_on, kind: FaultKind::GpuSlow(gpu, f) });
+            spec.events.push(FaultEvent { t: t_off, kind: FaultKind::GpuRestore(gpu) });
+        } else {
+            let link = g.usize(0, n_links - 1);
+            if used_links[link] {
+                continue;
+            }
+            used_links[link] = true;
+            spec.events.push(FaultEvent { t: t_on, kind: FaultKind::LinkDegrade(link, f) });
+            spec.events.push(FaultEvent { t: t_off, kind: FaultKind::LinkRestore(link) });
+        }
+    }
+    if g.bool() {
+        spec.backoff_base_s = g.f64(0.5, 5.0);
+    }
+    if g.bool() {
+        spec.blacklist_k = g.u64(1, 2);
+        spec.blacklist_window_s = g.f64(5.0, 50.0);
+    }
+    spec
 }
 
 #[test]
@@ -1718,6 +1849,251 @@ fn prop_chaos_fault_invariants() {
         }
         watch.into_verdict()
     });
+}
+
+#[test]
+fn prop_chaos_gray_failure_invariants() {
+    // Hard faults + gray degradations + backoff + blacklisting, under
+    // both the LWF baseline and the health-aware placer: factors stay in
+    // (0,1), degrade/restore transitions pair up, nothing is ever placed
+    // on a dead or blacklisted GPU, backoff deferrals point forward in
+    // time, and every job still finishes.
+    prop_check(30, |g| {
+        let n_servers = g.usize(2, 4);
+        let gps = g.usize(1, 3);
+        let mut c = cfg(n_servers, gps);
+        c.priority = *g.pick(&JobPriority::all());
+        c.coalescing = g.bool();
+        c.repricing = if g.bool() { Repricing::Dynamic } else { Repricing::AtAdmission };
+        if g.bool() {
+            c.topology = TopologySpec::TwoTier { rack_size: 2, oversubscription: 4.0 };
+        }
+        let n_links = c.topology.n_links(&c.cluster);
+        let spec = random_gray_spec(g, c.cluster.n_gpus(), n_links);
+        c.faults =
+            spec.compile(&c.cluster, n_links, 7).map_err(|e| e.to_string())?;
+        let total = c.cluster.n_gpus();
+        let models = crate::model::ALL_MODELS;
+        let jobs: Vec<JobSpec> = (0..g.usize(1, 6))
+            .map(|i| JobSpec {
+                id: i,
+                arrival: g.f64(0.0, 30.0),
+                model: *g.pick(&models),
+                n_gpus: g.usize(1, total),
+                iterations: g.u64(1, 80),
+            })
+            .collect();
+        let use_health = g.bool();
+        let mut watch = ChaosWatch::new(c.cluster.n_gpus(), n_links);
+        let mut metrics = MetricsObserver::new();
+        {
+            let mut obs: [&mut dyn SimObserver; 2] = [&mut metrics, &mut watch];
+            let policy = AdaDual { model: c.comm };
+            if use_health {
+                let mut p = HealthAwarePlacer::new();
+                simulate_observed(&c, &jobs, &mut p, &policy, &mut obs);
+            } else {
+                let mut p = LwfPlacer::new(1);
+                simulate_observed(&c, &jobs, &mut p, &policy, &mut obs);
+            }
+        }
+        let res = metrics.into_result();
+        for (i, t) in res.jct.iter().enumerate() {
+            if !t.is_finite() {
+                return Err(format!("job {i} never finished under gray failures"));
+            }
+            // A slowed GPU only ever stretches compute, so the healthy
+            // compute bound still holds from below.
+            let lb = jobs[i].compute_total(c.cluster.gpu_peak_gflops);
+            if res.jct[i] < lb - 1e-6 {
+                return Err(format!("job {i} jct {t} beat its compute lower bound {lb}"));
+            }
+        }
+        if res.restarted > res.preempted {
+            return Err(format!(
+                "{} restarts exceed {} preemptions",
+                res.restarted, res.preempted
+            ));
+        }
+        watch.into_verdict()
+    });
+}
+
+#[test]
+fn prop_legacy_log_matches_jsonl_fault_lines() {
+    // The human-readable LegacyLog and the typed JSONL sink must tell the
+    // same fault story: every fault-lifecycle JSONL row maps 1:1, in
+    // order and value-for-value, onto a legacy log line — under random
+    // hard-fault + degradation + backoff/blacklist schedules.
+    prop_check(20, |g| {
+        let n_servers = g.usize(2, 4);
+        let gps = g.usize(1, 3);
+        let mut c = cfg(n_servers, gps);
+        c.coalescing = g.bool();
+        c.priority = *g.pick(&JobPriority::all());
+        let n_links = c.topology.n_links(&c.cluster);
+        let spec = random_gray_spec(g, c.cluster.n_gpus(), n_links);
+        c.faults = spec.compile(&c.cluster, n_links, 7).map_err(|e| e.to_string())?;
+        let total = c.cluster.n_gpus();
+        let models = crate::model::ALL_MODELS;
+        let jobs: Vec<JobSpec> = (0..g.usize(1, 5))
+            .map(|i| JobSpec {
+                id: i,
+                arrival: g.f64(0.0, 30.0),
+                model: *g.pick(&models),
+                n_gpus: g.usize(1, total),
+                iterations: g.u64(1, 60),
+            })
+            .collect();
+        let mut legacy = LegacyLog::new();
+        let mut sink = JsonlSink::new(Vec::new());
+        {
+            let mut obs: [&mut dyn SimObserver; 2] = [&mut legacy, &mut sink];
+            let mut p = LwfPlacer::new(1);
+            simulate_observed(&c, &jobs, &mut p, &AdaDual { model: c.comm }, &mut obs);
+        }
+        let buf = sink.finish().map_err(|e| e.to_string())?;
+        let text = String::from_utf8(buf).map_err(|e| e.to_string())?;
+        // Rebuild the legacy fault lines from the typed rows.
+        let mut rebuilt: Vec<EventLog> = Vec::new();
+        for line in text.lines() {
+            let v = crate::util::json::Json::parse(line).map_err(|e| format!("{e:?}"))?;
+            let t = v.get("t").and_then(|x| x.as_f64()).ok_or("row missing t")?;
+            let kind = v.get("ev").and_then(|x| x.as_str()).ok_or("row missing ev")?;
+            let us = |k: &str| {
+                v.get(k).and_then(|x| x.as_usize()).ok_or(format!("row missing {k}"))
+            };
+            let u64s = |k: &str| {
+                v.get(k).and_then(|x| x.as_u64()).ok_or(format!("row missing {k}"))
+            };
+            let f64s = |k: &str| {
+                v.get(k).and_then(|x| x.as_f64()).ok_or(format!("row missing {k}"))
+            };
+            let what = match kind {
+                "gpu-failed" => format!("gpu-fail gpu{}", us("gpu")?),
+                "gpu-recovered" => format!("gpu-recover gpu{}", us("gpu")?),
+                "link-failed" => format!("link-fail link{}", us("link")?),
+                "link-recovered" => format!("link-recover link{}", us("link")?),
+                "job-preempted" => {
+                    format!("preempt job{} lost={}", us("job")?, u64s("lost_iters")?)
+                }
+                "job-restarted" => {
+                    format!("restart job{} n={}", us("job")?, u64s("restarts")?)
+                }
+                "checkpoint-taken" => {
+                    format!("checkpoint job{} iters={}", us("job")?, u64s("iters")?)
+                }
+                "gpu-slowed" => {
+                    format!("gpu-slow gpu{} factor={}", us("gpu")?, f64s("factor")?)
+                }
+                "gpu-restored" => format!("gpu-restore gpu{}", us("gpu")?),
+                "link-degraded" => {
+                    format!("link-degrade link{} factor={}", us("link")?, f64s("factor")?)
+                }
+                "link-restored" => format!("link-restore link{}", us("link")?),
+                "gpu-blacklisted" => {
+                    format!("blacklist gpu{} until={}", us("gpu")?, f64s("until")?)
+                }
+                "gpu-unblacklisted" => format!("unblacklist gpu{}", us("gpu")?),
+                "restart-deferred" => {
+                    format!("backoff job{} until={}", us("job")?, f64s("until")?)
+                }
+                _ => continue,
+            };
+            rebuilt.push(EventLog { t, what });
+        }
+        rebuilt.sort_by(|a, b| a.t.total_cmp(&b.t));
+        // The same stable t-sort LegacyLog applies, filtered to the fault
+        // lines (filter-then-sort == sort-then-filter for a stable sort).
+        let prefixes = [
+            "gpu-", "link-", "preempt ", "restart ", "checkpoint ", "blacklist ",
+            "unblacklist ", "backoff ",
+        ];
+        let legacy_lines: Vec<EventLog> = legacy
+            .into_events()
+            .into_iter()
+            .filter(|e| prefixes.iter().any(|p| e.what.starts_with(p)))
+            .collect();
+        logs_eq("legacy vs jsonl fault lines", &legacy_lines, &rebuilt)
+    });
+}
+
+#[test]
+fn prop_zero_degradation_knobs_bit_invisible() {
+    // The tentpole's bit-identity contract: a degradation generator that
+    // draws nothing (zero horizon) plus backoff/blacklist knobs at their
+    // off-defaults must leave a hard-faulted run bit-identical — metrics,
+    // event count and legacy log alike. The unused cap/window values are
+    // deliberately non-default to prove they are never even read.
+    prop_check(15, |g| {
+        let n_servers = g.usize(2, 4);
+        let gps = g.usize(1, 3);
+        let mut c = cfg(n_servers, gps);
+        c.log_events = true;
+        c.coalescing = g.bool();
+        let n_links = c.topology.n_links(&c.cluster);
+        let spec = random_fault_spec(g, c.cluster.n_gpus(), n_links);
+        let mut gray = spec.clone();
+        gray.degraded = Some(crate::fault::DegradeSpec {
+            horizon_s: 0.0,
+            ..crate::fault::DegradeSpec::with_mtbd(50.0)
+        });
+        gray.backoff_cap_s = 123.0;
+        gray.blacklist_window_s = 77.0;
+        let mut plain_cfg = c.clone();
+        plain_cfg.faults = spec.compile(&c.cluster, n_links, 7).map_err(|e| e.to_string())?;
+        let mut gray_cfg = c.clone();
+        gray_cfg.faults = gray.compile(&c.cluster, n_links, 7).map_err(|e| e.to_string())?;
+        let total = c.cluster.n_gpus();
+        let models = crate::model::ALL_MODELS;
+        let jobs: Vec<JobSpec> = (0..g.usize(1, 5))
+            .map(|i| JobSpec {
+                id: i,
+                arrival: g.f64(0.0, 30.0),
+                model: *g.pick(&models),
+                n_gpus: g.usize(1, total),
+                iterations: g.u64(1, 60),
+            })
+            .collect();
+        let a = run(&plain_cfg, &jobs);
+        let b = run(&gray_cfg, &jobs);
+        check_equivalent(&a, &b)?;
+        if a.n_events != b.n_events {
+            return Err(format!("n_events diverged: {} vs {}", a.n_events, b.n_events));
+        }
+        logs_eq("zero-degradation gray knobs", &a.events, &b.events)
+    });
+}
+
+#[test]
+fn health_placer_beats_lwf_under_severe_degradation() {
+    // Server 0's GPUs are crippled (factor 0.05) before any job arrives.
+    // LWF-1's consolidation tie-break picks server 0 on an empty cluster
+    // (equal loads, lowest ids win) and eats the 20x compute stretch; the
+    // health-aware placer reads the HealthView and routes the job to
+    // server 1 at full speed.
+    let mut c = cfg(2, 2);
+    let spec = FaultsSpec {
+        events: vec![
+            FaultEvent { t: 0.0, kind: FaultKind::GpuSlow(0, 0.05) },
+            FaultEvent { t: 0.0, kind: FaultKind::GpuSlow(1, 0.05) },
+        ],
+        ..FaultsSpec::default()
+    };
+    c.faults = spec.compile(&c.cluster, c.topology.n_links(&c.cluster), 7).unwrap();
+    let jobs = [job(0, 1.0, DnnModel::ResNet50, 2, 30)];
+    let policy = AdaDual { model: c.comm };
+    let mut lwf_placer = LwfPlacer::new(1);
+    let lwf = simulate(&c, &jobs, &mut lwf_placer, &policy);
+    let mut health_placer = HealthAwarePlacer::new();
+    let health = simulate(&c, &jobs, &mut health_placer, &policy);
+    assert!(lwf.jct[0].is_finite() && health.jct[0].is_finite());
+    assert!(
+        health.jct[0] * 4.0 < lwf.jct[0],
+        "health-aware placer did not dodge the slowed server: health {} vs lwf {}",
+        health.jct[0],
+        lwf.jct[0]
+    );
 }
 
 #[test]
